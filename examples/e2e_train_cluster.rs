@@ -1,0 +1,87 @@
+//! End-to-end driver: the full three-layer system on a real workload.
+//!
+//! The rust coordinator (L3) schedules *actual* training jobs — the
+//! AOT-exported GPT models (L2) whose attention runs through the Pallas
+//! kernel (L1) — onto PJRT CPU worker devices, with Tesserae's packing and
+//! migration policies making the placement decisions. Loss curves, measured
+//! checkpoint traffic and JCTs are printed and logged for EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example e2e_train_cluster
+
+use tesserae::coordinator::{run_cluster, ExecConfig, ExecJob};
+use tesserae::policies::placement::MigrationMode;
+use tesserae::util::benchutil::Table;
+
+fn workload() -> Vec<ExecJob> {
+    // A small arrival trace mixing both model sizes and multi-GPU jobs.
+    vec![
+        ExecJob { id: 1, model: "gpt-nano".into(), num_gpus: 1, arrival_round: 0, total_steps: 120 },
+        ExecJob { id: 2, model: "gpt-micro".into(), num_gpus: 1, arrival_round: 0, total_steps: 60 },
+        ExecJob { id: 3, model: "gpt-nano".into(), num_gpus: 2, arrival_round: 1, total_steps: 160 },
+        ExecJob { id: 4, model: "gpt-nano".into(), num_gpus: 1, arrival_round: 1, total_steps: 80 },
+        ExecJob { id: 5, model: "gpt-micro".into(), num_gpus: 1, arrival_round: 2, total_steps: 60 },
+        ExecJob { id: 6, model: "gpt-nano".into(), num_gpus: 1, arrival_round: 3, total_steps: 100 },
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExecConfig {
+        num_nodes: 2,
+        gpus_per_node: 2,
+        round_wall_s: 2.0,
+        packing: true,
+        migration: MigrationMode::Tesserae,
+        seed: 1,
+        max_rounds: 500,
+    };
+    println!(
+        "real-execution cluster: {} nodes x {} GPUs, {}s rounds",
+        cfg.num_nodes, cfg.gpus_per_node, cfg.round_wall_s
+    );
+    let report = run_cluster(&workload(), &cfg)?;
+
+    let mut t = Table::new(&[
+        "job", "model", "steps", "JCT (rounds)", "migrations", "first loss", "last loss",
+    ]);
+    for (id, j) in &report.jobs {
+        t.row(&[
+            format!("{id}"),
+            j.model.clone(),
+            format!("{}", j.steps),
+            format!("{}", j.jct_rounds),
+            format!("{}", j.migrations),
+            format!("{:.3}", j.first_loss),
+            format!("{:.3}", j.last_loss),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "rounds={} total migrations={} checkpoint traffic={:.1} MiB in {:.3}s wall={:.1}s",
+        report.rounds,
+        report.total_migrations,
+        report.checkpoint_bytes as f64 / (1024.0 * 1024.0),
+        report.checkpoint_time_s,
+        report.wall_s,
+    );
+
+    // Log the loss curve of the longest job for EXPERIMENTS.md.
+    let longest = report.jobs.values().max_by_key(|j| j.losses.len()).unwrap();
+    println!("\nloss curve (job {} / {}):", longest.id, longest.model);
+    let chunk_len = longest.losses.len().div_ceil(12).max(1);
+    for (i, chunk) in longest.losses.chunks(chunk_len).enumerate() {
+        let avg: f32 = chunk.iter().sum::<f32>() / chunk.len() as f32;
+        println!("  step {:>4}: {:.4}", i * chunk_len, avg);
+    }
+    let descended = report
+        .jobs
+        .values()
+        .filter(|j| j.last_loss < j.first_loss)
+        .count();
+    println!(
+        "\n{descended}/{} jobs ended with lower loss than they started",
+        report.jobs.len()
+    );
+    anyhow::ensure!(descended == report.jobs.len(), "some jobs failed to learn");
+    println!("e2e OK: all layers (rust coordinator -> PJRT -> JAX train step -> Pallas attention) composed.");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Parallelism-strategy study: Fig. 8 (packing throughput vs strategy,
+//! incl. the OOM case) and Fig. 15 (strategy impact on LLM JCT).
+//!
+//!     cargo run --release --example parallelism_packing
+
+use tesserae::experiments::{ablations, Scale};
+use tesserae::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = match args.get_str("scale", "standard").as_str() {
+        "quick" => Scale::quick(),
+        "paper" => Scale::paper(),
+        _ => Scale::standard(),
+    };
+    println!("{}", ablations::fig8_parallelism_packing());
+    println!("{}", ablations::fig15_strategy_impact(&scale));
+}

@@ -1,0 +1,21 @@
+//! Profiling-cost study: Fig. 18 (linear+BO vs matrix completion vs
+//! oracle) and Fig. 16 (robustness to profiling noise).
+//!
+//!     cargo run --release --example profiling_estimators
+
+use tesserae::experiments::{ablations, Scale};
+use tesserae::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = match args.get_str("scale", "standard").as_str() {
+        "quick" => Scale::quick(),
+        "paper" => Scale::paper(),
+        _ => Scale::standard(),
+    };
+    println!("{}", ablations::fig18_estimators(&scale));
+    println!(
+        "{}",
+        ablations::fig16_noise_sensitivity(&scale, &[0.0, 0.2, 0.4, 0.6, 0.8, 1.0])
+    );
+}

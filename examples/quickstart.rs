@@ -1,0 +1,41 @@
+//! Quickstart: schedule a small workload with Tesserae-T and a Tiresias
+//! baseline, print the headline metrics.
+//!
+//!     cargo run --release --example quickstart
+
+use tesserae::cluster::GpuType;
+use tesserae::experiments::{run_sim, Scale, SchedKind};
+use tesserae::util::benchutil::Table;
+
+fn main() {
+    // 120 jobs on 32 GPUs — the paper's physical-cluster shape (Fig. 9).
+    let scale = Scale {
+        jobs: 120,
+        nodes: 8,
+        gpus_per_node: 4,
+        jobs_per_hour: 80.0,
+        seed: 7,
+    };
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+
+    println!("simulating {} jobs on {} GPUs...", scale.jobs, spec.total_gpus());
+    let ours = run_sim(SchedKind::TesseraeT, &trace, spec, scale.seed, 0.0);
+    let base = run_sim(SchedKind::Tiresias, &trace, spec, scale.seed, 0.0);
+
+    let mut t = Table::new(&["scheduler", "avg JCT (s)", "makespan (s)", "migrations"]);
+    for r in [&ours, &base] {
+        t.row(&[
+            r.scheduler.clone(),
+            format!("{:.0}", r.avg_jct),
+            format!("{:.0}", r.makespan),
+            format!("{}", r.total_migrations),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "Tesserae-T speedup: {:.2}x JCT, {:.2}x makespan (paper: 1.62x / 1.15x)",
+        base.avg_jct / ours.avg_jct,
+        base.makespan / ours.makespan
+    );
+}

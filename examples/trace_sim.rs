@@ -1,0 +1,27 @@
+//! Full end-to-end simulation study: regenerates the paper's headline
+//! comparisons (Figs. 9, 11, 12, 13, 17) at a configurable scale.
+//!
+//!     cargo run --release --example trace_sim -- --scale standard
+
+use tesserae::experiments::{end_to_end, Scale};
+use tesserae::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let scale = match args.get_str("scale", "standard").as_str() {
+        "quick" => Scale::quick(),
+        "paper" => Scale::paper(),
+        _ => Scale::standard(),
+    };
+    println!(
+        "scale: {} jobs, {} GPUs\n",
+        scale.jobs,
+        scale.nodes * scale.gpus_per_node
+    );
+    let (fig9, _, _) = end_to_end::fig9_tesserae_vs_tiresias(&scale);
+    println!("{fig9}");
+    println!("{}", end_to_end::fig11_vs_gavel(&scale));
+    println!("{}", end_to_end::fig12_vs_tiresias_single(&scale));
+    println!("{}", end_to_end::fig13_ftf(&scale));
+    println!("{}", end_to_end::fig17_gavel_trace(&scale));
+}

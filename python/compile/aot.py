@@ -1,0 +1,153 @@
+"""AOT driver: lower every Layer-2 graph to HLO *text* + a JSON manifest.
+
+Run once at build time (`make artifacts`); the rust binary is self-contained
+afterwards. HLO text — not a serialized HloModuleProto — is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla
+crate's xla_extension 0.5.1 rejects, while the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifacts:
+  assignment_{n}.hlo.txt   n ∈ {8..256}: the auction assignment solver
+                           (L1 Pallas top2 inside an HLO while loop)
+  gp.hlo.txt               masked GP posterior for the BO estimator
+  init_{model}.hlo.txt     parameter initialization for the train models
+  train_step_{model}.hlo.txt  fwd/bwd/SGD step (L1 Pallas attention)
+  manifest.json            shapes/dtypes/metadata for the rust runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import auction, gp, model
+
+ASSIGNMENT_SIZES = [8, 16, 32, 64, 128, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def io_entry(shape, dtype):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_assignment(out_dir, manifest):
+    for n in ASSIGNMENT_SIZES:
+        lowered = jax.jit(auction.auction_assign).lower(
+            spec((n, n), jnp.float32), spec((), jnp.float32)
+        )
+        path = f"assignment_{n}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest[f"assignment_{n}"] = {
+            "file": path,
+            "n": n,
+            "inputs": [io_entry((n, n), "f32"), io_entry((), "f32")],
+            "outputs": [io_entry((n,), "i32"), io_entry((n,), "f32")],
+        }
+        print(f"lowered assignment_{n}")
+
+
+def lower_gp(out_dir, manifest):
+    n, d, m = gp.N_MAX, 7, 64
+    lowered = jax.jit(gp.gp_posterior).lower(
+        spec((n, d), jnp.float32),
+        spec((n,), jnp.float32),
+        spec((n,), jnp.float32),
+        spec((m, d), jnp.float32),
+    )
+    path = "gp.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["gp"] = {
+        "file": path,
+        "n_max": n,
+        "dim": d,
+        "num_queries": m,
+        "lengthscale": gp.LENGTHSCALE,
+        "signal_var": gp.SIGNAL_VAR,
+        "noise_var": gp.NOISE_VAR,
+        "inputs": [
+            io_entry((n, d), "f32"),
+            io_entry((n,), "f32"),
+            io_entry((n,), "f32"),
+            io_entry((m, d), "f32"),
+        ],
+        "outputs": [io_entry((m,), "f32"), io_entry((m,), "f32")],
+    }
+    print("lowered gp")
+
+
+def lower_models(out_dir, manifest):
+    for cfg in model.CONFIGS.values():
+        specs = model.param_specs(cfg)
+        param_shapes = [spec(s, jnp.float32) for _, s in specs]
+        tokens = spec((cfg.batch, cfg.seq_len + 1), jnp.int32)
+
+        init_lowered = jax.jit(
+            model.init_params, static_argnames=("cfg",)
+        ).lower(cfg, spec((), jnp.int32))
+        init_path = f"init_{cfg.name}.hlo.txt"
+        with open(os.path.join(out_dir, init_path), "w") as f:
+            f.write(to_hlo_text(init_lowered))
+
+        step_lowered = jax.jit(
+            model.train_step, static_argnames=("cfg",)
+        ).lower(cfg, param_shapes, tokens)
+        step_path = f"train_step_{cfg.name}.hlo.txt"
+        with open(os.path.join(out_dir, step_path), "w") as f:
+            f.write(to_hlo_text(step_lowered))
+
+        manifest[f"model_{cfg.name}"] = {
+            "init_file": init_path,
+            "train_step_file": step_path,
+            "config": {
+                "name": cfg.name,
+                "vocab": cfg.vocab,
+                "d_model": cfg.d_model,
+                "n_heads": cfg.n_heads,
+                "n_layers": cfg.n_layers,
+                "seq_len": cfg.seq_len,
+                "batch": cfg.batch,
+                "lr": cfg.lr,
+            },
+            "num_params": model.num_params(cfg),
+            "param_specs": [
+                {"name": name, "shape": list(shape)} for name, shape in specs
+            ],
+            "tokens": io_entry((cfg.batch, cfg.seq_len + 1), "i32"),
+        }
+        print(f"lowered init/train_step for {cfg.name}")
+
+
+def main():
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {}
+    lower_assignment(args.out, manifest)
+    lower_gp(args.out, manifest)
+    lower_models(args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest, "version": 1}, f, indent=2)
+    print(f"wrote manifest with {len(manifest)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

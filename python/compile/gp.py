@@ -1,0 +1,107 @@
+"""Layer-2: Gaussian-process posterior for the BO throughput estimator.
+
+Computes the RBF-kernel GP posterior mean/variance over a batch of query
+points, with *masked padded* observations so a single AOT-compiled module
+(fixed N_MAX observations) serves every BO iteration. Rust drives the BO
+loop (expected-improvement argmax and the decision which point to profile
+next); this module is the numeric core it calls through PJRT.
+
+No LAPACK: `jnp.linalg.cholesky` lowers to a `lapack_potrf` custom-call the
+xla_extension 0.5.1 CPU client cannot execute, so the Cholesky and the
+triangular solves are written as `lax.fori_loop`s over pure jnp ops
+(right-looking outer-product Cholesky; row-sweep substitution).
+
+Hyperparameters are static and must match `estimator/gp.rs`:
+lengthscale 0.6, signal variance 0.25, noise variance 1e-4.
+"""
+
+import jax
+import jax.numpy as jnp
+
+N_MAX = 64  # padded observation count
+LENGTHSCALE = 0.6
+SIGNAL_VAR = 0.25
+NOISE_VAR = 1e-4
+
+
+def _rbf(a, b):
+    """RBF kernel matrix between row sets `a` (n,d) and `b` (m,d)."""
+    d2 = jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1)
+    return SIGNAL_VAR * jnp.exp(-0.5 * d2 / (LENGTHSCALE * LENGTHSCALE))
+
+
+def _cholesky(a):
+    """Right-looking Cholesky via fori_loop (SPD input, pure HLO ops)."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def body(k, carry):
+        a, l = carry
+        pivot = jnp.sqrt(jnp.maximum(a[k, k], 1e-12))
+        col = jnp.where(idx >= k, a[:, k] / pivot, 0.0)
+        l = l.at[:, k].set(col)
+        a = a - jnp.outer(col, col)
+        return (a, l)
+
+    _, l = jax.lax.fori_loop(0, n, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def _solve_lower(l, b):
+    """Solve L Y = B for lower-triangular L; B is (n, m)."""
+    n = l.shape[0]
+
+    def body(i, y):
+        yi = (b[i] - l[i] @ y) / l[i, i]
+        return y.at[i].set(yi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def _solve_lower_t(l, b):
+    """Solve Lᵀ Y = B (back substitution)."""
+    n = l.shape[0]
+
+    def body(step, y):
+        i = n - 1 - step
+        yi = (b[i] - l[:, i] @ y) / l[i, i]
+        return y.at[i].set(yi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+@jax.jit
+def gp_posterior(x, y, mask, xq):
+    """Masked GP posterior.
+
+    Args:
+      x:    (N_MAX, D) observation features (rows beyond the real count are
+            arbitrary — they are masked out).
+      y:    (N_MAX,) observation values.
+      mask: (N_MAX,) 1.0 for real observations, 0.0 for padding.
+      xq:   (M, D) query points.
+
+    Returns:
+      (mean (M,), var (M,)).
+    """
+    m = mask > 0.5
+    count = jnp.maximum(jnp.sum(mask), 1.0)
+    y_mean = jnp.sum(jnp.where(m, y, 0.0)) / count
+    yc = jnp.where(m, y - y_mean, 0.0)
+
+    k = _rbf(x, x)
+    # Mask padded rows/cols: identity outside the real block keeps the
+    # matrix SPD and makes padded entries inert.
+    mm = m[:, None] & m[None, :]
+    eye = jnp.eye(x.shape[0], dtype=x.dtype)
+    k = jnp.where(mm, k, 0.0) + (NOISE_VAR * eye) + jnp.where(m, 0.0, 1.0)[:, None] * eye
+
+    l = _cholesky(k)
+    alpha = _solve_lower_t(l, _solve_lower(l, yc[:, None]))[:, 0]
+
+    kq = _rbf(x, xq)  # (N_MAX, M)
+    kq = jnp.where(m[:, None], kq, 0.0)
+    mean = y_mean + kq.T @ alpha
+    v = _solve_lower(l, kq)  # (N_MAX, M)
+    var = jnp.maximum(SIGNAL_VAR - jnp.sum(v * v, axis=0), 1e-12)
+    return mean, var

@@ -1,0 +1,90 @@
+"""Layer-1 Pallas kernel: fused causal self-attention.
+
+Used by the Layer-2 train-step model (`compile/model.py`) so the real
+compute executed by the rust coordinator's workers flows through a Pallas
+kernel. One grid step handles one (batch, head) pair: the full (T, T)
+score matrix lives in the kernel's scratch (VMEM on TPU), the causal mask
+and softmax fuse with both matmuls (MXU work on TPU), and only the (T, D)
+output tile is written back.
+
+Runs with ``interpret=True`` so the lowered HLO executes on the CPU PJRT
+client (real-TPU Mosaic lowering is compile-only in this environment).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    # Block shape is (1, 1, T, D): one (batch, head) pair per grid step.
+    q = q_ref[0, 0]  # (T, D)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    t, d = q.shape
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    scores = jnp.where(cols <= rows, scores, -jnp.inf)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    probs = jnp.exp(scores)
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(probs, v)
+
+
+def _attention_fwd_pallas(q, k, v):
+    b, h, t, d = q.shape
+    grid = (b, h)
+    spec = pl.BlockSpec((1, 1, t, d), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _probs(q, k):
+    """Recompute the masked softmax probabilities (backward pass helper)."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    t = q.shape[-2]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    scores = jnp.where((cols <= rows)[None, None], scores, -jnp.inf)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Fused causal attention over (batch, heads, seq, head_dim) inputs.
+
+    Forward runs the Pallas kernel; backward is the analytic softmax-
+    attention VJP (flash-attention style recomputation: probabilities are
+    rebuilt from q, k rather than saved).
+    """
+    return _attention_fwd_pallas(q, k, v)
+
+
+def _attention_vjp_fwd(q, k, v):
+    return _attention_fwd_pallas(q, k, v), (q, k, v)
+
+
+def _attention_vjp_bwd(res, do):
+    q, k, v = res
+    d = q.shape[-1]
+    p = _probs(q, k)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, do)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", do, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q) * scale
+    return dq, dk, dv
+
+
+attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)

@@ -1,0 +1,35 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+asserts allclose between kernel and reference across shape/dtype sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def top2_ref(values):
+    """Reference per-row (best, argmax, second-best)."""
+    idx = jnp.argmax(values, axis=-1)
+    best = jnp.max(values, axis=-1)
+    n = values.shape[-1]
+    if n == 1:
+        return best, idx.astype(jnp.int32), best
+    cols = jnp.arange(n)[None, :]
+    masked = jnp.where(cols == idx[:, None], -jnp.inf, values)
+    second = jnp.max(masked, axis=-1)
+    return best, idx.astype(jnp.int32), second
+
+
+def attention_ref(q, k, v):
+    """Reference causal attention: softmax(QKᵀ/√d + mask)V.
+
+    Shapes: q, k, v are (batch, heads, seq, head_dim).
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    t = q.shape[-2]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)

@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: per-row top-2 reduction.
+
+This is the inner loop of the auction algorithm's bidding phase (the
+data-parallel dual of the Hungarian method Tesserae uses for placement):
+for every unassigned person (row) we need the best and second-best value
+``v_ij = benefit_ij - price_j`` plus the argmax column. One kernel
+invocation computes all three for a block of rows.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the value matrix is
+tiled into row blocks resident in VMEM; the row-wise max/argmax reductions
+vectorize on the VPU lanes; prices are broadcast once per block. On CPU we
+run the kernel with ``interpret=True`` so it lowers to plain HLO that the
+PJRT CPU client (and the rust `xla` crate) can execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows processed per grid step. 8 sublanes is the natural TPU tile height;
+# any divisor of n works in interpret mode.
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _top2_kernel(v_ref, best_ref, idx_ref, second_ref):
+    """Kernel body: v_ref is a (block_rows, n) tile of the value matrix."""
+    v = v_ref[...]
+    n = v.shape[-1]
+    idx = jnp.argmax(v, axis=-1)
+    best = jnp.max(v, axis=-1)
+    # Mask out the argmax column and reduce again for the runner-up.
+    cols = jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
+    masked = jnp.where(cols == idx[:, None], -jnp.inf, v)
+    second = jnp.max(masked, axis=-1)
+    # Degenerate n == 1: there is no second column; mirror best.
+    if n == 1:
+        second = best
+    best_ref[...] = best
+    idx_ref[...] = idx.astype(jnp.int32)
+    second_ref[...] = second
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def top2(values, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Per-row (best, argmax, second-best) of a 2-D float array.
+
+    Returns ``(best, idx, second)`` with shapes ``(rows,)``.
+    """
+    rows, n = values.shape
+    block = min(block_rows, rows)
+    while rows % block != 0:  # interpret mode still wants an even grid
+        block -= 1
+    grid = (rows // block,)
+    return pl.pallas_call(
+        _top2_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows,), values.dtype),
+            jax.ShapeDtypeStruct((rows,), jnp.int32),
+            jax.ShapeDtypeStruct((rows,), values.dtype),
+        ],
+        interpret=True,
+    )(values)

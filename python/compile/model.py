@@ -1,0 +1,149 @@
+"""Layer-2: a small GPT-style causal language model — fwd/bwd/SGD step.
+
+The real-execution coordinator (`rust/src/coordinator/`) schedules *actual*
+training jobs: each simulated GPU worker executes this train step through
+PJRT on its share of a synthetic corpus, so scheduling, packing and
+migration decisions act on genuine compute. Attention flows through the
+Layer-1 Pallas kernel (`kernels/attention.py`).
+
+Parameters are a flat, ordered list of arrays (a stable ABI for the HLO
+interface); `param_specs` documents name/shape/dtype per entry and is
+exported into the artifact manifest so the rust side can allocate, carry
+and checkpoint parameter state without ever importing Python.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    seq_len: int
+    batch: int
+    lr: float = 0.5
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+# The two job sizes the coordinator schedules ("models" of its cluster).
+NANO = GptConfig(name="gpt-nano", vocab=256, d_model=64, n_heads=2, n_layers=2,
+                 seq_len=32, batch=8)
+MICRO = GptConfig(name="gpt-micro", vocab=512, d_model=128, n_heads=4, n_layers=4,
+                  seq_len=32, batch=8)
+CONFIGS = {c.name: c for c in (NANO, MICRO)}
+
+
+def param_specs(cfg: GptConfig):
+    """Ordered (name, shape) for the flat parameter list."""
+    specs = [("tok_embed", (cfg.vocab, cfg.d_model)),
+             ("pos_embed", (cfg.seq_len, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1_scale", (cfg.d_model,)),
+            (f"l{i}.qkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{i}.proj", (cfg.d_model, cfg.d_model)),
+            (f"l{i}.ln2_scale", (cfg.d_model,)),
+            (f"l{i}.mlp_up", (cfg.d_model, 4 * cfg.d_model)),
+            (f"l{i}.mlp_down", (4 * cfg.d_model, cfg.d_model)),
+        ]
+    specs.append(("ln_f_scale", (cfg.d_model,)))
+    return specs
+
+
+def num_params(cfg: GptConfig) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: GptConfig, seed):
+    """Initialize the flat parameter list from a scalar seed (traceable)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in * 1.0)
+            )
+    return params
+
+
+def _rmsnorm(x, scale):
+    return x * scale / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def forward(cfg: GptConfig, params, tokens):
+    """Logits over the next token; `tokens` is (batch, seq_len) int32."""
+    it = iter(params)
+    tok_embed = next(it)
+    pos_embed = next(it)
+    b, t = tokens.shape
+    x = tok_embed[tokens] + pos_embed[None, :t, :]
+    for _ in range(cfg.n_layers):
+        ln1, qkv_w, proj_w, ln2, up_w, down_w = (next(it) for _ in range(6))
+        h = _rmsnorm(x, ln1)
+        qkv = h @ qkv_w  # (b, t, 3d)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):
+            return z.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+        o = attention(heads(q), heads(k), heads(v))  # L1 Pallas kernel
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        x = x + o @ proj_w
+        h = _rmsnorm(x, ln2)
+        x = x + jax.nn.gelu(h @ up_w) @ down_w
+    ln_f = next(it)
+    x = _rmsnorm(x, ln_f)
+    return x @ tok_embed.T  # tied head
+
+
+def loss_fn(cfg: GptConfig, params, tokens):
+    """Next-token cross-entropy over (batch, seq_len+1) token sequences."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step(cfg: GptConfig, params, tokens):
+    """One SGD step; returns (new_params..., loss)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+    new_params = [p - cfg.lr * g for p, g in zip(params, grads)]
+    return new_params, loss
+
+
+def synthetic_batch(cfg: GptConfig, seed):
+    """A learnable synthetic batch: affine next-token chain with noise.
+
+    x_{t+1} = (5·x_t + 1) mod V with 10% uniform corruption — a pattern a
+    tiny model learns in a few hundred steps, so the coordinator's loss
+    curves visibly descend.
+    """
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    first = jax.random.randint(k1, (cfg.batch, 1), 0, cfg.vocab)
+    seq = [first]
+    for _ in range(cfg.seq_len):
+        seq.append((5 * seq[-1] + 1) % cfg.vocab)
+    tokens = jnp.concatenate(seq, axis=1)
+    noise = jax.random.bernoulli(k2, 0.1, tokens.shape)
+    rand = jax.random.randint(k3, tokens.shape, 0, cfg.vocab)
+    return jnp.where(noise, rand, tokens).astype(jnp.int32)

@@ -1,0 +1,78 @@
+"""Layer-1 fused attention kernel vs the pure-jnp oracle, incl. gradients."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.ref import attention_ref
+
+
+def rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t=st.integers(1, 24),
+    d=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_reference(b, h, t, d, seed):
+    q = rand((b, h, t, d), seed)
+    k = rand((b, h, t, d), seed + 1)
+    v = rand((b, h, t, d), seed + 2)
+    np.testing.assert_allclose(
+        np.asarray(attention(q, k, v)),
+        np.asarray(attention_ref(q, k, v)),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_causality():
+    # Changing a *future* key/value must not change earlier outputs.
+    q = rand((1, 1, 8, 4), 0)
+    k = rand((1, 1, 8, 4), 1)
+    v = rand((1, 1, 8, 4), 2)
+    base = np.asarray(attention(q, k, v))
+    k2 = k.at[0, 0, 7].set(99.0)
+    v2 = v.at[0, 0, 7].set(-99.0)
+    out = np.asarray(attention(q, k2, v2))
+    np.testing.assert_allclose(out[0, 0, :7], base[0, 0, :7], rtol=1e-5)
+    assert not np.allclose(out[0, 0, 7], base[0, 0, 7])
+
+
+def test_first_position_attends_only_to_itself():
+    q = rand((1, 1, 4, 4), 3)
+    k = rand((1, 1, 4, 4), 4)
+    v = rand((1, 1, 4, 4), 5)
+    out = np.asarray(attention(q, k, v))
+    np.testing.assert_allclose(out[0, 0, 0], np.asarray(v)[0, 0, 0], rtol=1e-5)
+
+
+def test_gradients_match_reference():
+    q = rand((2, 2, 8, 4), 6)
+    k = rand((2, 2, 8, 4), 7)
+    v = rand((2, 2, 8, 4), 8)
+    f = lambda fn: lambda q, k, v: jnp.sum(jnp.tanh(fn(q, k, v)))
+    g_kernel = jax.grad(f(attention), argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f(attention_ref), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_rows_mix_values_convexly():
+    # With q = 0 the output is a uniform average of the visible values.
+    t, d = 6, 3
+    q = jnp.zeros((1, 1, t, d), jnp.float32)
+    k = rand((1, 1, t, d), 9)
+    v = rand((1, 1, t, d), 10)
+    out = np.asarray(attention(q, k, v))[0, 0]
+    vn = np.asarray(v)[0, 0]
+    for i in range(t):
+        np.testing.assert_allclose(out[i], vn[: i + 1].mean(axis=0), rtol=1e-4, atol=1e-5)

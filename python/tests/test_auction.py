@@ -1,0 +1,78 @@
+"""Layer-2 auction solver vs scipy's exact Hungarian solver."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from scipy.optimize import linear_sum_assignment
+
+from compile.auction import auction_assign
+
+
+def solve(benefit, eps_final):
+    a, prices = auction_assign(jnp.asarray(benefit), jnp.float32(eps_final))
+    return np.asarray(a), np.asarray(prices)
+
+
+def exact_value(benefit):
+    r, c = linear_sum_assignment(-benefit)
+    return benefit[r, c].sum()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([2, 4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_exact_on_integer_benefits(n, seed):
+    rng = np.random.default_rng(seed)
+    b = rng.integers(0, 25, size=(n, n)).astype(np.float32)
+    a, _ = solve(b, 1.0 / (n + 1))
+    assert sorted(a.tolist()) == list(range(n)), "not a permutation"
+    got = b[np.arange(n), a].sum()
+    assert abs(got - exact_value(b)) < 1e-3
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_exact_on_sixteenth_quantized(n, seed):
+    # Migration costs are multiples of 1/16 (Algorithm 3's amortization).
+    rng = np.random.default_rng(seed)
+    b = (rng.integers(0, 33, size=(n, n)) / 16.0).astype(np.float32)
+    a, _ = solve(b, (1.0 / 16.0) / (n + 1))
+    got = b[np.arange(n), a].sum()
+    assert abs(got - exact_value(b)) < 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
+def test_near_optimal_on_floats(n, seed):
+    rng = np.random.default_rng(seed)
+    b = rng.uniform(0, 10, size=(n, n)).astype(np.float32)
+    eps = 1e-3
+    a, _ = solve(b, eps)
+    got = b[np.arange(n), a].sum()
+    assert got >= exact_value(b) - (n + 1) * eps - 1e-3
+
+
+def test_negated_costs_give_min_cost_assignment():
+    # The rust side feeds -cost as benefit.
+    rng = np.random.default_rng(7)
+    cost = rng.integers(0, 20, size=(8, 8)).astype(np.float32)
+    a, _ = solve(-cost, 1.0 / 9)
+    got = cost[np.arange(8), a].sum()
+    r, c = linear_sum_assignment(cost)
+    assert abs(got - cost[r, c].sum()) < 1e-3
+
+
+def test_identity_on_diagonal_dominant():
+    b = np.eye(8, dtype=np.float32) * 10.0
+    a, _ = solve(b, 0.05)
+    assert a.tolist() == list(range(8))
+
+
+def test_prices_are_nonnegative_and_finite():
+    rng = np.random.default_rng(11)
+    b = rng.uniform(0, 5, size=(16, 16)).astype(np.float32)
+    _, prices = solve(b, 0.01)
+    assert np.all(np.isfinite(prices))
+    assert np.all(prices >= -1e-6)

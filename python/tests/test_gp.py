@@ -1,0 +1,102 @@
+"""Layer-2 masked GP posterior vs a dense numpy reference."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.gp import gp_posterior, LENGTHSCALE, N_MAX, NOISE_VAR, SIGNAL_VAR
+
+
+def rbf_np(a, b):
+    d2 = ((a[:, None, :] - b[None, :, :]) ** 2).sum(-1)
+    return SIGNAL_VAR * np.exp(-0.5 * d2 / LENGTHSCALE**2)
+
+
+def reference(x, y, xq):
+    n = len(x)
+    k = rbf_np(x, x) + NOISE_VAR * np.eye(n)
+    ym = y.mean()
+    alpha = np.linalg.solve(k, y - ym)
+    kq = rbf_np(x, xq)
+    mean = ym + kq.T @ alpha
+    l = np.linalg.cholesky(k)
+    v = np.linalg.solve(l, kq)
+    var = np.maximum(SIGNAL_VAR - (v * v).sum(0), 1e-12)
+    return mean, var
+
+
+def run(x, y, xq):
+    n, d = x.shape
+    xp = np.zeros((N_MAX, d), np.float32)
+    xp[:n] = x
+    yp = np.zeros((N_MAX,), np.float32)
+    yp[:n] = y
+    mask = np.zeros((N_MAX,), np.float32)
+    mask[:n] = 1.0
+    mean, var = gp_posterior(
+        jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(mask), jnp.asarray(xq)
+    )
+    return np.asarray(mean), np.asarray(var)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, N_MAX),
+    d=st.integers(1, 7),
+    m=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_numpy_reference(n, d, m, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.normal(size=(n,)).astype(np.float32)
+    xq = rng.normal(size=(m, d)).astype(np.float32)
+    mean, var = run(x, y, xq)
+    mref, vref = reference(x, y, xq)
+    # The artifact is fp32 while the reference solves in fp64; with many
+    # near-duplicate 1-D points the kernel matrix is ill-conditioned, so
+    # allow a few percent (the BO loop only needs rank ordering).
+    np.testing.assert_allclose(mean, mref, rtol=3e-2, atol=5e-3)
+    np.testing.assert_allclose(var, vref, rtol=5e-2, atol=5e-3)
+
+
+def test_interpolates_observations():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(6, 3)).astype(np.float32)
+    y = rng.normal(size=(6,)).astype(np.float32)
+    mean, var = run(x, y, x)
+    np.testing.assert_allclose(mean, y, atol=0.05)
+    assert np.all(var < 0.05)
+
+
+def test_reverts_to_prior_far_from_data():
+    x = np.zeros((2, 2), np.float32)
+    y = np.array([1.0, 3.0], np.float32)
+    xq = np.full((1, 2), 100.0, np.float32)
+    mean, var = run(x, y, xq)
+    np.testing.assert_allclose(mean, [2.0], atol=1e-3)  # data mean
+    np.testing.assert_allclose(var, [SIGNAL_VAR], rtol=1e-3)
+
+
+def test_padding_is_inert():
+    # Same data, different amounts of padding: identical posterior.
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(5, 4)).astype(np.float32)
+    y = rng.normal(size=(5,)).astype(np.float32)
+    xq = rng.normal(size=(8, 4)).astype(np.float32)
+    m1, v1 = run(x, y, xq)
+    # Poison the padded region: must not change the answer.
+    xp = np.full((N_MAX, 4), 777.0, np.float32)
+    xp[:5] = x
+    yp = np.full((N_MAX,), -55.0, np.float32)
+    yp[:5] = y
+    mask = np.zeros((N_MAX,), np.float32)
+    mask[:5] = 1.0
+    m2, v2 = (
+        np.asarray(t)
+        for t in gp_posterior(
+            jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(mask), jnp.asarray(xq)
+        )
+    )
+    np.testing.assert_allclose(m1, m2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(v1, v2, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,76 @@
+"""Layer-1 `top2` kernel vs the pure-jnp oracle — hypothesis shape sweep."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import top2_ref
+from compile.kernels.top2 import top2
+
+
+def check(values):
+    b, i, s = top2(jnp.asarray(values))
+    br, ir, sr = top2_ref(jnp.asarray(values))
+    np.testing.assert_allclose(np.asarray(b), np.asarray(br))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 48),
+    cols=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_reference_random(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    check(rng.normal(size=(rows, cols)).astype(np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ties_are_consistent(seed):
+    # Duplicated maxima: kernel and reference must pick the same argmax
+    # (both use jnp.argmax's first-occurrence rule).
+    rng = np.random.default_rng(seed)
+    v = rng.integers(0, 3, size=(16, 16)).astype(np.float32)
+    check(v)
+
+
+def test_known_values():
+    v = np.array([[1.0, 5.0, 3.0], [7.0, 2.0, 7.0]], np.float32)
+    b, i, s = top2(jnp.asarray(v))
+    assert b.tolist() == [5.0, 7.0]
+    assert i.tolist() == [1, 0]  # first occurrence on the tie
+    assert s.tolist() == [3.0, 7.0]
+
+
+def test_single_column():
+    v = np.array([[2.0], [3.0]], np.float32)
+    b, i, s = top2(jnp.asarray(v))
+    assert b.tolist() == [2.0, 3.0]
+    assert s.tolist() == [2.0, 3.0]
+    assert i.tolist() == [0, 0]
+
+
+def test_negative_and_inf_values():
+    v = np.array([[-1.0, -5.0], [np.float32(-np.inf), 0.0]], np.float32)
+    check(v)
+
+
+@pytest.mark.parametrize("block", [1, 2, 4, 8, 16])
+def test_block_sizes_agree(block):
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(16, 12)).astype(np.float32)
+    b, i, s = top2(jnp.asarray(v), block_rows=block)
+    br, ir, sr = top2_ref(jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(b), np.asarray(br))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr))
+
+
+def test_uneven_rows_fall_back_to_smaller_block():
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(13, 9)).astype(np.float32)  # 13 is prime
+    check(v)

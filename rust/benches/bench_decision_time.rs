@@ -1,0 +1,25 @@
+//! Fig. 2 / Fig. 14: scheduler decision time vs active jobs on a 256-GPU
+//! cluster, plus Tesserae-T's overhead breakdown and the matching-engine
+//! comparison.
+
+use std::time::Duration;
+
+use tesserae::experiments::scalability;
+
+fn main() {
+    let budget = Duration::from_secs(
+        std::env::var("TESSERAE_FIG2_BUDGET_SECS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(60),
+    );
+    println!(
+        "{}",
+        scalability::fig2_decision_time(&[250, 500, 1000, 2000, 3000], budget)
+    );
+    println!("{}", scalability::fig14b_breakdown(&[250, 500, 1000, 2000]));
+    println!(
+        "{}",
+        scalability::matching_engine_comparison(&[16, 64, 128, 256], true)
+    );
+}

@@ -1,0 +1,43 @@
+//! End-to-end scheduling benchmarks: Figs. 9, 11, 12, 13, 17 at the
+//! standard bench scale (80 GPUs), plus the real-execution Fig. 3 /
+//! Table 2 measurements when artifacts are present.
+//!
+//! Scale override: TESSERAE_BENCH_SCALE=quick|standard|paper
+
+use tesserae::experiments::{end_to_end, Scale};
+
+fn scale() -> Scale {
+    match std::env::var("TESSERAE_BENCH_SCALE").as_deref() {
+        Ok("quick") => Scale::quick(),
+        Ok("paper") => Scale::paper(),
+        _ => Scale::standard(),
+    }
+}
+
+fn main() {
+    let scale = scale();
+    println!(
+        "bench scale: {} jobs on {} GPUs\n",
+        scale.jobs,
+        scale.nodes * scale.gpus_per_node
+    );
+    let t0 = std::time::Instant::now();
+    let (fig9, _, _) = end_to_end::fig9_tesserae_vs_tiresias(&scale);
+    println!("{fig9}\n");
+    println!("{}\n", end_to_end::fig11_vs_gavel(&scale));
+    println!("{}\n", end_to_end::fig12_vs_tiresias_single(&scale));
+    println!("{}\n", end_to_end::fig13_ftf(&scale));
+    println!("{}\n", end_to_end::fig17_gavel_trace(&scale));
+    println!("{}\n", tesserae::experiments::compatibility_study(&scale));
+    println!("simulation figures took {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Real-execution measurements (need `make artifacts`).
+    match end_to_end::fig3_real_migration_overhead(0.4) {
+        Ok(s) => println!("\n{s}"),
+        Err(e) => println!("\n(fig3 real-execution skipped: {e})"),
+    }
+    match end_to_end::table2_fidelity(2, 0.4) {
+        Ok(s) => println!("\n{s}"),
+        Err(e) => println!("\n(table2 fidelity skipped: {e})"),
+    }
+}

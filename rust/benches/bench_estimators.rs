@@ -1,0 +1,32 @@
+//! Estimator benchmarks: Fig. 18 (estimator quality vs profiling budget),
+//! Fig. 16 (noise sensitivity) and construction-cost micro-timings.
+
+use tesserae::cluster::GpuType;
+use tesserae::estimator::{
+    LinearBoEstimator, MatrixCompletionEstimator, OracleEstimator, ThroughputSource,
+};
+use tesserae::experiments::{ablations, Scale};
+use tesserae::profiler::Profiler;
+use tesserae::util::benchutil::Bench;
+
+fn main() {
+    let scale = Scale::standard();
+    println!("{}", ablations::fig18_estimators(&scale));
+    println!(
+        "{}",
+        ablations::fig16_noise_sensitivity(&scale, &[0.0, 0.25, 0.5, 1.0])
+    );
+
+    let mut bench = Bench::new();
+    let p = Profiler::new(GpuType::A100, 3);
+    bench.run("oracle build", || {
+        OracleEstimator::new(p.clone()).profiling_samples()
+    });
+    bench.run("linear+bo build (budget 6)", || {
+        LinearBoEstimator::new(p.clone(), 6, 1).profiling_samples()
+    });
+    bench.run("matrix-completion build (40%)", || {
+        MatrixCompletionEstimator::new(p.clone(), 0.4, 1).profiling_samples()
+    });
+    println!("{}", bench.report());
+}

@@ -1,0 +1,61 @@
+//! Matching-engine benchmark: native Hungarian vs native auction vs the
+//! AOT JAX/Pallas auction executed through PJRT, across problem sizes.
+//! Also times the rectangular fast path that the packing policy uses.
+
+use tesserae::linalg::Matrix;
+use tesserae::matching::{auction, hungarian, MatchingEngine};
+use tesserae::util::benchutil::Bench;
+use tesserae::util::rng::Pcg64;
+
+fn random_cost(n: usize, m: usize, rng: &mut Pcg64) -> Matrix {
+    let mut c = Matrix::zeros(n, m);
+    for i in 0..n {
+        for j in 0..m {
+            c.set(i, j, rng.below(64) as f64 / 16.0);
+        }
+    }
+    c
+}
+
+fn main() {
+    let mut bench = Bench::new();
+    let mut rng = Pcg64::new(11);
+
+    println!("== square assignment (migration-policy shape) ==");
+    for n in [8usize, 32, 64, 128, 256] {
+        let cost = random_cost(n, n, &mut rng);
+        bench.run(&format!("hungarian n={n}"), || {
+            hungarian::solve_min_cost(&cost).cost
+        });
+        bench.run(&format!("auction(native) n={n}"), || {
+            auction::solve_min_cost(&cost, Some(1.0 / 16.0)).cost
+        });
+    }
+
+    println!("== rectangular assignment (packing-policy shape) ==");
+    for (n, m) in [(32usize, 256usize), (64, 512), (128, 1024)] {
+        let cost = random_cost(n, m, &mut rng);
+        bench.run(&format!("hungarian rect {n}x{m}"), || {
+            hungarian::solve_min_cost_rect(&cost).cost
+        });
+    }
+
+    // The AOT engine (skipped when artifacts are absent).
+    match tesserae::runtime::AotAssignmentEngine::discover() {
+        Ok(engine) => {
+            println!("== AOT auction via PJRT (includes padding + channel hop) ==");
+            for n in [8usize, 32, 64, 128, 256] {
+                let cost = random_cost(n, n, &mut rng);
+                let exact = hungarian::solve_min_cost(&cost).cost;
+                let got = engine.solve_min_cost(&cost).cost;
+                assert!((got - exact).abs() < 1e-3, "AOT mismatch at n={n}");
+                bench.run(&format!("auction(AOT/PJRT) n={n}"), || {
+                    engine.solve_min_cost(&cost).cost
+                });
+            }
+        }
+        Err(e) => println!("(AOT engine skipped: {e})"),
+    }
+
+    println!("\n{}", bench.report());
+}

@@ -1,0 +1,66 @@
+//! Packing benchmarks: Fig. 8 (strategy-aware packing throughput), Fig. 15
+//! (strategy impact on LLM JCT) and micro-timings of Algorithm 4 itself.
+
+use std::collections::BTreeSet;
+
+use tesserae::cluster::GpuType;
+use tesserae::estimator::{CachedSource, OracleEstimator};
+use tesserae::experiments::{ablations, Scale};
+use tesserae::jobs::ModelKind;
+use tesserae::matching::HungarianEngine;
+use tesserae::policies::placement::{pack, PackingConfig};
+use tesserae::policies::JobInfo;
+use tesserae::profiler::Profiler;
+use tesserae::util::benchutil::Bench;
+use tesserae::util::rng::Pcg64;
+
+fn jobs(n: usize, seed: u64) -> Vec<JobInfo> {
+    let mut rng = Pcg64::new(seed);
+    let models = [
+        ModelKind::ResNet50,
+        ModelKind::Vgg19,
+        ModelKind::Dcgan,
+        ModelKind::PointNet,
+    ];
+    (0..n)
+        .map(|i| JobInfo {
+            id: i as u64,
+            model: models[rng.below(4) as usize],
+            num_gpus: [1u32, 1, 2, 4][rng.below(4) as usize],
+            arrival_time: i as f64,
+            attained_service: 0.0,
+            total_iters: 1000.0,
+            completed_iters: 0.0,
+            rounds_received: 0,
+            now: 0.0,
+            iso_tput: 10.0,
+        })
+        .collect()
+}
+
+fn main() {
+    println!("{}", ablations::fig8_parallelism_packing());
+    let scale = Scale::standard();
+    println!("{}", ablations::fig15_strategy_impact(&scale));
+    println!(
+        "{}",
+        ablations::ablation_pack_threshold(&scale, &[0.5, 0.8, 1.0, 1.2])
+    );
+
+    // Algorithm 4 micro-benchmark.
+    let mut bench = Bench::new();
+    let source = CachedSource::new(OracleEstimator::new(Profiler::new(GpuType::A100, 3)));
+    for n in [64usize, 256, 1024] {
+        let all = jobs(2 * n, n as u64);
+        let placed: Vec<&JobInfo> = all[..n].iter().collect();
+        let pending: Vec<&JobInfo> = all[n..].iter().collect();
+        let cfg = PackingConfig {
+            exempt: BTreeSet::new(),
+            ..Default::default()
+        };
+        bench.run(&format!("pack {n} placed x {n} pending"), || {
+            pack(&placed, &pending, &source, &cfg, &HungarianEngine).len()
+        });
+    }
+    println!("{}", bench.report());
+}

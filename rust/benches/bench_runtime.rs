@@ -1,0 +1,68 @@
+//! PJRT runtime benchmarks: AOT artifact compile + execute latency per
+//! assignment bucket, GP posterior latency, and train-step throughput
+//! (the real-execution cluster's per-GPU compute rate).
+
+use tesserae::linalg::Matrix;
+use tesserae::matching::MatchingEngine;
+use tesserae::runtime::{AotAssignmentEngine, GpArtifact, Manifest, Runtime, TrainSession};
+use tesserae::util::benchutil::Bench;
+use tesserae::util::rng::Pcg64;
+
+fn main() {
+    let Ok(manifest) = Manifest::discover() else {
+        println!("artifacts not built; run `make artifacts` first");
+        return;
+    };
+    let mut bench = Bench::new();
+    let mut rng = Pcg64::new(5);
+
+    // Assignment artifact latency per bucket.
+    let engine = AotAssignmentEngine::start(manifest.clone()).expect("engine");
+    for n in [8usize, 32, 64, 128, 256] {
+        let mut cost = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                cost.set(i, j, rng.below(64) as f64 / 16.0);
+            }
+        }
+        bench.run(&format!("aot assignment n={n}"), || {
+            engine.solve_min_cost(&cost).cost
+        });
+    }
+
+    // GP posterior latency.
+    let rt = Runtime::new(manifest.clone()).expect("runtime");
+    let gp = GpArtifact::load(&rt).expect("gp");
+    let obs: Vec<(Vec<f64>, f64)> = (0..32)
+        .map(|_| {
+            let x: Vec<f64> = (0..7).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let y = x.iter().sum::<f64>();
+            (x, y)
+        })
+        .collect();
+    let queries: Vec<Vec<f64>> = (0..64)
+        .map(|_| (0..7).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+        .collect();
+    bench.run("aot gp posterior (32 obs, 64 queries)", || {
+        gp.posterior(&obs, &queries).unwrap().len()
+    });
+
+    // Train-step throughput per model (the worker compute rate).
+    for model in ["gpt-nano", "gpt-micro"] {
+        let session = TrainSession::load(&rt, model).expect("session");
+        let mut params = session.init_params(0).expect("init");
+        let batch = session.synthetic_batch(&mut rng);
+        let t = bench.run(&format!("train_step {model}"), || {
+            session.step(&mut params, &batch).unwrap()
+        });
+        let tokens = session.spec.batch * session.spec.seq_len;
+        println!(
+            "{model}: {:.1} steps/s, {:.0} tokens/s ({} params)",
+            1.0 / t.median_s,
+            tokens as f64 / t.median_s,
+            session.spec.num_params
+        );
+    }
+
+    println!("\n{}", bench.report());
+}

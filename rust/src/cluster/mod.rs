@@ -1,0 +1,127 @@
+//! Cluster topology: nodes × GPUs, GPU types, and placement plans.
+
+pub mod placement;
+
+pub use placement::PlacementPlan;
+
+/// GPU hardware generations the evaluation uses (§6: 40 GB A100 on
+/// Perlmutter; 16 GB V100 on AWS p3.16xlarge for the adaptability study).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GpuType {
+    A100,
+    V100,
+}
+
+impl GpuType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GpuType::A100 => "a100",
+            GpuType::V100 => "v100",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<GpuType> {
+        match s {
+            "a100" => Some(GpuType::A100),
+            "v100" => Some(GpuType::V100),
+            _ => None,
+        }
+    }
+
+    /// Device memory in GB.
+    pub fn mem_gb(&self) -> f64 {
+        match self {
+            GpuType::A100 => 40.0,
+            GpuType::V100 => 16.0,
+        }
+    }
+
+    /// Relative compute speed (A100 = 1.0) used by the synthetic profiler.
+    pub fn speed_factor(&self) -> f64 {
+        match self {
+            GpuType::A100 => 1.0,
+            GpuType::V100 => 0.45,
+        }
+    }
+}
+
+/// Static cluster shape. GPUs are numbered globally, node-major:
+/// GPU `g` lives on node `g / gpus_per_node`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterSpec {
+    pub num_nodes: usize,
+    pub gpus_per_node: usize,
+    pub gpu_type: GpuType,
+}
+
+impl ClusterSpec {
+    pub fn new(num_nodes: usize, gpus_per_node: usize, gpu_type: GpuType) -> ClusterSpec {
+        assert!(num_nodes > 0 && gpus_per_node > 0);
+        ClusterSpec {
+            num_nodes,
+            gpus_per_node,
+            gpu_type,
+        }
+    }
+
+    /// The paper's physical testbed: 8 nodes × 4 A100 (32 GPUs).
+    pub fn perlmutter_32() -> ClusterSpec {
+        ClusterSpec::new(8, 4, GpuType::A100)
+    }
+
+    /// The paper's simulation cluster: 80 GPUs (20 nodes × 4).
+    pub fn sim_80() -> ClusterSpec {
+        ClusterSpec::new(20, 4, GpuType::A100)
+    }
+
+    /// The scalability cluster: 256 GPUs (32 nodes × 8).
+    pub fn scale_256() -> ClusterSpec {
+        ClusterSpec::new(32, 8, GpuType::A100)
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.num_nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, gpu: usize) -> usize {
+        debug_assert!(gpu < self.total_gpus());
+        gpu / self.gpus_per_node
+    }
+
+    /// Global GPU ids of a node.
+    pub fn gpus_of_node(&self, node: usize) -> std::ops::Range<usize> {
+        debug_assert!(node < self.num_nodes);
+        node * self.gpus_per_node..(node + 1) * self.gpus_per_node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_indexing() {
+        let c = ClusterSpec::perlmutter_32();
+        assert_eq!(c.total_gpus(), 32);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(3), 0);
+        assert_eq!(c.node_of(4), 1);
+        assert_eq!(c.node_of(31), 7);
+        assert_eq!(c.gpus_of_node(2), 8..12);
+    }
+
+    #[test]
+    fn gpu_types() {
+        assert_eq!(GpuType::A100.mem_gb(), 40.0);
+        assert_eq!(GpuType::V100.mem_gb(), 16.0);
+        assert!(GpuType::V100.speed_factor() < GpuType::A100.speed_factor());
+        assert_eq!(GpuType::from_name("v100"), Some(GpuType::V100));
+        assert_eq!(GpuType::from_name("h100"), None);
+    }
+
+    #[test]
+    fn preset_shapes() {
+        assert_eq!(ClusterSpec::sim_80().total_gpus(), 80);
+        assert_eq!(ClusterSpec::scale_256().total_gpus(), 256);
+    }
+}

@@ -1,0 +1,275 @@
+//! Placement plans: which jobs run on which GPUs in a scheduling round.
+//!
+//! A plan maps every GPU slot to the (≤ 2, per the CUDA-MPS packing cap of
+//! §5) jobs sharing it. Plans are the inputs/outputs of the placement
+//! policies: the no-packing allocator fills one, the packing policy adds
+//! second tenants, and the migration policy relabels one plan's GPUs to
+//! align with the previous round's plan.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::ClusterSpec;
+use crate::jobs::JobId;
+
+/// Maximum jobs sharing one GPU (the paper packs at most two, §5).
+pub const MAX_JOBS_PER_GPU: usize = 2;
+
+/// A round's placement: `slots[g]` = jobs on global GPU `g`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementPlan {
+    slots: Vec<Vec<JobId>>,
+}
+
+impl PlacementPlan {
+    pub fn new(total_gpus: usize) -> PlacementPlan {
+        PlacementPlan {
+            slots: vec![Vec::new(); total_gpus],
+        }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn jobs_on(&self, gpu: usize) -> &[JobId] {
+        &self.slots[gpu]
+    }
+
+    /// Add `job` to each GPU in `gpus`. Panics if any slot is full or the
+    /// job is already there — placement policies must not double-place.
+    pub fn place(&mut self, job: JobId, gpus: &[usize]) {
+        for &g in gpus {
+            assert!(
+                self.slots[g].len() < MAX_JOBS_PER_GPU,
+                "gpu {g} already has {} tenants",
+                self.slots[g].len()
+            );
+            assert!(!self.slots[g].contains(&job), "job {job} already on gpu {g}");
+            self.slots[g].push(job);
+        }
+    }
+
+    /// Remove a job from every GPU it occupies. Returns the GPUs it held.
+    pub fn remove(&mut self, job: JobId) -> Vec<usize> {
+        let mut freed = Vec::new();
+        for (g, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(pos) = slot.iter().position(|&j| j == job) {
+                slot.remove(pos);
+                freed.push(g);
+            }
+        }
+        freed
+    }
+
+    /// The set of GPUs a job occupies (sorted).
+    pub fn gpus_of(&self, job: JobId) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, slot)| slot.contains(&job))
+            .map(|(g, _)| g)
+            .collect()
+    }
+
+    /// All jobs present in the plan.
+    pub fn jobs(&self) -> BTreeSet<JobId> {
+        self.slots.iter().flatten().copied().collect()
+    }
+
+    /// Map job -> sorted GPU set, for the whole plan.
+    pub fn job_gpu_map(&self) -> BTreeMap<JobId, Vec<usize>> {
+        let mut m: BTreeMap<JobId, Vec<usize>> = BTreeMap::new();
+        for (g, slot) in self.slots.iter().enumerate() {
+            for &j in slot {
+                m.entry(j).or_default().push(g);
+            }
+        }
+        m
+    }
+
+    /// GPUs with fewer than `MAX_JOBS_PER_GPU` tenants.
+    pub fn free_capacity(&self, gpu: usize) -> usize {
+        MAX_JOBS_PER_GPU - self.slots[gpu].len()
+    }
+
+    /// GPUs that are completely empty.
+    pub fn empty_gpus(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_empty())
+            .map(|(g, _)| g)
+            .collect()
+    }
+
+    /// Remove a set of jobs wholesale (e.g. jobs that finished or were
+    /// preempted), returning how many slots were freed.
+    pub fn remove_jobs(&mut self, jobs: &BTreeSet<JobId>) -> usize {
+        let mut freed = 0;
+        for slot in &mut self.slots {
+            let before = slot.len();
+            slot.retain(|j| !jobs.contains(j));
+            freed += before - slot.len();
+        }
+        freed
+    }
+
+    /// Relabel GPUs: `perm[new_gpu] = old_gpu` — the output of the migration
+    /// policy. Produces the plan whose slot `perm[g]` holds what this plan
+    /// had on `g`... i.e. the job sets move *with* the mapping so that
+    /// slot `perm[g]` of the result equals slot `g` of `self`.
+    pub fn relabeled(&self, new_gpu_of: &[usize]) -> PlacementPlan {
+        assert_eq!(new_gpu_of.len(), self.slots.len());
+        let mut out = PlacementPlan::new(self.slots.len());
+        let mut seen = vec![false; self.slots.len()];
+        for (g, &tgt) in new_gpu_of.iter().enumerate() {
+            assert!(!seen[tgt], "relabel map is not a permutation");
+            seen[tgt] = true;
+            out.slots[tgt] = self.slots[g].clone();
+        }
+        out
+    }
+
+    /// Whether a (multi-GPU) job's placement is *consolidated* w.r.t. the
+    /// topology: it occupies the minimum possible number of nodes, and its
+    /// per-node GPU counts completely fill nodes except at most one.
+    pub fn is_consolidated(&self, job: JobId, spec: &ClusterSpec) -> bool {
+        let gpus = self.gpus_of(job);
+        if gpus.len() <= 1 {
+            return true;
+        }
+        let mut per_node: BTreeMap<usize, usize> = BTreeMap::new();
+        for &g in &gpus {
+            *per_node.entry(spec.node_of(g)).or_default() += 1;
+        }
+        let min_nodes = gpus.len().div_ceil(spec.gpus_per_node);
+        per_node.len() == min_nodes
+    }
+
+    /// Count of jobs whose GPU sets differ between `prev` and `self`,
+    /// restricted to jobs present in both (Definition 1).
+    pub fn migrations_from(&self, prev: &PlacementPlan) -> usize {
+        let prev_map = prev.job_gpu_map();
+        let cur_map = self.job_gpu_map();
+        cur_map
+            .iter()
+            .filter(|(job, gpus)| prev_map.get(*job).map(|g| g != *gpus).unwrap_or(false))
+            .count()
+    }
+
+    /// Sanity-check plan invariants (≤2 tenants, no duplicate tenancy).
+    pub fn validate(&self) -> Result<(), String> {
+        for (g, slot) in self.slots.iter().enumerate() {
+            if slot.len() > MAX_JOBS_PER_GPU {
+                return Err(format!("gpu {g} has {} tenants", slot.len()));
+            }
+            let set: BTreeSet<_> = slot.iter().collect();
+            if set.len() != slot.len() {
+                return Err(format!("gpu {g} lists a job twice"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuType;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::new(2, 4, GpuType::A100)
+    }
+
+    #[test]
+    fn place_remove_roundtrip() {
+        let mut p = PlacementPlan::new(8);
+        p.place(1, &[0, 1]);
+        p.place(2, &[1]);
+        assert_eq!(p.gpus_of(1), vec![0, 1]);
+        assert_eq!(p.jobs_on(1), &[1, 2]);
+        assert_eq!(p.free_capacity(1), 0);
+        assert_eq!(p.remove(1), vec![0, 1]);
+        assert_eq!(p.gpus_of(1), Vec::<usize>::new());
+        assert_eq!(p.jobs_on(1), &[2]);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "tenants")]
+    fn overpacking_panics() {
+        let mut p = PlacementPlan::new(1);
+        p.place(1, &[0]);
+        p.place(2, &[0]);
+        p.place(3, &[0]);
+    }
+
+    #[test]
+    fn relabel_moves_job_sets() {
+        // Paper §4.1 observation: plans {(0,1),(1,2),(2,2),(3,4)} and
+        // {(0,4),(1,1),(2,2),(3,2)} align via 0->1, 1->3, 3->0 (2->2).
+        let mut next = PlacementPlan::new(4);
+        next.place(4, &[0]);
+        next.place(1, &[1]);
+        next.place(2, &[2, 3]);
+        // Logical gpu g of `next` is realized on physical gpu perm[g]:
+        // logical 0 (job 4) -> physical 3, logical 1 (job 1) -> 0,
+        // logical 3 (job 2's second gpu) -> 1.
+        let perm = vec![3, 0, 2, 1];
+        let aligned = next.relabeled(&perm);
+        let mut prev = PlacementPlan::new(4);
+        prev.place(1, &[0]);
+        prev.place(2, &[1, 2]);
+        prev.place(4, &[3]);
+        assert_eq!(aligned.migrations_from(&prev), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a permutation")]
+    fn bad_relabel_panics() {
+        let p = PlacementPlan::new(2);
+        p.relabeled(&[0, 0]);
+    }
+
+    #[test]
+    fn consolidation_detection() {
+        let s = spec();
+        let mut p = PlacementPlan::new(8);
+        p.place(1, &[0, 1]); // same node -> consolidated
+        p.place(2, &[3, 4]); // spans nodes while fitting in one -> not
+        p.place(3, &[0, 1, 2, 3, 4, 5, 6, 7]); // 8 GPUs must span both nodes
+        assert!(p.is_consolidated(1, &s));
+        assert!(!p.is_consolidated(2, &s));
+        assert!(p.is_consolidated(3, &s));
+    }
+
+    #[test]
+    fn migration_counting_ignores_entering_and_leaving_jobs() {
+        let mut prev = PlacementPlan::new(4);
+        prev.place(1, &[0]);
+        prev.place(2, &[1]);
+        let mut cur = PlacementPlan::new(4);
+        cur.place(1, &[2]); // moved -> 1 migration
+        cur.place(9, &[1]); // new job -> not a migration (Definition 1)
+        assert_eq!(cur.migrations_from(&prev), 1);
+    }
+
+    #[test]
+    fn remove_jobs_bulk() {
+        let mut p = PlacementPlan::new(4);
+        p.place(1, &[0, 1]);
+        p.place(2, &[2]);
+        p.place(3, &[2]);
+        let gone: BTreeSet<JobId> = [1, 3].into_iter().collect();
+        assert_eq!(p.remove_jobs(&gone), 3);
+        assert_eq!(p.jobs().into_iter().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn job_gpu_map_sorted() {
+        let mut p = PlacementPlan::new(4);
+        p.place(7, &[3, 0]);
+        let m = p.job_gpu_map();
+        assert_eq!(m[&7], vec![0, 3]);
+    }
+}

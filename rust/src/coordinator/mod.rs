@@ -1,0 +1,563 @@
+//! Real-execution coordinator: the "physical cluster" mode.
+//!
+//! A leader thread runs Tesserae's round loop over a set of worker threads,
+//! each owning one simulated GPU backed by its own PJRT CPU client. Jobs
+//! are *actual* training runs of the AOT-exported GPT models: every round
+//! the leader invokes the placement policies (allocate → pack → migrate),
+//! ships parameter checkpoints to workers that gained jobs (the measured
+//! migration cost of Fig. 3), and workers execute real `train_step`s —
+//! interleaving the two tenants of a packed GPU — until the round's
+//! wall-clock budget expires.
+//!
+//! Multi-GPU jobs run as data-parallel replicas with a round-granular
+//! parameter average at the leader (a poor-man's all-reduce, which also
+//! keeps replica state consistent across migrations).
+//!
+//! Scheduling-side throughput estimates reuse the synthetic profiler (each
+//! exec model is mapped onto a Table-1 [`ModelKind`]); all *reported*
+//! numbers — steps, losses, throughput, JCTs, checkpoint bytes and stall
+//! times — are measured from the real execution.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cluster::{ClusterSpec, GpuType, PlacementPlan};
+use crate::estimator::OracleEstimator;
+use crate::jobs::{JobId, ModelKind};
+use crate::matching::HungarianEngine;
+use crate::policies::placement::{
+    allocate_without_packing, migrate, pack, MigrationMode, PackingConfig,
+};
+use crate::policies::scheduling::{SchedulingPolicy, TiresiasLas};
+use crate::policies::JobInfo;
+use crate::profiler::Profiler;
+use crate::runtime::train::ParamState;
+use crate::runtime::{Manifest, Runtime, TrainSession};
+use crate::util::rng::Pcg64;
+
+/// A job submitted to the real-execution cluster.
+#[derive(Debug, Clone)]
+pub struct ExecJob {
+    pub id: JobId,
+    /// Exported model name: "gpt-nano" or "gpt-micro".
+    pub model: String,
+    /// Number of data-parallel replicas (GPUs).
+    pub num_gpus: u32,
+    /// Round index at which the job arrives.
+    pub arrival_round: u64,
+    /// Total train steps (summed across replicas) to completion.
+    pub total_steps: u64,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    pub num_nodes: usize,
+    pub gpus_per_node: usize,
+    /// Wall-clock compute budget per round (seconds).
+    pub round_wall_s: f64,
+    /// Enable the packing policy.
+    pub packing: bool,
+    /// Migration policy.
+    pub migration: MigrationMode,
+    pub seed: u64,
+    /// Runaway guard.
+    pub max_rounds: u64,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            num_nodes: 2,
+            gpus_per_node: 2,
+            round_wall_s: 1.0,
+            packing: true,
+            migration: MigrationMode::Tesserae,
+            seed: 1,
+            max_rounds: 10_000,
+        }
+    }
+}
+
+/// Per-job outcome of a real-execution run.
+#[derive(Debug, Clone)]
+pub struct ExecJobReport {
+    pub id: JobId,
+    pub model: String,
+    pub steps: u64,
+    pub losses: Vec<f32>,
+    /// Rounds from arrival to completion.
+    pub jct_rounds: u64,
+    pub migrations: u64,
+    pub first_loss: f32,
+    pub last_loss: f32,
+}
+
+/// Aggregate real-execution report.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    pub jobs: BTreeMap<JobId, ExecJobReport>,
+    pub rounds: u64,
+    pub total_migrations: usize,
+    /// Measured checkpoint traffic (bytes moved due to migration/averaging).
+    pub checkpoint_bytes: u64,
+    /// Measured time spent moving checkpoints (the Fig. 3 overhead).
+    pub checkpoint_time_s: f64,
+    /// Wall time of the whole run.
+    pub wall_s: f64,
+    pub avg_jct_rounds: f64,
+    pub makespan_rounds: u64,
+}
+
+/// Map an exec model onto a Table-1 model for the scheduling-side
+/// profiler (compute-light nano ↔ DCGAN, heavier micro ↔ ResNet-50).
+pub fn scheduling_model(model: &str) -> ModelKind {
+    match model {
+        "gpt-nano" => ModelKind::Dcgan,
+        _ => ModelKind::ResNet50,
+    }
+}
+
+// ----------------------------------------------------------------- worker
+
+struct TaskSpec {
+    job: JobId,
+    model: String,
+    /// Parameters shipped with the task (after migration/averaging); when
+    /// `None` the worker uses its cache or initializes from the job id.
+    params: Option<ParamState>,
+}
+
+struct TaskReport {
+    job: JobId,
+    steps: u64,
+    losses: Vec<f32>,
+}
+
+enum WorkerMsg {
+    Round {
+        tasks: Vec<TaskSpec>,
+        wall_budget_s: f64,
+        reply: Sender<Vec<TaskReport>>,
+    },
+    /// Fetch (and keep) a job's parameters.
+    Fetch {
+        job: JobId,
+        reply: Sender<Option<ParamState>>,
+    },
+    /// Drop a job's cached parameters.
+    Evict {
+        job: JobId,
+    },
+    Shutdown,
+}
+
+fn worker_main(manifest: Manifest, rx: Receiver<WorkerMsg>, seed: u64) {
+    let rt = Runtime::new(manifest).expect("worker runtime");
+    let mut sessions: BTreeMap<String, TrainSession> = BTreeMap::new();
+    let mut cache: BTreeMap<JobId, ParamState> = BTreeMap::new();
+    let mut rng = Pcg64::new(seed);
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Shutdown => break,
+            WorkerMsg::Evict { job } => {
+                cache.remove(&job);
+            }
+            WorkerMsg::Fetch { job, reply } => {
+                let _ = reply.send(cache.get(&job).cloned());
+            }
+            WorkerMsg::Round {
+                tasks,
+                wall_budget_s,
+                reply,
+            } => {
+                // Install sessions + parameters.
+                for t in &tasks {
+                    if !sessions.contains_key(&t.model) {
+                        let s = TrainSession::load(&rt, &t.model).expect("load session");
+                        sessions.insert(t.model.clone(), s);
+                    }
+                    if let Some(p) = &t.params {
+                        cache.insert(t.job, p.clone());
+                    } else if !cache.contains_key(&t.job) {
+                        let s = &sessions[&t.model];
+                        cache.insert(t.job, s.init_params(t.job as i32).expect("init"));
+                    }
+                }
+                // Interleave one step per tenant until the budget expires —
+                // the CUDA-MPS sharing model of §5 at step granularity.
+                let mut reports: Vec<TaskReport> = tasks
+                    .iter()
+                    .map(|t| TaskReport {
+                        job: t.job,
+                        steps: 0,
+                        losses: Vec::new(),
+                    })
+                    .collect();
+                let deadline =
+                    Instant::now() + std::time::Duration::from_secs_f64(wall_budget_s);
+                if !tasks.is_empty() && wall_budget_s > 0.0 {
+                    'round: loop {
+                        for (t, rep) in tasks.iter().zip(&mut reports) {
+                            let session = &sessions[&t.model];
+                            let batch = session.synthetic_batch(&mut rng);
+                            let params = cache.get_mut(&t.job).unwrap();
+                            let loss = session.step(params, &batch).expect("train step");
+                            rep.steps += 1;
+                            rep.losses.push(loss);
+                            if Instant::now() >= deadline {
+                                break 'round;
+                            }
+                        }
+                    }
+                }
+                let _ = reply.send(reports);
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- leader
+
+struct WorkerHandle {
+    tx: Sender<WorkerMsg>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+struct JobRt {
+    spec: ExecJob,
+    steps: u64,
+    losses: Vec<f32>,
+    attained_rounds: u64,
+    migrations: u64,
+    finish_round: Option<u64>,
+    /// Parameters held at the leader (job not resident anywhere).
+    parked: Option<ParamState>,
+}
+
+/// Run a real-execution cluster over the given jobs. Returns measured
+/// per-job and aggregate results.
+pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
+    let manifest = Manifest::discover()?;
+    let spec = ClusterSpec::new(cfg.num_nodes, cfg.gpus_per_node, GpuType::A100);
+    let total_gpus = spec.total_gpus();
+
+    // Spawn one worker per GPU.
+    let workers: Vec<WorkerHandle> = (0..total_gpus)
+        .map(|g| {
+            let (tx, rx) = channel();
+            let m = manifest.clone();
+            let seed = cfg.seed ^ (g as u64).wrapping_mul(0x9e37_79b9);
+            let handle = std::thread::Builder::new()
+                .name(format!("gpu-worker-{g}"))
+                .spawn(move || worker_main(m, rx, seed))
+                .expect("spawn worker");
+            WorkerHandle { tx, handle }
+        })
+        .collect();
+
+    let t_start = Instant::now();
+    let mut states: BTreeMap<JobId, JobRt> = jobs
+        .iter()
+        .map(|j| {
+            (
+                j.id,
+                JobRt {
+                    spec: j.clone(),
+                    steps: 0,
+                    losses: Vec::new(),
+                    attained_rounds: 0,
+                    migrations: 0,
+                    finish_round: None,
+                    parked: None,
+                },
+            )
+        })
+        .collect();
+
+    let profiler = Profiler::new(GpuType::A100, cfg.seed);
+    let source = OracleEstimator::new(profiler);
+    let policy = TiresiasLas::default();
+    let engine = HungarianEngine;
+
+    let mut prev_plan = PlacementPlan::new(total_gpus);
+    let mut total_migrations = 0usize;
+    let mut checkpoint_bytes = 0u64;
+    let mut checkpoint_time_s = 0.0f64;
+    let mut round: u64 = 0;
+    let mut makespan_rounds: u64 = 0;
+
+    loop {
+        let active: Vec<JobInfo> = states
+            .values()
+            .filter(|s| s.finish_round.is_none() && s.spec.arrival_round <= round)
+            .map(|s| {
+                let model = scheduling_model(&s.spec.model);
+                JobInfo {
+                    id: s.spec.id,
+                    model,
+                    num_gpus: s.spec.num_gpus,
+                    arrival_time: s.spec.arrival_round as f64,
+                    attained_service: s.attained_rounds as f64 * s.spec.num_gpus as f64 * 360.0,
+                    total_iters: s.spec.total_steps as f64,
+                    completed_iters: s.steps as f64,
+                    rounds_received: s.attained_rounds,
+                    now: round as f64,
+                    iso_tput: 1.0,
+                }
+            })
+            .collect();
+
+        let all_done = states.values().all(|s| s.finish_round.is_some());
+        if all_done {
+            break;
+        }
+        if active.is_empty() {
+            round += 1;
+            continue;
+        }
+
+        // --- placement: allocate -> pack -> migrate (Listing 1) ---
+        let order = policy.order(&active);
+        let ordered: Vec<&JobInfo> = order.iter().map(|&i| &active[i]).collect();
+        let alloc = allocate_without_packing(&spec, &ordered);
+        let mut plan = alloc.plan;
+        if cfg.packing {
+            let by_id: BTreeMap<_, _> = active.iter().map(|j| (j.id, j)).collect();
+            let placed: Vec<&JobInfo> = alloc.placed.iter().map(|id| by_id[id]).collect();
+            let pending: Vec<&JobInfo> = alloc.pending.iter().map(|id| by_id[id]).collect();
+            for p in pack(
+                &placed,
+                &pending,
+                &source,
+                &PackingConfig::default(),
+                &engine,
+            ) {
+                let gpus = plan.gpus_of(p.placed);
+                plan.place(p.pending, &gpus);
+            }
+        }
+        let outcome = migrate(&spec, &prev_plan, &plan, cfg.migration, &engine);
+        let plan = outcome.plan;
+        total_migrations += outcome.migrations;
+
+        // --- checkpoint movement for migrated jobs (measured, Fig. 3) ---
+        let t_ckpt = Instant::now();
+        let mut shipments: BTreeMap<JobId, ParamState> = BTreeMap::new();
+        for job_id in plan.jobs() {
+            let old_gpus = prev_plan.gpus_of(job_id);
+            let new_gpus = plan.gpus_of(job_id);
+            let moved = !old_gpus.is_empty() && old_gpus != new_gpus;
+            if moved {
+                states.get_mut(&job_id).unwrap().migrations += 1;
+                // Fetch replica states from the old workers and average.
+                let mut replicas = Vec::new();
+                for &g in &old_gpus {
+                    let (tx, rx) = channel();
+                    workers[g]
+                        .tx
+                        .send(WorkerMsg::Fetch {
+                            job: job_id,
+                            reply: tx,
+                        })
+                        .map_err(|_| anyhow!("worker {g} gone"))?;
+                    if let Some(p) = rx.recv().unwrap_or(None) {
+                        checkpoint_bytes +=
+                            p.tensors.iter().map(|t| t.len() * 4).sum::<usize>() as u64;
+                        replicas.push(p);
+                    }
+                    workers[g].tx.send(WorkerMsg::Evict { job: job_id }).ok();
+                }
+                if !replicas.is_empty() {
+                    shipments.insert(job_id, ParamState::average(&replicas));
+                }
+            } else if let Some(p) = states.get_mut(&job_id).and_then(|s| s.parked.take()) {
+                // A job returning from the queue carries its parked state.
+                shipments.insert(job_id, p);
+            }
+        }
+        // Jobs that lost their placement entirely: park their state.
+        for job_id in prev_plan.jobs() {
+            if plan.gpus_of(job_id).is_empty() {
+                let old_gpus = prev_plan.gpus_of(job_id);
+                let mut replicas = Vec::new();
+                for &g in &old_gpus {
+                    let (tx, rx) = channel();
+                    workers[g]
+                        .tx
+                        .send(WorkerMsg::Fetch {
+                            job: job_id,
+                            reply: tx,
+                        })
+                        .ok();
+                    if let Some(p) = rx.recv().unwrap_or(None) {
+                        checkpoint_bytes +=
+                            p.tensors.iter().map(|t| t.len() * 4).sum::<usize>() as u64;
+                        replicas.push(p);
+                    }
+                    workers[g].tx.send(WorkerMsg::Evict { job: job_id }).ok();
+                }
+                if !replicas.is_empty() {
+                    if let Some(s) = states.get_mut(&job_id) {
+                        s.parked = Some(ParamState::average(&replicas));
+                    }
+                }
+            }
+        }
+        checkpoint_time_s += t_ckpt.elapsed().as_secs_f64();
+
+        // --- dispatch the round to every worker with tenants ---
+        let mut replies = Vec::new();
+        for g in 0..total_gpus {
+            let tenants = plan.jobs_on(g);
+            if tenants.is_empty() {
+                continue;
+            }
+            let tasks: Vec<TaskSpec> = tenants
+                .iter()
+                .map(|&job| TaskSpec {
+                    job,
+                    model: states[&job].spec.model.clone(),
+                    params: shipments.get(&job).cloned(),
+                })
+                .collect();
+            let (tx, rx) = channel();
+            workers[g]
+                .tx
+                .send(WorkerMsg::Round {
+                    tasks,
+                    wall_budget_s: cfg.round_wall_s,
+                    reply: tx,
+                })
+                .map_err(|_| anyhow!("worker {g} gone"))?;
+            replies.push(rx);
+        }
+        for rx in replies {
+            for rep in rx.recv().map_err(|_| anyhow!("worker died mid-round"))? {
+                let s = states.get_mut(&rep.job).unwrap();
+                s.steps += rep.steps;
+                s.losses.extend(rep.losses);
+            }
+        }
+
+        // Round accounting: completions + attained service.
+        for job_id in plan.jobs() {
+            let s = states.get_mut(&job_id).unwrap();
+            s.attained_rounds += 1;
+            if s.finish_round.is_none() && s.steps >= s.spec.total_steps {
+                s.finish_round = Some(round + 1);
+                makespan_rounds = makespan_rounds.max(round + 1);
+                for &g in &plan.gpus_of(job_id) {
+                    workers[g].tx.send(WorkerMsg::Evict { job: job_id }).ok();
+                }
+            }
+        }
+
+        // Synchronize multi-GPU replicas: fetch, average, re-ship
+        // (round-granular all-reduce). Costs are measured as checkpoint
+        // traffic too — DP sync is real data movement here.
+        let t_sync = Instant::now();
+        for job_id in plan.jobs() {
+            let gpus = plan.gpus_of(job_id);
+            let finished = states[&job_id].finish_round.is_some();
+            if gpus.len() > 1 && !finished {
+                let mut replicas = Vec::new();
+                for &g in &gpus {
+                    let (tx, rx) = channel();
+                    workers[g]
+                        .tx
+                        .send(WorkerMsg::Fetch {
+                            job: job_id,
+                            reply: tx,
+                        })
+                        .ok();
+                    if let Some(p) = rx.recv().unwrap_or(None) {
+                        checkpoint_bytes +=
+                            p.tensors.iter().map(|t| t.len() * 4).sum::<usize>() as u64;
+                        replicas.push(p);
+                    }
+                }
+                if !replicas.is_empty() {
+                    let avg = ParamState::average(&replicas);
+                    for &g in &gpus {
+                        let (tx, rx) = channel();
+                        workers[g]
+                            .tx
+                            .send(WorkerMsg::Round {
+                                tasks: vec![TaskSpec {
+                                    job: job_id,
+                                    model: states[&job_id].spec.model.clone(),
+                                    params: Some(avg.clone()),
+                                }],
+                                wall_budget_s: 0.0,
+                                reply: tx,
+                            })
+                            .ok();
+                        let _ = rx.recv();
+                    }
+                }
+            }
+        }
+        checkpoint_time_s += t_sync.elapsed().as_secs_f64();
+
+        // Next round's "previous plan" excludes finished jobs.
+        let mut next_prev = plan.clone();
+        let finished: std::collections::BTreeSet<JobId> = states
+            .values()
+            .filter(|s| s.finish_round.is_some())
+            .map(|s| s.spec.id)
+            .collect();
+        next_prev.remove_jobs(&finished);
+        prev_plan = next_prev;
+
+        round += 1;
+        if round >= cfg.max_rounds {
+            break;
+        }
+    }
+
+    for w in &workers {
+        w.tx.send(WorkerMsg::Shutdown).ok();
+    }
+    for w in workers {
+        w.handle.join().ok();
+    }
+
+    let mut reports = BTreeMap::new();
+    let mut jcts = Vec::new();
+    for (id, s) in &states {
+        let jct = s
+            .finish_round
+            .map(|f| f.saturating_sub(s.spec.arrival_round))
+            .unwrap_or(cfg.max_rounds);
+        jcts.push(jct as f64);
+        reports.insert(
+            *id,
+            ExecJobReport {
+                id: *id,
+                model: s.spec.model.clone(),
+                steps: s.steps,
+                first_loss: s.losses.first().copied().unwrap_or(f32::NAN),
+                last_loss: s.losses.last().copied().unwrap_or(f32::NAN),
+                losses: s.losses.clone(),
+                jct_rounds: jct,
+                migrations: s.migrations,
+            },
+        );
+    }
+
+    Ok(ExecReport {
+        jobs: reports,
+        rounds: round,
+        total_migrations,
+        checkpoint_bytes,
+        checkpoint_time_s,
+        wall_s: t_start.elapsed().as_secs_f64(),
+        avg_jct_rounds: crate::util::stats::mean(&jcts),
+        makespan_rounds,
+    })
+}

@@ -1,0 +1,191 @@
+//! Gaussian-process regression (RBF kernel) and expected improvement —
+//! the surrogate behind the Bayesian-optimization throughput estimator
+//! (§4.3 "Minimizing Profiling Cost", Fig. 18).
+//!
+//! A native implementation (Cholesky via `linalg`) that doubles as the
+//! correctness oracle for the AOT-compiled L2 `gp` artifact.
+
+use crate::linalg::{cholesky, solve_lower, solve_lower_t, Matrix};
+
+/// RBF-kernel GP posterior over f64 feature vectors.
+#[derive(Debug, Clone)]
+pub struct Gp {
+    x: Vec<Vec<f64>>,
+    lengthscale: f64,
+    signal_var: f64,
+    chol: Matrix,
+    alpha: Vec<f64>,
+    y_mean: f64,
+}
+
+fn rbf(a: &[f64], b: &[f64], lengthscale: f64, signal_var: f64) -> f64 {
+    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    signal_var * (-0.5 * d2 / (lengthscale * lengthscale)).exp()
+}
+
+impl Gp {
+    /// Fit a GP to observations `(x, y)`. `noise_var` regularizes the
+    /// kernel matrix (and models profiling noise).
+    pub fn fit(
+        x: Vec<Vec<f64>>,
+        y: &[f64],
+        lengthscale: f64,
+        signal_var: f64,
+        noise_var: f64,
+    ) -> Result<Gp, String> {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "GP needs at least one observation");
+        let n = x.len();
+        let y_mean = y.iter().sum::<f64>() / n as f64;
+        let mut k = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut v = rbf(&x[i], &x[j], lengthscale, signal_var);
+                if i == j {
+                    v += noise_var;
+                }
+                k.set(i, j, v);
+            }
+        }
+        let chol = cholesky(&k)?;
+        let centered: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+        let alpha = solve_lower_t(&chol, &solve_lower(&chol, &centered));
+        Ok(Gp {
+            x,
+            lengthscale,
+            signal_var,
+            chol,
+            alpha,
+            y_mean,
+        })
+    }
+
+    /// Posterior mean and variance at a query point.
+    pub fn predict(&self, q: &[f64]) -> (f64, f64) {
+        let n = self.x.len();
+        let kstar: Vec<f64> = (0..n)
+            .map(|i| rbf(&self.x[i], q, self.lengthscale, self.signal_var))
+            .collect();
+        let mean = self.y_mean
+            + kstar
+                .iter()
+                .zip(&self.alpha)
+                .map(|(k, a)| k * a)
+                .sum::<f64>();
+        let v = solve_lower(&self.chol, &kstar);
+        let var = (self.signal_var - v.iter().map(|x| x * x).sum::<f64>()).max(1e-12);
+        (mean, var)
+    }
+
+    /// Expected improvement over `best_y` (maximization).
+    pub fn expected_improvement(&self, q: &[f64], best_y: f64) -> f64 {
+        let (mu, var) = self.predict(q);
+        let sigma = var.sqrt();
+        if sigma < 1e-12 {
+            return (mu - best_y).max(0.0);
+        }
+        let z = (mu - best_y) / sigma;
+        (mu - best_y) * std_normal_cdf(z) + sigma * std_normal_pdf(z)
+    }
+
+    pub fn num_observations(&self) -> usize {
+        self.x.len()
+    }
+}
+
+fn std_normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Φ(z) via the erf-free Abramowitz–Stegun 7.1.26 approximation (|err|<1.5e-7).
+fn std_normal_cdf(z: f64) -> f64 {
+    let x = z / std::f64::consts::SQRT_2;
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let erf_abs = 1.0 - poly * (-x * x).exp();
+    let erf = if x >= 0.0 { erf_abs } else { -erf_abs };
+    0.5 * (1.0 + erf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn interpolates_observations() {
+        let x = vec![vec![0.0], vec![1.0], vec![2.0]];
+        let y = [1.0, 3.0, 2.0];
+        let gp = Gp::fit(x.clone(), &y, 0.7, 1.0, 1e-6).unwrap();
+        for (xi, yi) in x.iter().zip(&y) {
+            let (mu, var) = gp.predict(xi);
+            assert!((mu - yi).abs() < 1e-2, "mu {mu} vs {yi}");
+            assert!(var < 1e-3);
+        }
+    }
+
+    #[test]
+    fn variance_grows_away_from_data() {
+        let gp = Gp::fit(vec![vec![0.0]], &[1.0], 0.5, 1.0, 1e-6).unwrap();
+        let (_, v_near) = gp.predict(&[0.1]);
+        let (_, v_far) = gp.predict(&[5.0]);
+        assert!(v_far > v_near);
+        assert!((v_far - 1.0).abs() < 1e-3, "far variance ~ prior");
+    }
+
+    #[test]
+    fn mean_reverts_to_prior_far_away() {
+        let gp = Gp::fit(vec![vec![0.0], vec![1.0]], &[2.0, 4.0], 0.5, 1.0, 1e-6).unwrap();
+        let (mu, _) = gp.predict(&[100.0]);
+        assert!((mu - 3.0).abs() < 1e-6, "prior mean is the data mean, got {mu}");
+    }
+
+    #[test]
+    fn normal_cdf_sane() {
+        assert!((std_normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((std_normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((std_normal_cdf(-1.96) - 0.025).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ei_prefers_unexplored_high_mean() {
+        let x = vec![vec![0.0], vec![2.0]];
+        let y = [1.0, 2.0];
+        let gp = Gp::fit(x, &y, 0.8, 1.0, 1e-4).unwrap();
+        let ei_known = gp.expected_improvement(&[0.0], 2.0);
+        let ei_unknown = gp.expected_improvement(&[4.0], 2.0);
+        assert!(ei_unknown > ei_known);
+    }
+
+    #[test]
+    fn bo_loop_finds_quadratic_max() {
+        // Optimize f(x) = -(x-1.3)^2 over a grid via EI; BO should locate
+        // the max within a handful of profiles.
+        let f = |x: f64| -(x - 1.3) * (x - 1.3);
+        let grid: Vec<f64> = (0..41).map(|i| i as f64 * 0.1 - 1.0).collect();
+        let mut rng = Pcg64::new(2);
+        let mut obs_x = vec![
+            vec![grid[rng.below(41) as usize]],
+            vec![grid[rng.below(41) as usize]],
+        ];
+        let mut obs_y: Vec<f64> = obs_x.iter().map(|x| f(x[0])).collect();
+        for _ in 0..8 {
+            let gp = Gp::fit(obs_x.clone(), &obs_y, 0.5, 1.0, 1e-6).unwrap();
+            let best = obs_y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let next = grid
+                .iter()
+                .max_by(|a, b| {
+                    gp.expected_improvement(&[**a], best)
+                        .partial_cmp(&gp.expected_improvement(&[**b], best))
+                        .unwrap()
+                })
+                .unwrap();
+            obs_x.push(vec![*next]);
+            obs_y.push(f(*next));
+        }
+        let best = obs_y.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(best > -0.02, "BO best {best}");
+    }
+}

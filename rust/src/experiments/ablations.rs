@@ -1,0 +1,338 @@
+//! Ablations (§7): parallelization strategy (Fig. 8, Fig. 15), profiling
+//! noise (Fig. 16), estimator comparison (Fig. 18), plus the worked
+//! examples of Fig. 1 and Fig. 7.
+
+use std::sync::Arc;
+
+use crate::cluster::GpuType;
+use crate::estimator::{
+    CachedSource, LinearBoEstimator, MatrixCompletionEstimator, OracleEstimator,
+    ThroughputSource,
+};
+use crate::jobs::{ModelKind, ParallelismStrategy};
+use crate::profiler::Profiler;
+use crate::util::benchutil::Table;
+
+use super::{run_sim, run_sim_with_source, Scale, SchedKind};
+
+/// Fig. 8: normalized packed throughput of GPT3-3B on 8 GPUs under
+/// different parallelism strategies and partners (incl. the OOM cell).
+pub fn fig8_parallelism_packing() -> String {
+    let p = Profiler::new(GpuType::A100, 42);
+    let partners = [
+        ModelKind::ResNet50,
+        ModelKind::Vgg19,
+        ModelKind::Dcgan,
+        ModelKind::PointNet,
+    ];
+    let llm = ModelKind::Gpt3_3B;
+    let n = 8;
+    let dp = ParallelismStrategy::DataParallel;
+    let strategies: Vec<(String, ParallelismStrategy)> = vec![
+        ("DP".into(), ParallelismStrategy::DataParallel),
+        (
+            "Default PP".into(),
+            ParallelismStrategy::default_pp(llm, n),
+        ),
+        (
+            "Best PP".into(),
+            ParallelismStrategy::Pipeline(vec![3, 3, 3, 4, 4, 5, 5, 5]),
+        ),
+    ];
+    let mut t = Table::new(&["partner", "strategy", "norm(GPT3-3B)", "norm(partner)", "sum"]);
+    for partner in partners {
+        for (name, s) in &strategies {
+            match p.true_normalized_pair((llm, s), (partner, &dp), n) {
+                Some((a, b)) => t.row(&[
+                    partner.name().into(),
+                    name.clone(),
+                    format!("{:.2}", a),
+                    format!("{:.2}", b),
+                    format!("{:.2}", a + b),
+                ]),
+                None => t.row(&[
+                    partner.name().into(),
+                    name.clone(),
+                    "OOM".into(),
+                    "OOM".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+    }
+    format!(
+        "Fig. 8 — packing throughput vs parallelism strategy, GPT3-3B on 8xA100\n\
+         (paper: best PP beats default PP under packing; VGG-19 + default PP OOMs)\n{}",
+        t.render()
+    )
+}
+
+/// Fig. 15: impact of the packed-LLM strategy choice on LLM Avg. JCT
+/// (paper: best-strategy selection improves LLM JCT by ~1.12x).
+pub fn fig15_strategy_impact(scale: &Scale) -> String {
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let kinds = [
+        SchedKind::TesseraeTDp,
+        SchedKind::TesseraeTDefaultPp,
+        SchedKind::TesseraeT,
+    ];
+    let mut t = Table::new(&["strategy arm", "LLM avg JCT (s)", "all-jobs avg JCT (s)"]);
+    let llm_ids: std::collections::BTreeSet<u64> = trace
+        .jobs
+        .iter()
+        .filter(|j| j.model.is_llm())
+        .map(|j| j.id)
+        .collect();
+    let mut llm_jcts = Vec::new();
+    for kind in kinds {
+        let r = run_sim(kind, &trace, spec, scale.seed, 0.0);
+        let llm: Vec<f64> = r
+            .outcomes
+            .iter()
+            .filter(|(id, _)| llm_ids.contains(id))
+            .map(|(_, o)| o.jct)
+            .collect();
+        let avg_llm = crate::util::stats::mean(&llm);
+        llm_jcts.push(avg_llm);
+        t.row(&[
+            kind.label(),
+            format!("{:.0}", avg_llm),
+            format!("{:.0}", r.avg_jct),
+        ]);
+    }
+    let speedup = if llm_jcts[2] > 0.0 {
+        llm_jcts[1] / llm_jcts[2]
+    } else {
+        0.0
+    };
+    format!(
+        "Fig. 15 — parallelization strategy impact on LLM JCT (paper: 1.12x)\n{}\nbest-vs-default-PP LLM JCT speedup: {:.2}x\n",
+        t.render(),
+        speedup
+    )
+}
+
+/// Fig. 16: sensitivity to profiling noise n_p (paper: JCT degrades at
+/// most 1.12x even at 100% noise; makespan robust).
+pub fn fig16_noise_sensitivity(scale: &Scale, noise_levels: &[f64]) -> String {
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let clean = run_sim(SchedKind::TesseraeT, &trace, spec, scale.seed, 0.0);
+    let mut t = Table::new(&["noise n_p", "avg JCT (s)", "makespan (s)", "JCT vs clean"]);
+    for &np in noise_levels {
+        let r = if np == 0.0 {
+            clean.clone()
+        } else {
+            run_sim(SchedKind::TesseraeT, &trace, spec, scale.seed, np)
+        };
+        t.row(&[
+            format!("{:.0}%", np * 100.0),
+            format!("{:.0}", r.avg_jct),
+            format!("{:.0}", r.makespan),
+            format!("{:.2}x", r.avg_jct / clean.avg_jct),
+        ]);
+    }
+    format!(
+        "Fig. 16 — profiling-noise sensitivity (paper: <=1.12x JCT at 100% noise)\n{}",
+        t.render()
+    )
+}
+
+/// Fig. 18: estimator comparison — Oracle vs Linear+BO vs matrix
+/// completion (paper: Linear+BO ~ Oracle, beats matrix completion).
+pub fn fig18_estimators(scale: &Scale) -> String {
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let truth = Profiler::new(GpuType::A100, scale.seed);
+
+    let sources: Vec<(String, Arc<dyn ThroughputSource>)> = vec![
+        (
+            "Oracle".into(),
+            Arc::new(CachedSource::new(OracleEstimator::new(truth.clone()))),
+        ),
+        (
+            "Linear+BO (ours)".into(),
+            Arc::new(CachedSource::new(LinearBoEstimator::new(
+                truth.clone(),
+                6,
+                scale.seed,
+            ))),
+        ),
+        (
+            "Matrix completion".into(),
+            Arc::new(CachedSource::new(MatrixCompletionEstimator::new(
+                truth.clone(),
+                0.4,
+                scale.seed,
+            ))),
+        ),
+    ];
+
+    let mut t = Table::new(&[
+        "estimator",
+        "profiling samples",
+        "avg JCT (s)",
+        "makespan (s)",
+    ]);
+    for (name, source) in sources {
+        let samples = source.profiling_samples();
+        let r = run_sim_with_source(
+            SchedKind::TesseraeT,
+            &trace,
+            spec,
+            scale.seed,
+            source,
+        );
+        t.row(&[
+            name,
+            format!("{samples}"),
+            format!("{:.0}", r.avg_jct),
+            format!("{:.0}", r.makespan),
+        ]);
+    }
+    format!(
+        "Fig. 18 — profiling-cost reduction (paper: Linear+BO ~ Oracle > matrix completion)\n{}",
+        t.render()
+    )
+}
+
+/// Design-choice ablation (not a paper figure): the packing-edge weight
+/// threshold. Edges are created only when the combined normalized
+/// throughput exceeds `min_weight`; the default 1.0 means "packing must
+/// beat running the placed job alone".
+pub fn ablation_pack_threshold(scale: &Scale, thresholds: &[f64]) -> String {
+    use crate::estimator::{CachedSource, OracleEstimator};
+    use crate::matching::HungarianEngine;
+    use crate::policies::placement::PackingConfig;
+    use crate::schedulers::TesseraeScheduler;
+    use crate::simulator::{simulate, SimConfig};
+
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let truth = Profiler::new(GpuType::A100, scale.seed);
+    let mut t = Table::new(&["min edge weight", "avg JCT (s)", "makespan (s)", "migrations"]);
+    for &mw in thresholds {
+        let source: Arc<dyn ThroughputSource> =
+            Arc::new(CachedSource::new(OracleEstimator::new(truth.clone())));
+        let mut sched = TesseraeScheduler::tesserae_t(source, Arc::new(HungarianEngine));
+        sched.packing = Some(PackingConfig {
+            min_weight: mw,
+            ..Default::default()
+        });
+        let r = simulate(&trace, &mut sched, &truth, &SimConfig::new(spec));
+        t.row(&[
+            format!("{mw:.2}"),
+            format!("{:.0}", r.avg_jct),
+            format!("{:.0}", r.makespan),
+            format!("{}", r.total_migrations),
+        ]);
+    }
+    format!(
+        "Ablation — packing-edge weight threshold (design choice: edges need \
+         combined normalized throughput > threshold)\n{}",
+        t.render()
+    )
+}
+
+/// Fig. 1: the worked migration example — Gavel's policy migrates 3 jobs
+/// between two nearby plans where GPU-id remapping needs 0.
+pub fn fig1_migration_example() -> String {
+    use crate::cluster::{ClusterSpec, PlacementPlan};
+    use crate::matching::HungarianEngine;
+    use crate::policies::placement::{migrate, MigrationMode};
+
+    let spec = ClusterSpec::new(1, 4, GpuType::A100);
+    let mut prev = PlacementPlan::new(4);
+    prev.place(1, &[0]);
+    prev.place(2, &[1, 2]);
+    prev.place(4, &[3]);
+    let mut next = PlacementPlan::new(4);
+    next.place(4, &[0]);
+    next.place(1, &[1]);
+    next.place(2, &[2, 3]);
+
+    let gavel = migrate(&spec, &prev, &next, MigrationMode::GavelBaseline, &HungarianEngine);
+    let ours = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
+    format!(
+        "Fig. 1 — migration policy example\n\
+         plans: P_i = {{(0,1),(1,2),(2,2),(3,4)}}, P_i+1 = {{(0,4),(1,1),(2,2),(3,2)}}\n\
+         Gavel's policy migrates {} jobs; Tesserae's remapping migrates {}.\n",
+        gavel.migrations, ours.migrations
+    )
+}
+
+/// Fig. 7: the worked packing-matching example.
+pub fn fig7_packing_example() -> String {
+    use crate::matching::{max_weight_matching, HungarianEngine};
+    let edges = vec![
+        (0usize, 0usize, 0.8f64),
+        (0, 1, 1.2),
+        (1, 1, 0.9),
+        (1, 2, 1.1),
+        (2, 2, 1.3),
+    ];
+    let m = max_weight_matching(3, 3, &edges, &HungarianEngine);
+    let total: f64 = m.iter().map(|p| p.weight).sum();
+    let mut s = String::from("Fig. 7 — packing as max-weight bipartite matching\n");
+    for p in &m {
+        s.push_str(&format!(
+            "  placed job {} <-> pending job {} (weight {:.2})\n",
+            p.left + 1,
+            p.right + 4,
+            p.weight
+        ));
+    }
+    s.push_str(&format!("  total combined normalized throughput: {total:.2}\n"));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_contains_oom_and_best_pp_win() {
+        let s = fig8_parallelism_packing();
+        assert!(s.contains("OOM"), "{s}");
+        // Extract resnet-50 rows: Best PP sum must beat Default PP sum.
+        let rows: Vec<&str> = s.lines().filter(|l| l.starts_with("resnet-50")).collect();
+        let sum_of = |needle: &str| -> f64 {
+            rows.iter()
+                .find(|l| l.contains(needle))
+                .and_then(|l| l.split_whitespace().last())
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.0)
+        };
+        assert!(
+            sum_of("Best PP") > sum_of("Default PP"),
+            "{s}"
+        );
+    }
+
+    #[test]
+    fn fig16_zero_noise_is_identity() {
+        let s = fig16_noise_sensitivity(&Scale::quick(), &[0.0, 1.0]);
+        assert!(s.contains("1.00x"));
+    }
+
+    #[test]
+    fn fig18_linear_bo_cheaper_than_oracle() {
+        let s = fig18_estimators(&Scale::quick());
+        assert!(s.contains("Oracle"));
+        assert!(s.contains("Linear+BO"));
+    }
+
+    #[test]
+    fn fig1_example_counts() {
+        let s = fig1_migration_example();
+        assert!(s.contains("migrates 3 jobs"), "{s}");
+        assert!(s.contains("remapping migrates 0"), "{s}");
+    }
+
+    #[test]
+    fn fig7_example_matches() {
+        let s = fig7_packing_example();
+        assert!(s.contains("total combined normalized throughput: 3.00"), "{s}");
+    }
+}

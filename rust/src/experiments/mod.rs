@@ -1,0 +1,332 @@
+//! Experiment registry: one entry per figure/table of the paper's
+//! evaluation (§6, §7). Each function regenerates the corresponding rows;
+//! the bench binaries and the `tesserae figure <id>` CLI call into here,
+//! and EXPERIMENTS.md records paper-vs-measured.
+
+pub mod ablations;
+pub mod end_to_end;
+pub mod scalability;
+
+use std::sync::Arc;
+
+use crate::cluster::{ClusterSpec, GpuType};
+use crate::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+use crate::matching::{HungarianEngine, MatchingEngine};
+use crate::policies::placement::{MigrationMode, PackingConfig, StrategyMode};
+use crate::profiler::Profiler;
+use crate::schedulers::{
+    GavelObjective, GavelScheduler, PopScheduler, Scheduler, TesseraeScheduler,
+};
+use crate::simulator::{simulate, SimConfig, SimResult};
+use crate::trace::{Trace, TraceParams};
+
+/// Scheduler configurations evaluated across the figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedKind {
+    TesseraeT,
+    /// Tesserae-T with Gavel's baseline migration (Fig. 11 "w/o").
+    TesseraeTBasicMigration,
+    /// Tesserae-T without any packing (migration-only ablation).
+    TesseraeTNoPack,
+    TesseraeFtf,
+    Tiresias,
+    TiresiasSingle,
+    Gavel,
+    GavelFtf,
+    Pop(usize),
+    /// Fig. 15 arms: packed-LLM strategy restricted to DP / default PP.
+    TesseraeTDp,
+    TesseraeTDefaultPp,
+    /// Compatibility arms (§2.4): Tesserae placement under other
+    /// scheduling policies.
+    TesseraeFifo,
+    TesseraeSrtf,
+}
+
+impl SchedKind {
+    pub fn label(&self) -> String {
+        match self {
+            SchedKind::TesseraeT => "Tesserae-T".into(),
+            SchedKind::TesseraeTBasicMigration => "Tesserae-T (basic migr.)".into(),
+            SchedKind::TesseraeTNoPack => "Tesserae-T (no pack)".into(),
+            SchedKind::TesseraeFtf => "Tesserae-FTF".into(),
+            SchedKind::Tiresias => "Tiresias".into(),
+            SchedKind::TiresiasSingle => "Tiresias (Single)".into(),
+            SchedKind::Gavel => "Gavel".into(),
+            SchedKind::GavelFtf => "Gavel-FTF".into(),
+            SchedKind::Pop(k) => format!("POP-{k}"),
+            SchedKind::TesseraeTDp => "Tesserae-T (DP)".into(),
+            SchedKind::TesseraeTDefaultPp => "Tesserae-T (Def PP)".into(),
+            SchedKind::TesseraeFifo => "Tesserae-FIFO".into(),
+            SchedKind::TesseraeSrtf => "Tesserae-SRTF".into(),
+        }
+    }
+}
+
+/// Build a scheduler over a shared throughput source + matching engine.
+pub fn build_scheduler(
+    kind: SchedKind,
+    source: Arc<dyn ThroughputSource>,
+    engine: Arc<dyn MatchingEngine>,
+) -> Box<dyn Scheduler> {
+    match kind {
+        SchedKind::TesseraeT => Box::new(TesseraeScheduler::tesserae_t(source, engine)),
+        SchedKind::TesseraeTBasicMigration => {
+            let mut s = TesseraeScheduler::tesserae_t(source, engine);
+            s.migration = MigrationMode::GavelBaseline;
+            Box::new(s)
+        }
+        SchedKind::TesseraeTNoPack => {
+            let mut s = TesseraeScheduler::tesserae_t(source, engine);
+            s.packing = None;
+            Box::new(s)
+        }
+        SchedKind::TesseraeFtf => Box::new(TesseraeScheduler::tesserae_ftf(source, engine)),
+        SchedKind::Tiresias => Box::new(TesseraeScheduler::tiresias(source, engine)),
+        SchedKind::TiresiasSingle => {
+            Box::new(TesseraeScheduler::tiresias_single(source, engine))
+        }
+        SchedKind::Gavel => Box::new(GavelScheduler::new(
+            GavelObjective::Las,
+            true,
+            source,
+            engine,
+        )),
+        SchedKind::GavelFtf => Box::new(GavelScheduler::new(
+            GavelObjective::Ftf,
+            true,
+            source,
+            engine,
+        )),
+        SchedKind::Pop(k) => Box::new(PopScheduler::new(
+            k,
+            GavelObjective::Las,
+            true,
+            source,
+            engine,
+        )),
+        SchedKind::TesseraeTDp => {
+            let mut s = TesseraeScheduler::tesserae_t(source, engine);
+            s.packing = Some(PackingConfig {
+                strategy_mode: StrategyMode::DpOnly,
+                ..Default::default()
+            });
+            Box::new(s)
+        }
+        SchedKind::TesseraeTDefaultPp => {
+            let mut s = TesseraeScheduler::tesserae_t(source, engine);
+            s.packing = Some(PackingConfig {
+                strategy_mode: StrategyMode::DefaultPp,
+                ..Default::default()
+            });
+            Box::new(s)
+        }
+        SchedKind::TesseraeFifo => Box::new(TesseraeScheduler::new(
+            "tesserae-fifo",
+            Box::new(crate::policies::scheduling::Fifo),
+            source,
+            engine,
+            Some(PackingConfig::default()),
+            MigrationMode::Tesserae,
+        )),
+        SchedKind::TesseraeSrtf => Box::new(TesseraeScheduler::new(
+            "tesserae-srtf",
+            Box::new(crate::policies::scheduling::Srtf),
+            source,
+            engine,
+            Some(PackingConfig::default()),
+            MigrationMode::Tesserae,
+        )),
+    }
+}
+
+/// §2.4 "Compatibility": the same placement policies under four different
+/// scheduling policies — each arm must complete the trace, and packing +
+/// migration benefits must not depend on the scheduling policy choice.
+pub fn compatibility_study(scale: &Scale) -> String {
+    use crate::util::benchutil::Table;
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let mut t = Table::new(&[
+        "scheduling policy",
+        "avg JCT (s)",
+        "makespan (s)",
+        "migrations",
+    ]);
+    for kind in [
+        SchedKind::TesseraeT,
+        SchedKind::TesseraeFtf,
+        SchedKind::TesseraeFifo,
+        SchedKind::TesseraeSrtf,
+    ] {
+        let r = run_sim(kind, &trace, spec, scale.seed, 0.0);
+        t.row(&[
+            kind.label(),
+            format!("{:.0}", r.avg_jct),
+            format!("{:.0}", r.makespan),
+            format!("{}", r.total_migrations),
+        ]);
+    }
+    format!(
+        "Compatibility (§2.4): Tesserae placement under four scheduling policies\n{}",
+        t.render()
+    )
+}
+
+/// Experiment scale (quick mode keeps `cargo test` fast; the benches run
+/// closer to paper scale).
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    pub jobs: usize,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub jobs_per_hour: f64,
+    pub seed: u64,
+}
+
+impl Scale {
+    /// Test scale: minutes of simulated time, sub-second runs.
+    pub fn quick() -> Scale {
+        Scale {
+            jobs: 60,
+            nodes: 4,
+            gpus_per_node: 4,
+            jobs_per_hour: 160.0,
+            seed: 7,
+        }
+    }
+
+    /// Bench scale: the paper's 80-GPU simulation cluster, reduced trace.
+    pub fn standard() -> Scale {
+        Scale {
+            jobs: 300,
+            nodes: 20,
+            gpus_per_node: 4,
+            jobs_per_hour: 80.0,
+            seed: 7,
+        }
+    }
+
+    /// Paper scale: 900 jobs on 80 GPUs (§6.3).
+    pub fn paper() -> Scale {
+        Scale {
+            jobs: 900,
+            nodes: 20,
+            gpus_per_node: 4,
+            jobs_per_hour: 80.0,
+            seed: 7,
+        }
+    }
+
+    pub fn spec(&self, gpu: GpuType) -> ClusterSpec {
+        ClusterSpec::new(self.nodes, self.gpus_per_node, gpu)
+    }
+
+    pub fn shockwave_trace(&self) -> Trace {
+        Trace::shockwave(&TraceParams {
+            num_jobs: self.jobs,
+            jobs_per_hour: self.jobs_per_hour,
+            seed: self.seed,
+        })
+    }
+
+    pub fn gavel_trace(&self) -> Trace {
+        Trace::gavel(&TraceParams {
+            num_jobs: self.jobs,
+            jobs_per_hour: self.jobs_per_hour,
+            seed: self.seed,
+        })
+    }
+}
+
+/// Run one scheduler over a trace with the oracle (cached) source.
+pub fn run_sim(
+    kind: SchedKind,
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+    decision_noise: f64,
+) -> SimResult {
+    run_sim_engine(
+        kind,
+        trace,
+        spec,
+        seed,
+        decision_noise,
+        Arc::new(HungarianEngine),
+    )
+}
+
+/// Like [`run_sim`] but with an explicit matching engine (e.g. the AOT
+/// JAX/Pallas auction) — the engine-ablation path.
+pub fn run_sim_engine(
+    kind: SchedKind,
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+    decision_noise: f64,
+    engine: Arc<dyn MatchingEngine>,
+) -> SimResult {
+    let truth = Profiler::new(spec.gpu_type, seed);
+    let visible = if decision_noise > 0.0 {
+        truth.with_decision_noise(decision_noise, seed ^ 0xbeef)
+    } else {
+        truth.clone()
+    };
+    let source: Arc<dyn ThroughputSource> =
+        Arc::new(CachedSource::new(OracleEstimator::new(visible)));
+    let mut sched = build_scheduler(kind, source, engine);
+    let cfg = SimConfig::new(spec);
+    simulate(trace, sched.as_mut(), &truth, &cfg)
+}
+
+/// Run with a caller-supplied throughput source (Fig. 18's estimators).
+pub fn run_sim_with_source(
+    kind: SchedKind,
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+    source: Arc<dyn ThroughputSource>,
+) -> SimResult {
+    let truth = Profiler::new(spec.gpu_type, seed);
+    let engine: Arc<dyn MatchingEngine> = Arc::new(HungarianEngine);
+    let mut sched = build_scheduler(kind, source, engine);
+    let cfg = SimConfig::new(spec);
+    simulate(trace, sched.as_mut(), &truth, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_scheduler_kind_builds_and_runs() {
+        let scale = Scale {
+            jobs: 12,
+            nodes: 2,
+            gpus_per_node: 2,
+            jobs_per_hour: 240.0,
+            seed: 3,
+        };
+        let trace = scale.shockwave_trace();
+        for kind in [
+            SchedKind::TesseraeT,
+            SchedKind::TesseraeTBasicMigration,
+            SchedKind::TesseraeTNoPack,
+            SchedKind::TesseraeFtf,
+            SchedKind::Tiresias,
+            SchedKind::TiresiasSingle,
+            SchedKind::Gavel,
+            SchedKind::GavelFtf,
+            SchedKind::Pop(2),
+            SchedKind::TesseraeTDp,
+            SchedKind::TesseraeTDefaultPp,
+            SchedKind::TesseraeFifo,
+            SchedKind::TesseraeSrtf,
+        ] {
+            let r = run_sim(kind, &trace, scale.spec(GpuType::A100), 3, 0.0);
+            assert_eq!(r.unfinished, 0, "{} left jobs unfinished", kind.label());
+            assert!(r.avg_jct > 0.0);
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Scalability experiments: Fig. 2 (decision time vs active jobs for
+//! Tesserae / Gavel / POP) and Fig. 14 (scalability + Tesserae overhead
+//! breakdown), plus the matching-engine comparison that exercises the AOT
+//! auction artifact.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+use crate::jobs::ModelKind;
+use crate::matching::{HungarianEngine, MatchingEngine};
+use crate::policies::JobInfo;
+use crate::profiler::Profiler;
+use crate::schedulers::RoundInput;
+use crate::util::benchutil::Table;
+use crate::util::rng::Pcg64;
+
+use super::{build_scheduler, SchedKind};
+
+/// Synthesize `n` active jobs on a cluster (the Fig. 2 workload: ResNet-50,
+/// VGG-19, DCGAN, PointNet with mixed GPU demands).
+pub fn synthetic_active_jobs(n: usize, seed: u64) -> Vec<JobInfo> {
+    let mut rng = Pcg64::new(seed);
+    let models = [
+        ModelKind::ResNet50,
+        ModelKind::Vgg19,
+        ModelKind::Dcgan,
+        ModelKind::PointNet,
+    ];
+    (0..n)
+        .map(|i| {
+            let gpus = [1u32, 1, 1, 2, 2, 4, 8][rng.below(7) as usize];
+            JobInfo {
+                id: i as u64,
+                model: models[rng.below(4) as usize],
+                num_gpus: gpus,
+                arrival_time: i as f64,
+                attained_service: rng.range_f64(0.0, 100_000.0),
+                total_iters: rng.range_f64(1e4, 1e6),
+                completed_iters: 0.0,
+                rounds_received: rng.below(50),
+                now: 1e6,
+                iso_tput: 10.0,
+            }
+        })
+        .collect()
+}
+
+/// One decision-time measurement: scheduler `kind` deciding one round with
+/// `n` active jobs on `spec`. Returns (total_s, scheduling_s, packing_s,
+/// migration_s).
+pub fn measure_decision(
+    kind: SchedKind,
+    n: usize,
+    spec: &ClusterSpec,
+    seed: u64,
+) -> (f64, f64, f64, f64) {
+    let truth = Profiler::new(spec.gpu_type, seed);
+    let source: Arc<dyn ThroughputSource> =
+        Arc::new(CachedSource::new(OracleEstimator::new(truth)));
+    let engine: Arc<dyn MatchingEngine> = Arc::new(HungarianEngine);
+    let mut sched = build_scheduler(kind, source, engine);
+    let active = synthetic_active_jobs(n, seed);
+    let prev = PlacementPlan::new(spec.total_gpus());
+    let input = RoundInput {
+        now: 1e6,
+        round: 10,
+        active: &active,
+        prev_plan: &prev,
+        spec,
+    };
+    // Warm + measure (two decisions; report the second).
+    let _ = sched.decide(&input);
+    let d = sched.decide(&input);
+    (
+        d.timings.total_s,
+        d.timings.scheduling_s,
+        d.timings.packing_s,
+        d.timings.migration_s,
+    )
+}
+
+/// Fig. 2 / Fig. 14(a): decision time vs number of active jobs on a
+/// 256-GPU cluster. `budget` caps each scheduler's largest measurement —
+/// points that would exceed it are skipped with a note (this *is* the
+/// result: the LP baselines blow through the budget first).
+pub fn fig2_decision_time(job_counts: &[usize], budget: Duration) -> String {
+    let spec = ClusterSpec::scale_256();
+    let kinds = [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(8)];
+    let mut t = Table::new(&["active jobs", "Tesserae-T", "Gavel", "POP-8"]);
+    let mut blown = [false; 3];
+    for &n in job_counts {
+        let mut row = vec![format!("{n}")];
+        for (i, &kind) in kinds.iter().enumerate() {
+            if blown[i] {
+                row.push("> budget".into());
+                continue;
+            }
+            let t0 = Instant::now();
+            let (total, ..) = measure_decision(kind, n, &spec, 11);
+            row.push(format!("{:.3}s", total));
+            if t0.elapsed() > budget {
+                blown[i] = true;
+            }
+        }
+        t.row(&row);
+    }
+    format!(
+        "Fig. 2 / Fig. 14(a) — decision time vs active jobs, 256 GPUs\n\
+         (paper: Gavel/POP superlinear; Tesserae < 1.6s at 2048 jobs)\n{}",
+        t.render()
+    )
+}
+
+/// Fig. 14(b): Tesserae-T decision-time breakdown.
+pub fn fig14b_breakdown(job_counts: &[usize]) -> String {
+    let spec = ClusterSpec::scale_256();
+    let mut t = Table::new(&["active jobs", "scheduling", "packing", "migration", "total"]);
+    for &n in job_counts {
+        let (total, sched, packing, migration) =
+            measure_decision(SchedKind::TesseraeT, n, &spec, 13);
+        t.row(&[
+            format!("{n}"),
+            format!("{:.4}s", sched),
+            format!("{:.4}s", packing),
+            format!("{:.4}s", migration),
+            format!("{:.4}s", total),
+        ]);
+    }
+    format!(
+        "Fig. 14(b) — Tesserae-T overhead breakdown (paper: scheduling+packing \
+         grow with jobs; migration flat in jobs, set by GPU count)\n{}",
+        t.render()
+    )
+}
+
+/// Matching-engine comparison across problem sizes: native Hungarian vs
+/// native auction vs the AOT JAX/Pallas auction through PJRT.
+pub fn matching_engine_comparison(sizes: &[usize], include_aot: bool) -> String {
+    use crate::linalg::Matrix;
+    use crate::matching::{auction, hungarian};
+
+    let mut engines: Vec<(&str, Box<dyn Fn(&Matrix) -> f64>)> = vec![
+        (
+            "hungarian",
+            Box::new(|c: &Matrix| hungarian::solve_min_cost(c).cost),
+        ),
+        (
+            "auction(native)",
+            Box::new(|c: &Matrix| auction::solve_min_cost(c, Some(1.0 / 16.0)).cost),
+        ),
+    ];
+    let aot = if include_aot {
+        crate::runtime::AotAssignmentEngine::discover().ok()
+    } else {
+        None
+    };
+    if let Some(engine) = aot {
+        let engine = std::sync::Arc::new(engine);
+        engines.push((
+            "auction(AOT/PJRT)",
+            Box::new(move |c: &Matrix| engine.solve_min_cost(c).cost),
+        ));
+    }
+
+    let mut t = Table::new(&["n", "engine", "time", "cost"]);
+    let mut rng = Pcg64::new(21);
+    for &n in sizes {
+        let mut cost = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                cost.set(i, j, rng.below(64) as f64 / 16.0);
+            }
+        }
+        for (name, solve) in &engines {
+            let t0 = Instant::now();
+            let c = solve(&cost);
+            t.row(&[
+                format!("{n}"),
+                name.to_string(),
+                crate::util::benchutil::fmt_duration(t0.elapsed().as_secs_f64()),
+                format!("{:.2}", c),
+            ]);
+        }
+    }
+    format!("Matching engines (exact cost must agree across engines)\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuType;
+
+    #[test]
+    fn tesserae_decision_subsecond_at_scale() {
+        // The headline scalability claim, scaled down for test time:
+        // 256 GPUs, 512 active jobs, must decide well under the paper's
+        // 1.6 s envelope.
+        let spec = ClusterSpec::scale_256();
+        let (total, ..) = measure_decision(SchedKind::TesseraeT, 512, &spec, 3);
+        assert!(total < 1.6, "decision took {total}s");
+    }
+
+    #[test]
+    fn gavel_slower_than_tesserae_at_scale() {
+        // The Fig. 2 shape needs enough jobs/GPUs for the LP to dominate;
+        // at small scale the simplex solves in a handful of pivots.
+        let spec = ClusterSpec::scale_256();
+        let (tess, ..) = measure_decision(SchedKind::TesseraeT, 1000, &spec, 5);
+        let (gavel, ..) = measure_decision(SchedKind::Gavel, 1000, &spec, 5);
+        assert!(gavel > tess, "gavel {gavel} vs tesserae {tess}");
+    }
+
+    #[test]
+    fn breakdown_components_sum_below_total() {
+        let spec = ClusterSpec::new(8, 4, GpuType::A100);
+        let (total, s, p, m) = measure_decision(SchedKind::TesseraeT, 100, &spec, 7);
+        assert!(s + p + m <= total * 1.05, "{s}+{p}+{m} vs {total}");
+    }
+
+    #[test]
+    fn synthetic_jobs_cover_all_sizes() {
+        let jobs = synthetic_active_jobs(500, 9);
+        for g in [1u32, 2, 4, 8] {
+            assert!(jobs.iter().any(|j| j.num_gpus == g), "no {g}-GPU jobs");
+        }
+    }
+}

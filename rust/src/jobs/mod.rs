@@ -1,0 +1,238 @@
+//! Job model: the workload zoo of Table 1, parallelism strategies for the
+//! LLM jobs (§4.2 "Parallelism Strategy"), and the static job spec carried
+//! by traces. Dynamic per-job state (attained service, progress, placement)
+//! lives in the simulator / coordinator.
+
+pub mod strategy;
+
+pub use strategy::ParallelismStrategy;
+
+/// Unique job identifier (stable across rounds).
+pub type JobId = u64;
+
+/// The model zoo of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelKind {
+    ResNet50,
+    Vgg19,
+    Dcgan,
+    PointNet,
+    Gpt3Medium,
+    Gpt3Xl,
+    Gpt3_3B,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 7] = [
+        ModelKind::ResNet50,
+        ModelKind::Vgg19,
+        ModelKind::Dcgan,
+        ModelKind::PointNet,
+        ModelKind::Gpt3Medium,
+        ModelKind::Gpt3Xl,
+        ModelKind::Gpt3_3B,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::ResNet50 => "resnet-50",
+            ModelKind::Vgg19 => "vgg-19",
+            ModelKind::Dcgan => "dcgan",
+            ModelKind::PointNet => "pointnet",
+            ModelKind::Gpt3Medium => "gpt3-medium",
+            ModelKind::Gpt3Xl => "gpt3-xl",
+            ModelKind::Gpt3_3B => "gpt3-3b",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<ModelKind> {
+        Self::ALL.iter().copied().find(|m| m.name() == name)
+    }
+
+    /// Table 1 task column.
+    pub fn task(&self) -> &'static str {
+        match self {
+            ModelKind::ResNet50 | ModelKind::Vgg19 => "image classification",
+            ModelKind::Dcgan => "image-to-image translation",
+            ModelKind::PointNet => "3d point cloud classification",
+            _ => "language modeling",
+        }
+    }
+
+    /// Table 1 dataset column.
+    pub fn dataset(&self) -> &'static str {
+        match self {
+            ModelKind::ResNet50 | ModelKind::Vgg19 => "imagenet",
+            ModelKind::Dcgan => "lsun",
+            ModelKind::PointNet => "shapenet",
+            _ => "wikipedia",
+        }
+    }
+
+    /// Table 1 batch-size range (inclusive).
+    pub fn batch_size_range(&self) -> (u32, u32) {
+        match self {
+            ModelKind::ResNet50 => (32, 256),
+            ModelKind::Vgg19 => (16, 128),
+            ModelKind::Dcgan => (128, 1024),
+            ModelKind::PointNet => (32, 256),
+            _ => (512, 512),
+        }
+    }
+
+    /// Whether the model contains transformer layers — the paper's group-2
+    /// (Megatron-LM 3D parallelism) vs group-1 (PyTorch DDP) split (§5).
+    pub fn is_llm(&self) -> bool {
+        matches!(
+            self,
+            ModelKind::Gpt3Medium | ModelKind::Gpt3Xl | ModelKind::Gpt3_3B
+        )
+    }
+
+    /// Transformer layer count (used to enumerate pipeline splits).
+    pub fn num_layers(&self) -> u32 {
+        match self {
+            ModelKind::Gpt3Medium => 24,
+            ModelKind::Gpt3Xl => 24,
+            ModelKind::Gpt3_3B => 32,
+            // Non-LLMs train with DDP only; layer count is not used for
+            // strategy search but is handy for reporting.
+            ModelKind::ResNet50 => 50,
+            ModelKind::Vgg19 => 19,
+            ModelKind::Dcgan => 8,
+            ModelKind::PointNet => 6,
+        }
+    }
+
+    /// Approximate parameter memory per full model copy in GB (fp16 weights
+    /// + optimizer states), used by the synthetic memory model.
+    pub fn model_mem_gb(&self) -> f64 {
+        match self {
+            ModelKind::ResNet50 => 3.0,
+            ModelKind::Vgg19 => 6.5,
+            ModelKind::Dcgan => 2.0,
+            ModelKind::PointNet => 1.0,
+            ModelKind::Gpt3Medium => 8.0,
+            ModelKind::Gpt3Xl => 16.0,
+            ModelKind::Gpt3_3B => 30.0,
+        }
+    }
+
+    /// Activation / working-set memory per GPU in GB (roughly independent of
+    /// the parallelism strategy at fixed micro-batch).
+    pub fn activation_mem_gb(&self) -> f64 {
+        match self {
+            ModelKind::ResNet50 => 3.0,
+            ModelKind::Vgg19 => 4.5,
+            ModelKind::Dcgan => 2.5,
+            ModelKind::PointNet => 1.5,
+            ModelKind::Gpt3Medium => 4.0,
+            ModelKind::Gpt3Xl => 5.0,
+            ModelKind::Gpt3_3B => 8.0,
+        }
+    }
+
+    /// Compute intensity in [0,1]: how much of a GPU's compute the model
+    /// saturates when running alone. Drives the packing-interference model.
+    pub fn compute_intensity(&self) -> f64 {
+        match self {
+            ModelKind::ResNet50 => 0.75,
+            ModelKind::Vgg19 => 0.90,
+            ModelKind::Dcgan => 0.60,
+            ModelKind::PointNet => 0.35,
+            ModelKind::Gpt3Medium => 0.92,
+            ModelKind::Gpt3Xl => 0.95,
+            ModelKind::Gpt3_3B => 0.97,
+        }
+    }
+
+    /// Isolated single-GPU throughput in iterations/second on the reference
+    /// A100 (calibrated to the rough ratios the paper quotes, e.g. PointNet
+    /// far faster per iteration than GPT3-3B in §4.2's profiling example).
+    pub fn base_tput_a100(&self) -> f64 {
+        match self {
+            ModelKind::ResNet50 => 10.0,
+            ModelKind::Vgg19 => 6.0,
+            ModelKind::Dcgan => 14.0,
+            ModelKind::PointNet => 50.0,
+            ModelKind::Gpt3Medium => 6.0,
+            ModelKind::Gpt3Xl => 3.5,
+            ModelKind::Gpt3_3B => 2.0,
+        }
+    }
+}
+
+/// Static job specification (what a trace contains).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub id: JobId,
+    pub model: ModelKind,
+    /// Number of GPUs requested (1, 2, 4 or 8 in the paper's traces).
+    pub num_gpus: u32,
+    /// Arrival time in seconds since trace start.
+    pub arrival_time: f64,
+    /// Total work in iterations. A job finishes once the integral of its
+    /// achieved throughput reaches this.
+    pub total_iters: f64,
+    pub batch_size: u32,
+}
+
+impl Job {
+    /// Isolated duration in seconds at `iso_tput` iterations/s — the FTF
+    /// metric's ideal-share denominator uses this.
+    pub fn isolated_duration(&self, iso_tput: f64) -> f64 {
+        self.total_iters / iso_tput.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_zoo_is_complete() {
+        assert_eq!(ModelKind::ALL.len(), 7);
+        let llms = ModelKind::ALL.iter().filter(|m| m.is_llm()).count();
+        assert_eq!(llms, 3);
+        for m in ModelKind::ALL {
+            assert_eq!(ModelKind::from_name(m.name()), Some(m));
+            let (lo, hi) = m.batch_size_range();
+            assert!(lo <= hi);
+            assert!(m.base_tput_a100() > 0.0);
+            assert!(m.model_mem_gb() > 0.0);
+            assert!((0.0..=1.0).contains(&m.compute_intensity()));
+        }
+    }
+
+    #[test]
+    fn llm_batch_sizes_fixed_at_512() {
+        for m in [ModelKind::Gpt3Medium, ModelKind::Gpt3Xl, ModelKind::Gpt3_3B] {
+            assert_eq!(m.batch_size_range(), (512, 512));
+        }
+    }
+
+    #[test]
+    fn gpt3_3b_has_32_layers() {
+        // The paper's best-PP example for GPT3-3B, (3,3,3,4,4,5,5,5), sums
+        // to 32 layers on 8 GPUs.
+        assert_eq!(ModelKind::Gpt3_3B.num_layers(), 32);
+    }
+
+    #[test]
+    fn from_name_rejects_unknown() {
+        assert_eq!(ModelKind::from_name("bert"), None);
+    }
+
+    #[test]
+    fn isolated_duration_inverts_throughput() {
+        let j = Job {
+            id: 1,
+            model: ModelKind::ResNet50,
+            num_gpus: 2,
+            arrival_time: 0.0,
+            total_iters: 100.0,
+            batch_size: 64,
+        };
+        assert!((j.isolated_duration(20.0) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,198 @@
+//! Parallelism strategies for 3D-parallel (LLM) jobs — the degree of
+//! freedom §4.2 adds to packing: the scheduler may re-pick a job's
+//! parallelization when packing it, boosting the bipartite edge weight
+//! (Fig. 7(b), Fig. 8, Fig. 15).
+
+use super::ModelKind;
+
+/// A parallelization of one training job over its GPUs.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum ParallelismStrategy {
+    /// Pure data parallelism: one full model replica per GPU.
+    DataParallel,
+    /// Tensor (intra-layer) model parallelism across all GPUs.
+    TensorParallel,
+    /// Pipeline parallelism: `layers[g]` transformer layers on GPU `g`.
+    Pipeline(Vec<u32>),
+}
+
+impl ParallelismStrategy {
+    pub fn name(&self) -> String {
+        match self {
+            ParallelismStrategy::DataParallel => "DP".to_string(),
+            ParallelismStrategy::TensorParallel => "TP".to_string(),
+            ParallelismStrategy::Pipeline(split) => {
+                let parts: Vec<String> = split.iter().map(|x| x.to_string()).collect();
+                format!("PP({})", parts.join(","))
+            }
+        }
+    }
+
+    /// Megatron-LM's default: layers split as evenly as possible, with the
+    /// remainder pushed onto the *front* stages (Megatron assigns
+    /// ceil(L/N) to the first L mod N stages).
+    pub fn default_pp(model: ModelKind, num_gpus: u32) -> ParallelismStrategy {
+        let layers = model.num_layers();
+        let n = num_gpus.max(1);
+        let base = layers / n;
+        let extra = layers % n;
+        let split: Vec<u32> = (0..n)
+            .map(|g| if g < extra { base + 1 } else { base })
+            .collect();
+        ParallelismStrategy::Pipeline(split)
+    }
+
+    /// Non-LLM jobs always use DDP (the paper's group-1 applications).
+    pub fn for_non_llm() -> ParallelismStrategy {
+        ParallelismStrategy::DataParallel
+    }
+
+    /// The candidate set the scheduler searches when optimizing a packed
+    /// LLM's strategy (§4.2): DP, TP, the default PP split, and a family of
+    /// *front-light* PP splits that put fewer layers on the leading stages
+    /// (the paper's winning GPT3-3B split (3,3,3,4,4,5,5,5) is front-light).
+    pub fn candidates(model: ModelKind, num_gpus: u32) -> Vec<ParallelismStrategy> {
+        if !model.is_llm() || num_gpus <= 1 {
+            return vec![ParallelismStrategy::DataParallel];
+        }
+        let mut out = vec![
+            ParallelismStrategy::DataParallel,
+            ParallelismStrategy::TensorParallel,
+            Self::default_pp(model, num_gpus),
+        ];
+        for skew in [1u32, 2] {
+            if let Some(s) = front_light_split(model.num_layers(), num_gpus, skew) {
+                let s = ParallelismStrategy::Pipeline(s);
+                if !out.contains(&s) {
+                    out.push(s);
+                }
+            }
+        }
+        out
+    }
+
+    /// Stable numeric tag for hashing / table keys.
+    pub fn tag(&self) -> u64 {
+        match self {
+            ParallelismStrategy::DataParallel => 1,
+            ParallelismStrategy::TensorParallel => 2,
+            ParallelismStrategy::Pipeline(split) => {
+                let mut h = 3u64;
+                for &x in split {
+                    h = h.wrapping_mul(131).wrapping_add(x as u64 + 7);
+                }
+                h
+            }
+        }
+    }
+
+    /// Total layers covered by a pipeline split (for validation).
+    pub fn pipeline_layers(&self) -> Option<u32> {
+        match self {
+            ParallelismStrategy::Pipeline(s) => Some(s.iter().sum()),
+            _ => None,
+        }
+    }
+}
+
+/// Build a front-light pipeline split: stage g gets roughly
+/// `avg - skew + 2*skew*g/(n-1)` layers (linearly increasing back-to-front),
+/// adjusted to sum exactly to `layers`. Returns None if infeasible
+/// (some stage would get < 1 layer).
+fn front_light_split(layers: u32, num_gpus: u32, skew: u32) -> Option<Vec<u32>> {
+    let n = num_gpus as i64;
+    let l = layers as i64;
+    if n <= 1 || l < n {
+        return None;
+    }
+    let avg = l as f64 / n as f64;
+    let mut split: Vec<i64> = (0..n)
+        .map(|g| {
+            let frac = if n > 1 { g as f64 / (n - 1) as f64 } else { 0.0 };
+            (avg - skew as f64 + 2.0 * skew as f64 * frac).round() as i64
+        })
+        .collect();
+    // Fix the sum by adjusting from the back.
+    let mut diff = l - split.iter().sum::<i64>();
+    let mut g = n - 1;
+    while diff != 0 {
+        let delta = diff.signum();
+        split[g as usize] += delta;
+        diff -= delta;
+        g = if g == 0 { n - 1 } else { g - 1 };
+    }
+    if split.iter().any(|&s| s < 1) {
+        return None;
+    }
+    Some(split.into_iter().map(|s| s as u32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_pp_is_even_and_complete() {
+        let s = ParallelismStrategy::default_pp(ModelKind::Gpt3_3B, 8);
+        assert_eq!(s.pipeline_layers(), Some(32));
+        if let ParallelismStrategy::Pipeline(split) = &s {
+            assert_eq!(split, &vec![4, 4, 4, 4, 4, 4, 4, 4]);
+        }
+        let s = ParallelismStrategy::default_pp(ModelKind::Gpt3Medium, 5);
+        // 24 layers over 5 GPUs: front stages get the remainder.
+        assert_eq!(s.pipeline_layers(), Some(24));
+        if let ParallelismStrategy::Pipeline(split) = &s {
+            assert_eq!(split, &vec![5, 5, 5, 5, 4]);
+        }
+    }
+
+    #[test]
+    fn front_light_split_is_valid_and_ascending() {
+        let s = front_light_split(32, 8, 1).unwrap();
+        assert_eq!(s.iter().sum::<u32>(), 32);
+        assert!(s.first().unwrap() < s.last().unwrap(), "{s:?}");
+        // skew=1 over GPT3-3B reproduces the paper's shape: light front,
+        // heavy back, e.g. (3,3,3,4,4,5,5,5)-like.
+        assert!(s[0] <= 3, "{s:?}");
+    }
+
+    #[test]
+    fn candidates_for_llm_include_all_families() {
+        let c = ParallelismStrategy::candidates(ModelKind::Gpt3_3B, 8);
+        assert!(c.contains(&ParallelismStrategy::DataParallel));
+        assert!(c.contains(&ParallelismStrategy::TensorParallel));
+        assert!(c.iter().filter(|s| matches!(s, ParallelismStrategy::Pipeline(_))).count() >= 2);
+        // All pipeline candidates cover every layer exactly once.
+        for s in &c {
+            if let Some(total) = s.pipeline_layers() {
+                assert_eq!(total, 32, "{}", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn non_llm_only_dp() {
+        let c = ParallelismStrategy::candidates(ModelKind::ResNet50, 8);
+        assert_eq!(c, vec![ParallelismStrategy::DataParallel]);
+    }
+
+    #[test]
+    fn single_gpu_only_dp() {
+        let c = ParallelismStrategy::candidates(ModelKind::Gpt3_3B, 1);
+        assert_eq!(c, vec![ParallelismStrategy::DataParallel]);
+    }
+
+    #[test]
+    fn infeasible_split_rejected() {
+        assert!(front_light_split(4, 8, 1).is_none());
+    }
+
+    #[test]
+    fn names_render() {
+        assert_eq!(ParallelismStrategy::DataParallel.name(), "DP");
+        assert_eq!(
+            ParallelismStrategy::Pipeline(vec![3, 3, 3, 4, 4, 5, 5, 5]).name(),
+            "PP(3,3,3,4,4,5,5,5)"
+        );
+    }
+}

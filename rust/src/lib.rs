@@ -1,0 +1,40 @@
+//! # Tesserae — scalable placement policies for deep-learning workloads
+//!
+//! Reproduction of *"Tesserae: Scalable Placement Policies for Deep Learning
+//! Workloads"* (Bian et al., 2025) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **Layer 3 (this crate)** — the cluster scheduler: scheduling policies,
+//!   the paper's graph-matching migration (Alg. 2/3/5) and packing (Alg. 4)
+//!   placement policies, Gavel/POP LP baselines, a round-based cluster
+//!   simulator, trace generators, the profiling/estimation stack, and a
+//!   real-execution coordinator that trains actual (tiny) models through
+//!   PJRT.
+//! * **Layer 2 (python/compile, build-time)** — JAX graphs AOT-lowered to
+//!   HLO text: the ε-scaling auction assignment solver, a Gaussian-process
+//!   posterior for profiling-cost reduction, and a small GPT train step.
+//! * **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels
+//!   (`top2` bidding reduction, fused causal attention) called from L2.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod estimator;
+pub mod experiments;
+pub mod jobs;
+pub mod linalg;
+pub mod matching;
+pub mod policies;
+pub mod profiler;
+pub mod runtime;
+pub mod schedulers;
+pub mod simulator;
+pub mod trace;
+pub mod util;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,353 @@
+//! Dense simplex linear-program solver.
+//!
+//! This is the substrate behind the **Gavel** and **POP** baselines (§2.3,
+//! Fig. 2/14): Gavel formulates scheduling + packing as one LP whose variable
+//! count grows with jobs (and job pairs when GPU sharing is on), which is
+//! exactly the scalability bottleneck Tesserae's graph-matching formulation
+//! avoids. We implement the standard-form tableau simplex with Bland's
+//! anti-cycling rule:
+//!
+//! maximize    cᵀx
+//! subject to  A x ≤ b,  x ≥ 0,  b ≥ 0
+//!
+//! All of the Gavel-style allocation problems in this repo fit that form
+//! (capacities are non-negative, allocations are fractions in [0,1] expressed
+//! via explicit `x_j ≤ 1` rows).
+
+use super::matrix::Matrix;
+
+/// LP instance in standard inequality form.
+#[derive(Debug, Clone)]
+pub struct Lp {
+    /// Objective coefficients (maximized), length n.
+    pub objective: Vec<f64>,
+    /// Constraint matrix, m × n.
+    pub constraints: Matrix,
+    /// Right-hand sides, length m; must be non-negative.
+    pub rhs: Vec<f64>,
+}
+
+/// Solution of an LP.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpError {
+    Unbounded,
+    /// Iteration limit exceeded — treated as a solver failure upstream.
+    Stalled,
+    BadInput(String),
+}
+
+impl std::fmt::Display for LpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LpError::Unbounded => write!(f, "LP is unbounded"),
+            LpError::Stalled => write!(f, "simplex exceeded iteration limit"),
+            LpError::BadInput(m) => write!(f, "bad LP input: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for LpError {}
+
+const EPS: f64 = 1e-9;
+
+/// Solve an LP with the dense tableau simplex method.
+pub fn solve_lp(lp: &Lp) -> Result<LpSolution, LpError> {
+    let m = lp.rhs.len();
+    let n = lp.objective.len();
+    if lp.constraints.rows() != m || lp.constraints.cols() != n {
+        return Err(LpError::BadInput(format!(
+            "constraint matrix {}x{} does not match rhs {} / objective {}",
+            lp.constraints.rows(),
+            lp.constraints.cols(),
+            m,
+            n
+        )));
+    }
+    if lp.rhs.iter().any(|&b| b < 0.0) {
+        return Err(LpError::BadInput("rhs must be non-negative".into()));
+    }
+
+    // Tableau: m rows of [A | I | b], objective row [-c | 0 | 0].
+    let width = n + m + 1;
+    let mut t = vec![0.0f64; (m + 1) * width];
+    let idx = |r: usize, c: usize| r * width + c;
+    for r in 0..m {
+        for c in 0..n {
+            t[idx(r, c)] = lp.constraints.get(r, c);
+        }
+        t[idx(r, n + r)] = 1.0;
+        t[idx(r, n + m)] = lp.rhs[r];
+    }
+    for c in 0..n {
+        t[idx(m, c)] = -lp.objective[c];
+    }
+
+    // basis[r] = column currently basic in row r (starts as slack columns).
+    let mut basis: Vec<usize> = (n..n + m).collect();
+    let max_iters = 50 * (m + n).max(64);
+    let mut iters = 0usize;
+
+    loop {
+        // Entering column: most negative reduced cost (Dantzig); fall back to
+        // Bland's rule (lowest index with negative cost) when stalling risk
+        // appears (degenerate pivots).
+        let use_bland = iters > 10 * (m + n);
+        let mut enter: Option<usize> = None;
+        let mut best = -EPS;
+        for c in 0..n + m {
+            let rc = t[idx(m, c)];
+            if rc < -EPS {
+                if use_bland {
+                    enter = Some(c);
+                    break;
+                }
+                if rc < best {
+                    best = rc;
+                    enter = Some(c);
+                }
+            }
+        }
+        let Some(ecol) = enter else {
+            // Optimal.
+            let mut x = vec![0.0; n];
+            for r in 0..m {
+                if basis[r] < n {
+                    x[basis[r]] = t[idx(r, n + m)];
+                }
+            }
+            let objective = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+            return Ok(LpSolution {
+                x,
+                objective,
+                iterations: iters,
+            });
+        };
+
+        // Leaving row: min ratio test (Bland tie-break on basis index).
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for r in 0..m {
+            let a = t[idx(r, ecol)];
+            if a > EPS {
+                let ratio = t[idx(r, n + m)] / a;
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave.map(|lr| basis[r] < basis[lr]).unwrap_or(true))
+                {
+                    best_ratio = ratio;
+                    leave = Some(r);
+                }
+            }
+        }
+        let Some(lrow) = leave else {
+            return Err(LpError::Unbounded);
+        };
+
+        // Pivot.
+        let piv = t[idx(lrow, ecol)];
+        for c in 0..width {
+            t[idx(lrow, c)] /= piv;
+        }
+        for r in 0..=m {
+            if r == lrow {
+                continue;
+            }
+            let f = t[idx(r, ecol)];
+            if f.abs() > EPS {
+                for c in 0..width {
+                    t[idx(r, c)] -= f * t[idx(lrow, c)];
+                }
+            }
+        }
+        basis[lrow] = ecol;
+        iters += 1;
+        if iters > max_iters {
+            return Err(LpError::Stalled);
+        }
+    }
+}
+
+impl Lp {
+    /// Helper: build an LP with box constraints `x_j ≤ ub_j` appended to the
+    /// structural constraints. (x ≥ 0 is implicit in standard form.)
+    pub fn with_upper_bounds(
+        objective: Vec<f64>,
+        constraints: Matrix,
+        rhs: Vec<f64>,
+        ub: &[f64],
+    ) -> Lp {
+        let n = objective.len();
+        assert_eq!(ub.len(), n);
+        let m = rhs.len();
+        let mut a = Matrix::zeros(m + n, n);
+        for r in 0..m {
+            for c in 0..n {
+                a.set(r, c, constraints.get(r, c));
+            }
+        }
+        let mut b = rhs;
+        for j in 0..n {
+            a.set(m + j, j, 1.0);
+            b.push(ub[j]);
+        }
+        Lp {
+            objective,
+            constraints: a,
+            rhs: b,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn textbook_two_vars() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 -> x=2, y=6, obj=36.
+        let lp = Lp {
+            objective: vec![3.0, 5.0],
+            constraints: Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0], &[3.0, 2.0]]),
+            rhs: vec![4.0, 12.0, 18.0],
+        };
+        let s = solve_lp(&lp).unwrap();
+        assert!((s.objective - 36.0).abs() < 1e-8);
+        assert!((s.x[0] - 2.0).abs() < 1e-8);
+        assert!((s.x[1] - 6.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let lp = Lp {
+            objective: vec![1.0, 0.0],
+            constraints: Matrix::from_rows(&[&[0.0, 1.0]]),
+            rhs: vec![1.0],
+        };
+        assert_eq!(solve_lp(&lp).unwrap_err(), LpError::Unbounded);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Classic Beale cycling example (cycles under Dantzig without a
+        // safeguard); our Bland fallback must terminate at obj = 0.05.
+        let lp = Lp {
+            objective: vec![0.75, -150.0, 0.02, -6.0],
+            constraints: Matrix::from_rows(&[
+                &[0.25, -60.0, -0.04, 9.0],
+                &[0.5, -90.0, -0.02, 3.0],
+                &[0.0, 0.0, 1.0, 0.0],
+            ]),
+            rhs: vec![0.0, 0.0, 1.0],
+        };
+        let s = solve_lp(&lp).unwrap();
+        assert!((s.objective - 0.05).abs() < 1e-8, "obj {}", s.objective);
+    }
+
+    #[test]
+    fn fractional_knapsack_matches_greedy() {
+        // A Gavel-shaped allocation: max Σ p_j x_j  s.t. Σ g_j x_j <= G,
+        // 0 <= x <= 1. Simplex must match the greedy fractional solution.
+        forall(
+            "lp-knapsack == greedy",
+            7,
+            30,
+            |r| {
+                let n = 2 + r.below(12) as usize;
+                let p: Vec<f64> = (0..n).map(|_| r.range_f64(0.1, 4.0)).collect();
+                let g: Vec<f64> = (0..n).map(|_| r.range_u64(1, 8) as f64).collect();
+                let cap = r.range_f64(1.0, g.iter().sum::<f64>());
+                (p, g, cap)
+            },
+            |(p, g, cap)| {
+                let n = p.len();
+                let lp = Lp::with_upper_bounds(
+                    p.clone(),
+                    Matrix::from_vec(1, n, g.clone()),
+                    vec![*cap],
+                    &vec![1.0; n],
+                );
+                let s = solve_lp(&lp).map_err(|e| e.to_string())?;
+                // Greedy by density.
+                let mut order: Vec<usize> = (0..n).collect();
+                order.sort_by(|&a, &b| {
+                    (p[b] / g[b]).partial_cmp(&(p[a] / g[a])).unwrap()
+                });
+                let mut rem = *cap;
+                let mut obj = 0.0;
+                for &j in &order {
+                    let take = (rem / g[j]).min(1.0).max(0.0);
+                    obj += take * p[j];
+                    rem -= take * g[j];
+                    if rem <= 0.0 {
+                        break;
+                    }
+                }
+                crate::util::prop::approx_eq(s.objective, obj, 1e-6)
+            },
+        );
+    }
+
+    #[test]
+    fn bad_input_rejected() {
+        let lp = Lp {
+            objective: vec![1.0],
+            constraints: Matrix::zeros(1, 1),
+            rhs: vec![-1.0],
+        };
+        assert!(matches!(solve_lp(&lp), Err(LpError::BadInput(_))));
+    }
+
+    #[test]
+    fn solution_is_feasible() {
+        forall(
+            "lp solution feasible",
+            13,
+            25,
+            |r| {
+                let n = 1 + r.below(6) as usize;
+                let m = 1 + r.below(6) as usize;
+                let c: Vec<f64> = (0..n).map(|_| r.range_f64(0.0, 2.0)).collect();
+                let mut a = Matrix::zeros(m, n);
+                for i in 0..m {
+                    for j in 0..n {
+                        a.set(i, j, r.range_f64(0.0, 2.0));
+                    }
+                }
+                let b: Vec<f64> = (0..m).map(|_| r.range_f64(0.5, 5.0)).collect();
+                Lp {
+                    objective: c,
+                    constraints: a,
+                    rhs: b,
+                }
+            },
+            |lp| {
+                // Non-negative A with positive b: bounded unless a zero
+                // column has positive objective — filter that case.
+                match solve_lp(lp) {
+                    Ok(s) => {
+                        for (i, row) in (0..lp.rhs.len()).map(|i| (i, lp.constraints.row(i))) {
+                            let lhs: f64 = row.iter().zip(&s.x).map(|(a, x)| a * x).sum();
+                            if lhs > lp.rhs[i] + 1e-6 {
+                                return Err(format!("row {i} violated: {lhs} > {}", lp.rhs[i]));
+                            }
+                        }
+                        if s.x.iter().any(|&x| x < -1e-9) {
+                            return Err("negative x".into());
+                        }
+                        Ok(())
+                    }
+                    Err(LpError::Unbounded) => Ok(()), // possible with zero columns
+                    Err(e) => Err(e.to_string()),
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! Dense linear-algebra substrate: matrices, Cholesky factorization (for the
+//! Gaussian-process estimator) and a dense simplex LP solver (for the
+//! Gavel / POP baselines). Implemented from scratch — the offline crate set
+//! has no linear algebra crates.
+
+pub mod lp;
+pub mod matrix;
+
+pub use lp::{solve_lp, Lp, LpError, LpSolution};
+pub use matrix::Matrix;
+
+/// Cholesky factorization of a symmetric positive-definite matrix:
+/// returns lower-triangular `L` with `L Lᵀ = A`. Errors if `A` is not SPD
+/// (within jitter tolerance).
+pub fn cholesky(a: &Matrix) -> Result<Matrix, String> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs a square matrix");
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j);
+            for k in 0..j {
+                sum -= l.get(i, k) * l.get(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!("matrix not positive definite at pivot {i} ({sum})"));
+                }
+                l.set(i, j, sum.sqrt());
+            } else {
+                l.set(i, j, sum / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l.get(i, k) * y[k];
+        }
+        y[i] = sum / l.get(i, i);
+    }
+    y
+}
+
+/// Solve `Lᵀ x = y` for lower-triangular `L` (back substitution).
+pub fn solve_lower_t(l: &Matrix, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l.get(k, i) * x[k];
+        }
+        x[i] = sum / l.get(i, i);
+    }
+    x
+}
+
+/// Solve the SPD system `A x = b` via Cholesky.
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> Result<Vec<f64>, String> {
+    let l = cholesky(a)?;
+    Ok(solve_lower_t(&l, &solve_lower(&l, b)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{approx_eq, forall};
+
+    #[test]
+    fn cholesky_known() {
+        // A = [[4,2],[2,3]] -> L = [[2,0],[1,sqrt(2)]]
+        let a = Matrix::from_rows(&[&[4.0, 2.0], &[2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        assert!((l.get(0, 0) - 2.0).abs() < 1e-12);
+        assert!((l.get(1, 0) - 1.0).abs() < 1e-12);
+        assert!((l.get(1, 1) - 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(l.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_solve_roundtrip_property() {
+        forall(
+            "solve_spd(A, A x) == x",
+            99,
+            40,
+            |r| {
+                let n = 1 + r.below(8) as usize;
+                // A = M Mᵀ + n·I is SPD.
+                let m = Matrix::random(n, n, r);
+                let mut a = m.matmul(&m.transpose());
+                for i in 0..n {
+                    a.set(i, i, a.get(i, i) + n as f64);
+                }
+                let x: Vec<f64> = (0..n).map(|_| r.range_f64(-2.0, 2.0)).collect();
+                (a, x)
+            },
+            |(a, x)| {
+                let b = a.matvec(x);
+                let got = solve_spd(a, &b).map_err(|e| e.to_string())?;
+                for (g, want) in got.iter().zip(x) {
+                    approx_eq(*g, *want, 1e-8)?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,210 @@
+//! `tesserae` — CLI entrypoint for the Tesserae reproduction.
+//!
+//! Subcommands:
+//!   gen-trace   generate a Shockwave/Gavel-style workload trace (JSON)
+//!   simulate    run a scheduler over a trace and report JCT/makespan/FTF
+//!   figure      regenerate one of the paper's figures/tables
+//!   serve       real-execution mode: schedule actual training jobs over
+//!               PJRT worker threads and report measured results
+//!   engines     compare matching engines (Hungarian / auction / AOT)
+
+use std::process::ExitCode;
+
+use tesserae::cluster::GpuType;
+use tesserae::coordinator::{run_cluster, ExecConfig, ExecJob};
+use tesserae::experiments::{self, ablations, end_to_end, scalability, Scale, SchedKind};
+use tesserae::trace::{Trace, TraceParams};
+use tesserae::util::cli::Args;
+
+const USAGE: &str = "\
+tesserae <command> [options]
+
+commands:
+  gen-trace   --out <path> [--jobs N] [--rate JOBS_PER_HOUR] [--seed S] [--gavel]
+  simulate    --trace <path> | [--jobs N] ; [--scheduler NAME] [--nodes N]
+              [--gpus-per-node G] [--gpu a100|v100] [--seed S] [--noise F]
+              scheduler names: tesserae-t tesserae-ftf tiresias tiresias-single
+                               gavel gavel-ftf pop
+  figure      <fig1|fig2|fig3|fig7|fig8|fig9|fig11|fig12|fig13|fig14|fig15|
+               fig16|fig17|fig18|table2> [--scale quick|standard|paper]
+  serve       [--jobs N] [--nodes N] [--gpus-per-node G] [--round-secs F]
+  engines     [--sizes 8,32,64] [--no-aot]
+";
+
+fn parse_scale(args: &Args) -> Scale {
+    match args.get_str("scale", "standard").as_str() {
+        "quick" => Scale::quick(),
+        "paper" => Scale::paper(),
+        _ => Scale::standard(),
+    }
+}
+
+fn parse_kind(name: &str) -> Option<SchedKind> {
+    Some(match name {
+        "tesserae-t" => SchedKind::TesseraeT,
+        "tesserae-ftf" => SchedKind::TesseraeFtf,
+        "tiresias" => SchedKind::Tiresias,
+        "tiresias-single" => SchedKind::TiresiasSingle,
+        "gavel" => SchedKind::Gavel,
+        "gavel-ftf" => SchedKind::GavelFtf,
+        "pop" => SchedKind::Pop(8),
+        _ => return None,
+    })
+}
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let Some(cmd) = args.subcommand() else {
+        eprint!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let result = match cmd {
+        "gen-trace" => cmd_gen_trace(&args),
+        "simulate" => cmd_simulate(&args),
+        "figure" => cmd_figure(&args),
+        "serve" => cmd_serve(&args),
+        "engines" => cmd_engines(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_gen_trace(args: &Args) -> anyhow::Result<()> {
+    let params = TraceParams {
+        num_jobs: args.get_usize("jobs", 900),
+        jobs_per_hour: args.get_f64("rate", 80.0),
+        seed: args.get_u64("seed", 1),
+    };
+    let trace = if args.flag("gavel") {
+        Trace::gavel(&params)
+    } else {
+        Trace::shockwave(&params)
+    };
+    let out = args.get_str("out", "trace.json");
+    trace.save(&out)?;
+    println!("wrote {} jobs to {out}", trace.jobs.len());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let gpu = GpuType::from_name(&args.get_str("gpu", "a100"))
+        .ok_or_else(|| anyhow::anyhow!("unknown gpu type"))?;
+    let scale = Scale {
+        jobs: args.get_usize("jobs", 300),
+        nodes: args.get_usize("nodes", 20),
+        gpus_per_node: args.get_usize("gpus-per-node", 4),
+        jobs_per_hour: args.get_f64("rate", 80.0),
+        seed: args.get_u64("seed", 7),
+    };
+    let trace = match args.get("trace") {
+        Some(path) => Trace::load(path)?,
+        None => scale.shockwave_trace(),
+    };
+    let name = args.get_str("scheduler", "tesserae-t");
+    let kind =
+        parse_kind(&name).ok_or_else(|| anyhow::anyhow!("unknown scheduler '{name}'"))?;
+    let noise = args.get_f64("noise", 0.0);
+    let r = experiments::run_sim(kind, &trace, scale.spec(gpu), scale.seed, noise);
+    println!(
+        "{}: jobs={} avg JCT={:.0}s makespan={:.0}s migrations={} worst FTF={:.2} avg decision={:.4}s",
+        r.scheduler,
+        r.outcomes.len(),
+        r.avg_jct,
+        r.makespan,
+        r.total_migrations,
+        r.worst_ftf(),
+        r.avg_decision_time()
+    );
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("figure needs an id\n{USAGE}"))?
+        .as_str();
+    let scale = parse_scale(args);
+    let report = match id {
+        "fig1" => ablations::fig1_migration_example(),
+        "fig2" | "fig14a" => scalability::fig2_decision_time(
+            &[250, 500, 1000, 2000, 3000],
+            std::time::Duration::from_secs(args.get_u64("budget-secs", 120)),
+        ),
+        "fig3" => end_to_end::fig3_real_migration_overhead(args.get_f64("round-secs", 0.5))?,
+        "fig7" => ablations::fig7_packing_example(),
+        "fig8" => ablations::fig8_parallelism_packing(),
+        "fig9" => end_to_end::fig9_tesserae_vs_tiresias(&scale).0,
+        "fig11" => end_to_end::fig11_vs_gavel(&scale),
+        "fig12" => end_to_end::fig12_vs_tiresias_single(&scale),
+        "fig13" => end_to_end::fig13_ftf(&scale),
+        "fig14" | "fig14b" => scalability::fig14b_breakdown(&[250, 500, 1000, 2000]),
+        "fig15" => ablations::fig15_strategy_impact(&scale),
+        "fig16" => ablations::fig16_noise_sensitivity(&scale, &[0.0, 0.2, 0.4, 0.6, 0.8, 1.0]),
+        "fig17" => end_to_end::fig17_gavel_trace(&scale),
+        "fig18" => ablations::fig18_estimators(&scale),
+        "table2" => end_to_end::table2_fidelity(
+            args.get_usize("reps", 3),
+            args.get_f64("round-secs", 0.5),
+        )?,
+        other => anyhow::bail!("unknown figure '{other}'"),
+    };
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("jobs", 6);
+    let jobs: Vec<ExecJob> = (0..n as u64)
+        .map(|i| ExecJob {
+            id: i + 1,
+            model: if i % 3 == 0 { "gpt-micro" } else { "gpt-nano" }.into(),
+            num_gpus: if i % 4 == 2 { 2 } else { 1 },
+            arrival_round: i / 2,
+            total_steps: 40 + 15 * i,
+        })
+        .collect();
+    let cfg = ExecConfig {
+        num_nodes: args.get_usize("nodes", 2),
+        gpus_per_node: args.get_usize("gpus-per-node", 2),
+        round_wall_s: args.get_f64("round-secs", 1.0),
+        ..Default::default()
+    };
+    let r = run_cluster(&jobs, &cfg)?;
+    println!(
+        "rounds={} migrations={} ckpt={}B/{:.3}s wall={:.1}s avg JCT={:.1} rounds",
+        r.rounds,
+        r.total_migrations,
+        r.checkpoint_bytes,
+        r.checkpoint_time_s,
+        r.wall_s,
+        r.avg_jct_rounds
+    );
+    for (id, j) in &r.jobs {
+        println!(
+            "  job {id} ({}): steps={} JCT={} rounds, migrations={}, loss {:.3} -> {:.3}",
+            j.model, j.steps, j.jct_rounds, j.migrations, j.first_loss, j.last_loss
+        );
+    }
+    Ok(())
+}
+
+fn cmd_engines(args: &Args) -> anyhow::Result<()> {
+    let sizes: Vec<usize> = args
+        .get_str("sizes", "8,16,32,64")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let report = scalability::matching_engine_comparison(&sizes, !args.flag("no-aot"));
+    println!("{report}");
+    Ok(())
+}

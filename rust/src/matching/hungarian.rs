@@ -1,0 +1,311 @@
+//! Exact minimum-cost assignment: the Hungarian method in its O(n³)
+//! shortest-augmenting-path (Jonker–Volgenant style) formulation.
+//!
+//! This is the solver the paper invokes for both placement policies:
+//! node-level GPU matching (Algorithm 3), cluster-level node matching
+//! (Algorithm 2), the flat non-packing variant (Algorithm 5) and the
+//! max-weight packing matching (Algorithm 4, via cost negation).
+
+use crate::linalg::Matrix;
+
+/// Cost treated as "forbidden edge". Large but safe against overflow when
+/// accumulated across n ≤ 10⁴ rows.
+pub const FORBIDDEN: f64 = 1e12;
+
+/// An assignment of rows to columns.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AssignmentResult {
+    /// `row_to_col[i] = j` means row i is assigned to column j.
+    pub row_to_col: Vec<usize>,
+    /// Total cost of the assignment.
+    pub cost: f64,
+}
+
+impl AssignmentResult {
+    /// Inverse mapping col -> row.
+    pub fn col_to_row(&self) -> Vec<usize> {
+        let n = self.row_to_col.len();
+        let mut inv = vec![usize::MAX; n];
+        for (r, &c) in self.row_to_col.iter().enumerate() {
+            inv[c] = r;
+        }
+        inv
+    }
+}
+
+/// Solve the square min-cost assignment problem exactly.
+///
+/// `cost` must be square; entries ≥ `FORBIDDEN` mark edges that should not
+/// be used (they will only appear in the solution if no feasible assignment
+/// avoids them).
+pub fn solve_min_cost(cost: &Matrix) -> AssignmentResult {
+    assert_eq!(cost.rows(), cost.cols(), "hungarian needs a square matrix");
+    solve_min_cost_rect(cost)
+}
+
+/// Rectangular min-cost assignment: every *row* gets a distinct column
+/// (requires `rows ≤ cols`). O(rows² · cols) — much cheaper than padding
+/// to square when the sides are unbalanced (the packing-policy shape).
+pub fn solve_min_cost_rect(cost: &Matrix) -> AssignmentResult {
+    let n = cost.rows();
+    let m = cost.cols();
+    assert!(n <= m, "rectangular hungarian needs rows <= cols");
+    if n == 0 {
+        return AssignmentResult {
+            row_to_col: vec![],
+            cost: 0.0,
+        };
+    }
+
+    const INF: f64 = f64::INFINITY;
+    // 1-indexed arrays with column 0 as sentinel (e-maxx formulation).
+    let mut u = vec![0.0f64; n + 1];
+    let mut v = vec![0.0f64; m + 1];
+    // p[j] = row matched to column j (0 = none); p[0] = row being inserted.
+    let mut p = vec![0usize; m + 1];
+    let mut way = vec![0usize; m + 1];
+    let mut minv = vec![INF; m + 1];
+    let mut used = vec![false; m + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        minv.iter_mut().for_each(|x| *x = INF);
+        used.iter_mut().for_each(|x| *x = false);
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = INF;
+            let mut j1 = 0usize;
+            let row = cost.row(i0 - 1);
+            for j in 1..=m {
+                if used[j] {
+                    continue;
+                }
+                let cur = row[j - 1] - u[i0] - v[j];
+                if cur < minv[j] {
+                    minv[j] = cur;
+                    way[j] = j0;
+                }
+                if minv[j] < delta {
+                    delta = minv[j];
+                    j1 = j;
+                }
+            }
+            for j in 0..=m {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // Augment along the alternating path.
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut row_to_col = vec![usize::MAX; n];
+    for j in 1..=m {
+        if p[j] != 0 {
+            row_to_col[p[j] - 1] = j - 1;
+        }
+    }
+    let total = row_to_col
+        .iter()
+        .enumerate()
+        .map(|(r, &c)| cost.get(r, c))
+        .sum();
+    AssignmentResult {
+        row_to_col,
+        cost: total,
+    }
+}
+
+/// Exhaustive minimum-cost assignment (n! — tests only, n ≤ 8).
+pub fn brute_force_min_cost(cost: &Matrix) -> AssignmentResult {
+    let n = cost.rows();
+    assert!(n <= 8, "brute force limited to n<=8");
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut best = AssignmentResult {
+        row_to_col: perm.clone(),
+        cost: f64::INFINITY,
+    };
+    permute(&mut perm, 0, &mut |p| {
+        let c: f64 = p.iter().enumerate().map(|(r, &col)| cost.get(r, col)).sum();
+        if c < best.cost {
+            best = AssignmentResult {
+                row_to_col: p.to_vec(),
+                cost: c,
+            };
+        }
+    });
+    best
+}
+
+fn permute(xs: &mut Vec<usize>, k: usize, visit: &mut impl FnMut(&[usize])) {
+    if k == xs.len() {
+        visit(xs);
+        return;
+    }
+    for i in k..xs.len() {
+        xs.swap(k, i);
+        permute(xs, k + 1, visit);
+        xs.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{approx_eq, forall};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn trivial_cases() {
+        assert_eq!(solve_min_cost(&Matrix::zeros(0, 0)).cost, 0.0);
+        let one = Matrix::from_rows(&[&[3.5]]);
+        let r = solve_min_cost(&one);
+        assert_eq!(r.row_to_col, vec![0]);
+        assert_eq!(r.cost, 3.5);
+    }
+
+    #[test]
+    fn known_3x3() {
+        // Classic example: optimal = 5 (0->1, 1->0, 2->2).
+        let c = Matrix::from_rows(&[&[4.0, 1.0, 3.0], &[2.0, 0.0, 5.0], &[3.0, 2.0, 2.0]]);
+        let r = solve_min_cost(&c);
+        assert_eq!(r.cost, 5.0);
+        assert_eq!(r.row_to_col, vec![1, 0, 2]);
+    }
+
+    #[test]
+    fn paper_example2_identity_remap_costs_zero() {
+        // §A Example 2: plans {(0,1),(1,2),(2,3),(3,4)} vs
+        // {(0,4),(1,1),(2,2),(3,3)} — remapping makes migrations 0.
+        let c = Matrix::from_rows(&[
+            &[1.0, 0.0, 1.0, 1.0],
+            &[1.0, 1.0, 0.0, 1.0],
+            &[1.0, 1.0, 1.0, 0.0],
+            &[0.0, 1.0, 1.0, 1.0],
+        ]);
+        let r = solve_min_cost(&c);
+        assert_eq!(r.cost, 0.0);
+        assert_eq!(r.row_to_col, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn paper_example3_one_migration() {
+        // §A Example 3 cost matrix; optimal total = 1.0.
+        let c = Matrix::from_rows(&[
+            &[1.0, 0.5, 1.5, 1.5],
+            &[1.5, 1.0, 0.0, 1.0],
+            &[1.5, 1.0, 1.0, 0.0],
+            &[0.5, 1.0, 1.0, 1.0],
+        ]);
+        let r = solve_min_cost(&c);
+        assert!((r.cost - 1.0).abs() < 1e-12, "cost {}", r.cost);
+    }
+
+    #[test]
+    fn matches_brute_force_property() {
+        forall(
+            "hungarian == brute force",
+            31,
+            200,
+            |r| {
+                let n = 1 + r.below(6) as usize;
+                let mut m = Matrix::zeros(n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        m.set(i, j, r.range_f64(0.0, 10.0));
+                    }
+                }
+                m
+            },
+            |cost| {
+                let fast = solve_min_cost(cost);
+                let slow = brute_force_min_cost(cost);
+                approx_eq(fast.cost, slow.cost, 1e-9)?;
+                // Assignment must be a permutation.
+                let mut seen = vec![false; cost.rows()];
+                for &c in &fast.row_to_col {
+                    if seen[c] {
+                        return Err("duplicate column".into());
+                    }
+                    seen[c] = true;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn respects_forbidden_edges_when_possible() {
+        let big = FORBIDDEN;
+        let c = Matrix::from_rows(&[&[big, 1.0], &[1.0, big]]);
+        let r = solve_min_cost(&c);
+        assert_eq!(r.row_to_col, vec![1, 0]);
+        assert_eq!(r.cost, 2.0);
+    }
+
+    #[test]
+    fn permutation_cost_shift_invariance() {
+        // Adding a constant to a full row shifts every assignment equally:
+        // the argmin permutation stays optimal.
+        forall(
+            "row-shift invariance",
+            37,
+            50,
+            |r| {
+                let n = 2 + r.below(5) as usize;
+                let mut m = Matrix::zeros(n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        m.set(i, j, r.range_f64(0.0, 5.0));
+                    }
+                }
+                let row = r.below(n as u64) as usize;
+                let shift = r.range_f64(0.5, 3.0);
+                (m, row, shift)
+            },
+            |(m, row, shift)| {
+                let base = solve_min_cost(m);
+                let mut shifted = m.clone();
+                for j in 0..m.cols() {
+                    shifted.set(*row, j, m.get(*row, j) + shift);
+                }
+                let after = solve_min_cost(&shifted);
+                approx_eq(after.cost, base.cost + shift, 1e-9)
+            },
+        );
+    }
+
+    #[test]
+    fn large_instance_smoke() {
+        let mut r = Pcg64::new(5);
+        let n = 256;
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                m.set(i, j, r.range_f64(0.0, 100.0));
+            }
+        }
+        let res = solve_min_cost(&m);
+        assert_eq!(res.row_to_col.len(), n);
+        // Optimal cost for random uniform costs is far below the diagonal sum.
+        let diag: f64 = (0..n).map(|i| m.get(i, i)).sum();
+        assert!(res.cost < diag);
+    }
+}

@@ -1,0 +1,366 @@
+//! Graph-matching engines — the paper's core insight is that placement
+//! constraints reduce to weighted bipartite matching (§4). This module
+//! exposes:
+//!
+//! * [`hungarian`] — exact O(n³) min-cost assignment (default engine),
+//! * [`auction`] — Bertsekas auction (the algorithm the AOT JAX/Pallas
+//!   artifact implements; also available natively),
+//! * [`max_weight_matching`] — the partial max-weight bipartite matching
+//!   shape of the packing policy (Algorithm 4),
+//! * [`MatchingEngine`] — a pluggable solver trait so the scheduler can run
+//!   on the native solvers or the PJRT-loaded artifact interchangeably.
+
+pub mod auction;
+pub mod hungarian;
+
+pub use hungarian::{AssignmentResult, FORBIDDEN};
+
+use crate::linalg::Matrix;
+
+/// A pluggable assignment solver. Implemented by the native Hungarian and
+/// auction engines here and by `runtime::AotAssignmentEngine` (the
+/// JAX/Pallas artifact executed via PJRT).
+pub trait MatchingEngine: Send + Sync {
+    /// Solve square min-cost assignment.
+    fn solve_min_cost(&self, cost: &Matrix) -> AssignmentResult;
+
+    /// Solve rectangular min-cost assignment (rows ≤ cols; every row gets a
+    /// distinct column). Default: pad to square with zero-cost dummy rows —
+    /// engines with a native rectangular path (Hungarian) override this.
+    fn solve_min_cost_rect(&self, cost: &Matrix) -> AssignmentResult {
+        let (n, m) = (cost.rows(), cost.cols());
+        assert!(n <= m, "rect assignment needs rows <= cols");
+        if n == m {
+            return self.solve_min_cost(cost);
+        }
+        let mut sq = Matrix::zeros(m, m);
+        for r in 0..n {
+            for c in 0..m {
+                sq.set(r, c, cost.get(r, c));
+            }
+        }
+        let sol = self.solve_min_cost(&sq);
+        let row_to_col = sol.row_to_col[..n].to_vec();
+        let total = row_to_col
+            .iter()
+            .enumerate()
+            .map(|(r, &c)| cost.get(r, c))
+            .sum();
+        AssignmentResult {
+            row_to_col,
+            cost: total,
+        }
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Exact Hungarian engine (default).
+#[derive(Debug, Default, Clone)]
+pub struct HungarianEngine;
+
+impl MatchingEngine for HungarianEngine {
+    fn solve_min_cost(&self, cost: &Matrix) -> AssignmentResult {
+        hungarian::solve_min_cost(cost)
+    }
+
+    fn solve_min_cost_rect(&self, cost: &Matrix) -> AssignmentResult {
+        hungarian::solve_min_cost_rect(cost)
+    }
+
+    fn name(&self) -> &'static str {
+        "hungarian"
+    }
+}
+
+/// Native auction engine. `resolution` enables exactness on quantized costs
+/// (e.g. `Some(1/16)` for Algorithm 3 migration costs).
+#[derive(Debug, Clone)]
+pub struct AuctionEngine {
+    pub resolution: Option<f64>,
+}
+
+impl Default for AuctionEngine {
+    fn default() -> Self {
+        AuctionEngine {
+            resolution: Some(1.0 / 16.0),
+        }
+    }
+}
+
+impl MatchingEngine for AuctionEngine {
+    fn solve_min_cost(&self, cost: &Matrix) -> AssignmentResult {
+        auction::solve_min_cost(cost, self.resolution)
+    }
+
+    fn name(&self) -> &'static str {
+        "auction"
+    }
+}
+
+/// An edge in a bipartite packing graph: (left index, right index, weight).
+pub type Edge = (usize, usize, f64);
+
+/// A matched pair from [`max_weight_matching`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatchedPair {
+    pub left: usize,
+    pub right: usize,
+    pub weight: f64,
+}
+
+/// Maximum-weight bipartite matching where leaving a node unmatched is
+/// allowed and only listed edges may be used (the Algorithm 4 problem):
+/// choose a subset of `edges` forming a matching that maximizes total
+/// weight. Weights must be finite; non-positive-weight edges are never
+/// chosen (an unmatched pair is always at least as good).
+///
+/// Reduction: orient the graph so the smaller side is the rows, then solve
+/// a rows × (cols + rows) *rectangular* min-cost assignment — real edges
+/// cost −w, non-edges a problem-scaled forbidden cost, and `rows` dummy
+/// columns at 0 allow any row to stay unmatched. O(rows²·cols) instead of
+/// the O((rows+cols)³) square padding.
+pub fn max_weight_matching(
+    n_left: usize,
+    n_right: usize,
+    edges: &[Edge],
+    engine: &dyn MatchingEngine,
+) -> Vec<MatchedPair> {
+    if n_left == 0 || n_right == 0 || edges.is_empty() {
+        return vec![];
+    }
+    // Orient: rows = smaller side.
+    let transpose = n_left > n_right;
+    let (rows, cols) = if transpose {
+        (n_right, n_left)
+    } else {
+        (n_left, n_right)
+    };
+    // Problem-scaled forbidden cost: large enough that no optimal solution
+    // uses a non-edge, small enough to stay in f32 range for the AOT
+    // auction engine (FORBIDDEN=1e12 would destroy its ε-scaling).
+    let max_w = edges
+        .iter()
+        .map(|&(_, _, w)| w.abs())
+        .fold(0.0f64, f64::max);
+    let forbidden = (max_w + 1.0) * ((rows + cols) as f64 + 1.0);
+
+    let width = cols + rows; // real columns + one dummy column per row
+    let mut cost = Matrix::zeros(rows, width);
+    for r in 0..rows {
+        for c in 0..cols {
+            cost.set(r, c, forbidden);
+        }
+    }
+    for &(u, v, w) in edges {
+        assert!(u < n_left && v < n_right, "edge ({u},{v}) out of range");
+        assert!(w.is_finite(), "edge weight must be finite");
+        let (r, c) = if transpose { (v, u) } else { (u, v) };
+        // Keep the best weight on parallel edges.
+        if -w < cost.get(r, c) {
+            cost.set(r, c, -w);
+        }
+    }
+    let solution = engine.solve_min_cost_rect(&cost);
+    let mut out = Vec::new();
+    for (r, &c) in solution.row_to_col.iter().enumerate() {
+        if c < cols {
+            let cell = cost.get(r, c);
+            if cell < 0.0 {
+                let (left, right) = if transpose { (c, r) } else { (r, c) };
+                out.push(MatchedPair {
+                    left,
+                    right,
+                    weight: -cell,
+                });
+            }
+        }
+    }
+    out.sort_by_key(|p| (p.left, p.right));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{approx_eq, forall};
+
+    fn total(pairs: &[MatchedPair]) -> f64 {
+        pairs.iter().map(|p| p.weight).sum()
+    }
+
+    /// Exhaustive max-weight matching by subset enumeration (tests only).
+    fn brute_force(n_left: usize, n_right: usize, edges: &[Edge]) -> f64 {
+        let m = edges.len();
+        assert!(m <= 16);
+        let mut best = 0.0f64;
+        'mask: for mask in 0u32..(1 << m) {
+            let mut used_l = vec![false; n_left];
+            let mut used_r = vec![false; n_right];
+            let mut w = 0.0;
+            for (k, &(u, v, ew)) in edges.iter().enumerate() {
+                if mask & (1 << k) != 0 {
+                    if used_l[u] || used_r[v] {
+                        continue 'mask;
+                    }
+                    used_l[u] = true;
+                    used_r[v] = true;
+                    w += ew;
+                }
+            }
+            best = best.max(w);
+        }
+        best
+    }
+
+    #[test]
+    fn paper_figure7_example() {
+        // Fig. 7(a): placed jobs {1,2,3} × pending jobs {4,5,6} with combined
+        // normalized throughputs as edge weights; the matching picks the
+        // maximum-total set.
+        let edges = vec![
+            (0, 0, 0.8), // job1-job4
+            (0, 1, 1.2), // job1-job5
+            (1, 1, 0.9), // job2-job5
+            (1, 2, 1.1), // job2-job6
+            (2, 2, 1.3), // job3-job6
+        ];
+        let m = max_weight_matching(3, 3, &edges, &HungarianEngine);
+        let got = total(&m);
+        assert!((got - brute_force(3, 3, &edges)).abs() < 1e-9);
+        // job1-job4 (0.8) + job2-job5 (0.9) + job3-job6 (1.3) = 3.0 beats the
+        // greedy pick of the single heaviest edges (1.2 + 1.3 = 2.5).
+        assert!((got - 3.0).abs() < 1e-9, "total {got}");
+    }
+
+    #[test]
+    fn parallelism_strategy_changes_matching() {
+        // Fig. 7(b): boosting edge (job1, job5) from 1.2 to 1.5 by picking a
+        // better parallelism strategy must keep/strengthen that edge.
+        let edges = vec![(0, 1, 1.5), (1, 1, 0.9), (1, 2, 1.1), (2, 2, 1.3)];
+        let m = max_weight_matching(3, 3, &edges, &HungarianEngine);
+        assert!(m.iter().any(|p| p.left == 0 && p.right == 1 && p.weight == 1.5));
+    }
+
+    #[test]
+    fn unmatched_better_than_negative_weight() {
+        let edges = vec![(0, 0, -1.0)];
+        let m = max_weight_matching(1, 1, &edges, &HungarianEngine);
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(max_weight_matching(0, 5, &[], &HungarianEngine).is_empty());
+        assert!(max_weight_matching(3, 3, &[], &HungarianEngine).is_empty());
+    }
+
+    #[test]
+    fn matches_brute_force_property() {
+        forall(
+            "max-weight matching == brute force",
+            53,
+            120,
+            |r| {
+                let n_left = 1 + r.below(4) as usize;
+                let n_right = 1 + r.below(4) as usize;
+                let max_edges = (n_left * n_right).min(10);
+                let m = 1 + r.below(max_edges as u64) as usize;
+                let edges: Vec<Edge> = (0..m)
+                    .map(|_| {
+                        (
+                            r.below(n_left as u64) as usize,
+                            r.below(n_right as u64) as usize,
+                            r.range_f64(0.1, 2.0),
+                        )
+                    })
+                    .collect();
+                (n_left, n_right, edges)
+            },
+            |(nl, nr, edges)| {
+                let fast = total(&max_weight_matching(*nl, *nr, edges, &HungarianEngine));
+                let slow = brute_force(*nl, *nr, edges);
+                approx_eq(fast, slow, 1e-9)
+            },
+        );
+    }
+
+    #[test]
+    fn engines_agree_on_packing_graphs() {
+        forall(
+            "hungarian vs auction on packing graphs",
+            59,
+            40,
+            |r| {
+                let n = 2 + r.below(6) as usize;
+                let m = 1 + r.below((n * n).min(12) as u64) as usize;
+                let edges: Vec<Edge> = (0..m)
+                    .map(|_| {
+                        (
+                            r.below(n as u64) as usize,
+                            r.below(n as u64) as usize,
+                            // Quantized weights so the auction is exact.
+                            r.below(32) as f64 / 16.0,
+                        )
+                    })
+                    .collect();
+                (n, edges)
+            },
+            |(n, edges)| {
+                let h = total(&max_weight_matching(*n, *n, edges, &HungarianEngine));
+                let a = total(&max_weight_matching(
+                    *n,
+                    *n,
+                    edges,
+                    &AuctionEngine {
+                        resolution: Some(1.0 / 16.0),
+                    },
+                ));
+                approx_eq(h, a, 1e-6)
+            },
+        );
+    }
+
+    #[test]
+    fn result_is_a_matching() {
+        forall(
+            "output is a valid matching",
+            61,
+            60,
+            |r| {
+                let nl = 1 + r.below(8) as usize;
+                let nr = 1 + r.below(8) as usize;
+                let m = 1 + r.below(16) as usize;
+                let edges: Vec<Edge> = (0..m)
+                    .map(|_| {
+                        (
+                            r.below(nl as u64) as usize,
+                            r.below(nr as u64) as usize,
+                            r.range_f64(0.0, 3.0),
+                        )
+                    })
+                    .collect();
+                (nl, nr, edges)
+            },
+            |(nl, nr, edges)| {
+                let pairs = max_weight_matching(*nl, *nr, edges, &HungarianEngine);
+                let mut seen_l = vec![false; *nl];
+                let mut seen_r = vec![false; *nr];
+                for p in &pairs {
+                    if seen_l[p.left] || seen_r[p.right] {
+                        return Err("node matched twice".into());
+                    }
+                    seen_l[p.left] = true;
+                    seen_r[p.right] = true;
+                    if !edges
+                        .iter()
+                        .any(|&(u, v, w)| u == p.left && v == p.right && (w - p.weight).abs() < 1e-12)
+                    {
+                        return Err("pair not an input edge".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

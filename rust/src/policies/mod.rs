@@ -1,0 +1,106 @@
+//! Policies — the paper's §3 decomposition: *scheduling* policies produce a
+//! priority order over active jobs; *placement* policies (allocation,
+//! packing, migration) decide where those jobs land on the cluster.
+
+pub mod placement;
+pub mod scheduling;
+
+use crate::jobs::{JobId, ModelKind};
+
+/// A snapshot of one active job's scheduling-relevant state, assembled by
+/// the simulator / coordinator each round and consumed by every policy.
+#[derive(Debug, Clone)]
+pub struct JobInfo {
+    pub id: JobId,
+    pub model: ModelKind,
+    pub num_gpus: u32,
+    pub arrival_time: f64,
+    /// Attained service in GPU-seconds (Tiresias' 2D-LAS metric).
+    pub attained_service: f64,
+    pub total_iters: f64,
+    pub completed_iters: f64,
+    /// Rounds in which the job held GPUs.
+    pub rounds_received: u64,
+    /// Current simulation / wall time (s).
+    pub now: f64,
+    /// Scheduler-visible best isolated throughput at the job's scale.
+    pub iso_tput: f64,
+}
+
+impl JobInfo {
+    pub fn remaining_iters(&self) -> f64 {
+        (self.total_iters - self.completed_iters).max(0.0)
+    }
+
+    /// Estimated remaining runtime if run in isolation.
+    pub fn remaining_time(&self) -> f64 {
+        self.remaining_iters() / self.iso_tput.max(1e-9)
+    }
+
+    pub fn waiting_time(&self) -> f64 {
+        (self.now - self.arrival_time).max(0.0)
+    }
+
+    /// Themis-style finish-time-fairness ratio estimate ρ = T_shared/T_ideal:
+    /// projected completion time under current treatment vs completion time
+    /// in an isolated fair share of the cluster.
+    pub fn ftf_rho(&self, fair_share_fraction: f64) -> f64 {
+        let ideal = self.total_iters / self.iso_tput.max(1e-9);
+        // Observed service rate so far (gpu-seconds per wall second).
+        let elapsed = self.waiting_time().max(1.0);
+        let full_service = self.num_gpus as f64 * elapsed;
+        let service_rate = if full_service > 0.0 {
+            (self.attained_service / full_service).clamp(1e-3, 1.0)
+        } else {
+            1e-3
+        };
+        // Projected shared completion: time to finish at the observed rate.
+        let shared = elapsed + self.remaining_time() / service_rate;
+        let fair = ideal / fair_share_fraction.clamp(1e-3, 1.0);
+        shared / fair.max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(attained: f64, now: f64) -> JobInfo {
+        JobInfo {
+            id: 1,
+            model: ModelKind::ResNet50,
+            num_gpus: 2,
+            arrival_time: 0.0,
+            attained_service: attained,
+            total_iters: 1000.0,
+            completed_iters: 100.0,
+            rounds_received: 1,
+            now,
+            iso_tput: 10.0,
+        }
+    }
+
+    #[test]
+    fn remaining_math() {
+        let j = info(100.0, 50.0);
+        assert_eq!(j.remaining_iters(), 900.0);
+        assert!((j.remaining_time() - 90.0).abs() < 1e-9);
+        assert_eq!(j.waiting_time(), 50.0);
+    }
+
+    #[test]
+    fn ftf_rho_increases_when_starved() {
+        let served = info(2.0 * 100.0, 100.0); // full service the whole time
+        let starved = info(2.0 * 10.0, 100.0); // 10% service
+        assert!(starved.ftf_rho(1.0) > served.ftf_rho(1.0));
+    }
+
+    #[test]
+    fn ftf_rho_near_one_for_perfect_service() {
+        // Full service + full fair share: shared time ≈ ideal time.
+        let mut j = info(0.0, 100.0);
+        j.attained_service = j.num_gpus as f64 * 100.0;
+        let rho = j.ftf_rho(1.0);
+        assert!(rho > 0.5 && rho < 4.0, "rho {rho}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Allocation without packing (Listing 1 lines 5–12, Fig. 5): walk the
+//! priority-ordered jobs and give each a *consolidated* placement while
+//! GPUs remain; jobs that cannot be placed become `pending` (packing
+//! candidates).
+
+use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::jobs::JobId;
+use crate::policies::JobInfo;
+
+/// Result of the no-packing allocation pass.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub plan: PlacementPlan,
+    /// Jobs placed, in priority order.
+    pub placed: Vec<JobId>,
+    /// Jobs that could not be placed, in priority order.
+    pub pending: Vec<JobId>,
+}
+
+/// Place as many jobs as possible, in the given priority order, without GPU
+/// sharing and under the consolidation constraint:
+///
+/// * a job with `k ≤ gpus_per_node` GPUs must fit on one node (best-fit:
+///   the feasible node with the fewest free GPUs, to limit fragmentation);
+/// * a job with `k > gpus_per_node` takes whole empty nodes.
+pub fn allocate_without_packing(
+    spec: &ClusterSpec,
+    ordered: &[&JobInfo],
+) -> Allocation {
+    let mut plan = PlacementPlan::new(spec.total_gpus());
+    let mut free_per_node: Vec<Vec<usize>> = (0..spec.num_nodes)
+        .map(|n| spec.gpus_of_node(n).collect())
+        .collect();
+    let mut remaining = spec.total_gpus();
+    let mut placed = Vec::new();
+    let mut pending = Vec::new();
+
+    for info in ordered {
+        let k = info.num_gpus as usize;
+        if remaining == 0 {
+            pending.push(info.id);
+            continue;
+        }
+        if k <= spec.gpus_per_node {
+            // Best fit: feasible node with minimum free GPUs.
+            let node = free_per_node
+                .iter()
+                .enumerate()
+                .filter(|(_, free)| free.len() >= k)
+                .min_by_key(|(_, free)| free.len())
+                .map(|(n, _)| n);
+            match node {
+                Some(n) => {
+                    let gpus: Vec<usize> = free_per_node[n].drain(..k).collect();
+                    plan.place(info.id, &gpus);
+                    remaining -= k;
+                    placed.push(info.id);
+                }
+                None => pending.push(info.id),
+            }
+        } else {
+            // Whole-node placement for jobs larger than a node.
+            let nodes_needed = k.div_ceil(spec.gpus_per_node);
+            let full_nodes: Vec<usize> = free_per_node
+                .iter()
+                .enumerate()
+                .filter(|(_, free)| free.len() == spec.gpus_per_node)
+                .map(|(n, _)| n)
+                .take(nodes_needed)
+                .collect();
+            if full_nodes.len() == nodes_needed {
+                let mut gpus = Vec::with_capacity(k);
+                for &n in &full_nodes {
+                    gpus.append(&mut free_per_node[n]);
+                }
+                gpus.truncate(k);
+                plan.place(info.id, &gpus);
+                remaining -= k;
+                placed.push(info.id);
+            } else {
+                pending.push(info.id);
+            }
+        }
+    }
+
+    Allocation {
+        plan,
+        placed,
+        pending,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuType;
+    use crate::jobs::ModelKind;
+
+    fn job(id: u64, gpus: u32) -> JobInfo {
+        JobInfo {
+            id,
+            model: ModelKind::ResNet50,
+            num_gpus: gpus,
+            arrival_time: 0.0,
+            attained_service: 0.0,
+            total_iters: 100.0,
+            completed_iters: 0.0,
+            rounds_received: 0,
+            now: 0.0,
+            iso_tput: 10.0,
+        }
+    }
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::new(2, 4, GpuType::A100) // 8 GPUs
+    }
+
+    #[test]
+    fn fills_in_priority_order() {
+        let s = spec();
+        let jobs = vec![job(1, 4), job(2, 2), job(3, 1), job(4, 1)];
+        let refs: Vec<&JobInfo> = jobs.iter().collect();
+        let a = allocate_without_packing(&s, &refs);
+        assert_eq!(a.placed, vec![1, 2, 3, 4]);
+        assert!(a.pending.is_empty());
+        a.plan.validate().unwrap();
+        for j in &a.placed {
+            assert!(a.plan.is_consolidated(*j, &s), "job {j} not consolidated");
+        }
+    }
+
+    #[test]
+    fn lower_priority_fills_leftover_gpus() {
+        // Listing 1's `continue`: a big job that does not fit must not stop
+        // smaller, lower-priority jobs from using the remaining GPUs.
+        let s = spec();
+        let jobs = vec![job(1, 8), job(2, 8), job(3, 1)];
+        let refs: Vec<&JobInfo> = jobs.iter().collect();
+        let a = allocate_without_packing(&s, &refs);
+        assert_eq!(a.placed, vec![1]);
+        assert_eq!(a.pending, vec![2, 3]);
+
+        let jobs = vec![job(1, 4), job(2, 8), job(3, 2)];
+        let refs: Vec<&JobInfo> = jobs.iter().collect();
+        let a = allocate_without_packing(&s, &refs);
+        // Job 2 (8 GPUs) can't fit after job 1 takes a node; job 3 still
+        // lands on the free node.
+        assert_eq!(a.placed, vec![1, 3]);
+        assert_eq!(a.pending, vec![2]);
+    }
+
+    #[test]
+    fn best_fit_limits_fragmentation() {
+        let s = spec();
+        // Job 1 leaves node 0 with 2 free; job 2 (2 GPUs) should take those
+        // instead of breaking the empty node.
+        let jobs = vec![job(1, 2), job(2, 2), job(3, 4)];
+        let refs: Vec<&JobInfo> = jobs.iter().collect();
+        let a = allocate_without_packing(&s, &refs);
+        assert_eq!(a.placed, vec![1, 2, 3]);
+        // Jobs 1+2 share node 0; job 3 gets node 1 intact.
+        let g3 = a.plan.gpus_of(3);
+        assert_eq!(g3, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn eight_gpu_job_takes_two_full_nodes() {
+        let s = spec();
+        let jobs = vec![job(1, 8)];
+        let refs: Vec<&JobInfo> = jobs.iter().collect();
+        let a = allocate_without_packing(&s, &refs);
+        assert_eq!(a.placed, vec![1]);
+        assert_eq!(a.plan.gpus_of(1).len(), 8);
+        assert!(a.plan.is_consolidated(1, &s));
+    }
+
+    #[test]
+    fn no_space_all_pending() {
+        let s = spec();
+        let jobs = vec![job(1, 8), job(2, 4), job(3, 4), job(4, 1)];
+        let refs: Vec<&JobInfo> = jobs.iter().collect();
+        let a = allocate_without_packing(&s, &refs);
+        assert_eq!(a.placed, vec![1]);
+        assert_eq!(a.pending, vec![2, 3, 4]);
+    }
+}

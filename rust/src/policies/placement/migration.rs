@@ -1,0 +1,430 @@
+//! Migration minimization (§4.1): relabel the new round's GPU ids so the
+//! physical plan aligns with the previous round, minimizing Definition 1
+//! migrations while preserving consolidation.
+//!
+//! * [`MigrationMode::Tesserae`] — Algorithms 2 + 3: node-level GPU
+//!   matching (Hungarian per node pair), then node matching (Hungarian over
+//!   the node cost matrix). Consolidated jobs stay consolidated because
+//!   GPUs are only permuted *within* matched node pairs (§4.3).
+//! * [`MigrationMode::Flat`] — Algorithm 5: one Hungarian over all GPUs
+//!   (may break consolidation for multi-node jobs, Example 5).
+//! * [`MigrationMode::GavelBaseline`] — no remapping: a job migrates iff
+//!   its GPU set changed (the policy Fig. 1 criticizes).
+//! * [`MigrationMode::None`] — identity (for ablations).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::jobs::JobId;
+use crate::linalg::Matrix;
+use crate::matching::{AssignmentResult, MatchingEngine};
+
+/// Which migration policy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationMode {
+    Tesserae,
+    Flat,
+    GavelBaseline,
+    None,
+}
+
+/// Result of the migration policy.
+#[derive(Debug, Clone)]
+pub struct MigrationOutcome {
+    /// The new round's plan, relabeled onto physical GPUs.
+    pub plan: PlacementPlan,
+    /// Jobs (present in both rounds) whose physical GPU set changed.
+    pub migrations: usize,
+    /// Total matching cost (≈ #migrations, from Algorithm 2's objective).
+    pub cost: f64,
+    /// Wall time spent deciding.
+    pub decide_time_s: f64,
+}
+
+/// Algorithm 3: optimal GPU matching between one previous-round node and
+/// one new-round node. Returns (cost, assignment prev_gpu -> next_gpu).
+fn node_level_matching(
+    prev: &PlacementPlan,
+    next: &PlacementPlan,
+    prev_gpus: &[usize],
+    next_gpus: &[usize],
+    gpus_of_prev: &BTreeMap<JobId, u32>,
+    gpus_of_next: &BTreeMap<JobId, u32>,
+    engine: &dyn MatchingEngine,
+) -> (f64, AssignmentResult) {
+    let k = prev_gpus.len();
+    let mut c = Matrix::zeros(k, k);
+    for (a, &u) in prev_gpus.iter().enumerate() {
+        for (b, &v) in next_gpus.iter().enumerate() {
+            c.set(
+                a,
+                b,
+                gpu_pair_cost(prev.jobs_on(u), next.jobs_on(v), gpus_of_prev, gpus_of_next),
+            );
+        }
+    }
+    let sol = engine.solve_min_cost(&c);
+    (sol.cost, sol)
+}
+
+/// Per-GPU migration cost between GPU `u`'s job set and GPU `v`'s job set
+/// (Algorithm 3 lines 4–7): each job in the symmetric difference costs
+/// 1/(2·num_gpus(job)). A job's amortization divisor is its own GPU count;
+/// the two rounds agree on common jobs, so consult either map.
+fn gpu_pair_cost(
+    jobs_u: &[JobId],
+    jobs_v: &[JobId],
+    prev_map: &BTreeMap<JobId, u32>,
+    next_map: &BTreeMap<JobId, u32>,
+) -> f64 {
+    let mut cost = 0.0;
+    let lookup = |j: JobId| {
+        prev_map
+            .get(&j)
+            .or_else(|| next_map.get(&j))
+            .copied()
+            .unwrap_or(1)
+            .max(1)
+    };
+    for &j in jobs_u {
+        if !jobs_v.contains(&j) {
+            cost += 1.0 / (2.0 * lookup(j) as f64);
+        }
+    }
+    for &j in jobs_v {
+        if !jobs_u.contains(&j) {
+            cost += 1.0 / (2.0 * lookup(j) as f64);
+        }
+    }
+    cost
+}
+
+/// Run the selected migration policy: produce the physical realization of
+/// `next` given the physical `prev`.
+pub fn migrate(
+    spec: &ClusterSpec,
+    prev: &PlacementPlan,
+    next: &PlacementPlan,
+    mode: MigrationMode,
+    engine: &dyn MatchingEngine,
+) -> MigrationOutcome {
+    let t0 = Instant::now();
+    assert_eq!(prev.num_gpus(), spec.total_gpus());
+    assert_eq!(next.num_gpus(), spec.total_gpus());
+
+    let outcome = match mode {
+        MigrationMode::None | MigrationMode::GavelBaseline => MigrationOutcome {
+            plan: next.clone(),
+            migrations: next.migrations_from(prev),
+            cost: next.migrations_from(prev) as f64,
+            decide_time_s: 0.0,
+        },
+        MigrationMode::Flat => flat_migrate(prev, next, engine),
+        MigrationMode::Tesserae => tesserae_migrate(spec, prev, next, engine),
+    };
+    MigrationOutcome {
+        decide_time_s: t0.elapsed().as_secs_f64(),
+        ..outcome
+    }
+}
+
+/// Algorithm 2: remove jobs absent from either round, match GPUs within
+/// node pairs (Alg. 3), then match nodes with the Hungarian algorithm.
+fn tesserae_migrate(
+    spec: &ClusterSpec,
+    prev: &PlacementPlan,
+    next: &PlacementPlan,
+    engine: &dyn MatchingEngine,
+) -> MigrationOutcome {
+    // Line 2: restrict both plans to jobs present in both rounds.
+    let common: std::collections::BTreeSet<JobId> =
+        prev.jobs().intersection(&next.jobs()).copied().collect();
+    let mut prev_f = prev.clone();
+    let gone_prev: std::collections::BTreeSet<JobId> =
+        prev.jobs().difference(&common).copied().collect();
+    prev_f.remove_jobs(&gone_prev);
+    let mut next_f = next.clone();
+    let gone_next: std::collections::BTreeSet<JobId> =
+        next.jobs().difference(&common).copied().collect();
+    next_f.remove_jobs(&gone_next);
+
+    let prev_sizes: BTreeMap<JobId, u32> = prev_f
+        .job_gpu_map()
+        .into_iter()
+        .map(|(j, g)| (j, g.len() as u32))
+        .collect();
+    let next_sizes: BTreeMap<JobId, u32> = next_f
+        .job_gpu_map()
+        .into_iter()
+        .map(|(j, g)| (j, g.len() as u32))
+        .collect();
+
+    let nodes = spec.num_nodes;
+    // Lines 3-5: per node pair, Algorithm 3.
+    let mut node_cost = Matrix::zeros(nodes, nodes);
+    let mut node_plans: Vec<Vec<Option<AssignmentResult>>> = vec![vec![None; nodes]; nodes];
+    for k in 0..nodes {
+        let prev_gpus: Vec<usize> = spec.gpus_of_node(k).collect();
+        for l in 0..nodes {
+            let next_gpus: Vec<usize> = spec.gpus_of_node(l).collect();
+            let (c, m) = node_level_matching(
+                &prev_f,
+                &next_f,
+                &prev_gpus,
+                &next_gpus,
+                &prev_sizes,
+                &next_sizes,
+                engine,
+            );
+            node_cost.set(k, l, c);
+            node_plans[k][l] = Some(m);
+        }
+    }
+    // Line 6: Hungarian over the node cost matrix.
+    let node_sol = engine.solve_min_cost(&node_cost);
+
+    // Compose: logical GPU g (on logical node l) is realized on the
+    // physical GPU chosen by the matched node pair's GPU assignment.
+    let mut new_gpu_of = vec![usize::MAX; spec.total_gpus()];
+    for (k, &l) in node_sol.row_to_col.iter().enumerate() {
+        let m = node_plans[k][l].as_ref().unwrap();
+        // m.row_to_col[a] = b: physical gpu (node k, slot a) hosts the job
+        // set of logical gpu (node l, slot b).
+        for (a, &b) in m.row_to_col.iter().enumerate() {
+            let physical = spec.gpus_of_node(k).nth(a).unwrap();
+            let logical = spec.gpus_of_node(l).nth(b).unwrap();
+            new_gpu_of[logical] = physical;
+        }
+    }
+    let plan = next.relabeled(&new_gpu_of);
+    MigrationOutcome {
+        migrations: plan.migrations_from(prev),
+        cost: node_sol.cost,
+        plan,
+        decide_time_s: 0.0,
+    }
+}
+
+/// Algorithm 5: flat GPU-level matching over the whole cluster.
+fn flat_migrate(
+    prev: &PlacementPlan,
+    next: &PlacementPlan,
+    engine: &dyn MatchingEngine,
+) -> MigrationOutcome {
+    let common: std::collections::BTreeSet<JobId> =
+        prev.jobs().intersection(&next.jobs()).copied().collect();
+    let mut prev_f = prev.clone();
+    prev_f.remove_jobs(&prev.jobs().difference(&common).copied().collect());
+    let mut next_f = next.clone();
+    next_f.remove_jobs(&next.jobs().difference(&common).copied().collect());
+
+    let prev_sizes: BTreeMap<JobId, u32> = prev_f
+        .job_gpu_map()
+        .into_iter()
+        .map(|(j, g)| (j, g.len() as u32))
+        .collect();
+    let next_sizes: BTreeMap<JobId, u32> = next_f
+        .job_gpu_map()
+        .into_iter()
+        .map(|(j, g)| (j, g.len() as u32))
+        .collect();
+
+    let n = prev.num_gpus();
+    let mut c = Matrix::zeros(n, n);
+    for u in 0..n {
+        for v in 0..n {
+            c.set(
+                u,
+                v,
+                gpu_pair_cost(prev_f.jobs_on(u), next_f.jobs_on(v), &prev_sizes, &next_sizes),
+            );
+        }
+    }
+    let sol = engine.solve_min_cost(&c);
+    // sol.row_to_col[u] = v: physical gpu u hosts logical gpu v's jobs.
+    let mut new_gpu_of = vec![usize::MAX; n];
+    for (u, &v) in sol.row_to_col.iter().enumerate() {
+        new_gpu_of[v] = u;
+    }
+    let plan = next.relabeled(&new_gpu_of);
+    MigrationOutcome {
+        migrations: plan.migrations_from(prev),
+        cost: sol.cost,
+        plan,
+        decide_time_s: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuType;
+    use crate::matching::HungarianEngine;
+
+    fn one_node(gpus: usize) -> ClusterSpec {
+        ClusterSpec::new(1, gpus, GpuType::A100)
+    }
+
+    fn plan(total: usize, placements: &[(JobId, &[usize])]) -> PlacementPlan {
+        let mut p = PlacementPlan::new(total);
+        for (j, gpus) in placements {
+            p.place(*j, gpus);
+        }
+        p
+    }
+
+    #[test]
+    fn paper_example2_zero_migrations() {
+        // P_i = {(0,1),(1,2),(2,3),(3,4)}, P_{i+1} = {(0,4),(1,1),(2,2),(3,3)}
+        let spec = one_node(4);
+        let prev = plan(4, &[(1, &[0]), (2, &[1]), (3, &[2]), (4, &[3])]);
+        let next = plan(4, &[(4, &[0]), (1, &[1]), (2, &[2]), (3, &[3])]);
+        let out = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
+        assert_eq!(out.migrations, 0);
+        assert!((out.cost - 0.0).abs() < 1e-9);
+        // Gavel's baseline migrates all four.
+        let gavel = migrate(&spec, &prev, &next, MigrationMode::GavelBaseline, &HungarianEngine);
+        assert_eq!(gavel.migrations, 4);
+    }
+
+    #[test]
+    fn paper_example3_one_migration_with_packing() {
+        // P_i = {(0,(1,5)),(1,2),(2,3),(3,4)},
+        // P_{i+1} = {(0,(4,5)),(1,1),(2,2),(3,3)} -> minimum migration 1
+        // (job 5 relocates next to job 4).
+        let spec = one_node(4);
+        let prev = plan(4, &[(1, &[0]), (5, &[0]), (2, &[1]), (3, &[2]), (4, &[3])]);
+        let next = plan(4, &[(4, &[0]), (5, &[0]), (1, &[1]), (2, &[2]), (3, &[3])]);
+        let out = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
+        assert!((out.cost - 1.0).abs() < 1e-9, "cost {}", out.cost);
+        assert_eq!(out.migrations, 1);
+    }
+
+    #[test]
+    fn paper_example4_disappearing_jobs_removed_first() {
+        // Jobs 5 and 6 are not in both rounds: removing them first makes the
+        // remap free.
+        let spec = one_node(4);
+        let prev = plan(4, &[(1, &[0]), (6, &[0]), (2, &[1]), (3, &[2]), (4, &[3])]);
+        let next = plan(4, &[(4, &[0]), (5, &[0]), (1, &[1]), (2, &[2]), (3, &[3])]);
+        let out = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
+        assert_eq!(out.migrations, 0);
+        assert!((out.cost - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn figure6_example_three_migrations() {
+        // Figure 6 / Example 1 shape: two nodes of two GPUs; total cost 3.
+        // Round i:  node0 = {g0: j1, g1: j4}, node1 = {g2: j2, g3: j3}
+        // Round i+1: node0 = {g0: j6, g1: j2}, node1 = {g2: j1, g3: j5}
+        // Common jobs: 1, 2 (j3/j4 leave, j5/j6 arrive). Best alignment
+        // keeps j1 and j2 in place by matching prev-node0 with next-node1
+        // ... one of the optimal plans relocates nothing that is common.
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let prev = plan(4, &[(1, &[0]), (4, &[1]), (2, &[2]), (3, &[3])]);
+        let next = plan(4, &[(6, &[0]), (2, &[1]), (1, &[2]), (5, &[3])]);
+        let out = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
+        // Jobs 1 and 2 can both stay put (j1: prev g0 / next node with j1
+        // can map back). Migrations should be 0 here after remap.
+        assert_eq!(out.migrations, 0, "plan {:?}", out.plan);
+    }
+
+    #[test]
+    fn multi_gpu_job_moves_as_a_unit() {
+        // A 2-GPU job relocating across nodes costs 2 × (0.5+0.5) × 1/2 = 1.
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let prev = plan(4, &[(1, &[0, 1]), (2, &[2]), (3, &[3])]);
+        let next = plan(4, &[(2, &[0]), (3, &[1]), (1, &[2, 3])]);
+        let out = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
+        // Optimal: swap the node roles so nobody migrates.
+        assert_eq!(out.migrations, 0);
+    }
+
+    #[test]
+    fn tesserae_never_worse_than_gavel_baseline() {
+        use crate::util::prop::forall;
+        use crate::util::rng::Pcg64;
+        forall(
+            "tesserae migrations <= gavel baseline",
+            71,
+            40,
+            |r: &mut Pcg64| {
+                let spec = ClusterSpec::new(2 + r.below(3) as usize, 2, GpuType::A100);
+                let total = spec.total_gpus();
+                // Random single-GPU jobs in both rounds with overlap.
+                let njobs = total.min(2 + r.below(total as u64) as usize);
+                let mut prev = PlacementPlan::new(total);
+                let mut next = PlacementPlan::new(total);
+                let prev_slots = r.sample_indices(total, njobs);
+                let next_slots = r.sample_indices(total, njobs);
+                for j in 0..njobs {
+                    prev.place(j as JobId, &[prev_slots[j]]);
+                    next.place(j as JobId, &[next_slots[j]]);
+                }
+                (spec, prev, next)
+            },
+            |(spec, prev, next)| {
+                let t = migrate(spec, prev, next, MigrationMode::Tesserae, &HungarianEngine);
+                let g = migrate(spec, prev, next, MigrationMode::GavelBaseline, &HungarianEngine);
+                if t.migrations <= g.migrations {
+                    Ok(())
+                } else {
+                    Err(format!("{} > {}", t.migrations, g.migrations))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn tesserae_preserves_consolidation_where_flat_may_not() {
+        // Example 5 shape: two 4-GPU jobs packed into one plan. The flat
+        // Algorithm 5 may split them across nodes; Algorithm 2+3 must not.
+        let spec = ClusterSpec::new(2, 4, GpuType::A100);
+        let prev = plan(
+            8,
+            &[(1, &[0, 1, 2, 3]), (2, &[4, 5, 6, 7])],
+        );
+        // Next round packs jobs 1 and 2 on node 0's GPUs.
+        let mut next = PlacementPlan::new(8);
+        next.place(1, &[0, 1, 2, 3]);
+        next.place(2, &[0, 1, 2, 3]);
+        let out = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
+        assert!(out.plan.is_consolidated(1, &spec));
+        assert!(out.plan.is_consolidated(2, &spec));
+        out.plan.validate().unwrap();
+    }
+
+    #[test]
+    fn plans_preserve_all_jobs_and_shapes() {
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let prev = plan(4, &[(1, &[0]), (2, &[1]), (3, &[2, 3])]);
+        let next = plan(4, &[(3, &[0, 1]), (9, &[2]), (1, &[3])]);
+        for mode in [
+            MigrationMode::Tesserae,
+            MigrationMode::Flat,
+            MigrationMode::GavelBaseline,
+            MigrationMode::None,
+        ] {
+            let out = migrate(&spec, &prev, &next, mode, &HungarianEngine);
+            assert_eq!(out.plan.jobs(), next.jobs(), "{mode:?}");
+            for j in next.jobs() {
+                assert_eq!(
+                    out.plan.gpus_of(j).len(),
+                    next.gpus_of(j).len(),
+                    "{mode:?} job {j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flat_matches_tesserae_on_single_node() {
+        let spec = one_node(4);
+        let prev = plan(4, &[(1, &[0]), (2, &[1]), (3, &[2]), (4, &[3])]);
+        let next = plan(4, &[(4, &[0]), (1, &[1]), (2, &[2]), (3, &[3])]);
+        let t = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
+        let f = migrate(&spec, &prev, &next, MigrationMode::Flat, &HungarianEngine);
+        assert_eq!(t.migrations, f.migrations);
+    }
+}

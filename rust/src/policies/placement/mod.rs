@@ -1,0 +1,11 @@
+//! Placement policies (§3.2 Listing 1, §4): consolidated allocation without
+//! packing, graph-matching job packing (Algorithm 4) and graph-matching
+//! migration minimization (Algorithms 2, 3, 5).
+
+pub mod allocate;
+pub mod migration;
+pub mod packing;
+
+pub use allocate::{allocate_without_packing, Allocation};
+pub use migration::{migrate, MigrationMode, MigrationOutcome};
+pub use packing::{pack, PackedPair, PackingConfig, StrategyMode};

@@ -1,0 +1,356 @@
+//! Job packing as maximum-weight bipartite matching (§4.2, Algorithm 4,
+//! Fig. 7): placed jobs on one side, pending jobs on the other; an edge
+//! connects jobs that request the *same* number of GPUs and fit together in
+//! memory; the edge weight is the profiled combined normalized throughput.
+//! When the strategy dimension is enabled (Fig. 7(b), Fig. 15), the weight
+//! of each edge is maximized over the LLM candidates' parallelism
+//! strategies, and the chosen strategies ride along with the match.
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use crate::estimator::ThroughputSource;
+use crate::jobs::{JobId, ParallelismStrategy};
+use crate::matching::{max_weight_matching, Edge, MatchingEngine};
+use crate::policies::JobInfo;
+
+/// How packed LLMs pick their parallelism strategy (Fig. 15's arms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyMode {
+    /// Always data-parallel.
+    DpOnly,
+    /// Megatron-LM's default (even) pipeline split.
+    DefaultPp,
+    /// Search the candidate set for the best packed combination.
+    Best,
+}
+
+/// Packing policy configuration.
+#[derive(Debug, Clone)]
+pub struct PackingConfig {
+    /// Only pack jobs requesting at most this many GPUs (Tiresias (Single)
+    /// packs only 1-GPU jobs, §6.1).
+    pub max_pack_gpus: u32,
+    pub strategy_mode: StrategyMode,
+    /// Jobs that must not be packed (high priority / deadline, §4.3).
+    pub exempt: BTreeSet<JobId>,
+    /// Minimum combined normalized throughput for an edge to exist.
+    /// 1.0 = "packing must beat running the placed job alone" (default;
+    /// the weight>1 ablation is benchmarked in bench_packing).
+    pub min_weight: f64,
+}
+
+impl Default for PackingConfig {
+    fn default() -> Self {
+        PackingConfig {
+            max_pack_gpus: 8,
+            strategy_mode: StrategyMode::Best,
+            exempt: BTreeSet::new(),
+            min_weight: 1.0,
+        }
+    }
+}
+
+/// A chosen packing: pending job `pending` shares `placed`'s GPUs, with the
+/// strategies that maximized the pair's combined normalized throughput.
+#[derive(Debug, Clone)]
+pub struct PackedPair {
+    pub placed: JobId,
+    pub pending: JobId,
+    pub weight: f64,
+    pub placed_strategy: ParallelismStrategy,
+    pub pending_strategy: ParallelismStrategy,
+    pub decide_time_s: f64,
+}
+
+/// Strategy candidates for a job under a strategy mode.
+fn candidates(info: &JobInfo, mode: StrategyMode) -> Vec<ParallelismStrategy> {
+    if !info.model.is_llm() || info.num_gpus == 1 {
+        return vec![ParallelismStrategy::DataParallel];
+    }
+    match mode {
+        StrategyMode::DpOnly => vec![ParallelismStrategy::DataParallel],
+        StrategyMode::DefaultPp => {
+            vec![ParallelismStrategy::default_pp(info.model, info.num_gpus)]
+        }
+        StrategyMode::Best => ParallelismStrategy::candidates(info.model, info.num_gpus),
+    }
+}
+
+/// Best (weight, strategy_a, strategy_b) over the candidate cross product;
+/// `None` if every combination OOMs.
+fn best_edge(
+    a: &JobInfo,
+    b: &JobInfo,
+    source: &dyn ThroughputSource,
+    mode: StrategyMode,
+) -> Option<(f64, ParallelismStrategy, ParallelismStrategy)> {
+    let n = a.num_gpus;
+    let mut best: Option<(f64, ParallelismStrategy, ParallelismStrategy)> = None;
+    for sa in candidates(a, mode) {
+        for sb in candidates(b, mode) {
+            if let Some((wa, wb)) = source.normalized_pair((a.model, &sa), (b.model, &sb), n) {
+                let w = wa + wb;
+                if best.as_ref().map(|(bw, _, _)| w > *bw).unwrap_or(true) {
+                    best = Some((w, sa.clone(), sb.clone()));
+                }
+            }
+        }
+    }
+    best
+}
+
+/// Algorithm 4: build the bipartite graph and solve maximum-weight matching.
+///
+/// Edges only connect jobs with equal GPU counts, so the global matching
+/// decomposes exactly into one independent matching per GPU-count group —
+/// solving per group shrinks the Hungarian instances from
+/// (placed+pending)² to the group sizes (a large hot-path win at paper
+/// scale; see EXPERIMENTS.md §Perf).
+pub fn pack(
+    placed: &[&JobInfo],
+    pending: &[&JobInfo],
+    source: &dyn ThroughputSource,
+    cfg: &PackingConfig,
+    engine: &dyn MatchingEngine,
+) -> Vec<PackedPair> {
+    let t0 = Instant::now();
+    if placed.is_empty() || pending.is_empty() {
+        return vec![];
+    }
+    let mut groups: std::collections::BTreeMap<u32, (Vec<usize>, Vec<usize>)> =
+        std::collections::BTreeMap::new();
+    for (i, pl) in placed.iter().enumerate() {
+        if !cfg.exempt.contains(&pl.id) && pl.num_gpus <= cfg.max_pack_gpus {
+            groups.entry(pl.num_gpus).or_default().0.push(i);
+        }
+    }
+    for (j, pe) in pending.iter().enumerate() {
+        if !cfg.exempt.contains(&pe.id) && pe.num_gpus <= cfg.max_pack_gpus {
+            groups.entry(pe.num_gpus).or_default().1.push(j);
+        }
+    }
+
+    let mut out = Vec::new();
+    for (_gpus, (pl_idx, pe_idx)) in groups {
+        if pl_idx.is_empty() || pe_idx.is_empty() {
+            continue;
+        }
+        let mut edges: Vec<Edge> = Vec::new();
+        let mut meta: Vec<(usize, usize, ParallelismStrategy, ParallelismStrategy)> = Vec::new();
+        for (gi, &i) in pl_idx.iter().enumerate() {
+            for (gj, &j) in pe_idx.iter().enumerate() {
+                if let Some((w, sa, sb)) =
+                    best_edge(placed[i], pending[j], source, cfg.strategy_mode)
+                {
+                    // Packing only helps if the combined throughput beats
+                    // the configured threshold (default 1.0: running the
+                    // placed job alone).
+                    if w > cfg.min_weight {
+                        edges.push((gi, gj, w));
+                        meta.push((gi, gj, sa, sb));
+                    }
+                }
+            }
+        }
+        if edges.is_empty() {
+            continue;
+        }
+        let matches = max_weight_matching(pl_idx.len(), pe_idx.len(), &edges, engine);
+        for m in matches {
+            let (_, _, sa, sb) = meta
+                .iter()
+                .find(|(i, j, _, _)| *i == m.left && *j == m.right)
+                .expect("matched edge must exist");
+            out.push(PackedPair {
+                placed: placed[pl_idx[m.left]].id,
+                pending: pending[pe_idx[m.right]].id,
+                weight: m.weight,
+                placed_strategy: sa.clone(),
+                pending_strategy: sb.clone(),
+                decide_time_s: 0.0,
+            });
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    for p in &mut out {
+        p.decide_time_s = dt;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuType;
+    use crate::estimator::OracleEstimator;
+    use crate::jobs::ModelKind::{self, *};
+    use crate::matching::HungarianEngine;
+    use crate::profiler::Profiler;
+
+    fn info(id: u64, model: ModelKind, gpus: u32) -> JobInfo {
+        JobInfo {
+            id,
+            model,
+            num_gpus: gpus,
+            arrival_time: 0.0,
+            attained_service: 0.0,
+            total_iters: 1000.0,
+            completed_iters: 0.0,
+            rounds_received: 0,
+            now: 0.0,
+            iso_tput: 10.0,
+        }
+    }
+
+    fn oracle() -> OracleEstimator {
+        OracleEstimator::new(Profiler::new(GpuType::A100, 42))
+    }
+
+    #[test]
+    fn packs_only_equal_gpu_counts() {
+        let placed = [info(1, PointNet, 1), info(2, ResNet50, 2)];
+        let pending = [info(3, Dcgan, 4)];
+        let pl: Vec<&JobInfo> = placed.iter().collect();
+        let pe: Vec<&JobInfo> = pending.iter().collect();
+        let out = pack(&pl, &pe, &oracle(), &PackingConfig::default(), &HungarianEngine);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn beneficial_pairs_get_packed() {
+        let placed = [info(1, PointNet, 1)];
+        let pending = [info(2, Dcgan, 1)];
+        let pl: Vec<&JobInfo> = placed.iter().collect();
+        let pe: Vec<&JobInfo> = pending.iter().collect();
+        let out = pack(&pl, &pe, &oracle(), &PackingConfig::default(), &HungarianEngine);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].placed, 1);
+        assert_eq!(out[0].pending, 2);
+        assert!(out[0].weight > 1.0);
+    }
+
+    #[test]
+    fn each_job_packed_at_most_once() {
+        let placed = [info(1, PointNet, 1), info(2, Dcgan, 1)];
+        let pending = [info(3, ResNet50, 1), info(4, PointNet, 1), info(5, Dcgan, 1)];
+        let pl: Vec<&JobInfo> = placed.iter().collect();
+        let pe: Vec<&JobInfo> = pending.iter().collect();
+        let out = pack(&pl, &pe, &oracle(), &PackingConfig::default(), &HungarianEngine);
+        assert!(out.len() <= 2);
+        let mut seen = BTreeSet::new();
+        for p in &out {
+            assert!(seen.insert(p.placed));
+            assert!(seen.insert(p.pending));
+        }
+    }
+
+    #[test]
+    fn exempt_jobs_never_packed() {
+        let placed = [info(1, PointNet, 1)];
+        let pending = [info(2, Dcgan, 1)];
+        let pl: Vec<&JobInfo> = placed.iter().collect();
+        let pe: Vec<&JobInfo> = pending.iter().collect();
+        let cfg = PackingConfig {
+            exempt: [1u64].into_iter().collect(),
+            ..Default::default()
+        };
+        assert!(pack(&pl, &pe, &oracle(), &cfg, &HungarianEngine).is_empty());
+    }
+
+    #[test]
+    fn single_mode_skips_distributed_jobs() {
+        // Tiresias (Single): only 1-GPU jobs pack.
+        let placed = [info(1, ResNet50, 2), info(2, PointNet, 1)];
+        let pending = [info(3, Dcgan, 2), info(4, Dcgan, 1)];
+        let pl: Vec<&JobInfo> = placed.iter().collect();
+        let pe: Vec<&JobInfo> = pending.iter().collect();
+        let cfg = PackingConfig {
+            max_pack_gpus: 1,
+            ..Default::default()
+        };
+        let out = pack(&pl, &pe, &oracle(), &cfg, &HungarianEngine);
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].placed, out[0].pending), (2, 4));
+    }
+
+    #[test]
+    fn strategy_search_beats_default_pp() {
+        // Fig. 8 / Fig. 15: GPT3-3B packed with ResNet-50 on 8 GPUs gains
+        // from a non-default pipeline split.
+        let placed = [info(1, Gpt3_3B, 8)];
+        let pending = [info(2, ResNet50, 8)];
+        let pl: Vec<&JobInfo> = placed.iter().collect();
+        let pe: Vec<&JobInfo> = pending.iter().collect();
+        let src = oracle();
+        let best = pack(
+            &pl,
+            &pe,
+            &src,
+            &PackingConfig {
+                strategy_mode: StrategyMode::Best,
+                ..Default::default()
+            },
+            &HungarianEngine,
+        );
+        let default = pack(
+            &pl,
+            &pe,
+            &src,
+            &PackingConfig {
+                strategy_mode: StrategyMode::DefaultPp,
+                ..Default::default()
+            },
+            &HungarianEngine,
+        );
+        assert_eq!(best.len(), 1);
+        let bw = best[0].weight;
+        let dw = default.first().map(|p| p.weight).unwrap_or(0.0);
+        assert!(bw > dw, "best {bw} vs default {dw}");
+        // And the chosen split is not the even default.
+        assert_ne!(
+            best[0].placed_strategy,
+            ParallelismStrategy::default_pp(Gpt3_3B, 8)
+        );
+    }
+
+    #[test]
+    fn oom_pairs_excluded() {
+        // VGG-19 + GPT3-3B at default PP OOMs; with DefaultPp mode the edge
+        // must be dropped entirely.
+        let placed = [info(1, Gpt3_3B, 8)];
+        let pending = [info(2, Vgg19, 8)];
+        let pl: Vec<&JobInfo> = placed.iter().collect();
+        let pe: Vec<&JobInfo> = pending.iter().collect();
+        let out = pack(
+            &pl,
+            &pe,
+            &oracle(),
+            &PackingConfig {
+                strategy_mode: StrategyMode::DefaultPp,
+                ..Default::default()
+            },
+            &HungarianEngine,
+        );
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn harmful_packing_rejected() {
+        // Two VGG-19s barely exceed 1.0 combined; whether packed depends on
+        // the weight threshold — either way the outcome is consistent with
+        // the weight rule (packed iff weight > 1).
+        let placed = [info(1, Vgg19, 1)];
+        let pending = [info(2, Vgg19, 1)];
+        let pl: Vec<&JobInfo> = placed.iter().collect();
+        let pe: Vec<&JobInfo> = pending.iter().collect();
+        let src = oracle();
+        let out = pack(&pl, &pe, &src, &PackingConfig::default(), &HungarianEngine);
+        let dp = ParallelismStrategy::DataParallel;
+        let truth = src
+            .normalized_pair((Vgg19, &dp), (Vgg19, &dp), 1)
+            .map(|(a, b)| a + b)
+            .unwrap_or(0.0);
+        assert_eq!(out.len(), usize::from(truth > 1.0));
+    }
+}

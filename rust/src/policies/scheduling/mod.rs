@@ -1,0 +1,197 @@
+//! Scheduling policies: each produces a priority order over active jobs
+//! (index 0 = highest priority). Tesserae's design (§3.2, Listing 1 line 3)
+//! lets any of these compose with the placement policies unchanged.
+
+use super::JobInfo;
+
+/// A scheduling policy orders active jobs by priority.
+pub trait SchedulingPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Return indices into `jobs`, highest priority first.
+    fn order(&self, jobs: &[JobInfo]) -> Vec<usize>;
+}
+
+fn sort_by_key<F: FnMut(&JobInfo) -> f64>(jobs: &[JobInfo], mut key: F) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..jobs.len()).collect();
+    idx.sort_by(|&a, &b| {
+        key(&jobs[a])
+            .partial_cmp(&key(&jobs[b]))
+            .unwrap()
+            .then(jobs[a].id.cmp(&jobs[b].id))
+    });
+    idx
+}
+
+/// First-in-first-out by arrival time.
+#[derive(Debug, Default)]
+pub struct Fifo;
+
+impl SchedulingPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn order(&self, jobs: &[JobInfo]) -> Vec<usize> {
+        sort_by_key(jobs, |j| j.arrival_time)
+    }
+}
+
+/// Shortest remaining time first.
+#[derive(Debug, Default)]
+pub struct Srtf;
+
+impl SchedulingPolicy for Srtf {
+    fn name(&self) -> &'static str {
+        "srtf"
+    }
+
+    fn order(&self, jobs: &[JobInfo]) -> Vec<usize> {
+        sort_by_key(jobs, |j| j.remaining_time())
+    }
+}
+
+/// Tiresias' discretized 2D-LAS: attained service (GPU-seconds) bucketed
+/// into exponentially growing queues; FIFO within a queue. New jobs (lowest
+/// attained service) get the highest priority, which is what makes LAS
+/// favour short jobs.
+#[derive(Debug)]
+pub struct TiresiasLas {
+    /// Attained-service width of the first queue (GPU-seconds).
+    pub queue_threshold: f64,
+}
+
+impl Default for TiresiasLas {
+    fn default() -> Self {
+        // One round (6 min) on one GPU lands a job in queue 1.
+        TiresiasLas {
+            queue_threshold: 360.0,
+        }
+    }
+}
+
+impl TiresiasLas {
+    fn queue_level(&self, attained: f64) -> u32 {
+        if attained < self.queue_threshold {
+            0
+        } else {
+            1 + (attained / self.queue_threshold).log2().floor() as u32
+        }
+    }
+}
+
+impl SchedulingPolicy for TiresiasLas {
+    fn name(&self) -> &'static str {
+        "tiresias-las"
+    }
+
+    fn order(&self, jobs: &[JobInfo]) -> Vec<usize> {
+        sort_by_key(jobs, |j| {
+            // (queue level, arrival) lexicographic via scaled composite.
+            self.queue_level(j.attained_service) as f64 * 1e12 + j.arrival_time
+        })
+    }
+}
+
+/// Themis-style finish-time fairness: schedule the jobs with the *worst*
+/// (largest) projected FTF ratio ρ first.
+#[derive(Debug)]
+pub struct ThemisFtf {
+    /// Fraction of the cluster a job would get in an equal-share ideal.
+    pub fair_share_fraction: f64,
+}
+
+impl Default for ThemisFtf {
+    fn default() -> Self {
+        ThemisFtf {
+            fair_share_fraction: 1.0,
+        }
+    }
+}
+
+impl SchedulingPolicy for ThemisFtf {
+    fn name(&self) -> &'static str {
+        "themis-ftf"
+    }
+
+    fn order(&self, jobs: &[JobInfo]) -> Vec<usize> {
+        sort_by_key(jobs, |j| -j.ftf_rho(self.fair_share_fraction))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::ModelKind;
+
+    fn job(id: u64, arrival: f64, attained: f64, remaining_iters: f64) -> JobInfo {
+        JobInfo {
+            id,
+            model: ModelKind::ResNet50,
+            num_gpus: 1,
+            arrival_time: arrival,
+            attained_service: attained,
+            total_iters: remaining_iters,
+            completed_iters: 0.0,
+            rounds_received: 0,
+            now: 10_000.0,
+            iso_tput: 10.0,
+        }
+    }
+
+    #[test]
+    fn fifo_orders_by_arrival() {
+        let jobs = vec![job(1, 50.0, 0.0, 10.0), job(2, 10.0, 0.0, 10.0)];
+        assert_eq!(Fifo.order(&jobs), vec![1, 0]);
+    }
+
+    #[test]
+    fn srtf_orders_by_remaining() {
+        let jobs = vec![job(1, 0.0, 0.0, 1000.0), job(2, 0.0, 0.0, 10.0)];
+        assert_eq!(Srtf.order(&jobs), vec![1, 0]);
+    }
+
+    #[test]
+    fn las_prefers_low_attained_service() {
+        let p = TiresiasLas::default();
+        let jobs = vec![
+            job(1, 0.0, 100_000.0, 10.0), // long-served job
+            job(2, 500.0, 0.0, 10.0),     // fresh job
+        ];
+        assert_eq!(p.order(&jobs), vec![1, 0]);
+    }
+
+    #[test]
+    fn las_fifo_within_queue() {
+        let p = TiresiasLas::default();
+        let jobs = vec![job(1, 50.0, 10.0, 10.0), job(2, 10.0, 20.0, 10.0)];
+        // Same queue (both < threshold) -> FIFO by arrival.
+        assert_eq!(p.order(&jobs), vec![1, 0]);
+    }
+
+    #[test]
+    fn las_queue_levels_grow_exponentially() {
+        let p = TiresiasLas::default();
+        assert_eq!(p.queue_level(0.0), 0);
+        assert_eq!(p.queue_level(359.0), 0);
+        assert_eq!(p.queue_level(360.0), 1);
+        assert_eq!(p.queue_level(720.0), 2);
+        assert_eq!(p.queue_level(1440.0), 3);
+    }
+
+    #[test]
+    fn ftf_prefers_starved_jobs() {
+        let p = ThemisFtf::default();
+        let mut starved = job(1, 0.0, 10.0, 1000.0);
+        starved.completed_iters = 1.0;
+        let mut served = job(2, 0.0, 9_900.0, 1000.0);
+        served.completed_iters = 900.0;
+        let jobs = vec![served, starved];
+        assert_eq!(p.order(&jobs), vec![1, 0]);
+    }
+
+    #[test]
+    fn deterministic_tiebreak_by_id() {
+        let jobs = vec![job(5, 1.0, 0.0, 10.0), job(3, 1.0, 0.0, 10.0)];
+        assert_eq!(Fifo.order(&jobs), vec![1, 0]);
+    }
+}

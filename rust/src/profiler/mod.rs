@@ -1,0 +1,456 @@
+//! Synthetic throughput / memory profiler.
+//!
+//! The paper profiles every model and model pair on real A100/V100 GPUs
+//! (§5 "Profiling"). We do not have that hardware, so this module is the
+//! documented substitution (DESIGN.md §2): a *structured* analytic model of
+//! isolated throughput, packed throughput and per-GPU memory that preserves
+//! the behaviours the placement policies react to:
+//!
+//! * data-parallel jobs scale near-linearly with small efficiency loss;
+//! * pipeline-parallel throughput is bottlenecked by the max-load stage;
+//! * packing two jobs on a GPU slows both in proportion to the partner's
+//!   compute intensity;
+//! * contention is heavier on the *front* GPUs of a pipeline job (data
+//!   loading / embedding colocate there), so front-light pipeline splits —
+//!   like the paper's GPT3-3B (3,3,3,4,4,5,5,5) — win under packing while
+//!   losing slightly in isolation (Fig. 8);
+//! * 1F1B pipeline schedules hold more in-flight activations on earlier
+//!   stages, so packing a memory-hungry partner with a *default* PP split
+//!   can OOM where a front-light split fits (Fig. 8's VGG-19 case);
+//! * V100s are slower and have 16 GB instead of 40 GB, shrinking packing
+//!   opportunities (Fig. 12(b)).
+//!
+//! All throughputs carry a small deterministic jitter (profiling noise) and
+//! an optional *decision noise* `n_p` (Fig. 16): the scheduler sees noisy
+//! values while the simulator advances jobs with the true ones.
+
+use crate::cluster::GpuType;
+use crate::jobs::{ModelKind, ParallelismStrategy};
+use crate::util::rng::Pcg64;
+
+/// A job's compute configuration for profiling purposes.
+pub type JobCfg<'a> = (ModelKind, &'a ParallelismStrategy);
+
+/// Synthetic profiler for one GPU type.
+#[derive(Debug, Clone)]
+pub struct Profiler {
+    pub gpu: GpuType,
+    /// Deterministic profiling jitter amplitude (fraction, e.g. 0.05).
+    pub jitter: f64,
+    /// Decision noise `n_p` of Fig. 16 — applied only by the `profiled_*`
+    /// accessors the scheduler uses, never by the `true_*` ones.
+    pub noise_p: f64,
+    seed: u64,
+    /// Independent stream for decision noise so adding noise never perturbs
+    /// the underlying true profile.
+    noise_seed: u64,
+}
+
+/// In-flight activation growth per earlier pipeline stage (1F1B).
+const PP_ACT_GROWTH: f64 = 0.35;
+/// Front-of-pipeline contention shape: w(g) runs 1.3 (front) -> 0.7 (back).
+const CONTENTION_FRONT: f64 = 1.3;
+const CONTENTION_BACK: f64 = 0.7;
+
+impl Profiler {
+    pub fn new(gpu: GpuType, seed: u64) -> Profiler {
+        Profiler {
+            gpu,
+            jitter: 0.05,
+            noise_p: 0.0,
+            seed,
+            noise_seed: seed,
+        }
+    }
+
+    /// A copy whose *scheduler-visible* throughputs carry noise `n_p`.
+    pub fn with_decision_noise(&self, noise_p: f64, seed: u64) -> Profiler {
+        Profiler {
+            noise_p,
+            noise_seed: self.seed ^ seed.rotate_left(17),
+            ..self.clone()
+        }
+    }
+
+    // ---------------------------------------------------------------- memory
+
+    /// Per-GPU memory (GB) of a job on GPU index `g` (0-based within the
+    /// job's GPU set of size `n`).
+    pub fn mem_on_gpu(&self, model: ModelKind, strategy: &ParallelismStrategy, n: u32, g: u32) -> f64 {
+        let act = model.activation_mem_gb();
+        let mm = model.model_mem_gb();
+        match strategy {
+            ParallelismStrategy::DataParallel => mm + act,
+            ParallelismStrategy::TensorParallel => mm / n as f64 + act + 0.5,
+            ParallelismStrategy::Pipeline(split) => {
+                let layers: u32 = split.iter().sum();
+                let s_g = split[g as usize] as f64;
+                let avg = layers as f64 / n as f64;
+                let model_part = mm * s_g / layers as f64;
+                // 1F1B: stage g holds ~(n-g) in-flight microbatches, and the
+                // activation volume scales with the stage's layer share.
+                let act_part = act * (s_g / avg) * (1.0 + PP_ACT_GROWTH * (n - 1 - g) as f64);
+                model_part + act_part
+            }
+        }
+    }
+
+    /// Worst-case per-GPU memory across the job's GPUs.
+    pub fn mem_per_gpu_max(&self, model: ModelKind, strategy: &ParallelismStrategy, n: u32) -> f64 {
+        (0..n)
+            .map(|g| self.mem_on_gpu(model, strategy, n, g))
+            .fold(0.0, f64::max)
+    }
+
+    /// Whether a job fits on this GPU type in isolation.
+    pub fn fits_isolated(&self, model: ModelKind, strategy: &ParallelismStrategy, n: u32) -> bool {
+        self.mem_per_gpu_max(model, strategy, n) <= self.gpu.mem_gb()
+    }
+
+    /// Whether two jobs can share every GPU of an `n`-GPU set without OOM.
+    pub fn fits_packed(&self, a: JobCfg, b: JobCfg, n: u32) -> bool {
+        (0..n).all(|g| {
+            self.mem_on_gpu(a.0, a.1, n, g) + self.mem_on_gpu(b.0, b.1, n, g)
+                <= self.gpu.mem_gb()
+        })
+    }
+
+    // ------------------------------------------------------------ throughput
+
+    /// True isolated throughput (iterations/s) of a job over `n` GPUs.
+    /// Returns 0.0 if the configuration does not fit in memory.
+    pub fn true_isolated_tput(&self, model: ModelKind, strategy: &ParallelismStrategy, n: u32) -> f64 {
+        if !self.fits_isolated(model, strategy, n) {
+            return 0.0;
+        }
+        let base = model.base_tput_a100() * self.gpu.speed_factor();
+        let nf = n as f64;
+        let log2n = nf.log2();
+        let scale = match strategy {
+            ParallelismStrategy::DataParallel => {
+                let eff = if model.is_llm() { 0.92f64 } else { 0.95 };
+                nf * eff.powf(log2n)
+            }
+            ParallelismStrategy::TensorParallel => nf * 0.75f64.powf(log2n),
+            ParallelismStrategy::Pipeline(split) => {
+                let layers: f64 = split.iter().sum::<u32>() as f64;
+                let max_stage = split.iter().copied().max().unwrap_or(1) as f64;
+                let balance = (layers / nf) / max_stage; // avg / max
+                nf * balance * 0.93
+            }
+        };
+        base * scale * self.jitter_factor(&[model as u64, strategy.tag(), n as u64, 1])
+    }
+
+    /// Best isolated (strategy, throughput) over the candidate set — the
+    /// normalization denominator Fig. 8 uses.
+    pub fn best_isolated(&self, model: ModelKind, n: u32) -> (ParallelismStrategy, f64) {
+        ParallelismStrategy::candidates(model, n)
+            .into_iter()
+            .map(|s| {
+                let t = self.true_isolated_tput(model, &s, n);
+                (s, t)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("non-empty candidate set")
+    }
+
+    /// Per-GPU compute load of a job on GPU `g` (relative units).
+    fn load_on_gpu(&self, model: ModelKind, strategy: &ParallelismStrategy, n: u32, g: u32) -> f64 {
+        let c = model.compute_intensity();
+        match strategy {
+            ParallelismStrategy::Pipeline(split) => {
+                let layers: f64 = split.iter().sum::<u32>() as f64;
+                let avg = layers / n as f64;
+                c * split[g as usize] as f64 / avg
+            }
+            _ => c,
+        }
+    }
+
+    /// Position-dependent contention weight along the job's GPU set.
+    fn contention(g: u32, n: u32) -> f64 {
+        if n <= 1 {
+            return (CONTENTION_FRONT + CONTENTION_BACK) / 2.0;
+        }
+        let frac = g as f64 / (n - 1) as f64;
+        CONTENTION_FRONT + (CONTENTION_BACK - CONTENTION_FRONT) * frac
+    }
+
+    /// Retention of job `a`'s throughput when packed with `b` (fraction of
+    /// its own isolated throughput at the same strategy).
+    fn retention(&self, a: JobCfg, b: JobCfg, n: u32) -> f64 {
+        match a.1 {
+            ParallelismStrategy::Pipeline(split) => {
+                // Bottleneck stage shifts under position-dependent contention.
+                let iso_max = split.iter().copied().max().unwrap_or(1) as f64;
+                let packed_max = (0..n)
+                    .map(|g| {
+                        let interference =
+                            self.load_on_gpu(b.0, b.1, n, g) * Self::contention(g, n);
+                        split[g as usize] as f64 * (1.0 + interference)
+                    })
+                    .fold(0.0, f64::max);
+                iso_max / packed_max
+            }
+            _ => {
+                // Uniform-load jobs: average contention over the GPU set.
+                let avg_interference = (0..n)
+                    .map(|g| self.load_on_gpu(b.0, b.1, n, g) * Self::contention(g, n))
+                    .sum::<f64>()
+                    / n as f64;
+                let softener = 0.4 + 0.6 * a.0.compute_intensity();
+                1.0 / (1.0 + avg_interference * softener)
+            }
+        }
+    }
+
+    /// True packed throughputs `(tput_a, tput_b)` when `a` and `b` share an
+    /// `n`-GPU set; `None` if the pair OOMs on any GPU.
+    pub fn true_packed_tput(&self, a: JobCfg, b: JobCfg, n: u32) -> Option<(f64, f64)> {
+        if !self.fits_packed(a, b, n) {
+            return None;
+        }
+        let iso_a = self.true_isolated_tput(a.0, a.1, n);
+        let iso_b = self.true_isolated_tput(b.0, b.1, n);
+        if iso_a == 0.0 || iso_b == 0.0 {
+            return None;
+        }
+        let ta = iso_a * self.retention(a, b, n).min(1.0);
+        let tb = iso_b * self.retention(b, a, n).min(1.0);
+        let j = self.jitter_factor(&[
+            a.0 as u64,
+            a.1.tag(),
+            b.0 as u64,
+            b.1.tag(),
+            n as u64,
+        ]);
+        Some((ta * j, tb * j))
+    }
+
+    /// True *normalized* packed pair throughput: each job's packed
+    /// throughput divided by its best isolated throughput (§4.2). The sum of
+    /// the two values is Algorithm 4's edge weight.
+    pub fn true_normalized_pair(&self, a: JobCfg, b: JobCfg, n: u32) -> Option<(f64, f64)> {
+        let (ta, tb) = self.true_packed_tput(a, b, n)?;
+        let (_, best_a) = self.best_isolated(a.0, n);
+        let (_, best_b) = self.best_isolated(b.0, n);
+        Some((ta / best_a, tb / best_b))
+    }
+
+    // ------------------------------------------------- scheduler-visible view
+
+    /// Scheduler-visible packed pair (adds decision noise `n_p`, Fig. 16).
+    pub fn profiled_normalized_pair(&self, a: JobCfg, b: JobCfg, n: u32) -> Option<(f64, f64)> {
+        let (na, nb) = self.true_normalized_pair(a, b, n)?;
+        if self.noise_p == 0.0 {
+            return Some((na, nb));
+        }
+        let f = self.noise_factor(&[
+            a.0 as u64,
+            a.1.tag(),
+            b.0 as u64,
+            b.1.tag(),
+            n as u64,
+        ]);
+        Some((na * f, nb * f))
+    }
+
+    /// Scheduler-visible isolated throughput.
+    pub fn profiled_isolated_tput(
+        &self,
+        model: ModelKind,
+        strategy: &ParallelismStrategy,
+        n: u32,
+    ) -> f64 {
+        let t = self.true_isolated_tput(model, strategy, n);
+        if self.noise_p == 0.0 {
+            t
+        } else {
+            t * self.noise_factor(&[model as u64, strategy.tag(), n as u64, 7])
+        }
+    }
+
+    // ---------------------------------------------------------------- noise
+
+    fn keyed_rng(&self, key: &[u64], salt: u64) -> Pcg64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ self.seed ^ salt;
+        for &k in key {
+            h ^= k.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        Pcg64::new(h)
+    }
+
+    /// Deterministic profiling jitter in [1-jitter, 1+jitter].
+    fn jitter_factor(&self, key: &[u64]) -> f64 {
+        if self.jitter == 0.0 {
+            return 1.0;
+        }
+        let mut r = self.keyed_rng(key, 0xa5a5);
+        r.range_f64(1.0 - self.jitter, 1.0 + self.jitter)
+    }
+
+    /// Fig. 16 noise in [1-n_p, 1+n_p].
+    fn noise_factor(&self, key: &[u64]) -> f64 {
+        let mut r = self.keyed_rng(key, 0x5a5a ^ self.noise_seed);
+        r.range_f64((1.0 - self.noise_p).max(0.0), 1.0 + self.noise_p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::ModelKind::*;
+
+    fn a100() -> Profiler {
+        Profiler::new(GpuType::A100, 42)
+    }
+
+    fn dp() -> ParallelismStrategy {
+        ParallelismStrategy::DataParallel
+    }
+
+    #[test]
+    fn dp_scales_sublinearly() {
+        let p = a100();
+        let t1 = p.true_isolated_tput(ResNet50, &dp(), 1);
+        let t8 = p.true_isolated_tput(ResNet50, &dp(), 8);
+        assert!(t8 > 5.0 * t1, "t8={t8} t1={t1}");
+        assert!(t8 < 8.0 * t1 * 1.1, "t8={t8} t1={t1}");
+    }
+
+    #[test]
+    fn default_pp_beats_frontlight_in_isolation() {
+        let p = a100();
+        let even = ParallelismStrategy::default_pp(Gpt3_3B, 8);
+        let t_even = p.true_isolated_tput(Gpt3_3B, &even, 8);
+        let fl = ParallelismStrategy::Pipeline(vec![3, 3, 3, 4, 4, 5, 5, 5]);
+        let t_fl = p.true_isolated_tput(Gpt3_3B, &fl, 8);
+        assert!(t_even > t_fl, "even {t_even} vs front-light {t_fl}");
+    }
+
+    #[test]
+    fn frontlight_wins_under_packing() {
+        // Fig. 8's core effect: the best PP split under packing is not the
+        // default even split.
+        let p = a100();
+        let even = ParallelismStrategy::default_pp(Gpt3_3B, 8);
+        let fl = ParallelismStrategy::Pipeline(vec![3, 3, 3, 4, 4, 5, 5, 5]);
+        let partner = (ResNet50, &dp());
+        let (even_n, _) = p
+            .true_normalized_pair((Gpt3_3B, &even), partner, 8)
+            .unwrap();
+        let (fl_n, _) = p.true_normalized_pair((Gpt3_3B, &fl), partner, 8).unwrap();
+        assert!(fl_n > even_n, "front-light {fl_n} <= even {even_n}");
+    }
+
+    #[test]
+    fn vgg_with_default_pp_3b_oom_but_frontlight_fits() {
+        // Fig. 8's OOM case: VGG-19 packed with GPT3-3B under the default PP
+        // split OOMs on 40 GB A100s; a front-light split fits.
+        let p = a100();
+        let even = ParallelismStrategy::default_pp(Gpt3_3B, 8);
+        let fl = ParallelismStrategy::Pipeline(vec![3, 3, 3, 4, 4, 5, 5, 5]);
+        let vgg = (Vgg19, &dp());
+        assert!(p.true_packed_tput((Gpt3_3B, &even), vgg, 8).is_none());
+        assert!(p.true_packed_tput((Gpt3_3B, &fl), vgg, 8).is_some());
+    }
+
+    #[test]
+    fn v100_reduces_packing_opportunities() {
+        // Fig. 12(b): on 16 GB V100s many pairs that pack on A100 OOM.
+        let a = a100();
+        let v = Profiler::new(GpuType::V100, 42);
+        let pairs = [
+            ((ResNet50, dp()), (Vgg19, dp())),
+            ((Dcgan, dp()), (Vgg19, dp())),
+            ((PointNet, dp()), (ResNet50, dp())),
+        ];
+        let packable = |p: &Profiler| {
+            pairs
+                .iter()
+                .filter(|((m1, s1), (m2, s2))| p.fits_packed((*m1, s1), (*m2, s2), 1))
+                .count()
+        };
+        assert!(packable(&a) > packable(&v), "{} vs {}", packable(&a), packable(&v));
+        // And V100 is simply slower.
+        assert!(
+            v.true_isolated_tput(ResNet50, &dp(), 1) < a.true_isolated_tput(ResNet50, &dp(), 1)
+        );
+    }
+
+    #[test]
+    fn packing_light_jobs_is_beneficial() {
+        // PointNet (compute-light) packs well: combined normalized
+        // throughput exceeds 1.0.
+        let p = a100();
+        let (na, nb) = p
+            .true_normalized_pair((PointNet, &dp()), (Dcgan, &dp()), 1)
+            .unwrap();
+        assert!(na + nb > 1.0, "sum {}", na + nb);
+        // Two VGGs (compute-heavy) barely gain.
+        let (va, vb) = p
+            .true_normalized_pair((Vgg19, &dp()), (Vgg19, &dp()), 1)
+            .unwrap();
+        assert!(va + vb < na + nb);
+    }
+
+    #[test]
+    fn retention_is_a_fraction() {
+        let p = a100();
+        for m in ModelKind::ALL {
+            if let Some((ta, tb)) = p.true_packed_tput((m, &dp()), (ResNet50, &dp()), 1) {
+                let ia = p.true_isolated_tput(m, &dp(), 1);
+                let ib = p.true_isolated_tput(ResNet50, &dp(), 1);
+                assert!(ta <= ia * 1.1 && ta > 0.0);
+                assert!(tb <= ib * 1.1 && tb > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn decision_noise_only_affects_profiled_view() {
+        let p = a100().with_decision_noise(1.0, 7);
+        let a = (PointNet, dp());
+        let b = (Dcgan, dp());
+        let truth = p.true_normalized_pair((a.0, &a.1), (b.0, &b.1), 1).unwrap();
+        let clean = Profiler::new(GpuType::A100, 42)
+            .true_normalized_pair((a.0, &a.1), (b.0, &b.1), 1)
+            .unwrap();
+        assert_eq!(truth, clean);
+        let noisy = p
+            .profiled_normalized_pair((a.0, &a.1), (b.0, &b.1), 1)
+            .unwrap();
+        assert_ne!(noisy, truth);
+    }
+
+    #[test]
+    fn noise_is_deterministic() {
+        let p = a100().with_decision_noise(0.5, 9);
+        let a = (PointNet, dp());
+        let b = (Dcgan, dp());
+        let x = p.profiled_normalized_pair((a.0, &a.1), (b.0, &b.1), 1);
+        let y = p.profiled_normalized_pair((a.0, &a.1), (b.0, &b.1), 1);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn gpt3_3b_dp_infeasible_on_v100() {
+        let v = Profiler::new(GpuType::V100, 1);
+        assert!(!v.fits_isolated(Gpt3_3B, &dp(), 4));
+        assert_eq!(v.true_isolated_tput(Gpt3_3B, &dp(), 4), 0.0);
+        // But some pipeline split fits.
+        let (best, t) = v.best_isolated(Gpt3_3B, 8);
+        assert!(t > 0.0, "no feasible strategy found: {}", best.name());
+    }
+
+    #[test]
+    fn best_isolated_prefers_feasible_fastest() {
+        let p = a100();
+        let (s, t) = p.best_isolated(Gpt3_3B, 8);
+        assert!(t > 0.0);
+        // For LLMs at 8 GPUs the winner should not be TP (heavy comm).
+        assert_ne!(s, ParallelismStrategy::TensorParallel);
+    }
+}

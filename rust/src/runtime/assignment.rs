@@ -1,0 +1,182 @@
+//! The AOT assignment engine: Tesserae's matching problems solved by the
+//! JAX/Pallas auction artifact through PJRT.
+//!
+//! A dedicated solver thread owns the (non-`Send`) PJRT client and the
+//! size-bucketed executables; [`AotAssignmentEngine`] is a thin `Send +
+//! Sync` handle that implements [`MatchingEngine`] by round-tripping cost
+//! matrices over channels. Problems are padded into the smallest bucket
+//! n ∈ {8,…,256}: dummy rows/columns carry benefit 0 against each other
+//! and −BIG against real nodes, which preserves the optimum on the real
+//! block.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::Matrix;
+use crate::matching::{AssignmentResult, MatchingEngine};
+
+use super::{execute_tuple, literal_f32, Manifest, Runtime};
+
+/// Sizes the AOT artifacts were exported at (must match `aot.py`).
+pub const BUCKETS: [usize; 6] = [8, 16, 32, 64, 128, 256];
+
+struct Request {
+    /// Benefit matrix, padded to a bucket size, row-major.
+    benefit: Vec<f32>,
+    n: usize,
+    eps_final: f32,
+    reply: Sender<Result<Vec<i32>>>,
+}
+
+/// `Send + Sync` handle to the solver thread.
+pub struct AotAssignmentEngine {
+    tx: Mutex<Sender<Request>>,
+    /// ε target resolution for exactness on quantized costs.
+    pub resolution: f64,
+}
+
+impl AotAssignmentEngine {
+    /// Spawn the solver thread and compile every bucket.
+    pub fn start(manifest: Manifest) -> Result<AotAssignmentEngine> {
+        let (tx, rx) = channel::<Request>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("aot-assignment".into())
+            .spawn(move || {
+                let setup = (|| -> Result<BTreeMap<usize, xla::PjRtLoadedExecutable>> {
+                    let rt = Runtime::new(manifest)?;
+                    let mut exes = BTreeMap::new();
+                    for n in BUCKETS {
+                        let entry = rt.manifest.artifact(&format!("assignment_{n}"))?;
+                        let file = entry
+                            .require("file")
+                            .map_err(|e| anyhow!("{e}"))?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("file must be a string"))?;
+                        exes.insert(n, rt.compile_file(file)?);
+                    }
+                    Ok(exes)
+                })();
+                let exes = match setup {
+                    Ok(exes) => {
+                        let _ = ready_tx.send(Ok(()));
+                        exes
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let result = solve_on_device(&exes, &req);
+                    let _ = req.reply.send(result);
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("solver thread died during setup"))??;
+        Ok(AotAssignmentEngine {
+            tx: Mutex::new(tx),
+            resolution: 1.0 / 16.0,
+        })
+    }
+
+    /// Convenience: discover artifacts and start.
+    pub fn discover() -> Result<AotAssignmentEngine> {
+        AotAssignmentEngine::start(Manifest::discover()?)
+    }
+}
+
+fn solve_on_device(
+    exes: &BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    req: &Request,
+) -> Result<Vec<i32>> {
+    let exe = exes
+        .get(&req.n)
+        .ok_or_else(|| anyhow!("no artifact bucket for n={}", req.n))?;
+    let n = req.n as i64;
+    let benefit = literal_f32(&req.benefit, &[n, n])?;
+    let eps = xla::Literal::scalar(req.eps_final);
+    let outs = execute_tuple(exe, &[benefit, eps])?;
+    let assignment = outs[0]
+        .to_vec::<i32>()
+        .map_err(|e| anyhow!("assignment read: {e:?}"))?;
+    Ok(assignment)
+}
+
+impl MatchingEngine for AotAssignmentEngine {
+    fn solve_min_cost(&self, cost: &Matrix) -> AssignmentResult {
+        let n = cost.rows();
+        assert_eq!(n, cost.cols(), "assignment needs a square matrix");
+        if n == 0 {
+            return AssignmentResult {
+                row_to_col: vec![],
+                cost: 0.0,
+            };
+        }
+        let bucket = BUCKETS
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| panic!("problem size {n} exceeds the largest AOT bucket"));
+
+        // Benefit = -cost on the real block; dummy rows/cols pair with each
+        // other at 0 and are forbidden (-BIG) against real nodes.
+        let max_abs = cost
+            .data()
+            .iter()
+            .fold(0.0f64, |acc, &x| acc.max(x.abs()))
+            .max(1.0);
+        let big = (max_abs * (bucket as f64 + 1.0)) as f32;
+        let mut benefit = vec![0.0f32; bucket * bucket];
+        for r in 0..bucket {
+            for c in 0..bucket {
+                let v = if r < n && c < n {
+                    -cost.get(r, c) as f32
+                } else if r >= n && c >= n {
+                    0.0
+                } else {
+                    -big
+                };
+                benefit[r * bucket + c] = v;
+            }
+        }
+        let eps_final = (self.resolution / (bucket as f64 + 1.0)) as f32;
+
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .lock()
+            .expect("solver mutex poisoned")
+            .send(Request {
+                benefit,
+                n: bucket,
+                eps_final,
+                reply: reply_tx,
+            })
+            .expect("solver thread gone");
+        let assignment = reply_rx
+            .recv()
+            .expect("solver thread dropped reply")
+            .expect("aot solve failed");
+
+        let row_to_col: Vec<usize> = assignment[..n].iter().map(|&c| c as usize).collect();
+        // Guard: the real block must map within itself.
+        debug_assert!(row_to_col.iter().all(|&c| c < n), "padding leaked: {row_to_col:?}");
+        let total = row_to_col
+            .iter()
+            .enumerate()
+            .map(|(r, &c)| cost.get(r, c.min(n - 1)))
+            .sum();
+        AssignmentResult {
+            row_to_col,
+            cost: total,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "aot-auction"
+    }
+}

@@ -1,0 +1,115 @@
+//! The AOT GP-posterior artifact: the numeric core of the Bayesian-
+//! optimization throughput estimator, executed through PJRT. Shapes are
+//! fixed (N_MAX padded observations, 64 queries, 7 features); hyper-
+//! parameters match `estimator/gp.rs` so the native GP is a drop-in
+//! correctness oracle.
+
+use anyhow::{anyhow, Result};
+
+use super::{execute_tuple, literal_f32, Runtime};
+
+/// Handle to the compiled GP artifact (thread-local; not `Send`).
+pub struct GpArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_max: usize,
+    pub dim: usize,
+    pub num_queries: usize,
+}
+
+impl GpArtifact {
+    pub fn load(rt: &Runtime) -> Result<GpArtifact> {
+        let entry = rt.manifest.artifact("gp")?;
+        let file = entry
+            .require("file")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_str()
+            .ok_or_else(|| anyhow!("gp file must be a string"))?;
+        let n_max = entry
+            .require("n_max")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow!("n_max must be an integer"))?;
+        let dim = entry
+            .require("dim")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow!("dim must be an integer"))?;
+        let num_queries = entry
+            .require("num_queries")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow!("num_queries must be an integer"))?;
+        Ok(GpArtifact {
+            exe: rt.compile_file(file)?,
+            n_max,
+            dim,
+            num_queries,
+        })
+    }
+
+    /// Posterior mean/variance at `queries` given `observations`.
+    /// Observations beyond `n_max` are rejected; queries are processed in
+    /// chunks of the artifact's fixed query batch (padded with zeros).
+    pub fn posterior(
+        &self,
+        observations: &[(Vec<f64>, f64)],
+        queries: &[Vec<f64>],
+    ) -> Result<Vec<(f64, f64)>> {
+        if observations.is_empty() {
+            return Err(anyhow!("GP needs at least one observation"));
+        }
+        if observations.len() > self.n_max {
+            return Err(anyhow!(
+                "{} observations exceed the artifact's N_MAX={}",
+                observations.len(),
+                self.n_max
+            ));
+        }
+        // Pack padded observation tensors.
+        let mut x = vec![0.0f32; self.n_max * self.dim];
+        let mut y = vec![0.0f32; self.n_max];
+        let mut mask = vec![0.0f32; self.n_max];
+        for (i, (feat, val)) in observations.iter().enumerate() {
+            if feat.len() != self.dim {
+                return Err(anyhow!("feature dim {} != {}", feat.len(), self.dim));
+            }
+            for (j, f) in feat.iter().enumerate() {
+                x[i * self.dim + j] = *f as f32;
+            }
+            y[i] = *val as f32;
+            mask[i] = 1.0;
+        }
+
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(self.num_queries) {
+            let mut xq = vec![0.0f32; self.num_queries * self.dim];
+            for (i, q) in chunk.iter().enumerate() {
+                if q.len() != self.dim {
+                    return Err(anyhow!("query dim {} != {}", q.len(), self.dim));
+                }
+                for (j, f) in q.iter().enumerate() {
+                    xq[i * self.dim + j] = *f as f32;
+                }
+            }
+            let outs = execute_tuple(
+                &self.exe,
+                &[
+                    literal_f32(&x, &[self.n_max as i64, self.dim as i64])?,
+                    literal_f32(&y, &[self.n_max as i64])?,
+                    literal_f32(&mask, &[self.n_max as i64])?,
+                    literal_f32(&xq, &[self.num_queries as i64, self.dim as i64])?,
+                ],
+            )?;
+            let mean = outs[0]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("mean read: {e:?}"))?;
+            let var = outs[1]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("var read: {e:?}"))?;
+            for i in 0..chunk.len() {
+                out.push((mean[i] as f64, var[i] as f64));
+            }
+        }
+        Ok(out)
+    }
+}

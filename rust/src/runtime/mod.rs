@@ -1,0 +1,150 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the L3 hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//!
+//! The `xla` crate's client is `Rc`-based (not `Send`), so anything that
+//! must be shared across threads (the [`assignment::AotAssignmentEngine`],
+//! the coordinator's workers) owns its client on a dedicated thread and
+//! speaks over channels.
+
+pub mod assignment;
+pub mod gp_artifact;
+pub mod train;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+pub use assignment::AotAssignmentEngine;
+pub use gp_artifact::GpArtifact;
+pub use train::{ModelSpec, TrainSession};
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Parsed `manifest.json` plus the artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    root: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            root,
+        })
+    }
+
+    /// Locate the artifacts directory: `$TESSERAE_ARTIFACTS`, ./artifacts,
+    /// or ../artifacts (tests run from the crate root).
+    pub fn discover() -> Result<Manifest> {
+        let candidates = [
+            std::env::var("TESSERAE_ARTIFACTS").unwrap_or_default(),
+            DEFAULT_ARTIFACTS_DIR.to_string(),
+            format!("../{DEFAULT_ARTIFACTS_DIR}"),
+        ];
+        for c in candidates.iter().filter(|c| !c.is_empty()) {
+            let dir = Path::new(c);
+            if dir.join("manifest.json").exists() {
+                return Manifest::load(dir);
+            }
+        }
+        Err(anyhow!(
+            "artifacts/manifest.json not found; run `make artifacts`"
+        ))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Json> {
+        self.root
+            .require("artifacts")
+            .map_err(|e| anyhow!("{e}"))?
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' missing from manifest"))
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.root
+            .get("artifacts")
+            .and_then(|a| a.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn file_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+/// A thread-local PJRT CPU runtime: compiles HLO-text files on demand.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest })
+    }
+
+    pub fn discover() -> Result<Runtime> {
+        Runtime::new(Manifest::discover()?)
+    }
+
+    /// Compile an HLO-text artifact file into a loaded executable.
+    pub fn compile_file(&self, file: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.manifest.file_path(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {file}: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    if expected != data.len() as i64 {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expected: i64 = dims.iter().product();
+    if expected != data.len() as i64 {
+        return Err(anyhow!("literal shape {dims:?} != data len {}", data.len()));
+    }
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Execute and unpack the single tuple output of an AOT module.
+pub fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let outs = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let lit = outs[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+}

@@ -1,0 +1,195 @@
+//! Train-step execution: the real compute behind the coordinator's jobs.
+//!
+//! A [`TrainSession`] owns a job's parameter state (as raw `f32` buffers —
+//! the portable form that crosses worker threads and doubles as the
+//! checkpoint format whose size migration costs are measured on) and the
+//! compiled `init` / `train_step` executables for its model size.
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+use super::{execute_tuple, literal_f32, literal_i32, Runtime};
+
+/// Static description of one exported model size (from the manifest).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub num_params: usize,
+    /// Per-tensor shapes, in ABI order.
+    pub param_shapes: Vec<Vec<usize>>,
+    pub init_file: String,
+    pub train_step_file: String,
+}
+
+impl ModelSpec {
+    pub fn from_manifest(entry: &Json) -> Result<ModelSpec> {
+        let cfg = entry.require("config").map_err(|e| anyhow!("{e}"))?;
+        let get = |v: &Json, k: &str| -> Result<usize> {
+            v.require(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("{k} must be an integer"))
+        };
+        let param_shapes = entry
+            .require("param_specs")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_specs must be an array"))?
+            .iter()
+            .map(|s| {
+                Ok(s.require("shape")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("shape must be an array"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect())
+            })
+            .collect::<Result<Vec<Vec<usize>>>>()?;
+        let s = |k: &str| -> Result<String> {
+            Ok(entry
+                .require(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .ok_or_else(|| anyhow!("{k} must be a string"))?
+                .to_string())
+        };
+        Ok(ModelSpec {
+            name: cfg
+                .require("name")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_str()
+                .unwrap_or("?")
+                .to_string(),
+            vocab: get(cfg, "vocab")?,
+            seq_len: get(cfg, "seq_len")?,
+            batch: get(cfg, "batch")?,
+            num_params: get(entry, "num_params")?,
+            param_shapes,
+            init_file: s("init_file")?,
+            train_step_file: s("train_step_file")?,
+        })
+    }
+
+    /// Total checkpoint size in bytes (f32 params).
+    pub fn checkpoint_bytes(&self) -> usize {
+        self.num_params * 4
+    }
+}
+
+/// A job's portable parameter state.
+#[derive(Debug, Clone)]
+pub struct ParamState {
+    /// One flat f32 buffer per parameter tensor, ABI order.
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl ParamState {
+    /// Element-wise average of replica states (the coordinator's
+    /// round-granular data-parallel reduction).
+    pub fn average(replicas: &[ParamState]) -> ParamState {
+        assert!(!replicas.is_empty());
+        let mut out = replicas[0].clone();
+        for r in &replicas[1..] {
+            for (o, t) in out.tensors.iter_mut().zip(&r.tensors) {
+                for (a, b) in o.iter_mut().zip(t) {
+                    *a += *b;
+                }
+            }
+        }
+        let k = replicas.len() as f32;
+        for t in &mut out.tensors {
+            for a in t {
+                *a /= k;
+            }
+        }
+        out
+    }
+}
+
+/// Compiled executables + helpers for one model size (thread-local).
+pub struct TrainSession {
+    pub spec: ModelSpec,
+    init_exe: xla::PjRtLoadedExecutable,
+    step_exe: xla::PjRtLoadedExecutable,
+}
+
+impl TrainSession {
+    pub fn load(rt: &Runtime, model_name: &str) -> Result<TrainSession> {
+        let entry = rt.manifest.artifact(&format!("model_{model_name}"))?;
+        let spec = ModelSpec::from_manifest(entry)?;
+        Ok(TrainSession {
+            init_exe: rt.compile_file(&spec.init_file)?,
+            step_exe: rt.compile_file(&spec.train_step_file)?,
+            spec,
+        })
+    }
+
+    /// Run the AOT `init` computation.
+    pub fn init_params(&self, seed: i32) -> Result<ParamState> {
+        let outs = execute_tuple(&self.init_exe, &[xla::Literal::scalar(seed)])?;
+        let tensors = outs
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("param read: {e:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ParamState { tensors })
+    }
+
+    /// One SGD step on a token batch; returns the loss.
+    pub fn step(&self, params: &mut ParamState, tokens: &[i32]) -> Result<f32> {
+        let want = self.spec.batch * (self.spec.seq_len + 1);
+        if tokens.len() != want {
+            return Err(anyhow!("token batch {} != {}", tokens.len(), want));
+        }
+        let mut inputs = Vec::with_capacity(params.tensors.len() + 1);
+        for (t, shape) in params.tensors.iter().zip(&self.spec.param_shapes) {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            inputs.push(literal_f32(t, &dims)?);
+        }
+        inputs.push(literal_i32(
+            tokens,
+            &[self.spec.batch as i64, (self.spec.seq_len + 1) as i64],
+        )?);
+        let outs = execute_tuple(&self.step_exe, &inputs)?;
+        if outs.len() != params.tensors.len() + 1 {
+            return Err(anyhow!(
+                "train_step returned {} outputs, expected {}",
+                outs.len(),
+                params.tensors.len() + 1
+            ));
+        }
+        for (t, l) in params.tensors.iter_mut().zip(&outs[..outs.len() - 1]) {
+            *t = l.to_vec::<f32>().map_err(|e| anyhow!("param read: {e:?}"))?;
+        }
+        let loss = outs[outs.len() - 1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss read: {e:?}"))?[0];
+        Ok(loss)
+    }
+
+    /// Synthetic learnable batch matching `model.synthetic_batch`: an
+    /// affine next-token chain `x' = (5x + 1) mod V` with 10% corruption.
+    pub fn synthetic_batch(&self, rng: &mut Pcg64) -> Vec<i32> {
+        let v = self.spec.vocab as i64;
+        let mut out = Vec::with_capacity(self.spec.batch * (self.spec.seq_len + 1));
+        for _ in 0..self.spec.batch {
+            let mut x = rng.below(v as u64) as i64;
+            out.push(x as i32);
+            for _ in 0..self.spec.seq_len {
+                x = (5 * x + 1) % v;
+                let tok = if rng.f64() < 0.1 {
+                    rng.below(v as u64) as i64
+                } else {
+                    x
+                };
+                out.push(tok as i32);
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,79 @@
+//! Composed schedulers: the round-based decision interface plus the
+//! schedulers evaluated in §6 — Tesserae-T / Tesserae-FTF, Tiresias,
+//! Tiresias (Single), Gavel, Gavel-FTF and POP.
+
+pub mod gavel;
+pub mod pop;
+pub mod tesserae;
+
+pub use gavel::{GavelObjective, GavelScheduler};
+pub use pop::PopScheduler;
+pub use tesserae::TesseraeScheduler;
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::jobs::{JobId, ParallelismStrategy};
+use crate::policies::JobInfo;
+
+/// Everything a scheduler sees at the start of a round.
+pub struct RoundInput<'a> {
+    pub now: f64,
+    pub round: u64,
+    pub active: &'a [JobInfo],
+    /// Previous round's *physical* plan (for migration minimization).
+    pub prev_plan: &'a PlacementPlan,
+    pub spec: &'a ClusterSpec,
+}
+
+/// Decision-time breakdown (Fig. 14(b)).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecisionTimings {
+    pub scheduling_s: f64,
+    pub packing_s: f64,
+    pub migration_s: f64,
+    pub total_s: f64,
+}
+
+/// A scheduler's output for one round.
+#[derive(Debug, Clone)]
+pub struct RoundDecision {
+    /// Physical placement for the next round (post migration remap).
+    pub plan: PlacementPlan,
+    /// Parallelism strategy per placed job.
+    pub strategies: BTreeMap<JobId, ParallelismStrategy>,
+    /// (placed, pending) pairs sharing GPUs this round.
+    pub packed_pairs: Vec<(JobId, JobId)>,
+    /// Jobs migrated relative to the previous round (Definition 1).
+    pub migrations: usize,
+    pub timings: DecisionTimings,
+}
+
+/// A round-based cluster scheduler (§3.2).
+pub trait Scheduler: Send {
+    fn name(&self) -> String;
+    fn decide(&mut self, input: &RoundInput) -> RoundDecision;
+}
+
+/// Shared helper: assign each placed job its best isolated strategy
+/// according to `source` (packed jobs are overridden by the packing policy).
+pub(crate) fn best_isolated_strategies(
+    infos: &[&JobInfo],
+    source: &dyn crate::estimator::ThroughputSource,
+) -> BTreeMap<JobId, ParallelismStrategy> {
+    infos
+        .iter()
+        .map(|j| {
+            let best = ParallelismStrategy::candidates(j.model, j.num_gpus)
+                .into_iter()
+                .max_by(|a, b| {
+                    source
+                        .isolated_tput(j.model, a, j.num_gpus)
+                        .partial_cmp(&source.isolated_tput(j.model, b, j.num_gpus))
+                        .unwrap()
+                })
+                .unwrap_or(ParallelismStrategy::DataParallel);
+            (j.id, best)
+        })
+        .collect()
+}

@@ -1,0 +1,345 @@
+//! The Tesserae scheduler (§3.2, Listing 1): any scheduling policy for the
+//! priority order, then allocate → pack (Algorithm 4) → migrate
+//! (Algorithms 2+3). The Tiresias and Tiresias (Single) baselines are
+//! configurations of the same engine with packing/migration toggled.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::estimator::ThroughputSource;
+use crate::matching::MatchingEngine;
+use crate::policies::placement::{
+    allocate_without_packing, migrate, pack, MigrationMode, PackingConfig,
+};
+use crate::policies::scheduling::SchedulingPolicy;
+use crate::policies::JobInfo;
+
+use super::{best_isolated_strategies, DecisionTimings, RoundDecision, RoundInput, Scheduler};
+
+/// Tesserae's composable scheduler engine.
+pub struct TesseraeScheduler {
+    label: String,
+    policy: Box<dyn SchedulingPolicy>,
+    source: Arc<dyn ThroughputSource>,
+    engine: Arc<dyn MatchingEngine>,
+    /// `None` disables GPU sharing entirely.
+    pub packing: Option<PackingConfig>,
+    pub migration: MigrationMode,
+}
+
+impl TesseraeScheduler {
+    pub fn new(
+        label: &str,
+        policy: Box<dyn SchedulingPolicy>,
+        source: Arc<dyn ThroughputSource>,
+        engine: Arc<dyn MatchingEngine>,
+        packing: Option<PackingConfig>,
+        migration: MigrationMode,
+    ) -> TesseraeScheduler {
+        TesseraeScheduler {
+            label: label.to_string(),
+            policy,
+            source,
+            engine,
+            packing,
+            migration,
+        }
+    }
+
+    /// Tesserae-T: Tiresias (2D-LAS) scheduling + full packing + the
+    /// graph-matching migration policy.
+    pub fn tesserae_t(
+        source: Arc<dyn ThroughputSource>,
+        engine: Arc<dyn MatchingEngine>,
+    ) -> TesseraeScheduler {
+        Self::new(
+            "tesserae-t",
+            Box::new(crate::policies::scheduling::TiresiasLas::default()),
+            source,
+            engine,
+            Some(PackingConfig::default()),
+            MigrationMode::Tesserae,
+        )
+    }
+
+    /// Tesserae-FTF: finish-time-fairness scheduling + packing + migration.
+    pub fn tesserae_ftf(
+        source: Arc<dyn ThroughputSource>,
+        engine: Arc<dyn MatchingEngine>,
+    ) -> TesseraeScheduler {
+        Self::new(
+            "tesserae-ftf",
+            Box::new(crate::policies::scheduling::ThemisFtf::default()),
+            source,
+            engine,
+            Some(PackingConfig::default()),
+            MigrationMode::Tesserae,
+        )
+    }
+
+    /// Plain Tiresias: LAS scheduling, no packing, no migration remapping.
+    pub fn tiresias(
+        source: Arc<dyn ThroughputSource>,
+        engine: Arc<dyn MatchingEngine>,
+    ) -> TesseraeScheduler {
+        Self::new(
+            "tiresias",
+            Box::new(crate::policies::scheduling::TiresiasLas::default()),
+            source,
+            engine,
+            None,
+            MigrationMode::GavelBaseline,
+        )
+    }
+
+    /// Tiresias (Single): Tiresias scheduling + Tesserae packing restricted
+    /// to 1-GPU jobs (the Lucid/Pollux-style baseline of §6.1).
+    pub fn tiresias_single(
+        source: Arc<dyn ThroughputSource>,
+        engine: Arc<dyn MatchingEngine>,
+    ) -> TesseraeScheduler {
+        Self::new(
+            "tiresias-single",
+            Box::new(crate::policies::scheduling::TiresiasLas::default()),
+            source,
+            engine,
+            Some(PackingConfig {
+                max_pack_gpus: 1,
+                ..Default::default()
+            }),
+            MigrationMode::Tesserae,
+        )
+    }
+}
+
+impl Scheduler for TesseraeScheduler {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn decide(&mut self, input: &RoundInput) -> RoundDecision {
+        let t_total = Instant::now();
+
+        // 1. Scheduling policy: priority order (Listing 1 line 3).
+        let t0 = Instant::now();
+        let order = self.policy.order(input.active);
+        let ordered: Vec<&JobInfo> = order.iter().map(|&i| &input.active[i]).collect();
+        let scheduling_s = t0.elapsed().as_secs_f64();
+
+        // 2. Allocation without packing (lines 5-12).
+        let alloc = allocate_without_packing(input.spec, &ordered);
+        let mut plan = alloc.plan;
+        let by_id: BTreeMap<_, _> = input.active.iter().map(|j| (j.id, j)).collect();
+        let placed_infos: Vec<&JobInfo> = alloc.placed.iter().map(|id| by_id[id]).collect();
+        let pending_infos: Vec<&JobInfo> = alloc.pending.iter().map(|id| by_id[id]).collect();
+        let mut strategies = best_isolated_strategies(&placed_infos, self.source.as_ref());
+
+        // 3. Packing (lines 13-15).
+        let t1 = Instant::now();
+        let mut packed_pairs = Vec::new();
+        if let Some(cfg) = &self.packing {
+            let pairs = pack(
+                &placed_infos,
+                &pending_infos,
+                self.source.as_ref(),
+                cfg,
+                self.engine.as_ref(),
+            );
+            for p in pairs {
+                let gpus = plan.gpus_of(p.placed);
+                plan.place(p.pending, &gpus);
+                strategies.insert(p.placed, p.placed_strategy.clone());
+                strategies.insert(p.pending, p.pending_strategy.clone());
+                packed_pairs.push((p.placed, p.pending));
+            }
+        }
+        let packing_s = t1.elapsed().as_secs_f64();
+
+        // 4. Migration minimization (line 16).
+        let outcome = migrate(
+            input.spec,
+            input.prev_plan,
+            &plan,
+            self.migration,
+            self.engine.as_ref(),
+        );
+
+        RoundDecision {
+            plan: outcome.plan,
+            strategies,
+            packed_pairs,
+            migrations: outcome.migrations,
+            timings: DecisionTimings {
+                scheduling_s,
+                packing_s,
+                migration_s: outcome.decide_time_s,
+                total_s: t_total.elapsed().as_secs_f64(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, GpuType, PlacementPlan};
+    use crate::estimator::OracleEstimator;
+    use crate::jobs::ModelKind;
+    use crate::matching::HungarianEngine;
+    use crate::profiler::Profiler;
+
+    fn info(id: u64, model: ModelKind, gpus: u32, attained: f64) -> JobInfo {
+        JobInfo {
+            id,
+            model,
+            num_gpus: gpus,
+            arrival_time: id as f64,
+            attained_service: attained,
+            total_iters: 10_000.0,
+            completed_iters: 0.0,
+            rounds_received: 0,
+            now: 1000.0,
+            iso_tput: 10.0,
+        }
+    }
+
+    fn make(sched: fn(Arc<dyn ThroughputSource>, Arc<dyn MatchingEngine>) -> TesseraeScheduler) -> TesseraeScheduler {
+        let source: Arc<dyn ThroughputSource> =
+            Arc::new(OracleEstimator::new(Profiler::new(GpuType::A100, 42)));
+        sched(source, Arc::new(HungarianEngine))
+    }
+
+    #[test]
+    fn tesserae_t_packs_pending_jobs() {
+        let spec = ClusterSpec::new(1, 2, GpuType::A100);
+        let active = vec![
+            info(1, ModelKind::PointNet, 1, 0.0),
+            info(2, ModelKind::Dcgan, 1, 0.0),
+            info(3, ModelKind::ResNet50, 1, 0.0),
+            info(4, ModelKind::PointNet, 1, 0.0),
+        ];
+        let prev = PlacementPlan::new(2);
+        let mut s = make(TesseraeScheduler::tesserae_t);
+        let d = s.decide(&RoundInput {
+            now: 1000.0,
+            round: 1,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+        });
+        d.plan.validate().unwrap();
+        // 2 GPUs, 4 single-GPU jobs: two placed + up to two packed.
+        assert!(d.plan.jobs().len() >= 2);
+        assert!(!d.packed_pairs.is_empty(), "expected packing on full cluster");
+        assert!(d.plan.jobs().len() == 2 + d.packed_pairs.len());
+    }
+
+    #[test]
+    fn tiresias_never_packs() {
+        let spec = ClusterSpec::new(1, 2, GpuType::A100);
+        let active = vec![
+            info(1, ModelKind::PointNet, 1, 0.0),
+            info(2, ModelKind::Dcgan, 1, 0.0),
+            info(3, ModelKind::ResNet50, 1, 0.0),
+        ];
+        let prev = PlacementPlan::new(2);
+        let mut s = make(TesseraeScheduler::tiresias);
+        let d = s.decide(&RoundInput {
+            now: 1000.0,
+            round: 1,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+        });
+        assert!(d.packed_pairs.is_empty());
+        assert_eq!(d.plan.jobs().len(), 2);
+    }
+
+    #[test]
+    fn las_priority_decides_who_runs() {
+        let spec = ClusterSpec::new(1, 1, GpuType::A100);
+        // Job 2 has much lower attained service -> gets the single GPU.
+        let active = vec![
+            info(1, ModelKind::ResNet50, 1, 100_000.0),
+            info(2, ModelKind::Dcgan, 1, 10.0),
+        ];
+        let prev = PlacementPlan::new(1);
+        let mut s = make(TesseraeScheduler::tiresias);
+        let d = s.decide(&RoundInput {
+            now: 1000.0,
+            round: 1,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+        });
+        assert!(d.plan.jobs().contains(&2));
+    }
+
+    #[test]
+    fn migration_stability_across_identical_rounds() {
+        // Same active set in consecutive rounds: the second decision must
+        // produce zero migrations even though the allocator is free to
+        // relabel GPUs.
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let active = vec![
+            info(1, ModelKind::ResNet50, 2, 50.0),
+            info(2, ModelKind::Dcgan, 1, 30.0),
+            info(3, ModelKind::PointNet, 1, 20.0),
+        ];
+        let mut s = make(TesseraeScheduler::tesserae_t);
+        let prev = PlacementPlan::new(4);
+        let d1 = s.decide(&RoundInput {
+            now: 0.0,
+            round: 0,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+        });
+        let d2 = s.decide(&RoundInput {
+            now: 360.0,
+            round: 1,
+            active: &active,
+            prev_plan: &d1.plan,
+            spec: &spec,
+        });
+        assert_eq!(d2.migrations, 0, "plan1 {:?} plan2 {:?}", d1.plan, d2.plan);
+    }
+
+    #[test]
+    fn timings_populated() {
+        let spec = ClusterSpec::new(1, 2, GpuType::A100);
+        let active = vec![info(1, ModelKind::PointNet, 1, 0.0)];
+        let prev = PlacementPlan::new(2);
+        let mut s = make(TesseraeScheduler::tesserae_t);
+        let d = s.decide(&RoundInput {
+            now: 0.0,
+            round: 0,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+        });
+        assert!(d.timings.total_s > 0.0);
+        assert!(d.timings.total_s >= d.timings.migration_s);
+    }
+
+    #[test]
+    fn llm_gets_nontrivial_strategy() {
+        let spec = ClusterSpec::new(2, 4, GpuType::A100);
+        let active = vec![info(1, ModelKind::Gpt3_3B, 8, 0.0)];
+        let prev = PlacementPlan::new(8);
+        let mut s = make(TesseraeScheduler::tesserae_t);
+        let d = s.decide(&RoundInput {
+            now: 0.0,
+            round: 0,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+        });
+        let strat = d.strategies.get(&1).unwrap();
+        assert!(
+            matches!(strat, crate::jobs::ParallelismStrategy::Pipeline(_))
+                || *strat == crate::jobs::ParallelismStrategy::DataParallel
+        );
+    }
+}

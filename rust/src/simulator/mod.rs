@@ -1,0 +1,424 @@
+//! Round-based discrete-event cluster simulator (§6's simulation mode).
+//!
+//! The simulator advances in fixed rounds (6 minutes in the paper): each
+//! round it snapshots active jobs, invokes the scheduler under test, then
+//! advances every placed job by its *true* throughput (from the ground
+//! truth [`Profiler`]) for the round's effective duration. Migration and
+//! job-start overheads (Fig. 3) are charged against the effective duration.
+//!
+//! Jobs keep their GPUs until the end of the round in which they finish
+//! (preemption only happens at round boundaries, §5), but their JCT is the
+//! instant their final iteration completes.
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::jobs::{Job, JobId, ParallelismStrategy};
+use crate::policies::JobInfo;
+use crate::profiler::Profiler;
+use crate::schedulers::{DecisionTimings, RoundInput, Scheduler};
+use crate::trace::Trace;
+use crate::util::stats;
+
+/// Simulator configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub spec: ClusterSpec,
+    /// Round length in seconds (paper: 360).
+    pub round_duration: f64,
+    /// Seconds charged to a migrated job: checkpoint save + load + warmup
+    /// (Fig. 3 measures these at tens of seconds).
+    pub migration_overhead_s: f64,
+    /// Seconds charged to a job the first time it starts on new GPUs.
+    pub startup_overhead_s: f64,
+    /// Hard stop (rounds) as a runaway guard.
+    pub max_rounds: u64,
+}
+
+impl SimConfig {
+    pub fn new(spec: ClusterSpec) -> SimConfig {
+        SimConfig {
+            spec,
+            round_duration: 360.0,
+            migration_overhead_s: 40.0,
+            startup_overhead_s: 10.0,
+            max_rounds: 200_000,
+        }
+    }
+}
+
+/// Per-job outcome.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub jct: f64,
+    /// Finish-time-fairness ratio: JCT / isolated exclusive duration.
+    pub ftf: f64,
+    pub migrations: u64,
+    pub rounds_run: u64,
+}
+
+/// Aggregate simulation result.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub scheduler: String,
+    pub outcomes: BTreeMap<JobId, JobOutcome>,
+    pub avg_jct: f64,
+    pub makespan: f64,
+    pub total_migrations: usize,
+    pub rounds: u64,
+    /// Per-round decision-time breakdown.
+    pub timings: Vec<DecisionTimings>,
+    /// Jobs that never completed within `max_rounds` (should be 0).
+    pub unfinished: usize,
+}
+
+impl SimResult {
+    pub fn jcts(&self) -> Vec<f64> {
+        self.outcomes.values().map(|o| o.jct).collect()
+    }
+
+    pub fn ftfs(&self) -> Vec<f64> {
+        self.outcomes.values().map(|o| o.ftf).collect()
+    }
+
+    pub fn worst_ftf(&self) -> f64 {
+        stats::max(&self.ftfs())
+    }
+
+    pub fn avg_decision_time(&self) -> f64 {
+        stats::mean(&self.timings.iter().map(|t| t.total_s).collect::<Vec<_>>())
+    }
+}
+
+struct JobState {
+    job: Job,
+    completed_iters: f64,
+    attained_service: f64,
+    rounds_received: u64,
+    migrations: u64,
+    finish_time: Option<f64>,
+    /// Best achievable isolated throughput (FTF denominator).
+    best_iso: f64,
+}
+
+/// Run a trace under a scheduler. `truth` is the ground-truth profiler used
+/// to advance jobs; the scheduler sees whatever `ThroughputSource` it was
+/// built with (possibly noisy or estimated).
+pub fn simulate(
+    trace: &Trace,
+    scheduler: &mut dyn Scheduler,
+    truth: &Profiler,
+    cfg: &SimConfig,
+) -> SimResult {
+    let total_gpus = cfg.spec.total_gpus();
+    let mut states: BTreeMap<JobId, JobState> = BTreeMap::new();
+    let mut arrived = 0usize;
+    let mut prev_plan = PlacementPlan::new(total_gpus);
+    let mut timings = Vec::new();
+    let mut total_migrations = 0usize;
+    let mut makespan: f64 = 0.0;
+    let mut round: u64 = 0;
+
+    loop {
+        let now = round as f64 * cfg.round_duration;
+        // Admit arrivals up to `now`.
+        while arrived < trace.jobs.len() && trace.jobs[arrived].arrival_time <= now {
+            let job = trace.jobs[arrived].clone();
+            let (_, best_iso) = truth.best_isolated(job.model, job.num_gpus);
+            states.insert(
+                job.id,
+                JobState {
+                    completed_iters: 0.0,
+                    attained_service: 0.0,
+                    rounds_received: 0,
+                    migrations: 0,
+                    finish_time: None,
+                    best_iso,
+                    job,
+                },
+            );
+            arrived += 1;
+        }
+
+        let active: Vec<JobInfo> = states
+            .values()
+            .filter(|s| s.finish_time.is_none())
+            .map(|s| JobInfo {
+                id: s.job.id,
+                model: s.job.model,
+                num_gpus: s.job.num_gpus,
+                arrival_time: s.job.arrival_time,
+                attained_service: s.attained_service,
+                total_iters: s.job.total_iters,
+                completed_iters: s.completed_iters,
+                rounds_received: s.rounds_received,
+                now,
+                iso_tput: s.best_iso,
+            })
+            .collect();
+
+        if active.is_empty() {
+            if arrived >= trace.jobs.len() {
+                break; // drained
+            }
+            // Idle round waiting for the next arrival.
+            prev_plan = PlacementPlan::new(total_gpus);
+            round += 1;
+            continue;
+        }
+
+        // Scheduler decision.
+        let decision = scheduler.decide(&RoundInput {
+            now,
+            round,
+            active: &active,
+            prev_plan: &prev_plan,
+            spec: &cfg.spec,
+        });
+        timings.push(decision.timings);
+        total_migrations += decision.migrations;
+
+        // Advance placed jobs.
+        let plan = &decision.plan;
+        let dp = ParallelismStrategy::DataParallel;
+        for job_id in plan.jobs() {
+            let gpus = plan.gpus_of(job_id);
+            if gpus.is_empty() {
+                continue;
+            }
+            // Identify a packing partner (a job sharing the first GPU).
+            let partner: Option<JobId> = plan
+                .jobs_on(gpus[0])
+                .iter()
+                .copied()
+                .find(|&j| j != job_id);
+
+            let (model, n, strategy) = {
+                let s = &states[&job_id];
+                (
+                    s.job.model,
+                    s.job.num_gpus,
+                    decision
+                        .strategies
+                        .get(&job_id)
+                        .cloned()
+                        .unwrap_or_else(|| dp.clone()),
+                )
+            };
+
+            let tput = match partner {
+                Some(p) => {
+                    let ps = &states[&p];
+                    let pstrat = decision
+                        .strategies
+                        .get(&p)
+                        .cloned()
+                        .unwrap_or_else(|| dp.clone());
+                    truth
+                        .true_packed_tput((model, &strategy), (ps.job.model, &pstrat), n)
+                        .map(|(ta, _)| ta)
+                        // The scheduler packed an infeasible pair (possible
+                        // only with bad estimates): the job thrashes and
+                        // makes no progress this round.
+                        .unwrap_or(0.0)
+                }
+                None => truth.true_isolated_tput(model, &strategy, n),
+            };
+
+            // Overheads: migration (present in both rounds, moved GPUs) or
+            // cold start (absent from the previous plan).
+            let was_placed = !prev_plan.gpus_of(job_id).is_empty();
+            let moved = was_placed && prev_plan.gpus_of(job_id) != gpus;
+            let overhead = if moved {
+                cfg.migration_overhead_s
+            } else if !was_placed {
+                cfg.startup_overhead_s
+            } else {
+                0.0
+            };
+            let effective = (cfg.round_duration - overhead).max(0.0);
+
+            let s = states.get_mut(&job_id).unwrap();
+            if moved {
+                s.migrations += 1;
+            }
+            s.rounds_received += 1;
+            s.attained_service += s.job.num_gpus as f64 * effective;
+            if s.finish_time.is_none() && tput > 0.0 {
+                let remaining = s.job.total_iters - s.completed_iters;
+                let needed = remaining / tput;
+                if needed <= effective {
+                    let t_done = now + overhead + needed;
+                    s.finish_time = Some(t_done);
+                    s.completed_iters = s.job.total_iters;
+                    makespan = makespan.max(t_done);
+                } else {
+                    s.completed_iters += tput * effective;
+                }
+            }
+        }
+
+        prev_plan = decision.plan;
+        round += 1;
+        if round >= cfg.max_rounds {
+            break;
+        }
+    }
+
+    let mut outcomes = BTreeMap::new();
+    let mut unfinished = 0usize;
+    for (id, s) in &states {
+        match s.finish_time {
+            Some(t) => {
+                let jct = t - s.job.arrival_time;
+                let iso = s.job.total_iters / s.best_iso.max(1e-9);
+                outcomes.insert(
+                    *id,
+                    JobOutcome {
+                        jct,
+                        ftf: jct / iso.max(1e-9),
+                        migrations: s.migrations,
+                        rounds_run: s.rounds_received,
+                    },
+                );
+            }
+            None => unfinished += 1,
+        }
+    }
+    let jcts: Vec<f64> = outcomes.values().map(|o| o.jct).collect();
+
+    SimResult {
+        scheduler: scheduler.name(),
+        avg_jct: stats::mean(&jcts),
+        makespan,
+        total_migrations,
+        rounds: round,
+        timings,
+        unfinished,
+        outcomes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuType;
+    use crate::estimator::OracleEstimator;
+    use crate::matching::HungarianEngine;
+    use crate::schedulers::TesseraeScheduler;
+    use crate::trace::TraceParams;
+    use std::sync::Arc;
+
+    fn small_trace(n: usize, seed: u64) -> Trace {
+        Trace::shockwave(&TraceParams {
+            num_jobs: n,
+            jobs_per_hour: 120.0,
+            seed,
+        })
+    }
+
+    fn quick_cfg() -> SimConfig {
+        SimConfig::new(ClusterSpec::new(2, 4, GpuType::A100))
+    }
+
+    fn tesserae_t() -> TesseraeScheduler {
+        let p = Profiler::new(GpuType::A100, 42);
+        TesseraeScheduler::tesserae_t(
+            Arc::new(OracleEstimator::new(p)),
+            Arc::new(HungarianEngine),
+        )
+    }
+
+    fn tiresias() -> TesseraeScheduler {
+        let p = Profiler::new(GpuType::A100, 42);
+        TesseraeScheduler::tiresias(
+            Arc::new(OracleEstimator::new(p)),
+            Arc::new(HungarianEngine),
+        )
+    }
+
+    #[test]
+    fn all_jobs_complete() {
+        let trace = small_trace(20, 3);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let mut s = tesserae_t();
+        let r = simulate(&trace, &mut s, &truth, &quick_cfg());
+        assert_eq!(r.unfinished, 0);
+        assert_eq!(r.outcomes.len(), 20);
+        assert!(r.avg_jct > 0.0);
+        assert!(r.makespan > 0.0);
+    }
+
+    #[test]
+    fn jct_at_least_isolated_duration() {
+        let trace = small_trace(15, 5);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let mut s = tesserae_t();
+        let r = simulate(&trace, &mut s, &truth, &quick_cfg());
+        for (id, o) in &r.outcomes {
+            // FTF = JCT / isolated >= ~1 (small tolerance for the jitter in
+            // the profiled throughputs).
+            assert!(o.ftf > 0.8, "job {id} ftf {}", o.ftf);
+        }
+    }
+
+    #[test]
+    fn packing_scheduler_beats_no_packing_on_contended_cluster() {
+        // The headline effect (Fig. 9/12 shape): with more jobs than GPUs
+        // and pack-friendly models, Tesserae-T's Avg JCT beats Tiresias.
+        let trace = small_trace(40, 7);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let cfg = quick_cfg();
+        let r_t = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        let r_b = simulate(&trace, &mut tiresias(), &truth, &cfg);
+        assert_eq!(r_t.unfinished, 0);
+        assert_eq!(r_b.unfinished, 0);
+        assert!(
+            r_t.avg_jct < r_b.avg_jct,
+            "tesserae {} vs tiresias {}",
+            r_t.avg_jct,
+            r_b.avg_jct
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let trace = small_trace(10, 11);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let cfg = quick_cfg();
+        let a = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        let b = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        assert_eq!(a.avg_jct, b.avg_jct);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.total_migrations, b.total_migrations);
+    }
+
+    #[test]
+    fn migration_overhead_slows_jobs() {
+        let trace = small_trace(25, 13);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let mut cheap = quick_cfg();
+        cheap.migration_overhead_s = 0.0;
+        cheap.startup_overhead_s = 0.0;
+        let mut costly = quick_cfg();
+        costly.migration_overhead_s = 300.0;
+        costly.startup_overhead_s = 60.0;
+        let r_cheap = simulate(&trace, &mut tiresias(), &truth, &cheap);
+        let r_costly = simulate(&trace, &mut tiresias(), &truth, &costly);
+        assert!(
+            r_costly.avg_jct >= r_cheap.avg_jct,
+            "{} vs {}",
+            r_costly.avg_jct,
+            r_cheap.avg_jct
+        );
+    }
+
+    #[test]
+    fn timings_recorded_per_round() {
+        let trace = small_trace(10, 17);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let r = simulate(&trace, &mut tesserae_t(), &truth, &quick_cfg());
+        assert!(!r.timings.is_empty());
+        assert!(r.avg_decision_time() >= 0.0);
+    }
+}

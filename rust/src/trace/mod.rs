@@ -1,0 +1,314 @@
+//! Workload traces: the Shockwave-like default trace and the Gavel-like
+//! sensitivity trace (§6.1, §7.2), plus JSON (de)serialization so traces can
+//! be generated once and replayed across schedulers.
+
+use crate::jobs::{Job, JobId, ModelKind};
+use crate::util::json::{Json, JsonError};
+use crate::util::rng::Pcg64;
+
+/// A workload trace: jobs sorted by arrival time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub jobs: Vec<Job>,
+}
+
+/// Parameters shared by both generators.
+#[derive(Debug, Clone)]
+pub struct TraceParams {
+    pub num_jobs: usize,
+    /// Poisson arrival rate in jobs/hour (the paper uses 80).
+    pub jobs_per_hour: f64,
+    pub seed: u64,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        TraceParams {
+            num_jobs: 900,
+            jobs_per_hour: 80.0,
+            seed: 1,
+        }
+    }
+}
+
+/// Job size classes of the Shockwave trace. Durations are the *isolated*
+/// runtimes the size buckets map to (seconds).
+const SHOCKWAVE_SIZE_PROBS: [f64; 4] = [0.72, 0.2, 0.05, 0.03];
+const SHOCKWAVE_DURATION_S: [(f64, f64); 4] = [
+    (600.0, 3_600.0),       // Small
+    (3_600.0, 14_400.0),    // Medium
+    (14_400.0, 36_000.0),   // Large
+    (36_000.0, 86_400.0),   // Extra Large
+];
+const SHOCKWAVE_GPU_PROBS: [f64; 4] = [0.6, 0.3, 0.09, 0.01];
+const GPU_CHOICES: [u32; 4] = [1, 2, 4, 8];
+
+/// Gavel trace distributions (§7.2): duration 10^[1.5,3] min w.p. 0.8,
+/// 10^[3,4] min w.p. 0.2; GPUs 1/2/4/8 w.p. 0.7/0.1/0.15/0.05.
+const GAVEL_GPU_PROBS: [f64; 4] = [0.7, 0.1, 0.15, 0.05];
+
+impl Trace {
+    /// Generate the default (Shockwave-like) trace.
+    pub fn shockwave(params: &TraceParams) -> Trace {
+        let mut rng = Pcg64::new(params.seed);
+        let mut t = 0.0f64;
+        let rate = params.jobs_per_hour / 3600.0;
+        let mut jobs = Vec::with_capacity(params.num_jobs);
+        for id in 0..params.num_jobs {
+            t += rng.exponential(rate);
+            let size = rng.weighted_choice(&SHOCKWAVE_SIZE_PROBS);
+            let (lo, hi) = SHOCKWAVE_DURATION_S[size];
+            let duration = rng.range_f64(lo, hi);
+            let num_gpus = GPU_CHOICES[rng.weighted_choice(&SHOCKWAVE_GPU_PROBS)];
+            jobs.push(make_job(id as JobId, t, duration, num_gpus, &mut rng));
+        }
+        Trace { jobs }
+    }
+
+    /// Generate the Gavel-like sensitivity trace (§7.2).
+    pub fn gavel(params: &TraceParams) -> Trace {
+        let mut rng = Pcg64::new(params.seed ^ 0x6a7e1);
+        let mut t = 0.0f64;
+        let rate = params.jobs_per_hour / 3600.0;
+        let mut jobs = Vec::with_capacity(params.num_jobs);
+        for id in 0..params.num_jobs {
+            t += rng.exponential(rate);
+            let duration_min = if rng.f64() < 0.8 {
+                rng.log10_uniform(1.5, 3.0)
+            } else {
+                rng.log10_uniform(3.0, 4.0)
+            };
+            let num_gpus = GPU_CHOICES[rng.weighted_choice(&GAVEL_GPU_PROBS)];
+            jobs.push(make_job(
+                id as JobId,
+                t,
+                duration_min * 60.0,
+                num_gpus,
+                &mut rng,
+            ));
+        }
+        Trace { jobs }
+    }
+
+    /// Jobs arriving in `(from, to]`.
+    pub fn arrivals(&self, from: f64, to: f64) -> impl Iterator<Item = &Job> {
+        self.jobs
+            .iter()
+            .filter(move |j| j.arrival_time > from && j.arrival_time <= to)
+    }
+
+    // ------------------------------------------------------------------ io
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(
+            self.jobs
+                .iter()
+                .map(|j| {
+                    Json::obj(vec![
+                        ("id", Json::num(j.id as f64)),
+                        ("model", Json::str(j.model.name())),
+                        ("num_gpus", Json::num(j.num_gpus as f64)),
+                        ("arrival_time", Json::num(j.arrival_time)),
+                        ("total_iters", Json::num(j.total_iters)),
+                        ("batch_size", Json::num(j.batch_size as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(v: &Json) -> Result<Trace, JsonError> {
+        let arr = v
+            .as_arr()
+            .ok_or_else(|| JsonError("trace must be an array".into()))?;
+        let mut jobs = Vec::with_capacity(arr.len());
+        for item in arr {
+            let model_name = item
+                .require("model")?
+                .as_str()
+                .ok_or_else(|| JsonError("model must be a string".into()))?;
+            let model = ModelKind::from_name(model_name)
+                .ok_or_else(|| JsonError(format!("unknown model '{model_name}'")))?;
+            let f = |k: &str| -> Result<f64, JsonError> {
+                item.require(k)?
+                    .as_f64()
+                    .ok_or_else(|| JsonError(format!("{k} must be a number")))
+            };
+            jobs.push(Job {
+                id: f("id")? as JobId,
+                model,
+                num_gpus: f("num_gpus")? as u32,
+                arrival_time: f("arrival_time")?,
+                total_iters: f("total_iters")?,
+                batch_size: f("batch_size")? as u32,
+            });
+        }
+        Ok(Trace { jobs })
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Trace::from_json(&Json::parse(&text)?)?)
+    }
+}
+
+/// Pick a model compatible with the GPU count and convert the sampled
+/// isolated duration into total work (iterations).
+fn make_job(id: JobId, arrival: f64, duration_s: f64, num_gpus: u32, rng: &mut Pcg64) -> Job {
+    // LLMs only run as multi-GPU (>=4) jobs; small jobs draw from group 1.
+    let model = if num_gpus >= 4 && rng.f64() < 0.35 {
+        [ModelKind::Gpt3Medium, ModelKind::Gpt3Xl, ModelKind::Gpt3_3B]
+            [rng.below(3) as usize]
+    } else {
+        [
+            ModelKind::ResNet50,
+            ModelKind::Vgg19,
+            ModelKind::Dcgan,
+            ModelKind::PointNet,
+        ][rng.below(4) as usize]
+    };
+    let (lo, hi) = model.batch_size_range();
+    let batch = if lo == hi {
+        lo
+    } else {
+        // Power-of-two batch inside the range.
+        let choices: Vec<u32> = (0..)
+            .map(|k| lo << k)
+            .take_while(|&b| b <= hi)
+            .collect();
+        choices[rng.below(choices.len() as u64) as usize]
+    };
+    // total work = isolated duration × isolated throughput on the reference
+    // GPU at the job's scale (linear-model reference: N × single-GPU tput).
+    let iso_tput = model.base_tput_a100() * num_gpus as f64;
+    Job {
+        id,
+        model,
+        num_gpus,
+        arrival_time: arrival,
+        total_iters: duration_s * iso_tput,
+        batch_size: batch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shockwave_distributions_roughly_match() {
+        let t = Trace::shockwave(&TraceParams {
+            num_jobs: 4000,
+            jobs_per_hour: 80.0,
+            seed: 3,
+        });
+        assert_eq!(t.jobs.len(), 4000);
+        let one_gpu = t.jobs.iter().filter(|j| j.num_gpus == 1).count() as f64 / 4000.0;
+        assert!((one_gpu - 0.6).abs() < 0.03, "1-GPU frac {one_gpu}");
+        let eight = t.jobs.iter().filter(|j| j.num_gpus == 8).count() as f64 / 4000.0;
+        assert!((eight - 0.01).abs() < 0.01, "8-GPU frac {eight}");
+        // Arrival rate ~80/h.
+        let span_h = t.jobs.last().unwrap().arrival_time / 3600.0;
+        let rate = 4000.0 / span_h;
+        assert!((rate - 80.0).abs() < 8.0, "rate {rate}");
+        // Arrivals sorted.
+        assert!(t.jobs.windows(2).all(|w| w[0].arrival_time <= w[1].arrival_time));
+    }
+
+    #[test]
+    fn gavel_durations_span_decades() {
+        let t = Trace::gavel(&TraceParams {
+            num_jobs: 2000,
+            jobs_per_hour: 80.0,
+            seed: 5,
+        });
+        // Recover isolated durations from work/throughput.
+        let durations: Vec<f64> = t
+            .jobs
+            .iter()
+            .map(|j| j.total_iters / (j.model.base_tput_a100() * j.num_gpus as f64) / 60.0)
+            .collect();
+        let short = durations.iter().filter(|&&d| d < 1000.0).count() as f64 / 2000.0;
+        assert!((short - 0.8).abs() < 0.05, "short frac {short}");
+        assert!(durations.iter().cloned().fold(0.0, f64::max) > 1000.0);
+        let one_gpu = t.jobs.iter().filter(|j| j.num_gpus == 1).count() as f64 / 2000.0;
+        assert!((one_gpu - 0.7).abs() < 0.04);
+    }
+
+    #[test]
+    fn llms_only_on_4plus_gpus() {
+        let t = Trace::shockwave(&TraceParams {
+            num_jobs: 3000,
+            jobs_per_hour: 80.0,
+            seed: 7,
+        });
+        for j in &t.jobs {
+            if j.model.is_llm() {
+                assert!(j.num_gpus >= 4, "LLM {} on {} GPUs", j.id, j.num_gpus);
+                assert_eq!(j.batch_size, 512);
+            }
+        }
+        // LLMs do appear.
+        assert!(t.jobs.iter().any(|j| j.model.is_llm()));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = Trace::shockwave(&TraceParams {
+            num_jobs: 50,
+            jobs_per_hour: 80.0,
+            seed: 11,
+        });
+        let j = t.to_json();
+        let back = Trace::from_json(&j).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = Trace::gavel(&TraceParams {
+            num_jobs: 20,
+            jobs_per_hour: 80.0,
+            seed: 13,
+        });
+        let path = std::env::temp_dir().join("tesserae_trace_test.json");
+        let path = path.to_str().unwrap();
+        t.save(path).unwrap();
+        let back = Trace::load(path).unwrap();
+        assert_eq!(back, t);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn arrivals_window() {
+        let t = Trace::shockwave(&TraceParams {
+            num_jobs: 100,
+            jobs_per_hour: 80.0,
+            seed: 17,
+        });
+        let all: usize = t.arrivals(0.0, f64::INFINITY).count();
+        // First job arrives strictly after t=0 (exponential gap).
+        assert_eq!(all, 100);
+        let t0 = t.jobs[10].arrival_time;
+        let later = t.arrivals(t0, f64::INFINITY).count();
+        assert_eq!(later, 89);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let p = TraceParams {
+            num_jobs: 30,
+            jobs_per_hour: 80.0,
+            seed: 19,
+        };
+        assert_eq!(Trace::shockwave(&p), Trace::shockwave(&p));
+        assert_ne!(
+            Trace::shockwave(&p),
+            Trace::shockwave(&TraceParams { seed: 20, ..p.clone() })
+        );
+    }
+}

@@ -1,0 +1,267 @@
+//! Criterion-style micro/meso benchmark harness (the offline crate set has
+//! no `criterion`). Provides warmup, adaptive iteration counts, and
+//! median/mean/stddev reporting, plus the table formatting every bench
+//! binary uses to print paper-style rows.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Timing {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>10}",
+            self.name,
+            self.iters,
+            fmt_duration(self.median_s),
+            fmt_duration(self.mean_s),
+            fmt_duration(self.std_s),
+        )
+    }
+}
+
+/// Human-friendly duration.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per case.
+pub struct Bench {
+    /// Target measurement time per case.
+    pub budget: Duration,
+    /// Warmup time per case.
+    pub warmup: Duration,
+    /// Minimum measured samples.
+    pub min_samples: usize,
+    results: Vec<Timing>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_millis(800),
+            warmup: Duration::from_millis(150),
+            min_samples: 5,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness used by `cargo test` paths (tiny budget).
+    pub fn quick() -> Self {
+        Bench {
+            budget: Duration::from_millis(60),
+            warmup: Duration::from_millis(10),
+            min_samples: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, preventing the result from being optimized away by
+    /// feeding it through `std::hint::black_box`.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> Timing {
+        // Warmup + calibration.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0usize;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let target = (self.budget.as_secs_f64() / per_iter.max(1e-9)) as usize;
+        let samples = target.clamp(self.min_samples, 10_000);
+
+        let mut times = Vec::with_capacity(samples);
+        for _ in 0..samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let timing = Timing {
+            name: name.to_string(),
+            iters: samples,
+            mean_s: stats::mean(&times),
+            median_s: stats::median(&times),
+            std_s: stats::std_dev(&times),
+            min_s: stats::min(&times),
+            max_s: stats::max(&times),
+        };
+        self.results.push(timing.clone());
+        timing
+    }
+
+    /// Time a single invocation (for long-running end-to-end cases where
+    /// repeated sampling is too expensive).
+    pub fn run_once<T, F: FnOnce() -> T>(&mut self, name: &str, f: F) -> (Timing, T) {
+        let t0 = Instant::now();
+        let out = std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        let timing = Timing {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: dt,
+            median_s: dt,
+            std_s: 0.0,
+            min_s: dt,
+            max_s: dt,
+        };
+        self.results.push(timing.clone());
+        (timing, out)
+    }
+
+    pub fn header() -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>10}",
+            "benchmark", "iters", "median", "mean", "std"
+        )
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&Self::header());
+        out.push('\n');
+        out.push_str(&"-".repeat(92));
+        out.push('\n');
+        for t in &self.results {
+            out.push_str(&t.summary());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn results(&self) -> &[Timing] {
+        &self.results
+    }
+}
+
+/// Simple fixed-width ASCII table used by experiment reports to print the
+/// paper's rows ("Avg JCT", "Makespan", speedups, ...).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for c in 0..ncols {
+                if c > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:<w$}", cells[c], w = widths[c]));
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench::quick();
+        let t = b.run("busy-loop", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(t.mean_s > 0.0);
+        assert!(t.iters >= 3);
+        assert!(b.report().contains("busy-loop"));
+    }
+
+    #[test]
+    fn run_once_returns_value() {
+        let mut b = Bench::quick();
+        let (t, v) = b.run_once("once", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(t.iters, 1);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["scheduler", "avg JCT (s)", "makespan (s)"]);
+        t.row_strs(&["Tesserae-T", "1200.5", "86400"]);
+        t.row_strs(&["Tiresias", "1944.8", "99360"]);
+        let s = t.render();
+        assert!(s.contains("Tesserae-T"));
+        assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

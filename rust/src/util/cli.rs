@@ -1,0 +1,143 @@
+//! Tiny CLI argument parser (the offline crate set has no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args, with
+//! typed accessors and defaults. The `tesserae` binary, examples and benches
+//! all parse through this.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // Note: positionals come before flags by convention — `--verbose x`
+        // would otherwise parse as the option verbose=x.
+        let a = parse(&[
+            "simulate",
+            "trace.json",
+            "--jobs",
+            "900",
+            "--gpus=80",
+            "--verbose",
+        ]);
+        assert_eq!(a.subcommand(), Some("simulate"));
+        assert_eq!(a.get_usize("jobs", 0), 900);
+        assert_eq!(a.get_usize("gpus", 0), 80);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional[1], "trace.json");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_usize("jobs", 120), 120);
+        assert_eq!(a.get_f64("rate", 80.0), 80.0);
+        assert_eq!(a.get_str("policy", "tesserae-t"), "tesserae-t");
+        assert!(!a.flag("verbose"));
+        assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--pack", "--migrate"]);
+        assert!(a.flag("pack"));
+        assert!(a.flag("migrate"));
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        let a = parse(&["--jobs", "many"]);
+        a.get_usize("jobs", 0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared substrates: PRNG, statistics, JSON, CLI parsing, benchmarking and
+//! property-testing helpers. These exist because the offline crate set
+//! contains none of `rand`, `serde`, `clap`, `criterion`, `proptest`.
+
+pub mod benchutil;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,74 @@
+//! Minimal property-based testing driver (the offline crate set has no
+//! `proptest`). Generates `cases` random inputs from a seeded [`Pcg64`] and
+//! runs the property; on failure it reports the case index and seed so the
+//! failure is reproducible.
+
+use super::rng::Pcg64;
+
+/// Run `property` against `cases` generated inputs. `gen` receives a fresh
+/// forked RNG per case. Panics (with seed/case info) on the first violation.
+pub fn forall<T, G, P>(name: &str, seed: u64, cases: usize, mut gen: G, mut property: P)
+where
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut root = Pcg64::new(seed);
+    for case in 0..cases {
+        let mut rng = root.fork(case as u64);
+        let input = gen(&mut rng);
+        if let Err(msg) = property(&input) {
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion for approximate float equality inside properties.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            "u64-roundtrip",
+            1,
+            50,
+            |r| r.next_u64(),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        forall(
+            "always-fails",
+            2,
+            10,
+            |r| r.below(10),
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn approx_eq_tolerance() {
+        assert!(approx_eq(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(approx_eq(1.0, 1.1, 1e-9).is_err());
+    }
+}

@@ -1,0 +1,129 @@
+//! Summary statistics and CDF helpers used by the metrics / experiments
+//! layers (JCT distributions, FTF-ratio CDFs, fidelity deviations).
+
+/// Arithmetic mean; 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0.0 for fewer than two samples.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) with linear interpolation; NaN-free input
+/// assumed. Empty input returns 0.0.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let frac = rank - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Empirical CDF sampled at `points` evenly spaced quantiles, returned as
+/// (value, cumulative_fraction) pairs — the shape the paper's Figures 9(b),
+/// 10 and 13 plot.
+pub fn ecdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if xs.is_empty() || points == 0 {
+        return vec![];
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..points)
+        .map(|i| {
+            let frac = (i + 1) as f64 / points as f64;
+            let idx = ((frac * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
+            (v[idx], frac)
+        })
+        .collect()
+}
+
+/// Relative deviation |a-b| / b (guarding b == 0), as a fraction.
+pub fn rel_dev(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        if a == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (a - b).abs() / b.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert!(ecdf(&[], 5).is_empty());
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ecdf_monotone_and_bounded() {
+        let xs = [5.0, 1.0, 9.0, 3.0, 7.0];
+        let cdf = ecdf(&xs, 10);
+        assert_eq!(cdf.len(), 10);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 < w[1].1);
+        }
+        assert_eq!(cdf.last().unwrap().0, 9.0);
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_dev_cases() {
+        assert!((rel_dev(105.0, 100.0) - 0.05).abs() < 1e-12);
+        assert_eq!(rel_dev(0.0, 0.0), 0.0);
+        assert!(rel_dev(1.0, 0.0).is_infinite());
+    }
+}

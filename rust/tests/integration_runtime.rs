@@ -1,0 +1,232 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts must load,
+//! execute, and agree with the native Rust oracles. Requires
+//! `make artifacts` to have run (skips otherwise).
+
+use tesserae::estimator::gp::Gp;
+use tesserae::linalg::Matrix;
+use tesserae::matching::{hungarian, MatchingEngine};
+use tesserae::runtime::{AotAssignmentEngine, GpArtifact, Manifest, Runtime, TrainSession};
+use tesserae::util::rng::Pcg64;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::discover().ok()
+}
+
+#[test]
+fn aot_assignment_matches_hungarian() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = AotAssignmentEngine::start(m).expect("start engine");
+    let mut rng = Pcg64::new(7);
+    for n in [3usize, 8, 13, 16, 40, 64] {
+        let mut cost = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                // 1/16-quantized costs (the migration-cost resolution).
+                cost.set(i, j, rng.below(64) as f64 / 16.0);
+            }
+        }
+        let aot = engine.solve_min_cost(&cost);
+        let exact = hungarian::solve_min_cost(&cost);
+        assert!(
+            (aot.cost - exact.cost).abs() < 1e-4,
+            "n={n}: aot {} vs exact {}",
+            aot.cost,
+            exact.cost
+        );
+        // Must be a permutation of the real block.
+        let mut seen = vec![false; n];
+        for &c in &aot.row_to_col {
+            assert!(c < n && !seen[c]);
+            seen[c] = true;
+        }
+    }
+}
+
+#[test]
+fn aot_assignment_solves_packing_shapes() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = AotAssignmentEngine::start(m).expect("start engine");
+    // A max-weight matching reduction shape: forbidden edges + dummies.
+    let edges = vec![(0usize, 0usize, 1.25f64), (0, 1, 0.5), (1, 1, 1.5)];
+    let pairs = tesserae::matching::max_weight_matching(2, 2, &edges, &engine);
+    let total: f64 = pairs.iter().map(|p| p.weight).sum();
+    assert!((total - 2.75).abs() < 1e-3, "total {total}");
+}
+
+#[test]
+fn gp_artifact_matches_native_gp() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::new(m).expect("runtime");
+    let gp = GpArtifact::load(&rt).expect("load gp");
+    assert_eq!(gp.dim, 7);
+
+    let mut rng = Pcg64::new(3);
+    let obs: Vec<(Vec<f64>, f64)> = (0..10)
+        .map(|_| {
+            let x: Vec<f64> = (0..7).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let y = x.iter().sum::<f64>() / 3.0;
+            (x, y)
+        })
+        .collect();
+    let queries: Vec<Vec<f64>> = (0..5)
+        .map(|_| (0..7).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+        .collect();
+
+    let aot = gp.posterior(&obs, &queries).expect("posterior");
+
+    // Native GP with the same hyperparameters (0.6, 0.25, 1e-4).
+    let native = Gp::fit(
+        obs.iter().map(|(x, _)| x.clone()).collect(),
+        &obs.iter().map(|(_, y)| *y).collect::<Vec<_>>(),
+        0.6,
+        0.25,
+        1e-4,
+    )
+    .expect("fit native");
+    for (q, (am, av)) in queries.iter().zip(&aot) {
+        let (nm, nv) = native.predict(q);
+        assert!((am - nm).abs() < 1e-3, "mean {am} vs {nm}");
+        assert!((av - nv).abs() < 1e-3, "var {av} vs {nv}");
+    }
+}
+
+#[test]
+fn train_session_loss_decreases() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::new(m).expect("runtime");
+    let session = TrainSession::load(&rt, "gpt-nano").expect("load model");
+    assert!(session.spec.num_params > 50_000);
+    let mut params = session.init_params(0).expect("init");
+    assert_eq!(params.tensors.len(), session.spec.param_shapes.len());
+
+    let mut rng = Pcg64::new(1);
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let batch = session.synthetic_batch(&mut rng);
+        let loss = session.step(&mut params, &batch).expect("step");
+        losses.push(loss as f64);
+    }
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    assert!(
+        last < first,
+        "loss should descend: first {first} last {last} ({losses:?})"
+    );
+    assert!(first > 4.0, "initial loss ~ ln(V): {first}");
+}
+
+#[test]
+fn param_average_is_elementwise_mean() {
+    use tesserae::runtime::train::ParamState;
+    let a = ParamState {
+        tensors: vec![vec![1.0, 3.0], vec![2.0]],
+    };
+    let b = ParamState {
+        tensors: vec![vec![3.0, 5.0], vec![4.0]],
+    };
+    let avg = ParamState::average(&[a, b]);
+    assert_eq!(avg.tensors, vec![vec![2.0, 4.0], vec![3.0]]);
+}
+
+#[test]
+fn full_simulation_on_aot_engine_matches_hungarian() {
+    // Cross-layer end-to-end: run the complete scheduler+simulator stack
+    // with every matching problem solved by the AOT JAX/Pallas auction via
+    // PJRT, and compare against the native Hungarian run. Both engines are
+    // exact on the migration costs; packing weights are floats so we allow
+    // a small JCT tolerance.
+    let Some(m) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    use std::sync::Arc;
+    use tesserae::cluster::{ClusterSpec, GpuType};
+    use tesserae::experiments::{run_sim_engine, SchedKind};
+    use tesserae::trace::{Trace, TraceParams};
+
+    let trace = Trace::shockwave(&TraceParams {
+        num_jobs: 12,
+        jobs_per_hour: 240.0,
+        seed: 5,
+    });
+    let spec = ClusterSpec::new(2, 2, GpuType::A100);
+    let aot_engine = Arc::new(AotAssignmentEngine::start(m).expect("engine"));
+    let aot = run_sim_engine(SchedKind::TesseraeT, &trace, spec, 5, 0.0, aot_engine);
+    let native = run_sim_engine(
+        SchedKind::TesseraeT,
+        &trace,
+        spec,
+        5,
+        0.0,
+        Arc::new(tesserae::matching::HungarianEngine),
+    );
+    assert_eq!(aot.unfinished, 0);
+    assert_eq!(native.unfinished, 0);
+    let rel = (aot.avg_jct - native.avg_jct).abs() / native.avg_jct;
+    assert!(rel < 0.05, "aot {} vs native {}", aot.avg_jct, native.avg_jct);
+}
+
+#[test]
+fn coordinator_trains_real_jobs_with_packing() {
+    // Minimal real-execution run: 3 jobs on 2 workers forces packing; all
+    // jobs must finish with descending loss and real checkpoint movement
+    // accounting.
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use tesserae::coordinator::{run_cluster, ExecConfig, ExecJob};
+    let jobs = vec![
+        ExecJob {
+            id: 1,
+            model: "gpt-nano".into(),
+            num_gpus: 1,
+            arrival_round: 0,
+            total_steps: 20,
+        },
+        ExecJob {
+            id: 2,
+            model: "gpt-nano".into(),
+            num_gpus: 1,
+            arrival_round: 0,
+            total_steps: 20,
+        },
+        ExecJob {
+            id: 3,
+            model: "gpt-nano".into(),
+            num_gpus: 1,
+            arrival_round: 0,
+            total_steps: 20,
+        },
+    ];
+    let cfg = ExecConfig {
+        num_nodes: 1,
+        gpus_per_node: 2,
+        round_wall_s: 0.3,
+        seed: 2,
+        ..Default::default()
+    };
+    let r = run_cluster(&jobs, &cfg).expect("run cluster");
+    assert_eq!(r.jobs.len(), 3);
+    for (id, j) in &r.jobs {
+        assert!(j.steps >= 20, "job {id} underran: {} steps", j.steps);
+        assert!(
+            j.last_loss < j.first_loss,
+            "job {id} loss did not descend"
+        );
+    }
+    // 3 single-GPU jobs on 2 GPUs requires packing in round 0.
+    assert!(r.rounds >= 1);
+}

@@ -1,0 +1,163 @@
+//! Integration tests over multi-round scheduler behaviour: plan validity,
+//! migration stability, decision-time scaling and POP partitioning across
+//! cluster topologies.
+
+use std::sync::Arc;
+
+use tesserae::cluster::{ClusterSpec, GpuType, PlacementPlan};
+use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+use tesserae::experiments::scalability::{measure_decision, synthetic_active_jobs};
+use tesserae::experiments::{build_scheduler, SchedKind};
+use tesserae::matching::{HungarianEngine, MatchingEngine};
+use tesserae::profiler::Profiler;
+use tesserae::schedulers::RoundInput;
+
+fn source() -> Arc<dyn ThroughputSource> {
+    Arc::new(CachedSource::new(OracleEstimator::new(Profiler::new(
+        GpuType::A100,
+        42,
+    ))))
+}
+
+fn engine() -> Arc<dyn MatchingEngine> {
+    Arc::new(HungarianEngine)
+}
+
+/// Drive `rounds` consecutive decisions with a fixed active set and check
+/// plan invariants each round.
+fn drive(kind: SchedKind, spec: ClusterSpec, n_jobs: usize, rounds: usize) -> Vec<usize> {
+    let mut sched = build_scheduler(kind, source(), engine());
+    let active = synthetic_active_jobs(n_jobs, 3);
+    let mut prev = PlacementPlan::new(spec.total_gpus());
+    let mut migrations = Vec::new();
+    for round in 0..rounds {
+        let d = sched.decide(&RoundInput {
+            now: round as f64 * 360.0,
+            round: round as u64,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+        });
+        d.plan.validate().expect("invalid plan");
+        // Every placed job occupies exactly its requested GPU count.
+        for job in d.plan.jobs() {
+            let got = d.plan.gpus_of(job).len() as u32;
+            let want = active.iter().find(|j| j.id == job).unwrap().num_gpus;
+            assert_eq!(got, want, "{}: job {job} got {got}/{want} gpus", sched.name());
+        }
+        migrations.push(d.migrations);
+        prev = d.plan;
+    }
+    migrations
+}
+
+#[test]
+fn tesserae_stabilizes_with_fixed_jobs() {
+    let migr = drive(SchedKind::TesseraeT, ClusterSpec::new(4, 4, GpuType::A100), 30, 5);
+    // After the first round the same active set must not churn.
+    assert!(
+        migr[1..].iter().all(|&m| m == 0),
+        "migrations after stabilization: {migr:?}"
+    );
+}
+
+#[test]
+fn all_schedulers_produce_valid_plans_across_rounds() {
+    for kind in [
+        SchedKind::TesseraeT,
+        SchedKind::Tiresias,
+        SchedKind::TiresiasSingle,
+        SchedKind::Gavel,
+        SchedKind::GavelFtf,
+        SchedKind::Pop(2),
+    ] {
+        drive(kind, ClusterSpec::new(4, 2, GpuType::A100), 20, 3);
+    }
+}
+
+#[test]
+fn pop_handles_odd_topologies() {
+    // Partition counts that do not divide the node count.
+    for k in [2usize, 3, 5] {
+        drive(SchedKind::Pop(k), ClusterSpec::new(7, 2, GpuType::A100), 25, 2);
+    }
+}
+
+#[test]
+fn pop_shrinks_partitions_for_large_jobs() {
+    // 8-GPU jobs on 2-GPU nodes need 4 nodes: POP-4 on 4 nodes must fall
+    // back to fewer partitions rather than starving the job.
+    let spec = ClusterSpec::new(4, 2, GpuType::A100);
+    let mut sched = build_scheduler(SchedKind::Pop(4), source(), engine());
+    let mut active = synthetic_active_jobs(6, 9);
+    active[0].num_gpus = 8;
+    active[0].attained_service = 0.0; // top priority
+    let prev = PlacementPlan::new(spec.total_gpus());
+    let d = sched.decide(&RoundInput {
+        now: 0.0,
+        round: 0,
+        active: &active,
+        prev_plan: &prev,
+        spec: &spec,
+    });
+    assert_eq!(d.plan.gpus_of(active[0].id).len(), 8, "large job starved");
+}
+
+#[test]
+fn decision_time_scales_mildly_for_tesserae() {
+    let spec = ClusterSpec::scale_256();
+    let (small, ..) = measure_decision(SchedKind::TesseraeT, 250, &spec, 3);
+    let (large, ..) = measure_decision(SchedKind::TesseraeT, 2000, &spec, 3);
+    // 8x the jobs must cost well under 64x the time (near-linear growth).
+    assert!(
+        large < small.max(1e-4) * 64.0,
+        "tesserae decision super-cubic: {small} -> {large}"
+    );
+    // And stays within the paper's envelope.
+    assert!(large < 1.6, "2000-job decision took {large}s");
+}
+
+#[test]
+fn empty_active_set_yields_empty_plan() {
+    let spec = ClusterSpec::new(2, 2, GpuType::A100);
+    for kind in [SchedKind::TesseraeT, SchedKind::Gavel] {
+        let mut sched = build_scheduler(kind, source(), engine());
+        let prev = PlacementPlan::new(spec.total_gpus());
+        let d = sched.decide(&RoundInput {
+            now: 0.0,
+            round: 0,
+            active: &[],
+            prev_plan: &prev,
+            spec: &spec,
+        });
+        assert!(d.plan.jobs().is_empty());
+        assert_eq!(d.migrations, 0);
+    }
+}
+
+#[test]
+fn exempt_jobs_never_packed_end_to_end() {
+    use tesserae::policies::placement::PackingConfig;
+    use tesserae::schedulers::{Scheduler, TesseraeScheduler};
+
+    let spec = ClusterSpec::new(1, 2, GpuType::A100);
+    let active = synthetic_active_jobs(6, 11);
+    let exempt_id = active[0].id;
+    let mut sched = TesseraeScheduler::tesserae_t(source(), engine());
+    sched.packing = Some(PackingConfig {
+        exempt: [exempt_id].into_iter().collect(),
+        ..Default::default()
+    });
+    let prev = PlacementPlan::new(spec.total_gpus());
+    let d = sched.decide(&RoundInput {
+        now: 0.0,
+        round: 0,
+        active: &active,
+        prev_plan: &prev,
+        spec: &spec,
+    });
+    for (a, b) in &d.packed_pairs {
+        assert_ne!(*a, exempt_id);
+        assert_ne!(*b, exempt_id);
+    }
+}

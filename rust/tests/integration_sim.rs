@@ -1,0 +1,155 @@
+//! Integration tests over the full simulator stack: trace → scheduler →
+//! placement policies → metrics, across all scheduler configurations.
+
+use tesserae::cluster::GpuType;
+use tesserae::experiments::{run_sim, Scale, SchedKind};
+use tesserae::trace::{Trace, TraceParams};
+
+fn scale() -> Scale {
+    Scale::quick()
+}
+
+#[test]
+fn headline_shape_tesserae_beats_tiresias() {
+    let s = scale();
+    let trace = s.shockwave_trace();
+    let spec = s.spec(GpuType::A100);
+    let ours = run_sim(SchedKind::TesseraeT, &trace, spec, s.seed, 0.0);
+    let base = run_sim(SchedKind::Tiresias, &trace, spec, s.seed, 0.0);
+    assert_eq!(ours.unfinished, 0);
+    assert_eq!(base.unfinished, 0);
+    assert!(
+        ours.avg_jct < base.avg_jct,
+        "JCT: {} vs {}",
+        ours.avg_jct,
+        base.avg_jct
+    );
+    assert!(ours.makespan <= base.makespan * 1.05);
+}
+
+#[test]
+fn packing_is_the_dominant_gain() {
+    // Ablation consistency: no-pack Tesserae sits between full Tesserae and
+    // plain Tiresias on JCT (migration helps, packing helps more).
+    let s = scale();
+    let trace = s.shockwave_trace();
+    let spec = s.spec(GpuType::A100);
+    let full = run_sim(SchedKind::TesseraeT, &trace, spec, s.seed, 0.0);
+    let nopack = run_sim(SchedKind::TesseraeTNoPack, &trace, spec, s.seed, 0.0);
+    assert!(
+        full.avg_jct <= nopack.avg_jct * 1.02,
+        "packing should not hurt: {} vs {}",
+        full.avg_jct,
+        nopack.avg_jct
+    );
+}
+
+#[test]
+fn migration_algorithm_reduces_migrations_end_to_end() {
+    let s = scale();
+    let trace = s.shockwave_trace();
+    let spec = s.spec(GpuType::A100);
+    let ours = run_sim(SchedKind::TesseraeT, &trace, spec, s.seed, 0.0);
+    let basic = run_sim(SchedKind::TesseraeTBasicMigration, &trace, spec, s.seed, 0.0);
+    assert!(
+        ours.total_migrations < basic.total_migrations,
+        "{} vs {}",
+        ours.total_migrations,
+        basic.total_migrations
+    );
+}
+
+#[test]
+fn ftf_scheduler_improves_worst_case_fairness() {
+    let s = scale();
+    let trace = s.shockwave_trace();
+    let spec = s.spec(GpuType::A100);
+    let ours = run_sim(SchedKind::TesseraeFtf, &trace, spec, s.seed, 0.0);
+    let gavel = run_sim(SchedKind::GavelFtf, &trace, spec, s.seed, 0.0);
+    assert!(
+        ours.worst_ftf() <= gavel.worst_ftf() * 1.1,
+        "worst FTF {} vs {}",
+        ours.worst_ftf(),
+        gavel.worst_ftf()
+    );
+}
+
+#[test]
+fn gavel_trace_workload_also_wins() {
+    let s = scale();
+    let trace = s.gavel_trace();
+    let spec = s.spec(GpuType::A100);
+    let ours = run_sim(SchedKind::TesseraeT, &trace, spec, s.seed, 0.0);
+    let base = run_sim(SchedKind::Tiresias, &trace, spec, s.seed, 0.0);
+    assert_eq!(ours.unfinished, 0);
+    assert!(ours.avg_jct <= base.avg_jct * 1.02);
+}
+
+#[test]
+fn results_reproducible_across_runs() {
+    let s = scale();
+    let trace = s.shockwave_trace();
+    let spec = s.spec(GpuType::A100);
+    let a = run_sim(SchedKind::TesseraeT, &trace, spec, s.seed, 0.0);
+    let b = run_sim(SchedKind::TesseraeT, &trace, spec, s.seed, 0.0);
+    assert_eq!(a.avg_jct, b.avg_jct);
+    assert_eq!(a.total_migrations, b.total_migrations);
+    for (id, oa) in &a.outcomes {
+        assert_eq!(oa.jct, b.outcomes[id].jct);
+    }
+}
+
+#[test]
+fn noise_degrades_gracefully() {
+    // Fig. 16 shape: 100% profiling noise costs at most a modest JCT hit.
+    let s = scale();
+    let trace = s.shockwave_trace();
+    let spec = s.spec(GpuType::A100);
+    let clean = run_sim(SchedKind::TesseraeT, &trace, spec, s.seed, 0.0);
+    let noisy = run_sim(SchedKind::TesseraeT, &trace, spec, s.seed, 1.0);
+    assert_eq!(noisy.unfinished, 0);
+    assert!(
+        noisy.avg_jct < clean.avg_jct * 1.5,
+        "noise blew up JCT: {} vs {}",
+        noisy.avg_jct,
+        clean.avg_jct
+    );
+}
+
+#[test]
+fn saturated_cluster_still_drains() {
+    // Heavy burst: 40 jobs arriving nearly at once on 4 GPUs.
+    let trace = Trace::shockwave(&TraceParams {
+        num_jobs: 40,
+        jobs_per_hour: 4000.0,
+        seed: 3,
+    });
+    let spec = tesserae::cluster::ClusterSpec::new(1, 4, GpuType::A100);
+    let r = run_sim(SchedKind::TesseraeT, &trace, spec, 3, 0.0);
+    assert_eq!(r.unfinished, 0, "saturated cluster failed to drain");
+}
+
+#[test]
+fn single_job_runs_near_isolated_speed() {
+    let trace = Trace::shockwave(&TraceParams {
+        num_jobs: 1,
+        jobs_per_hour: 80.0,
+        seed: 5,
+    });
+    let spec = tesserae::cluster::ClusterSpec::new(2, 4, GpuType::A100);
+    let r = run_sim(SchedKind::TesseraeT, &trace, spec, 5, 0.0);
+    let outcome = r.outcomes.values().next().unwrap();
+    // Alone on the cluster: FTF ratio ~ 1 (one round of quantization slack).
+    assert!(outcome.ftf < 1.6, "ftf {}", outcome.ftf);
+    assert_eq!(outcome.migrations, 0);
+}
+
+#[test]
+fn v100_cluster_slower_but_complete() {
+    let s = scale();
+    let trace = s.shockwave_trace();
+    let a = run_sim(SchedKind::TesseraeT, &trace, s.spec(GpuType::A100), s.seed, 0.0);
+    let v = run_sim(SchedKind::TesseraeT, &trace, s.spec(GpuType::V100), s.seed, 0.0);
+    assert_eq!(v.unfinished, 0);
+    assert!(v.avg_jct > a.avg_jct, "V100 should be slower");
+}

@@ -1,0 +1,293 @@
+//! Cross-module property tests: randomized placement plans, migration
+//! optimality relations, packing-matching validity, and simulator
+//! conservation laws.
+
+use std::collections::BTreeSet;
+
+use tesserae::cluster::{ClusterSpec, GpuType, PlacementPlan};
+use tesserae::jobs::JobId;
+use tesserae::matching::{max_weight_matching, AuctionEngine, HungarianEngine};
+use tesserae::policies::placement::{migrate, MigrationMode};
+use tesserae::util::prop::forall;
+use tesserae::util::rng::Pcg64;
+
+/// Generate a random valid placement plan: single- and multi-GPU jobs,
+/// optional packing (≤ 2 tenants/GPU), consolidated multi-GPU jobs.
+fn random_plan(spec: &ClusterSpec, rng: &mut Pcg64, job_base: u64) -> PlacementPlan {
+    let mut plan = PlacementPlan::new(spec.total_gpus());
+    let mut next_job = job_base;
+    // First tenant layer.
+    for node in 0..spec.num_nodes {
+        let gpus: Vec<usize> = spec.gpus_of_node(node).collect();
+        let mut i = 0;
+        while i < gpus.len() {
+            match rng.below(4) {
+                0 => i += 1, // leave empty
+                1 if i + 1 < gpus.len() => {
+                    plan.place(next_job, &[gpus[i], gpus[i + 1]]);
+                    next_job += 1;
+                    i += 2;
+                }
+                _ => {
+                    plan.place(next_job, &[gpus[i]]);
+                    next_job += 1;
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Second tenant layer: pack some 1-GPU jobs onto occupied GPUs.
+    for g in 0..spec.total_gpus() {
+        if plan.jobs_on(g).len() == 1 && rng.f64() < 0.3 {
+            plan.place(next_job, &[g]);
+            next_job += 1;
+        }
+    }
+    plan
+}
+
+/// Keep a random subset of jobs from both plans as "common" so migration
+/// has something to align.
+fn overlay_common(
+    prev: &mut PlacementPlan,
+    next: &mut PlacementPlan,
+    rng: &mut Pcg64,
+) -> BTreeSet<JobId> {
+    let prev_jobs: Vec<JobId> = prev.jobs().into_iter().collect();
+    let next_jobs: Vec<JobId> = next.jobs().into_iter().collect();
+    let mut common = BTreeSet::new();
+    // Rename a random subset of next's jobs to match prev's ids where the
+    // GPU-count matches (so both rounds contain them).
+    for &nj in &next_jobs {
+        if rng.f64() < 0.5 {
+            let n_gpus = next.gpus_of(nj).len();
+            if let Some(&pj) = prev_jobs
+                .iter()
+                .find(|&&pj| prev.gpus_of(pj).len() == n_gpus && !common.contains(&pj) && !next.jobs().contains(&pj))
+            {
+                let gpus = next.remove(nj);
+                next.place(pj, &gpus);
+                common.insert(pj);
+            }
+        }
+    }
+    common
+}
+
+#[test]
+fn tesserae_migration_never_worse_than_baseline_random_plans() {
+    forall(
+        "migrations(tesserae) <= migrations(baseline)",
+        101,
+        60,
+        |rng| {
+            let spec = ClusterSpec::new(2 + rng.below(3) as usize, 2 + rng.below(3) as usize * 2, GpuType::A100);
+            let mut prev = random_plan(&spec, rng, 0);
+            let mut next = random_plan(&spec, rng, 1000);
+            overlay_common(&mut prev, &mut next, rng);
+            (spec, prev, next)
+        },
+        |(spec, prev, next)| {
+            let ours = migrate(spec, prev, next, MigrationMode::Tesserae, &HungarianEngine);
+            let base = migrate(spec, prev, next, MigrationMode::GavelBaseline, &HungarianEngine);
+            ours.plan.validate().map_err(|e| e.to_string())?;
+            if ours.migrations <= base.migrations {
+                Ok(())
+            } else {
+                Err(format!("{} > {}", ours.migrations, base.migrations))
+            }
+        },
+    );
+}
+
+#[test]
+fn migration_preserves_job_shapes_and_tenancy() {
+    forall(
+        "relabeled plan preserves every job's footprint",
+        103,
+        60,
+        |rng| {
+            let spec = ClusterSpec::new(2 + rng.below(2) as usize, 4, GpuType::A100);
+            let mut prev = random_plan(&spec, rng, 0);
+            let mut next = random_plan(&spec, rng, 500);
+            overlay_common(&mut prev, &mut next, rng);
+            (spec, prev, next)
+        },
+        |(spec, prev, next)| {
+            for mode in [MigrationMode::Tesserae, MigrationMode::Flat] {
+                let out = migrate(spec, prev, next, mode, &HungarianEngine);
+                if out.plan.jobs() != next.jobs() {
+                    return Err(format!("{mode:?}: job set changed"));
+                }
+                for j in next.jobs() {
+                    if out.plan.gpus_of(j).len() != next.gpus_of(j).len() {
+                        return Err(format!("{mode:?}: job {j} footprint changed"));
+                    }
+                }
+                // Co-tenancy must be preserved: jobs sharing a GPU in the
+                // logical plan still share one physically.
+                for g in 0..next.num_gpus() {
+                    let tenants = next.jobs_on(g);
+                    if tenants.len() == 2 {
+                        let a = out.plan.gpus_of(tenants[0]);
+                        let b = out.plan.gpus_of(tenants[1]);
+                        if !a.iter().any(|g| b.contains(g)) {
+                            return Err(format!("{mode:?}: packed pair split apart"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tesserae_migration_preserves_consolidation() {
+    forall(
+        "consolidated jobs stay consolidated",
+        107,
+        40,
+        |rng| {
+            let spec = ClusterSpec::new(3, 4, GpuType::A100);
+            let mut prev = random_plan(&spec, rng, 0);
+            let mut next = random_plan(&spec, rng, 500);
+            overlay_common(&mut prev, &mut next, rng);
+            (spec, prev, next)
+        },
+        |(spec, prev, next)| {
+            let out = migrate(spec, prev, next, MigrationMode::Tesserae, &HungarianEngine);
+            for j in out.plan.jobs() {
+                if next.is_consolidated(j, spec) && !out.plan.is_consolidated(j, spec) {
+                    return Err(format!("job {j} lost consolidation"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn matching_engines_agree_on_quantized_random_graphs() {
+    forall(
+        "hungarian == auction on random packing graphs",
+        109,
+        40,
+        |rng| {
+            let nl = 1 + rng.below(10) as usize;
+            let nr = 1 + rng.below(10) as usize;
+            let m = 1 + rng.below(24) as usize;
+            let edges: Vec<(usize, usize, f64)> = (0..m)
+                .map(|_| {
+                    (
+                        rng.below(nl as u64) as usize,
+                        rng.below(nr as u64) as usize,
+                        rng.below(64) as f64 / 16.0,
+                    )
+                })
+                .collect();
+            (nl, nr, edges)
+        },
+        |(nl, nr, edges)| {
+            let h: f64 = max_weight_matching(*nl, *nr, edges, &HungarianEngine)
+                .iter()
+                .map(|p| p.weight)
+                .sum();
+            let a: f64 = max_weight_matching(
+                *nl,
+                *nr,
+                edges,
+                &AuctionEngine {
+                    resolution: Some(1.0 / 16.0),
+                },
+            )
+            .iter()
+            .map(|p| p.weight)
+            .sum();
+            tesserae::util::prop::approx_eq(h, a, 1e-6)
+        },
+    );
+}
+
+#[test]
+fn simulator_conserves_work() {
+    // Conservation: every finished job received exactly its total work; no
+    // job finishes before its arrival.
+    use tesserae::experiments::{run_sim, SchedKind};
+    use tesserae::trace::{Trace, TraceParams};
+
+    forall(
+        "work conservation",
+        113,
+        8,
+        |rng| {
+            let jobs = 10 + rng.below(20) as usize;
+            Trace::shockwave(&TraceParams {
+                num_jobs: jobs,
+                jobs_per_hour: 200.0,
+                seed: rng.next_u64(),
+            })
+        },
+        |trace| {
+            let spec = ClusterSpec::new(2, 4, GpuType::A100);
+            let r = run_sim(SchedKind::TesseraeT, trace, spec, 1, 0.0);
+            if r.unfinished != 0 {
+                return Err(format!("{} unfinished", r.unfinished));
+            }
+            for (id, o) in &r.outcomes {
+                if o.jct <= 0.0 {
+                    return Err(format!("job {id} has non-positive JCT"));
+                }
+                if o.rounds_run == 0 {
+                    return Err(format!("job {id} finished without running"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lp_allocation_never_exceeds_capacity() {
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator};
+    use tesserae::experiments::scalability::synthetic_active_jobs;
+    use tesserae::profiler::Profiler;
+    use tesserae::schedulers::{GavelObjective, GavelScheduler, RoundInput, Scheduler};
+
+    forall(
+        "gavel plan fits the cluster",
+        127,
+        12,
+        |rng| {
+            let spec = ClusterSpec::new(
+                1 + rng.below(4) as usize,
+                2 + rng.below(3) as usize,
+                GpuType::A100,
+            );
+            let jobs = synthetic_active_jobs(5 + rng.below(40) as usize, rng.next_u64());
+            (spec, jobs)
+        },
+        |(spec, jobs)| {
+            let source = Arc::new(CachedSource::new(OracleEstimator::new(Profiler::new(
+                GpuType::A100,
+                7,
+            ))));
+            let mut sched = GavelScheduler::new(
+                GavelObjective::Las,
+                true,
+                source,
+                Arc::new(HungarianEngine),
+            );
+            let prev = PlacementPlan::new(spec.total_gpus());
+            let d = sched.decide(&RoundInput {
+                now: 0.0,
+                round: 0,
+                active: jobs,
+                prev_plan: &prev,
+                spec,
+            });
+            d.plan.validate().map_err(|e| e.to_string())
+        },
+    );
+}
