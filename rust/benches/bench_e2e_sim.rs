@@ -2,9 +2,24 @@
 //! standard bench scale (80 GPUs), plus the real-execution Fig. 3 /
 //! Table 2 measurements when artifacts are present.
 //!
+//! Also records the simulator perf trajectory — rounds/sec and wall-clock
+//! at 16- and 64-node scale, and the idle-gap-skipping speedup on a sparse
+//! trace — into `BENCH_e2e_sim.json` so later PRs have a baseline to beat.
+//!
 //! Scale override: TESSERAE_BENCH_SCALE=quick|standard|paper
 
-use tesserae::experiments::{end_to_end, Scale};
+use std::sync::Arc;
+use std::time::Instant;
+
+use tesserae::cluster::{ClusterSpec, GpuType};
+use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+use tesserae::experiments::{build_scheduler, end_to_end, Scale, SchedKind};
+use tesserae::jobs::{Job, ModelKind};
+use tesserae::matching::HungarianEngine;
+use tesserae::profiler::Profiler;
+use tesserae::simulator::{simulate, SimConfig, SimResult};
+use tesserae::trace::{Trace, TraceParams};
+use tesserae::util::json::Json;
 
 fn scale() -> Scale {
     match std::env::var("TESSERAE_BENCH_SCALE").as_deref() {
@@ -12,6 +27,122 @@ fn scale() -> Scale {
         Ok("paper") => Scale::paper(),
         _ => Scale::standard(),
     }
+}
+
+/// Run one simulation with an explicit gap-skip setting, returning the
+/// result and the wall-clock seconds spent inside `simulate`.
+fn timed_sim(
+    kind: SchedKind,
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+    skip_idle_gaps: bool,
+) -> (SimResult, f64) {
+    let truth = Profiler::new(spec.gpu_type, seed);
+    let source: Arc<dyn ThroughputSource> =
+        Arc::new(CachedSource::new(OracleEstimator::new(truth.clone())));
+    let mut sched = build_scheduler(kind, source, Arc::new(HungarianEngine));
+    let mut cfg = SimConfig::new(spec);
+    cfg.skip_idle_gaps = skip_idle_gaps;
+    let t0 = Instant::now();
+    let r = simulate(trace, sched.as_mut(), &truth, &cfg);
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// A deliberately sparse trace: short single-GPU jobs separated by long
+/// idle gaps (`gap_rounds` 360 s rounds apart, each running ~`dur_rounds`
+/// rounds) — the workload shape where the seed simulator burned thousands
+/// of empty rounds spinning to the next arrival.
+fn sparse_trace(num_jobs: usize, gap_rounds: u64, dur_rounds: u64) -> Trace {
+    let round = 360.0;
+    let model = ModelKind::ResNet50;
+    let jobs = (0..num_jobs)
+        .map(|i| Job {
+            id: i as u64,
+            model,
+            num_gpus: 1,
+            arrival_time: (i as u64 * gap_rounds) as f64 * round + 1.0,
+            total_iters: dur_rounds as f64 * round * model.base_tput_a100() * 0.9,
+            batch_size: 64,
+        })
+        .collect();
+    Trace { jobs }
+}
+
+/// Perf trajectory: dense-trace rounds/sec at 16- and 64-node scale plus
+/// the sparse-trace gap-skipping speedup. Returns (report, json).
+fn perf_trajectory() -> (String, Json) {
+    let mut report = String::from("Simulator perf trajectory (recorded in BENCH_e2e_sim.json)\n");
+    let mut dense_entries = Vec::new();
+    let mut sparse_entries = Vec::new();
+
+    // Dense throughput: how many scheduler rounds per second the simulator
+    // sustains end-to-end.
+    let dense_cases = [(16usize, 4usize, 120usize, 80.0), (64, 8, 160, 120.0)];
+    for (nodes, gpus_per_node, jobs, rate) in dense_cases {
+        let spec = ClusterSpec::new(nodes, gpus_per_node, GpuType::A100);
+        let trace = Trace::shockwave(&TraceParams {
+            num_jobs: jobs,
+            jobs_per_hour: rate,
+            seed: 7,
+        });
+        let (r, wall) = timed_sim(SchedKind::TesseraeT, &trace, spec, 7, true);
+        let rps = r.rounds as f64 / wall.max(1e-9);
+        report.push_str(&format!(
+            "  dense {nodes}x{gpus_per_node} ({} jobs): {} rounds in {:.2}s = {:.0} rounds/s, avg JCT {:.0}s\n",
+            jobs, r.rounds, wall, rps, r.avg_jct
+        ));
+        dense_entries.push(Json::obj(vec![
+            ("nodes", Json::num(nodes as f64)),
+            ("gpus_per_node", Json::num(gpus_per_node as f64)),
+            ("jobs", Json::num(jobs as f64)),
+            ("scheduler", Json::str("tesserae-t")),
+            ("rounds", Json::num(r.rounds as f64)),
+            ("wall_s", Json::num(wall)),
+            ("rounds_per_sec", Json::num(rps)),
+            ("avg_jct_s", Json::num(r.avg_jct)),
+            ("total_migrations", Json::num(r.total_migrations as f64)),
+        ]));
+    }
+
+    // Sparse gap skipping: identical metrics, wall-clock ratio is the win.
+    let trace = sparse_trace(50, 200, 3);
+    for (name, kind) in [
+        ("tiresias", SchedKind::Tiresias),
+        ("tesserae-t", SchedKind::TesseraeT),
+    ] {
+        let spec = ClusterSpec::new(64, 8, GpuType::A100);
+        let (r_skip, wall_skip) = timed_sim(kind, &trace, spec, 7, true);
+        let (r_spin, wall_spin) = timed_sim(kind, &trace, spec, 7, false);
+        assert_eq!(r_skip.avg_jct.to_bits(), r_spin.avg_jct.to_bits());
+        assert_eq!(r_skip.total_migrations, r_spin.total_migrations);
+        let speedup = wall_spin / wall_skip.max(1e-9);
+        report.push_str(&format!(
+            "  sparse 64x8 {name}: skip {:.3}s vs spin {:.3}s = {:.1}x ({} rounds, {} busy)\n",
+            wall_skip,
+            wall_spin,
+            speedup,
+            r_skip.rounds,
+            r_skip.timings.len()
+        ));
+        sparse_entries.push(Json::obj(vec![
+            ("nodes", Json::num(64.0)),
+            ("gpus_per_node", Json::num(8.0)),
+            ("scheduler", Json::str(name)),
+            ("rounds", Json::num(r_skip.rounds as f64)),
+            ("busy_rounds", Json::num(r_skip.timings.len() as f64)),
+            ("wall_skip_s", Json::num(wall_skip)),
+            ("wall_spin_s", Json::num(wall_spin)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("e2e_sim")),
+        ("dense", Json::arr(dense_entries)),
+        ("sparse_gap_skip", Json::arr(sparse_entries)),
+    ]);
+    (report, json)
 }
 
 fn main() {
@@ -30,6 +161,13 @@ fn main() {
     println!("{}\n", end_to_end::fig17_gavel_trace(&scale));
     println!("{}\n", tesserae::experiments::compatibility_study(&scale));
     println!("simulation figures took {:.1}s", t0.elapsed().as_secs_f64());
+
+    let (report, json) = perf_trajectory();
+    println!("\n{report}");
+    match std::fs::write("BENCH_e2e_sim.json", json.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_e2e_sim.json"),
+        Err(e) => println!("could not write BENCH_e2e_sim.json: {e}"),
+    }
 
     // Real-execution measurements (need `make artifacts`).
     match end_to_end::fig3_real_migration_overhead(0.4) {

@@ -5,6 +5,13 @@
 //! policies: the no-packing allocator fills one, the packing policy adds
 //! second tenants, and the migration policy relabels one plan's GPUs to
 //! align with the previous round's plan.
+//!
+//! The plan is *dual-indexed*: alongside the per-GPU `slots` it maintains a
+//! job → sorted-GPU-set index incrementally through every mutation, so the
+//! hot-path queries (`gpus_of`, `jobs`, `job_gpu_map`, `migrations_from`)
+//! are O(the job's GPUs) or O(active jobs) instead of O(total GPUs). The
+//! simulator, the placement policies and the coordinator all lean on this;
+//! [`PlacementPlan::validate`] cross-checks that both views agree.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -14,16 +21,28 @@ use crate::jobs::JobId;
 /// Maximum jobs sharing one GPU (the paper packs at most two, §5).
 pub const MAX_JOBS_PER_GPU: usize = 2;
 
-/// A round's placement: `slots[g]` = jobs on global GPU `g`.
-#[derive(Debug, Clone, PartialEq)]
+/// A round's placement: `slots[g]` = jobs on global GPU `g`, plus the
+/// incrementally maintained reverse index job → sorted GPUs.
+#[derive(Debug, Clone)]
 pub struct PlacementPlan {
     slots: Vec<Vec<JobId>>,
+    index: BTreeMap<JobId, Vec<usize>>,
+}
+
+impl PartialEq for PlacementPlan {
+    /// Two plans are equal when their slot views agree (the index is a
+    /// function of the slots' job sets, so comparing slots is sufficient
+    /// and keeps equality identical to the pre-index behaviour).
+    fn eq(&self, other: &PlacementPlan) -> bool {
+        self.slots == other.slots
+    }
 }
 
 impl PlacementPlan {
     pub fn new(total_gpus: usize) -> PlacementPlan {
         PlacementPlan {
             slots: vec![Vec::new(); total_gpus],
+            index: BTreeMap::new(),
         }
     }
 
@@ -46,45 +65,43 @@ impl PlacementPlan {
             );
             assert!(!self.slots[g].contains(&job), "job {job} already on gpu {g}");
             self.slots[g].push(job);
+            let held = self.index.entry(job).or_default();
+            let pos = held
+                .binary_search(&g)
+                .expect_err("index/slot divergence: gpu already in job's set");
+            held.insert(pos, g);
         }
     }
 
-    /// Remove a job from every GPU it occupies. Returns the GPUs it held.
+    /// Remove a job from every GPU it occupies. Returns the GPUs it held
+    /// (sorted). O(the job's GPUs) via the index.
     pub fn remove(&mut self, job: JobId) -> Vec<usize> {
-        let mut freed = Vec::new();
-        for (g, slot) in self.slots.iter_mut().enumerate() {
-            if let Some(pos) = slot.iter().position(|&j| j == job) {
-                slot.remove(pos);
-                freed.push(g);
-            }
+        let freed = self.index.remove(&job).unwrap_or_default();
+        for &g in &freed {
+            let slot = &mut self.slots[g];
+            let pos = slot
+                .iter()
+                .position(|&j| j == job)
+                .expect("index/slot divergence: job missing from slot");
+            slot.remove(pos);
         }
         freed
     }
 
-    /// The set of GPUs a job occupies (sorted).
-    pub fn gpus_of(&self, job: JobId) -> Vec<usize> {
-        self.slots
-            .iter()
-            .enumerate()
-            .filter(|(_, slot)| slot.contains(&job))
-            .map(|(g, _)| g)
-            .collect()
+    /// The set of GPUs a job occupies (sorted). O(1) lookup into the index.
+    pub fn gpus_of(&self, job: JobId) -> &[usize] {
+        self.index.get(&job).map(Vec::as_slice).unwrap_or(&[])
     }
 
-    /// All jobs present in the plan.
+    /// All jobs present in the plan. O(active jobs).
     pub fn jobs(&self) -> BTreeSet<JobId> {
-        self.slots.iter().flatten().copied().collect()
+        self.index.keys().copied().collect()
     }
 
-    /// Map job -> sorted GPU set, for the whole plan.
-    pub fn job_gpu_map(&self) -> BTreeMap<JobId, Vec<usize>> {
-        let mut m: BTreeMap<JobId, Vec<usize>> = BTreeMap::new();
-        for (g, slot) in self.slots.iter().enumerate() {
-            for &j in slot {
-                m.entry(j).or_default().push(g);
-            }
-        }
-        m
+    /// Map job -> sorted GPU set, for the whole plan. This *is* the live
+    /// index — O(1), no rebuild.
+    pub fn job_gpu_map(&self) -> &BTreeMap<JobId, Vec<usize>> {
+        &self.index
     }
 
     /// GPUs with fewer than `MAX_JOBS_PER_GPU` tenants.
@@ -103,13 +120,22 @@ impl PlacementPlan {
     }
 
     /// Remove a set of jobs wholesale (e.g. jobs that finished or were
-    /// preempted), returning how many slots were freed.
+    /// preempted), returning how many slots were freed. O(Σ removed jobs'
+    /// GPUs) via the index.
     pub fn remove_jobs(&mut self, jobs: &BTreeSet<JobId>) -> usize {
         let mut freed = 0;
-        for slot in &mut self.slots {
-            let before = slot.len();
-            slot.retain(|j| !jobs.contains(j));
-            freed += before - slot.len();
+        for &job in jobs {
+            if let Some(gpus) = self.index.remove(&job) {
+                for &g in &gpus {
+                    let slot = &mut self.slots[g];
+                    let pos = slot
+                        .iter()
+                        .position(|&j| j == job)
+                        .expect("index/slot divergence: job missing from slot");
+                    slot.remove(pos);
+                    freed += 1;
+                }
+            }
         }
         freed
     }
@@ -127,6 +153,12 @@ impl PlacementPlan {
             seen[tgt] = true;
             out.slots[tgt] = self.slots[g].clone();
         }
+        // The index moves with the mapping: O(jobs × their GPUs · log).
+        for (&job, gpus) in &self.index {
+            let mut moved: Vec<usize> = gpus.iter().map(|&g| new_gpu_of[g]).collect();
+            moved.sort_unstable();
+            out.index.insert(job, moved);
+        }
         out
     }
 
@@ -139,7 +171,7 @@ impl PlacementPlan {
             return true;
         }
         let mut per_node: BTreeMap<usize, usize> = BTreeMap::new();
-        for &g in &gpus {
+        for &g in gpus {
             *per_node.entry(spec.node_of(g)).or_default() += 1;
         }
         let min_nodes = gpus.len().div_ceil(spec.gpus_per_node);
@@ -147,17 +179,23 @@ impl PlacementPlan {
     }
 
     /// Count of jobs whose GPU sets differ between `prev` and `self`,
-    /// restricted to jobs present in both (Definition 1).
+    /// restricted to jobs present in both (Definition 1). O(active jobs ×
+    /// their GPUs) via the two indexes.
     pub fn migrations_from(&self, prev: &PlacementPlan) -> usize {
-        let prev_map = prev.job_gpu_map();
-        let cur_map = self.job_gpu_map();
-        cur_map
-            .iter()
-            .filter(|(job, gpus)| prev_map.get(*job).map(|g| g != *gpus).unwrap_or(false))
-            .count()
+        let mut count = 0;
+        for (job, gpus) in &self.index {
+            if let Some(prev_gpus) = prev.index.get(job) {
+                if prev_gpus != gpus {
+                    count += 1;
+                }
+            }
+        }
+        count
     }
 
-    /// Sanity-check plan invariants (≤2 tenants, no duplicate tenancy).
+    /// Sanity-check plan invariants (≤2 tenants, no duplicate tenancy) and
+    /// cross-check that the incremental job→GPU index agrees with a
+    /// from-scratch rebuild of the slots view.
     pub fn validate(&self) -> Result<(), String> {
         for (g, slot) in self.slots.iter().enumerate() {
             if slot.len() > MAX_JOBS_PER_GPU {
@@ -167,6 +205,18 @@ impl PlacementPlan {
             if set.len() != slot.len() {
                 return Err(format!("gpu {g} lists a job twice"));
             }
+        }
+        let mut rebuilt: BTreeMap<JobId, Vec<usize>> = BTreeMap::new();
+        for (g, slot) in self.slots.iter().enumerate() {
+            for &j in slot {
+                rebuilt.entry(j).or_default().push(g);
+            }
+        }
+        if rebuilt != self.index {
+            return Err(format!(
+                "job->GPU index diverged from slots: index {:?} vs rebuilt {:?}",
+                self.index, rebuilt
+            ));
         }
         Ok(())
     }
@@ -217,6 +267,7 @@ mod tests {
         // logical 3 (job 2's second gpu) -> 1.
         let perm = vec![3, 0, 2, 1];
         let aligned = next.relabeled(&perm);
+        aligned.validate().unwrap();
         let mut prev = PlacementPlan::new(4);
         prev.place(1, &[0]);
         prev.place(2, &[1, 2]);
@@ -263,6 +314,7 @@ mod tests {
         let gone: BTreeSet<JobId> = [1, 3].into_iter().collect();
         assert_eq!(p.remove_jobs(&gone), 3);
         assert_eq!(p.jobs().into_iter().collect::<Vec<_>>(), vec![2]);
+        p.validate().unwrap();
     }
 
     #[test]
@@ -271,5 +323,31 @@ mod tests {
         p.place(7, &[3, 0]);
         let m = p.job_gpu_map();
         assert_eq!(m[&7], vec![0, 3]);
+    }
+
+    #[test]
+    fn index_survives_unsorted_placement_and_partial_removal() {
+        let mut p = PlacementPlan::new(6);
+        p.place(1, &[5, 2, 0]);
+        assert_eq!(p.gpus_of(1), vec![0, 2, 5]);
+        p.place(2, &[2, 5]);
+        p.validate().unwrap();
+        assert_eq!(p.remove(1), vec![0, 2, 5]);
+        assert_eq!(p.gpus_of(2), vec![2, 5]);
+        p.validate().unwrap();
+        // Removing a job not in the plan is a no-op.
+        assert_eq!(p.remove(99), Vec::<usize>::new());
+        assert_eq!(p.jobs().len(), 1);
+    }
+
+    #[test]
+    fn equality_is_slot_equality() {
+        let mut a = PlacementPlan::new(2);
+        a.place(1, &[0]);
+        let mut b = PlacementPlan::new(2);
+        b.place(1, &[0]);
+        assert_eq!(a, b);
+        b.place(2, &[1]);
+        assert_ne!(a, b);
     }
 }

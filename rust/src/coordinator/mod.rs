@@ -337,7 +337,7 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
                 &PackingConfig::default(),
                 &engine,
             ) {
-                let gpus = plan.gpus_of(p.placed);
+                let gpus = plan.gpus_of(p.placed).to_vec();
                 plan.place(p.pending, &gpus);
             }
         }
@@ -356,7 +356,7 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
                 states.get_mut(&job_id).unwrap().migrations += 1;
                 // Fetch replica states from the old workers and average.
                 let mut replicas = Vec::new();
-                for &g in &old_gpus {
+                for &g in old_gpus {
                     let (tx, rx) = channel();
                     workers[g]
                         .tx
@@ -385,7 +385,7 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
             if plan.gpus_of(job_id).is_empty() {
                 let old_gpus = prev_plan.gpus_of(job_id);
                 let mut replicas = Vec::new();
-                for &g in &old_gpus {
+                for &g in old_gpus {
                     let (tx, rx) = channel();
                     workers[g]
                         .tx
@@ -451,7 +451,7 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
             if s.finish_round.is_none() && s.steps >= s.spec.total_steps {
                 s.finish_round = Some(round + 1);
                 makespan_rounds = makespan_rounds.max(round + 1);
-                for &g in &plan.gpus_of(job_id) {
+                for &g in plan.gpus_of(job_id) {
                     workers[g].tx.send(WorkerMsg::Evict { job: job_id }).ok();
                 }
             }
@@ -466,7 +466,7 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
             let finished = states[&job_id].finish_round.is_some();
             if gpus.len() > 1 && !finished {
                 let mut replicas = Vec::new();
-                for &g in &gpus {
+                for &g in gpus {
                     let (tx, rx) = channel();
                     workers[g]
                         .tx
@@ -483,7 +483,7 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
                 }
                 if !replicas.is_empty() {
                     let avg = ParamState::average(&replicas);
-                    for &g in &gpus {
+                    for &g in gpus {
                         let (tx, rx) = channel();
                         workers[g]
                             .tx

@@ -13,7 +13,7 @@ use crate::jobs::{ModelKind, ParallelismStrategy};
 use crate::profiler::Profiler;
 use crate::util::benchutil::Table;
 
-use super::{run_sim, run_sim_with_source, Scale, SchedKind};
+use super::{run_sim_scenarios, run_sim_with_source, run_sims_parallel, Scale, SchedKind};
 
 /// Fig. 8: normalized packed throughput of GPT3-3B on 8 GPUs under
 /// different parallelism strategies and partners (incl. the OOM cell).
@@ -85,12 +85,15 @@ pub fn fig15_strategy_impact(scale: &Scale) -> String {
         .map(|j| j.id)
         .collect();
     let mut llm_jcts = Vec::new();
-    for kind in kinds {
-        let r = run_sim(kind, &trace, spec, scale.seed, 0.0);
+    for (kind, r) in kinds
+        .iter()
+        .copied()
+        .zip(run_sims_parallel(&kinds, &trace, spec, scale.seed))
+    {
         let llm: Vec<f64> = r
             .outcomes
             .iter()
-            .filter(|(id, _)| llm_ids.contains(id))
+            .filter(|(id, _)| llm_ids.contains(*id))
             .map(|(_, o)| o.jct)
             .collect();
         let avg_llm = crate::util::stats::mean(&llm);
@@ -118,14 +121,23 @@ pub fn fig15_strategy_impact(scale: &Scale) -> String {
 pub fn fig16_noise_sensitivity(scale: &Scale, noise_levels: &[f64]) -> String {
     let trace = scale.shockwave_trace();
     let spec = scale.spec(GpuType::A100);
-    let clean = run_sim(SchedKind::TesseraeT, &trace, spec, scale.seed, 0.0);
-    let mut t = Table::new(&["noise n_p", "avg JCT (s)", "makespan (s)", "JCT vs clean"]);
+    // One scenario per noise level (the clean run is always scenario 0),
+    // swept across threads.
+    let mut scenarios: Vec<(SchedKind, f64)> = vec![(SchedKind::TesseraeT, 0.0)];
+    let mut level_idx: Vec<usize> = Vec::new();
     for &np in noise_levels {
-        let r = if np == 0.0 {
-            clean.clone()
+        if np == 0.0 {
+            level_idx.push(0);
         } else {
-            run_sim(SchedKind::TesseraeT, &trace, spec, scale.seed, np)
-        };
+            level_idx.push(scenarios.len());
+            scenarios.push((SchedKind::TesseraeT, np));
+        }
+    }
+    let results = run_sim_scenarios(&scenarios, &trace, spec, scale.seed);
+    let clean = &results[0];
+    let mut t = Table::new(&["noise n_p", "avg JCT (s)", "makespan (s)", "JCT vs clean"]);
+    for (&np, &idx) in noise_levels.iter().zip(&level_idx) {
+        let r = &results[idx];
         t.row(&[
             format!("{:.0}%", np * 100.0),
             format!("{:.0}", r.avg_jct),
@@ -169,21 +181,41 @@ pub fn fig18_estimators(scale: &Scale) -> String {
         ),
     ];
 
+    // One thread per estimator: each scenario owns its source (Arc) and
+    // runs against the shared immutable trace.
+    let seed = scale.seed;
+    let trace_ref = &trace;
+    let results: Vec<(String, usize, crate::simulator::SimResult)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = sources
+                .into_iter()
+                .map(|(name, source)| {
+                    scope.spawn(move || {
+                        let samples = source.profiling_samples();
+                        let r = run_sim_with_source(
+                            SchedKind::TesseraeT,
+                            trace_ref,
+                            spec,
+                            seed,
+                            source,
+                        );
+                        (name, samples, r)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("estimator thread panicked"))
+                .collect()
+        });
+
     let mut t = Table::new(&[
         "estimator",
         "profiling samples",
         "avg JCT (s)",
         "makespan (s)",
     ]);
-    for (name, source) in sources {
-        let samples = source.profiling_samples();
-        let r = run_sim_with_source(
-            SchedKind::TesseraeT,
-            &trace,
-            spec,
-            scale.seed,
-            source,
-        );
+    for (name, samples, r) in results {
         t.row(&[
             name,
             format!("{samples}"),

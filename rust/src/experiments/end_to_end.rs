@@ -7,7 +7,7 @@ use crate::simulator::SimResult;
 use crate::util::benchutil::Table;
 use crate::util::stats;
 
-use super::{run_sim, Scale, SchedKind};
+use super::{run_sims_parallel, Scale, SchedKind};
 
 fn ratio(base: f64, ours: f64) -> String {
     if ours > 0.0 {
@@ -23,8 +23,14 @@ fn ratio(base: f64, ours: f64) -> String {
 pub fn fig9_tesserae_vs_tiresias(scale: &Scale) -> (String, SimResult, SimResult) {
     let trace = scale.shockwave_trace();
     let spec = scale.spec(GpuType::A100);
-    let ours = run_sim(SchedKind::TesseraeT, &trace, spec, scale.seed, 0.0);
-    let base = run_sim(SchedKind::Tiresias, &trace, spec, scale.seed, 0.0);
+    let mut results = run_sims_parallel(
+        &[SchedKind::TesseraeT, SchedKind::Tiresias],
+        &trace,
+        spec,
+        scale.seed,
+    );
+    let base = results.pop().unwrap();
+    let ours = results.pop().unwrap();
 
     let mut t = Table::new(&[
         "scheduler",
@@ -44,7 +50,8 @@ pub fn fig9_tesserae_vs_tiresias(scale: &Scale) -> (String, SimResult, SimResult
             ratio(base.makespan, r.makespan),
         ]);
     }
-    let mut out = String::from("Fig. 9 — Tesserae-T vs Tiresias (paper: JCT 1.62x, makespan 1.15x)\n");
+    let mut out =
+        String::from("Fig. 9 — Tesserae-T vs Tiresias (paper: JCT 1.62x, makespan 1.15x)\n");
     out.push_str(&t.render());
     out.push_str("\nJCT CDF (value at percentile):\n");
     out.push_str(&cdf_rows(&[("tesserae-t", &ours), ("tiresias", &base)]));
@@ -73,15 +80,19 @@ pub fn cdf_rows(results: &[(&str, &SimResult)]) -> String {
 pub fn fig11_vs_gavel(scale: &Scale) -> String {
     let trace = scale.shockwave_trace();
     let spec = scale.spec(GpuType::A100);
-    let ours = run_sim(SchedKind::TesseraeT, &trace, spec, scale.seed, 0.0);
-    let basic = run_sim(
-        SchedKind::TesseraeTBasicMigration,
+    let mut results = run_sims_parallel(
+        &[
+            SchedKind::TesseraeT,
+            SchedKind::TesseraeTBasicMigration,
+            SchedKind::Gavel,
+        ],
         &trace,
         spec,
         scale.seed,
-        0.0,
     );
-    let gavel = run_sim(SchedKind::Gavel, &trace, spec, scale.seed, 0.0);
+    let gavel = results.pop().unwrap();
+    let basic = results.pop().unwrap();
+    let ours = results.pop().unwrap();
 
     let mut t = Table::new(&[
         "scheduler",
@@ -122,8 +133,14 @@ pub fn fig12_vs_tiresias_single(scale: &Scale) -> String {
     );
     for gpu in [GpuType::A100, GpuType::V100] {
         let spec = scale.spec(gpu);
-        let ours = run_sim(SchedKind::TesseraeT, &trace, spec, scale.seed, 0.0);
-        let single = run_sim(SchedKind::TiresiasSingle, &trace, spec, scale.seed, 0.0);
+        let mut results = run_sims_parallel(
+            &[SchedKind::TesseraeT, SchedKind::TiresiasSingle],
+            &trace,
+            spec,
+            scale.seed,
+        );
+        let single = results.pop().unwrap();
+        let ours = results.pop().unwrap();
         let mut t = Table::new(&["scheduler", "avg JCT (s)", "makespan (s)", "JCT speedup"]);
         for r in [&ours, &single] {
             t.row(&[
@@ -143,8 +160,14 @@ pub fn fig12_vs_tiresias_single(scale: &Scale) -> String {
 pub fn fig13_ftf(scale: &Scale) -> String {
     let trace = scale.shockwave_trace();
     let spec = scale.spec(GpuType::A100);
-    let ours = run_sim(SchedKind::TesseraeFtf, &trace, spec, scale.seed, 0.0);
-    let gavel = run_sim(SchedKind::GavelFtf, &trace, spec, scale.seed, 0.0);
+    let mut results = run_sims_parallel(
+        &[SchedKind::TesseraeFtf, SchedKind::GavelFtf],
+        &trace,
+        spec,
+        scale.seed,
+    );
+    let gavel = results.pop().unwrap();
+    let ours = results.pop().unwrap();
 
     let mut t = Table::new(&["scheduler", "p50 FTF", "p90 FTF", "p99 FTF", "worst FTF"]);
     for r in [&ours, &gavel] {
@@ -175,10 +198,7 @@ pub fn fig17_gavel_trace(scale: &Scale) -> String {
         SchedKind::TiresiasSingle,
         SchedKind::Gavel,
     ];
-    let results: Vec<SimResult> = kinds
-        .iter()
-        .map(|&k| run_sim(k, &trace, spec, scale.seed, 0.0))
-        .collect();
+    let results: Vec<SimResult> = run_sims_parallel(&kinds, &trace, spec, scale.seed);
     let ours = &results[0];
     let mut t = Table::new(&["scheduler", "avg JCT (s)", "makespan (s)", "Tesserae speedup"]);
     for r in &results {
@@ -337,6 +357,7 @@ pub fn table2_fidelity(reps: usize, round_wall_s: f64) -> anyhow::Result<String>
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experiments::run_sim;
 
     #[test]
     fn fig9_shape_holds_at_quick_scale() {

@@ -153,13 +153,16 @@ pub fn compatibility_study(scale: &Scale) -> String {
         "makespan (s)",
         "migrations",
     ]);
-    for kind in [
+    let kinds = [
         SchedKind::TesseraeT,
         SchedKind::TesseraeFtf,
         SchedKind::TesseraeFifo,
         SchedKind::TesseraeSrtf,
-    ] {
-        let r = run_sim(kind, &trace, spec, scale.seed, 0.0);
+    ];
+    for (kind, r) in kinds
+        .iter()
+        .zip(run_sims_parallel(&kinds, &trace, spec, scale.seed))
+    {
         t.row(&[
             kind.label(),
             format!("{:.0}", r.avg_jct),
@@ -257,6 +260,41 @@ pub fn run_sim(
     )
 }
 
+/// Run several (scheduler, decision-noise) scenarios over the same trace on
+/// one thread each (`std::thread::scope` — the crate is std-only). Every
+/// scenario builds its own profiler/estimator/scheduler stack from
+/// `(spec, seed)` inside its thread, so nothing mutable is shared and the
+/// results are bit-identical to sequential [`run_sim`] calls, in input
+/// order (asserted by `parallel_sweep_matches_sequential`).
+pub fn run_sim_scenarios(
+    scenarios: &[(SchedKind, f64)],
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+) -> Vec<SimResult> {
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = scenarios
+            .iter()
+            .map(|&(kind, noise)| scope.spawn(move || run_sim(kind, trace, spec, seed, noise)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scenario thread panicked"))
+            .collect()
+    })
+}
+
+/// [`run_sim_scenarios`] for the common noise-free SchedKind sweep.
+pub fn run_sims_parallel(
+    kinds: &[SchedKind],
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+) -> Vec<SimResult> {
+    let scenarios: Vec<(SchedKind, f64)> = kinds.iter().map(|&k| (k, 0.0)).collect();
+    run_sim_scenarios(&scenarios, trace, spec, seed)
+}
+
 /// Like [`run_sim`] but with an explicit matching engine (e.g. the AOT
 /// JAX/Pallas auction) — the engine-ablation path.
 pub fn run_sim_engine(
@@ -327,6 +365,37 @@ mod tests {
             let r = run_sim(kind, &trace, scale.spec(GpuType::A100), 3, 0.0);
             assert_eq!(r.unfinished, 0, "{} left jobs unfinished", kind.label());
             assert!(r.avg_jct > 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential() {
+        // Per-scenario seeding: the threaded sweep must reproduce the
+        // sequential results bit-for-bit, in input order.
+        let scale = Scale {
+            jobs: 15,
+            nodes: 2,
+            gpus_per_node: 2,
+            jobs_per_hour: 240.0,
+            seed: 5,
+        };
+        let trace = scale.shockwave_trace();
+        let spec = scale.spec(GpuType::A100);
+        let scenarios = [
+            (SchedKind::TesseraeT, 0.0),
+            (SchedKind::Tiresias, 0.0),
+            (SchedKind::Gavel, 0.0),
+            (SchedKind::TesseraeT, 0.5),
+        ];
+        let par = run_sim_scenarios(&scenarios, &trace, spec, scale.seed);
+        assert_eq!(par.len(), scenarios.len());
+        for ((kind, noise), r) in scenarios.iter().zip(&par) {
+            let s = run_sim(*kind, &trace, spec, scale.seed, *noise);
+            assert_eq!(r.scheduler, s.scheduler);
+            assert_eq!(r.avg_jct.to_bits(), s.avg_jct.to_bits());
+            assert_eq!(r.makespan.to_bits(), s.makespan.to_bits());
+            assert_eq!(r.total_migrations, s.total_migrations);
+            assert_eq!(r.rounds, s.rounds);
         }
     }
 }

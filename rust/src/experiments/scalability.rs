@@ -85,6 +85,11 @@ pub fn measure_decision(
 /// 256-GPU cluster. `budget` caps each scheduler's largest measurement —
 /// points that would exceed it are skipped with a note (this *is* the
 /// result: the LP baselines blow through the budget first).
+///
+/// Deliberately sequential, unlike the metric-producing trace sweeps
+/// (`run_sim_scenarios`): the wall-clock decision time *is* this figure's
+/// output, and running the columns concurrently would fold cross-column
+/// CPU contention (POP alone spawns 8 partition threads) into the numbers.
 pub fn fig2_decision_time(job_counts: &[usize], budget: Duration) -> String {
     let spec = ClusterSpec::scale_256();
     let kinds = [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(8)];

@@ -83,6 +83,9 @@ pub fn allocate_without_packing(
         }
     }
 
+    // The allocator only ever appends via `place`, which keeps the plan's
+    // job→GPU index in lockstep with the slots; cross-check in debug builds.
+    debug_assert!(plan.validate().is_ok());
     Allocation {
         plan,
         placed,

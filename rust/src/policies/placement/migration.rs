@@ -44,13 +44,12 @@ pub struct MigrationOutcome {
 
 /// Algorithm 3: optimal GPU matching between one previous-round node and
 /// one new-round node. Returns (cost, assignment prev_gpu -> next_gpu).
+/// Job sizes come straight from the plans' live job→GPU indexes.
 fn node_level_matching(
     prev: &PlacementPlan,
     next: &PlacementPlan,
     prev_gpus: &[usize],
     next_gpus: &[usize],
-    gpus_of_prev: &BTreeMap<JobId, u32>,
-    gpus_of_next: &BTreeMap<JobId, u32>,
     engine: &dyn MatchingEngine,
 ) -> (f64, AssignmentResult) {
     let k = prev_gpus.len();
@@ -60,7 +59,12 @@ fn node_level_matching(
             c.set(
                 a,
                 b,
-                gpu_pair_cost(prev.jobs_on(u), next.jobs_on(v), gpus_of_prev, gpus_of_next),
+                gpu_pair_cost(
+                    prev.jobs_on(u),
+                    next.jobs_on(v),
+                    prev.job_gpu_map(),
+                    next.job_gpu_map(),
+                ),
             );
         }
     }
@@ -70,20 +74,21 @@ fn node_level_matching(
 
 /// Per-GPU migration cost between GPU `u`'s job set and GPU `v`'s job set
 /// (Algorithm 3 lines 4–7): each job in the symmetric difference costs
-/// 1/(2·num_gpus(job)). A job's amortization divisor is its own GPU count;
-/// the two rounds agree on common jobs, so consult either map.
+/// 1/(2·num_gpus(job)). A job's amortization divisor is its own GPU count,
+/// read from the plans' job→GPU indexes (the two rounds agree on common
+/// jobs, so consult either).
 fn gpu_pair_cost(
     jobs_u: &[JobId],
     jobs_v: &[JobId],
-    prev_map: &BTreeMap<JobId, u32>,
-    next_map: &BTreeMap<JobId, u32>,
+    prev_map: &BTreeMap<JobId, Vec<usize>>,
+    next_map: &BTreeMap<JobId, Vec<usize>>,
 ) -> f64 {
     let mut cost = 0.0;
     let lookup = |j: JobId| {
         prev_map
             .get(&j)
             .or_else(|| next_map.get(&j))
-            .copied()
+            .map(|gpus| gpus.len())
             .unwrap_or(1)
             .max(1)
     };
@@ -149,17 +154,6 @@ fn tesserae_migrate(
         next.jobs().difference(&common).copied().collect();
     next_f.remove_jobs(&gone_next);
 
-    let prev_sizes: BTreeMap<JobId, u32> = prev_f
-        .job_gpu_map()
-        .into_iter()
-        .map(|(j, g)| (j, g.len() as u32))
-        .collect();
-    let next_sizes: BTreeMap<JobId, u32> = next_f
-        .job_gpu_map()
-        .into_iter()
-        .map(|(j, g)| (j, g.len() as u32))
-        .collect();
-
     let nodes = spec.num_nodes;
     // Lines 3-5: per node pair, Algorithm 3.
     let mut node_cost = Matrix::zeros(nodes, nodes);
@@ -168,15 +162,8 @@ fn tesserae_migrate(
         let prev_gpus: Vec<usize> = spec.gpus_of_node(k).collect();
         for l in 0..nodes {
             let next_gpus: Vec<usize> = spec.gpus_of_node(l).collect();
-            let (c, m) = node_level_matching(
-                &prev_f,
-                &next_f,
-                &prev_gpus,
-                &next_gpus,
-                &prev_sizes,
-                &next_sizes,
-                engine,
-            );
+            let (c, m) =
+                node_level_matching(&prev_f, &next_f, &prev_gpus, &next_gpus, engine);
             node_cost.set(k, l, c);
             node_plans[k][l] = Some(m);
         }
@@ -219,17 +206,6 @@ fn flat_migrate(
     let mut next_f = next.clone();
     next_f.remove_jobs(&next.jobs().difference(&common).copied().collect());
 
-    let prev_sizes: BTreeMap<JobId, u32> = prev_f
-        .job_gpu_map()
-        .into_iter()
-        .map(|(j, g)| (j, g.len() as u32))
-        .collect();
-    let next_sizes: BTreeMap<JobId, u32> = next_f
-        .job_gpu_map()
-        .into_iter()
-        .map(|(j, g)| (j, g.len() as u32))
-        .collect();
-
     let n = prev.num_gpus();
     let mut c = Matrix::zeros(n, n);
     for u in 0..n {
@@ -237,7 +213,12 @@ fn flat_migrate(
             c.set(
                 u,
                 v,
-                gpu_pair_cost(prev_f.jobs_on(u), next_f.jobs_on(v), &prev_sizes, &next_sizes),
+                gpu_pair_cost(
+                    prev_f.jobs_on(u),
+                    next_f.jobs_on(v),
+                    prev_f.job_gpu_map(),
+                    next_f.job_gpu_map(),
+                ),
             );
         }
     }

@@ -78,18 +78,22 @@ fn candidates(info: &JobInfo, mode: StrategyMode) -> Vec<ParallelismStrategy> {
 }
 
 /// Best (weight, strategy_a, strategy_b) over the candidate cross product;
-/// `None` if every combination OOMs.
+/// `None` if every combination OOMs. Candidate strategy sets are computed
+/// once per job by the caller (not per pair) — with n placed and m pending
+/// jobs the edge loop evaluates n·m pairs, and re-enumerating pipeline
+/// splits inside it dominated packing decision time at paper scale.
 fn best_edge(
     a: &JobInfo,
     b: &JobInfo,
+    a_cands: &[ParallelismStrategy],
+    b_cands: &[ParallelismStrategy],
     source: &dyn ThroughputSource,
-    mode: StrategyMode,
 ) -> Option<(f64, ParallelismStrategy, ParallelismStrategy)> {
     let n = a.num_gpus;
     let mut best: Option<(f64, ParallelismStrategy, ParallelismStrategy)> = None;
-    for sa in candidates(a, mode) {
-        for sb in candidates(b, mode) {
-            if let Some((wa, wb)) = source.normalized_pair((a.model, &sa), (b.model, &sb), n) {
+    for sa in a_cands {
+        for sb in b_cands {
+            if let Some((wa, wb)) = source.normalized_pair((a.model, sa), (b.model, sb), n) {
                 let w = wa + wb;
                 if best.as_ref().map(|(bw, _, _)| w > *bw).unwrap_or(true) {
                     best = Some((w, sa.clone(), sb.clone()));
@@ -136,13 +140,26 @@ pub fn pack(
         if pl_idx.is_empty() || pe_idx.is_empty() {
             continue;
         }
+        // Strategy candidates once per job, not once per edge.
+        let pl_cands: Vec<Vec<ParallelismStrategy>> = pl_idx
+            .iter()
+            .map(|&i| candidates(placed[i], cfg.strategy_mode))
+            .collect();
+        let pe_cands: Vec<Vec<ParallelismStrategy>> = pe_idx
+            .iter()
+            .map(|&j| candidates(pending[j], cfg.strategy_mode))
+            .collect();
         let mut edges: Vec<Edge> = Vec::new();
         let mut meta: Vec<(usize, usize, ParallelismStrategy, ParallelismStrategy)> = Vec::new();
         for (gi, &i) in pl_idx.iter().enumerate() {
             for (gj, &j) in pe_idx.iter().enumerate() {
-                if let Some((w, sa, sb)) =
-                    best_edge(placed[i], pending[j], source, cfg.strategy_mode)
-                {
+                if let Some((w, sa, sb)) = best_edge(
+                    placed[i],
+                    pending[j],
+                    &pl_cands[gi],
+                    &pe_cands[gj],
+                    source,
+                ) {
                     // Packing only helps if the combined throughput beats
                     // the configured threshold (default 1.0: running the
                     // placed job alone).

@@ -211,8 +211,8 @@ impl Scheduler for GavelScheduler {
             } else {
                 continue;
             };
-            let gpus = plan.gpus_of(host.id);
-            if gpus.is_empty() || plan.gpus_of(guest.id).len() > 0 {
+            let gpus = plan.gpus_of(host.id).to_vec();
+            if gpus.is_empty() || !plan.gpus_of(guest.id).is_empty() {
                 continue;
             }
             if gpus.iter().any(|&g| plan.free_capacity(g) == 0) {

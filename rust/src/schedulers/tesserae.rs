@@ -147,7 +147,7 @@ impl Scheduler for TesseraeScheduler {
                 self.engine.as_ref(),
             );
             for p in pairs {
-                let gpus = plan.gpus_of(p.placed);
+                let gpus = plan.gpus_of(p.placed).to_vec();
                 plan.place(p.pending, &gpus);
                 strategies.insert(p.placed, p.placed_strategy.clone());
                 strategies.insert(p.pending, p.pending_strategy.clone());
@@ -204,7 +204,9 @@ mod tests {
         }
     }
 
-    fn make(sched: fn(Arc<dyn ThroughputSource>, Arc<dyn MatchingEngine>) -> TesseraeScheduler) -> TesseraeScheduler {
+    fn make(
+        sched: fn(Arc<dyn ThroughputSource>, Arc<dyn MatchingEngine>) -> TesseraeScheduler,
+    ) -> TesseraeScheduler {
         let source: Arc<dyn ThroughputSource> =
             Arc::new(OracleEstimator::new(Profiler::new(GpuType::A100, 42)));
         sched(source, Arc::new(HungarianEngine))

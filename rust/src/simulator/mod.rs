@@ -9,6 +9,17 @@
 //! Jobs keep their GPUs until the end of the round in which they finish
 //! (preemption only happens at round boundaries, §5), but their JCT is the
 //! instant their final iteration completes.
+//!
+//! Idle gaps — stretches with no active jobs — are skipped directly to the
+//! round admitting the next arrival instead of spinning one empty round per
+//! iteration; on sparse traces at large cluster scale this removes
+//! thousands of no-op rounds per run. `SimConfig::skip_idle_gaps` can
+//! disable the skip to reproduce the spin behaviour; metrics are identical
+//! either way (asserted by `gap_skipping_preserves_metrics`).
+//!
+//! `total_migrations` is derived from plan diffs (Definition 1) as the
+//! single source of truth; the scheduler's self-reported count is
+//! cross-checked against it in debug builds.
 
 use std::collections::BTreeMap;
 
@@ -33,6 +44,10 @@ pub struct SimConfig {
     pub startup_overhead_s: f64,
     /// Hard stop (rounds) as a runaway guard.
     pub max_rounds: u64,
+    /// Jump idle gaps straight to the next arrival's round instead of
+    /// spinning one empty round per loop iteration. Metrics are identical
+    /// with the flag on or off; `false` exists so tests can prove that.
+    pub skip_idle_gaps: bool,
 }
 
 impl SimConfig {
@@ -43,6 +58,7 @@ impl SimConfig {
             migration_overhead_s: 40.0,
             startup_overhead_s: 10.0,
             max_rounds: 200_000,
+            skip_idle_gaps: true,
         }
     }
 }
@@ -66,7 +82,7 @@ pub struct SimResult {
     pub makespan: f64,
     pub total_migrations: usize,
     pub rounds: u64,
-    /// Per-round decision-time breakdown.
+    /// Per-round decision-time breakdown (busy rounds only).
     pub timings: Vec<DecisionTimings>,
     /// Jobs that never completed within `max_rounds` (should be 0).
     pub unfinished: usize,
@@ -101,6 +117,21 @@ struct JobState {
     best_iso: f64,
 }
 
+/// Smallest round index `k > round` whose start time admits an arrival at
+/// `next_arrival` (i.e. `k * round_duration >= next_arrival`). Computed by
+/// division, then corrected so the result is bit-identical to spinning one
+/// round at a time regardless of floating-point rounding.
+fn next_admitting_round(round: u64, next_arrival: f64, round_duration: f64) -> u64 {
+    let mut target = ((next_arrival / round_duration).ceil() as u64).max(round + 1);
+    while target > round + 1 && (target - 1) as f64 * round_duration >= next_arrival {
+        target -= 1;
+    }
+    while (target as f64) * round_duration < next_arrival {
+        target += 1;
+    }
+    target
+}
+
 /// Run a trace under a scheduler. `truth` is the ground-truth profiler used
 /// to advance jobs; the scheduler sees whatever `ThroughputSource` it was
 /// built with (possibly noisy or estimated).
@@ -118,6 +149,8 @@ pub fn simulate(
     let mut total_migrations = 0usize;
     let mut makespan: f64 = 0.0;
     let mut round: u64 = 0;
+    // Per-round scratch buffer, reused across rounds.
+    let mut active: Vec<JobInfo> = Vec::new();
 
     loop {
         let now = round as f64 * cfg.round_duration;
@@ -140,30 +173,38 @@ pub fn simulate(
             arrived += 1;
         }
 
-        let active: Vec<JobInfo> = states
-            .values()
-            .filter(|s| s.finish_time.is_none())
-            .map(|s| JobInfo {
-                id: s.job.id,
-                model: s.job.model,
-                num_gpus: s.job.num_gpus,
-                arrival_time: s.job.arrival_time,
-                attained_service: s.attained_service,
-                total_iters: s.job.total_iters,
-                completed_iters: s.completed_iters,
-                rounds_received: s.rounds_received,
-                now,
-                iso_tput: s.best_iso,
-            })
-            .collect();
+        active.clear();
+        active.extend(
+            states
+                .values()
+                .filter(|s| s.finish_time.is_none())
+                .map(|s| JobInfo {
+                    id: s.job.id,
+                    model: s.job.model,
+                    num_gpus: s.job.num_gpus,
+                    arrival_time: s.job.arrival_time,
+                    attained_service: s.attained_service,
+                    total_iters: s.job.total_iters,
+                    completed_iters: s.completed_iters,
+                    rounds_received: s.rounds_received,
+                    now,
+                    iso_tput: s.best_iso,
+                }),
+        );
 
         if active.is_empty() {
             if arrived >= trace.jobs.len() {
                 break; // drained
             }
-            // Idle round waiting for the next arrival.
+            // Idle gap until the next arrival. Either spin one empty round
+            // (seed behaviour) or jump straight to the admitting round —
+            // the intermediate rounds do nothing but reset the plan.
             prev_plan = PlacementPlan::new(total_gpus);
-            round += 1;
+            round = if cfg.skip_idle_gaps {
+                next_admitting_round(round, trace.jobs[arrived].arrival_time, cfg.round_duration)
+            } else {
+                round + 1
+            };
             continue;
         }
 
@@ -176,13 +217,13 @@ pub fn simulate(
             spec: &cfg.spec,
         });
         timings.push(decision.timings);
-        total_migrations += decision.migrations;
 
-        // Advance placed jobs.
+        // Advance placed jobs, counting migrations from the plan diff.
         let plan = &decision.plan;
         let dp = ParallelismStrategy::DataParallel;
-        for job_id in plan.jobs() {
-            let gpus = plan.gpus_of(job_id);
+        let mut round_migrations = 0usize;
+        for (&job_id, job_gpus) in plan.job_gpu_map() {
+            let gpus: &[usize] = job_gpus;
             if gpus.is_empty() {
                 continue;
             }
@@ -227,8 +268,9 @@ pub fn simulate(
 
             // Overheads: migration (present in both rounds, moved GPUs) or
             // cold start (absent from the previous plan).
-            let was_placed = !prev_plan.gpus_of(job_id).is_empty();
-            let moved = was_placed && prev_plan.gpus_of(job_id) != gpus;
+            let prev_gpus = prev_plan.gpus_of(job_id);
+            let was_placed = !prev_gpus.is_empty();
+            let moved = was_placed && prev_gpus != gpus;
             let overhead = if moved {
                 cfg.migration_overhead_s
             } else if !was_placed {
@@ -241,6 +283,7 @@ pub fn simulate(
             let s = states.get_mut(&job_id).unwrap();
             if moved {
                 s.migrations += 1;
+                round_migrations += 1;
             }
             s.rounds_received += 1;
             s.attained_service += s.job.num_gpus as f64 * effective;
@@ -257,6 +300,20 @@ pub fn simulate(
                 }
             }
         }
+        // Plan-diff counts are the single source of truth; the scheduler's
+        // self-reported number must agree (Definition 1).
+        debug_assert_eq!(
+            round_migrations,
+            decision.plan.migrations_from(&prev_plan),
+            "per-job migration accounting diverged from the plan diff"
+        );
+        debug_assert_eq!(
+            round_migrations, decision.migrations,
+            "scheduler '{}' self-reported a migration count that disagrees \
+             with the plan diff",
+            scheduler.name()
+        );
+        total_migrations += round_migrations;
 
         prev_plan = decision.plan;
         round += 1;
@@ -391,6 +448,63 @@ mod tests {
         assert_eq!(a.avg_jct, b.avg_jct);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.total_migrations, b.total_migrations);
+    }
+
+    #[test]
+    fn gap_skipping_preserves_metrics() {
+        // A sparse trace (1 job/hour on 8 GPUs) has real idle gaps between
+        // arrivals; skipping them must leave every metric bit-identical to
+        // spinning one empty round at a time.
+        let trace = Trace::shockwave(&TraceParams {
+            num_jobs: 12,
+            jobs_per_hour: 1.0,
+            seed: 23,
+        });
+        let truth = Profiler::new(GpuType::A100, 42);
+        let skip_cfg = quick_cfg();
+        let mut spin_cfg = quick_cfg();
+        spin_cfg.skip_idle_gaps = false;
+        let a = simulate(&trace, &mut tesserae_t(), &truth, &skip_cfg);
+        let b = simulate(&trace, &mut tesserae_t(), &truth, &spin_cfg);
+        assert_eq!(a.avg_jct.to_bits(), b.avg_jct.to_bits());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.total_migrations, b.total_migrations);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (id, oa) in &a.outcomes {
+            assert_eq!(oa.jct.to_bits(), b.outcomes[id].jct.to_bits());
+            assert_eq!(oa.migrations, b.outcomes[id].migrations);
+        }
+        // The trace must actually contain idle gaps for this test to mean
+        // anything: busy rounds (one timing each) < total rounds.
+        assert!(
+            (a.timings.len() as u64) < a.rounds,
+            "trace had no idle gaps: {} busy rounds of {}",
+            a.timings.len(),
+            a.rounds
+        );
+    }
+
+    #[test]
+    fn next_admitting_round_matches_spin_semantics() {
+        let dur = 360.0;
+        for (round, arrival) in [
+            (0u64, 1.0),
+            (0, 359.9),
+            (0, 360.0),
+            (0, 360.1),
+            (3, 10_000.0),
+            (7, 2520.0 + 1e-9),
+        ] {
+            let k = next_admitting_round(round, arrival, dur);
+            assert!(k > round);
+            assert!(k as f64 * dur >= arrival, "round {k} misses {arrival}");
+            assert!(
+                (k - 1) == round || ((k - 1) as f64) * dur < arrival,
+                "round {} would already have admitted {arrival}",
+                k - 1
+            );
+        }
     }
 
     #[test]

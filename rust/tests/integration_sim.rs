@@ -153,3 +153,58 @@ fn v100_cluster_slower_but_complete() {
     assert_eq!(v.unfinished, 0);
     assert!(v.avg_jct > a.avg_jct, "V100 should be slower");
 }
+
+#[test]
+fn refactored_simulator_reproduces_seed_metrics_bit_for_bit() {
+    // The refactor's parity contract: with gap skipping disabled the
+    // simulator walks exactly the seed's round-by-round path, so the
+    // skipping run must reproduce its metrics bit-for-bit on seeded
+    // traces — across schedulers and both trace generators.
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+    use tesserae::experiments::build_scheduler;
+    use tesserae::matching::HungarianEngine;
+    use tesserae::profiler::Profiler;
+    use tesserae::simulator::{simulate, SimConfig};
+
+    let params = TraceParams {
+        num_jobs: 25,
+        jobs_per_hour: 2.0, // sparse: real idle gaps between arrivals
+        seed: 19,
+    };
+    let spec = tesserae::cluster::ClusterSpec::new(2, 4, GpuType::A100);
+    for trace in [Trace::shockwave(&params), Trace::gavel(&params)] {
+        for kind in [SchedKind::TesseraeT, SchedKind::Tiresias, SchedKind::Gavel] {
+            let run = |skip: bool| {
+                let truth = Profiler::new(spec.gpu_type, 19);
+                let source: Arc<dyn ThroughputSource> =
+                    Arc::new(CachedSource::new(OracleEstimator::new(truth.clone())));
+                let mut sched = build_scheduler(kind, source, Arc::new(HungarianEngine));
+                let mut cfg = SimConfig::new(spec);
+                cfg.skip_idle_gaps = skip;
+                simulate(&trace, sched.as_mut(), &truth, &cfg)
+            };
+            let a = run(true);
+            let b = run(false);
+            assert_eq!(a.avg_jct.to_bits(), b.avg_jct.to_bits(), "{kind:?}");
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{kind:?}");
+            assert_eq!(a.total_migrations, b.total_migrations, "{kind:?}");
+            assert_eq!(a.rounds, b.rounds, "{kind:?}");
+            assert_eq!(a.unfinished, 0, "{kind:?}");
+            for (id, oa) in &a.outcomes {
+                let ob = &b.outcomes[id];
+                assert_eq!(oa.jct.to_bits(), ob.jct.to_bits(), "{kind:?} job {id}");
+                assert_eq!(oa.ftf.to_bits(), ob.ftf.to_bits(), "{kind:?} job {id}");
+                assert_eq!(oa.migrations, ob.migrations, "{kind:?} job {id}");
+                assert_eq!(oa.rounds_run, ob.rounds_run, "{kind:?} job {id}");
+            }
+            // The sparse trace must actually exercise gap skipping.
+            assert!(
+                (a.timings.len() as u64) < a.rounds,
+                "{kind:?}: no idle gaps ({} busy rounds of {})",
+                a.timings.len(),
+                a.rounds
+            );
+        }
+    }
+}

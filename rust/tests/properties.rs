@@ -1,8 +1,9 @@
-//! Cross-module property tests: randomized placement plans, migration
+//! Cross-module property tests: randomized placement plans, the
+//! incremental job→GPU index against a from-scratch rebuild, migration
 //! optimality relations, packing-matching validity, and simulator
 //! conservation laws.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 use tesserae::cluster::{ClusterSpec, GpuType, PlacementPlan};
 use tesserae::jobs::JobId;
@@ -61,10 +62,11 @@ fn overlay_common(
     for &nj in &next_jobs {
         if rng.f64() < 0.5 {
             let n_gpus = next.gpus_of(nj).len();
-            if let Some(&pj) = prev_jobs
-                .iter()
-                .find(|&&pj| prev.gpus_of(pj).len() == n_gpus && !common.contains(&pj) && !next.jobs().contains(&pj))
-            {
+            if let Some(&pj) = prev_jobs.iter().find(|&&pj| {
+                prev.gpus_of(pj).len() == n_gpus
+                    && !common.contains(&pj)
+                    && !next.jobs().contains(&pj)
+            }) {
                 let gpus = next.remove(nj);
                 next.place(pj, &gpus);
                 common.insert(pj);
@@ -74,6 +76,133 @@ fn overlay_common(
     common
 }
 
+/// One mutation of a [`PlacementPlan`], pre-validated by the generator so
+/// the replay in the property never violates `place`'s preconditions.
+#[derive(Debug, Clone)]
+enum PlanOp {
+    Place(JobId, Vec<usize>),
+    Remove(JobId),
+    RemoveJobs(Vec<JobId>),
+    Relabel(Vec<usize>),
+}
+
+/// Apply one op to a plan (relabeling replaces the plan wholesale).
+fn apply_op(plan: &mut PlacementPlan, op: &PlanOp) {
+    match op {
+        PlanOp::Place(job, gpus) => plan.place(*job, gpus),
+        PlanOp::Remove(job) => {
+            plan.remove(*job);
+        }
+        PlanOp::RemoveJobs(jobs) => {
+            let set: BTreeSet<JobId> = jobs.iter().copied().collect();
+            plan.remove_jobs(&set);
+        }
+        PlanOp::Relabel(perm) => *plan = plan.relabeled(perm),
+    }
+}
+
+/// Generate a random but valid op sequence by simulating it on a scratch
+/// plan (placements only target GPUs with free capacity, removals only
+/// target present jobs).
+fn gen_plan_ops(rng: &mut Pcg64) -> (usize, Vec<PlanOp>) {
+    let total = 4 + rng.below(13) as usize; // 4..=16 GPUs
+    let mut plan = PlacementPlan::new(total);
+    let mut next_job: JobId = 0;
+    let mut ops = Vec::new();
+    for _ in 0..40 {
+        match rng.below(10) {
+            0..=4 => {
+                let want = 1 + rng.below(4) as usize;
+                let mut free: Vec<usize> =
+                    (0..total).filter(|&g| plan.free_capacity(g) > 0).collect();
+                if free.is_empty() {
+                    continue;
+                }
+                rng.shuffle(&mut free);
+                free.truncate(want.min(free.len()));
+                let job = next_job;
+                next_job += 1;
+                plan.place(job, &free);
+                ops.push(PlanOp::Place(job, free));
+            }
+            5..=6 => {
+                let jobs: Vec<JobId> = plan.jobs().into_iter().collect();
+                if jobs.is_empty() {
+                    continue;
+                }
+                let job = jobs[rng.below(jobs.len() as u64) as usize];
+                plan.remove(job);
+                ops.push(PlanOp::Remove(job));
+            }
+            7..=8 => {
+                let mut jobs: Vec<JobId> = plan.jobs().into_iter().collect();
+                if jobs.is_empty() {
+                    continue;
+                }
+                let k = 1 + rng.below(jobs.len() as u64) as usize;
+                rng.shuffle(&mut jobs);
+                jobs.truncate(k);
+                let set: BTreeSet<JobId> = jobs.iter().copied().collect();
+                plan.remove_jobs(&set);
+                ops.push(PlanOp::RemoveJobs(jobs));
+            }
+            _ => {
+                let mut perm: Vec<usize> = (0..total).collect();
+                rng.shuffle(&mut perm);
+                plan = plan.relabeled(&perm);
+                ops.push(PlanOp::Relabel(perm));
+            }
+        }
+    }
+    (total, ops)
+}
+
+#[test]
+fn incremental_index_always_matches_slot_rebuild() {
+    // The tentpole invariant: under arbitrary place / remove / remove_jobs
+    // / relabeled sequences, the incrementally maintained job→GPU index
+    // equals a from-scratch rebuild of the slots view after every step.
+    forall(
+        "job->GPU index == slot rebuild",
+        91,
+        60,
+        gen_plan_ops,
+        |(total, ops)| {
+            let mut plan = PlacementPlan::new(*total);
+            for (step, op) in ops.iter().enumerate() {
+                apply_op(&mut plan, op);
+                // validate() cross-checks index vs slots internally...
+                plan.validate()
+                    .map_err(|e| format!("step {step} ({op:?}): {e}"))?;
+                // ...and we rebuild independently for good measure.
+                let mut rebuilt: BTreeMap<JobId, Vec<usize>> = BTreeMap::new();
+                for g in 0..plan.num_gpus() {
+                    for &j in plan.jobs_on(g) {
+                        rebuilt.entry(j).or_default().push(g);
+                    }
+                }
+                if &rebuilt != plan.job_gpu_map() {
+                    return Err(format!(
+                        "step {step} ({op:?}): index {:?} != rebuilt {rebuilt:?}",
+                        plan.job_gpu_map()
+                    ));
+                }
+                for (&job, gpus) in plan.job_gpu_map() {
+                    if gpus.is_empty() {
+                        return Err(format!("step {step}: job {job} indexed with no GPUs"));
+                    }
+                    if gpus.windows(2).any(|w| w[0] >= w[1]) {
+                        return Err(format!(
+                            "step {step}: job {job} GPU set not sorted: {gpus:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn tesserae_migration_never_worse_than_baseline_random_plans() {
     forall(
@@ -81,7 +210,11 @@ fn tesserae_migration_never_worse_than_baseline_random_plans() {
         101,
         60,
         |rng| {
-            let spec = ClusterSpec::new(2 + rng.below(3) as usize, 2 + rng.below(3) as usize * 2, GpuType::A100);
+            let spec = ClusterSpec::new(
+                2 + rng.below(3) as usize,
+                2 + rng.below(3) as usize * 2,
+                GpuType::A100,
+            );
             let mut prev = random_plan(&spec, rng, 0);
             let mut next = random_plan(&spec, rng, 1000);
             overlay_common(&mut prev, &mut next, rng);

@@ -1,0 +1,152 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this vendored crate
+//! implements exactly the subset the workspace uses: [`Error`], [`Result`],
+//! the [`anyhow!`] and [`bail!`] macros, and the [`Context`] extension
+//! trait. Semantics follow real anyhow where it matters here:
+//!
+//! * `{e}` (Display) prints the outermost message/context only;
+//! * `{e:#}` (alternate Display) prints the whole context chain joined by
+//!   `": "`, outermost first — what `main.rs` uses for error reports;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`;
+//! * `Error` itself does **not** implement `std::error::Error` (exactly
+//!   like real anyhow), which is what keeps the blanket `From` impl
+//!   coherent.
+
+use std::fmt;
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error carrying a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (mostly for tests).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result`s whose error type is a standard error.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(format!("{e}").contains("no such file"));
+    }
+
+    #[test]
+    fn context_wraps_results() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert!(format!("{e:#}").starts_with("reading manifest: "));
+
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("pass {}", 2)).unwrap_err();
+        assert_eq!(format!("{e}"), "pass 2");
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flag was {flag}");
+            }
+            Err(anyhow!("fell through"))
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flag was true");
+        assert_eq!(format!("{}", f(false).unwrap_err()), "fell through");
+    }
+}
