@@ -1,0 +1,163 @@
+//! Matching-service benchmark (ISSUE 2 acceptance artifact): Tesserae
+//! migration decision time with the batched / pruned / cached service vs
+//! per-instance sequential solves at 16/32/64-node scale, on sparse and
+//! half-full clusters. Asserts outcome parity in-line and emits
+//! `BENCH_matching_service.json` with instances/sec, prune/dedup/cache-hit
+//! rates and the batched-vs-sequential speedup. The acceptance line is
+//! ≥2x at 64 nodes sparse (where pruning and caching bite hardest).
+
+use std::time::Instant;
+
+use tesserae::cluster::{ClusterSpec, GpuType, PlacementPlan};
+use tesserae::matching::{HungarianEngine, MatchingService, MatchingServiceStats, ServiceConfig};
+use tesserae::policies::placement::{migrate_with, MigrationMode};
+use tesserae::util::json::Json;
+use tesserae::util::rng::Pcg64;
+
+/// A sequence of `rounds + 1` consolidated plans — the allocator's shape,
+/// `jobs` single-GPU slots filled from GPU 0 — where each round replaces
+/// ~15% of the jobs with fresh arrivals on the same slots. Consecutive
+/// plans are the (prev, next) inputs of one migration round, so the warm
+/// service sees genuine churn: unchanged node pairs should hit the cache,
+/// changed ones must invalidate and re-solve. Everything beyond the
+/// occupied prefix is empty nodes — the sparse regime ROADMAP's 64-node
+/// hot-path item is about.
+fn plan_sequence(spec: &ClusterSpec, jobs: usize, rounds: usize, seed: u64) -> Vec<PlacementPlan> {
+    let total = spec.total_gpus();
+    let jobs = jobs.min(total);
+    let mut rng = Pcg64::new(seed);
+    let mut ids: Vec<u64> = (0..jobs as u64).collect();
+    let mut fresh = 1_000_000u64;
+    let mut plans = Vec::with_capacity(rounds + 1);
+    for _ in 0..=rounds {
+        let mut p = PlacementPlan::new(total);
+        for (slot, &id) in ids.iter().enumerate() {
+            p.place(id, &[slot]);
+        }
+        plans.push(p);
+        for id in ids.iter_mut() {
+            if rng.f64() < 0.15 {
+                *id = fresh;
+                fresh += 1;
+            }
+        }
+    }
+    plans
+}
+
+fn run_rounds(
+    spec: &ClusterSpec,
+    plans: &[PlacementPlan],
+    svc: &mut MatchingService,
+) -> (f64, MatchingServiceStats, PlacementPlan, Vec<usize>) {
+    let rounds = plans.len() - 1;
+    let t0 = Instant::now();
+    let mut total = MatchingServiceStats::default();
+    let mut last_plan = None;
+    let mut migrations = Vec::with_capacity(rounds);
+    for w in plans.windows(2) {
+        let out = migrate_with(
+            spec,
+            &w[0],
+            &w[1],
+            MigrationMode::Tesserae,
+            &HungarianEngine,
+            svc,
+        );
+        // Accumulate across rounds: round 1 is cold, later rounds mix warm
+        // cache hits (unchanged pairs) with re-solves (churned pairs).
+        let s = out.service;
+        total.instances += s.instances;
+        total.pruned += s.pruned;
+        total.deduped += s.deduped;
+        total.cache_hits += s.cache_hits;
+        total.built += s.built;
+        total.solved += s.solved;
+        total.solve_wall_s += s.solve_wall_s;
+        migrations.push(out.migrations);
+        last_plan = Some(out.plan);
+    }
+    (
+        t0.elapsed().as_secs_f64() / rounds as f64,
+        total,
+        last_plan.expect("at least one round"),
+        migrations,
+    )
+}
+
+fn main() {
+    const ROUNDS: usize = 5;
+    let mut entries = Vec::new();
+    println!("== Tesserae migration: matching service vs sequential per-instance solves ==");
+    println!("   (per-round average over {ROUNDS} rounds; service carries its cache across rounds)");
+    for (nodes, occupancy, label) in [
+        (16usize, 0.15, "sparse"),
+        (32, 0.15, "sparse"),
+        (64, 0.15, "sparse"),
+        (64, 0.5, "half-full"),
+    ] {
+        let spec = ClusterSpec::new(nodes, 8, GpuType::A100);
+        let jobs = ((spec.total_gpus() as f64) * occupancy) as usize;
+        let plans = plan_sequence(&spec, jobs, ROUNDS, 42 + nodes as u64);
+
+        let mut seq_svc = MatchingService::new(ServiceConfig::sequential_reference());
+        let (seq_s, _, seq_plan, seq_migrations) = run_rounds(&spec, &plans, &mut seq_svc);
+
+        let mut svc = MatchingService::with_defaults();
+        let (svc_s, stats, svc_plan, svc_migrations) = run_rounds(&spec, &plans, &mut svc);
+
+        assert_eq!(svc_plan, seq_plan, "service diverged from sequential solves");
+        assert_eq!(svc_migrations, seq_migrations, "per-round migration counts diverged");
+
+        let speedup = seq_s / svc_s.max(1e-12);
+        let inst_per_s = stats.instances as f64 / (svc_s * ROUNDS as f64).max(1e-12);
+        let rate = |x: usize| x as f64 / stats.instances.max(1) as f64;
+        println!(
+            "{nodes:>3}x8 {label:<9} ({jobs:>3} jobs): service {:>9.3}ms vs sequential {:>9.3}ms = {speedup:>6.1}x | \
+             {} inst over {ROUNDS} rounds ({} pruned, {} dedup, {} cached, {} solved), {:.0} inst/s",
+            svc_s * 1e3,
+            seq_s * 1e3,
+            stats.instances,
+            stats.pruned,
+            stats.deduped,
+            stats.cache_hits,
+            stats.solved,
+            inst_per_s,
+        );
+        entries.push(Json::obj(vec![
+            ("nodes", Json::num(nodes as f64)),
+            ("gpus_per_node", Json::num(8.0)),
+            ("workload", Json::str(label)),
+            ("occupancy", Json::num(occupancy)),
+            ("jobs", Json::num(jobs as f64)),
+            ("rounds", Json::num(ROUNDS as f64)),
+            ("instances_total", Json::num(stats.instances as f64)),
+            ("pruned", Json::num(stats.pruned as f64)),
+            ("deduped", Json::num(stats.deduped as f64)),
+            ("cache_hits", Json::num(stats.cache_hits as f64)),
+            ("solved", Json::num(stats.solved as f64)),
+            ("prune_rate", Json::num(rate(stats.pruned))),
+            ("dedup_rate", Json::num(rate(stats.deduped))),
+            ("cache_hit_rate", Json::num(rate(stats.cache_hits))),
+            ("instances_per_sec", Json::num(inst_per_s)),
+            ("service_round_s", Json::num(svc_s)),
+            ("sequential_round_s", Json::num(seq_s)),
+            ("speedup", Json::num(speedup)),
+        ]));
+        if nodes == 64 && label == "sparse" {
+            assert!(
+                speedup >= 2.0,
+                "acceptance: 64-node sparse speedup {speedup:.2}x < 2x"
+            );
+        }
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("matching_service")),
+        ("entries", Json::arr(entries)),
+    ]);
+    match std::fs::write("BENCH_matching_service.json", json.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_matching_service.json"),
+        Err(e) => println!("could not write BENCH_matching_service.json: {e}"),
+    }
+}

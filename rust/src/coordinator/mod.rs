@@ -27,9 +27,9 @@ use anyhow::{anyhow, Result};
 use crate::cluster::{ClusterSpec, GpuType, PlacementPlan};
 use crate::estimator::OracleEstimator;
 use crate::jobs::{JobId, ModelKind};
-use crate::matching::HungarianEngine;
+use crate::matching::{HungarianEngine, MatchingService};
 use crate::policies::placement::{
-    allocate_without_packing, migrate, pack, MigrationMode, PackingConfig,
+    allocate_without_packing, migrate_with, pack_with, MigrationMode, PackingConfig,
 };
 use crate::policies::scheduling::{SchedulingPolicy, TiresiasLas};
 use crate::policies::JobInfo;
@@ -283,6 +283,9 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
     let source = OracleEstimator::new(profiler);
     let policy = TiresiasLas::default();
     let engine = HungarianEngine;
+    // One matching service for the whole run: node-pair cost matrices cache
+    // across rounds exactly as in the simulator.
+    let mut matching_service = MatchingService::with_defaults();
 
     let mut prev_plan = PlacementPlan::new(total_gpus);
     let mut total_migrations = 0usize;
@@ -330,18 +333,26 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
             let by_id: BTreeMap<_, _> = active.iter().map(|j| (j.id, j)).collect();
             let placed: Vec<&JobInfo> = alloc.placed.iter().map(|id| by_id[id]).collect();
             let pending: Vec<&JobInfo> = alloc.pending.iter().map(|id| by_id[id]).collect();
-            for p in pack(
+            for p in pack_with(
                 &placed,
                 &pending,
                 &source,
                 &PackingConfig::default(),
                 &engine,
+                &mut matching_service,
             ) {
                 let gpus = plan.gpus_of(p.placed).to_vec();
                 plan.place(p.pending, &gpus);
             }
         }
-        let outcome = migrate(&spec, &prev_plan, &plan, cfg.migration, &engine);
+        let outcome = migrate_with(
+            &spec,
+            &prev_plan,
+            &plan,
+            cfg.migration,
+            &engine,
+            &mut matching_service,
+        );
         let plan = outcome.plan;
         total_migrations += outcome.migrations;
 

@@ -12,7 +12,7 @@ use crate::jobs::ModelKind;
 use crate::matching::{HungarianEngine, MatchingEngine};
 use crate::policies::JobInfo;
 use crate::profiler::Profiler;
-use crate::schedulers::RoundInput;
+use crate::schedulers::{DecisionTimings, RoundInput};
 use crate::util::benchutil::Table;
 use crate::util::rng::Pcg64;
 
@@ -47,15 +47,38 @@ pub fn synthetic_active_jobs(n: usize, seed: u64) -> Vec<JobInfo> {
         .collect()
 }
 
+/// Replace ~15% of `active` with fresh arrivals (new ids, drawn from the
+/// same synthetic distribution): one simulator round's worth of churn.
+pub fn churn_active_jobs(active: &[JobInfo], seed: u64) -> Vec<JobInfo> {
+    let mut rng = Pcg64::new(seed);
+    let donors = synthetic_active_jobs(active.len(), seed ^ 0xd0);
+    active
+        .iter()
+        .zip(donors)
+        .map(|(j, mut d)| {
+            if rng.f64() < 0.15 {
+                d.id += 1_000_000;
+                d
+            } else {
+                j.clone()
+            }
+        })
+        .collect()
+}
+
 /// One decision-time measurement: scheduler `kind` deciding one round with
-/// `n` active jobs on `spec`. Returns (total_s, scheduling_s, packing_s,
-/// migration_s).
+/// `n` active jobs on `spec`. The first decision only warms caches; the
+/// *measured* second decision sees a realistic consecutive round — the
+/// warm round's realized plan as `prev_plan` plus ~15% job churn — so
+/// cross-round state (e.g. the matching service's cost-matrix cache) is
+/// exercised the way simulator steady state exercises it, rather than
+/// flattered by an identical-input replay.
 pub fn measure_decision(
     kind: SchedKind,
     n: usize,
     spec: &ClusterSpec,
     seed: u64,
-) -> (f64, f64, f64, f64) {
+) -> DecisionTimings {
     let truth = Profiler::new(spec.gpu_type, seed);
     let source: Arc<dyn ThroughputSource> =
         Arc::new(CachedSource::new(OracleEstimator::new(truth)));
@@ -63,22 +86,23 @@ pub fn measure_decision(
     let mut sched = build_scheduler(kind, source, engine);
     let active = synthetic_active_jobs(n, seed);
     let prev = PlacementPlan::new(spec.total_gpus());
-    let input = RoundInput {
+    let warm = sched.decide(&RoundInput {
         now: 1e6,
         round: 10,
         active: &active,
         prev_plan: &prev,
         spec,
-    };
-    // Warm + measure (two decisions; report the second).
-    let _ = sched.decide(&input);
-    let d = sched.decide(&input);
-    (
-        d.timings.total_s,
-        d.timings.scheduling_s,
-        d.timings.packing_s,
-        d.timings.migration_s,
-    )
+    });
+    let churned = churn_active_jobs(&active, seed ^ 0x5eed);
+    sched
+        .decide(&RoundInput {
+            now: 1e6 + 360.0,
+            round: 11,
+            active: &churned,
+            prev_plan: &warm.plan,
+            spec,
+        })
+        .timings
 }
 
 /// Fig. 2 / Fig. 14(a): decision time vs number of active jobs on a
@@ -103,8 +127,8 @@ pub fn fig2_decision_time(job_counts: &[usize], budget: Duration) -> String {
                 continue;
             }
             let t0 = Instant::now();
-            let (total, ..) = measure_decision(kind, n, &spec, 11);
-            row.push(format!("{:.3}s", total));
+            let d = measure_decision(kind, n, &spec, 11);
+            row.push(format!("{:.3}s", d.total_s));
             if t0.elapsed() > budget {
                 blown[i] = true;
             }
@@ -118,19 +142,39 @@ pub fn fig2_decision_time(job_counts: &[usize], budget: Duration) -> String {
     )
 }
 
-/// Fig. 14(b): Tesserae-T decision-time breakdown.
+/// Fig. 14(b): Tesserae-T decision-time breakdown, extended with the
+/// matching-service columns (instances generated vs pruned / deduped /
+/// cache-hit / actually solved, and wall time inside engine solves).
 pub fn fig14b_breakdown(job_counts: &[usize]) -> String {
     let spec = ClusterSpec::scale_256();
-    let mut t = Table::new(&["active jobs", "scheduling", "packing", "migration", "total"]);
+    let mut t = Table::new(&[
+        "active jobs",
+        "scheduling",
+        "packing",
+        "migration",
+        "total",
+        "inst",
+        "pruned",
+        "dedup",
+        "cached",
+        "solved",
+        "solve time",
+    ]);
     for &n in job_counts {
-        let (total, sched, packing, migration) =
-            measure_decision(SchedKind::TesseraeT, n, &spec, 13);
+        let d = measure_decision(SchedKind::TesseraeT, n, &spec, 13);
+        let m = d.matching;
         t.row(&[
             format!("{n}"),
-            format!("{:.4}s", sched),
-            format!("{:.4}s", packing),
-            format!("{:.4}s", migration),
-            format!("{:.4}s", total),
+            format!("{:.4}s", d.scheduling_s),
+            format!("{:.4}s", d.packing_s),
+            format!("{:.4}s", d.migration_s),
+            format!("{:.4}s", d.total_s),
+            format!("{}", m.instances),
+            format!("{}", m.pruned),
+            format!("{}", m.deduped),
+            format!("{}", m.cache_hits),
+            format!("{}", m.solved),
+            format!("{:.4}s", m.solve_wall_s),
         ]);
     }
     format!(
@@ -203,7 +247,7 @@ mod tests {
         // 256 GPUs, 512 active jobs, must decide well under the paper's
         // 1.6 s envelope.
         let spec = ClusterSpec::scale_256();
-        let (total, ..) = measure_decision(SchedKind::TesseraeT, 512, &spec, 3);
+        let total = measure_decision(SchedKind::TesseraeT, 512, &spec, 3).total_s;
         assert!(total < 1.6, "decision took {total}s");
     }
 
@@ -212,16 +256,51 @@ mod tests {
         // The Fig. 2 shape needs enough jobs/GPUs for the LP to dominate;
         // at small scale the simplex solves in a handful of pivots.
         let spec = ClusterSpec::scale_256();
-        let (tess, ..) = measure_decision(SchedKind::TesseraeT, 1000, &spec, 5);
-        let (gavel, ..) = measure_decision(SchedKind::Gavel, 1000, &spec, 5);
+        let tess = measure_decision(SchedKind::TesseraeT, 1000, &spec, 5).total_s;
+        let gavel = measure_decision(SchedKind::Gavel, 1000, &spec, 5).total_s;
         assert!(gavel > tess, "gavel {gavel} vs tesserae {tess}");
     }
 
     #[test]
     fn breakdown_components_sum_below_total() {
         let spec = ClusterSpec::new(8, 4, GpuType::A100);
-        let (total, s, p, m) = measure_decision(SchedKind::TesseraeT, 100, &spec, 7);
+        let d = measure_decision(SchedKind::TesseraeT, 100, &spec, 7);
+        let (total, s, p, m) = (d.total_s, d.scheduling_s, d.packing_s, d.migration_s);
         assert!(s + p + m <= total * 1.05, "{s}+{p}+{m} vs {total}");
+    }
+
+    #[test]
+    fn matching_service_counters_ride_the_breakdown() {
+        // The measured decision is a churned consecutive round on a
+        // saturated cluster — the service's counters must still account
+        // for every instance (prune/cache activity depends on occupancy,
+        // so only the accounting invariants are asserted here; hit/prune
+        // behavior is covered by the service's own tests).
+        let spec = ClusterSpec::new(8, 4, GpuType::A100);
+        let m = measure_decision(SchedKind::TesseraeT, 100, &spec, 7).matching;
+        assert!(m.instances > 0);
+        assert_eq!(m.built, m.solved, "every built matrix is solved: {m:?}");
+        assert!(
+            m.pruned + m.deduped + m.cache_hits + m.built >= m.instances,
+            "instance accounting leaked: {m:?}"
+        );
+    }
+
+    #[test]
+    fn churn_preserves_count_and_replaces_some_jobs() {
+        let active = synthetic_active_jobs(200, 3);
+        let churned = churn_active_jobs(&active, 11);
+        assert_eq!(churned.len(), active.len());
+        let replaced = churned
+            .iter()
+            .zip(&active)
+            .filter(|(c, a)| c.id != a.id)
+            .count();
+        assert!(replaced > 0, "churn replaced nothing");
+        assert!(replaced < active.len(), "churn replaced everything");
+        for c in &churned {
+            assert!(c.id < 200 || c.id >= 1_000_000);
+        }
     }
 
     #[test]

@@ -43,26 +43,49 @@ impl Default for AuctionConfig {
 /// Solve max-benefit assignment by forward auction with ε-scaling.
 /// Returns row→col assignment and the *benefit* total (not cost).
 pub fn solve_max_benefit(benefit: &Matrix, cfg: &AuctionConfig) -> AssignmentResult {
+    solve_max_benefit_warm(benefit, cfg, None).0
+}
+
+/// [`solve_max_benefit`] with optional warm-start prices (retained duals
+/// from a previous similar instance) threaded in, and the final prices
+/// returned so the caller can retain them. Forward auction maintains ε-CS
+/// from *any* initial prices, so the optimality guarantee is unchanged —
+/// but a warm start may select a different, equally-optimal assignment.
+/// With `init_prices = None` results are identical to [`solve_max_benefit`].
+pub fn solve_max_benefit_warm(
+    benefit: &Matrix,
+    cfg: &AuctionConfig,
+    init_prices: Option<&[f64]>,
+) -> (AssignmentResult, Vec<f64>) {
     let n = benefit.rows();
     assert_eq!(n, benefit.cols(), "auction needs a square matrix");
+    let mut prices = match init_prices {
+        Some(p) if p.len() == n => p.to_vec(),
+        _ => vec![0.0f64; n],
+    };
     if n == 0 {
-        return AssignmentResult {
-            row_to_col: vec![],
-            cost: 0.0,
-        };
+        return (
+            AssignmentResult {
+                row_to_col: vec![],
+                cost: 0.0,
+            },
+            prices,
+        );
     }
     if n == 1 {
-        return AssignmentResult {
-            row_to_col: vec![0],
-            cost: benefit.get(0, 0),
-        };
+        return (
+            AssignmentResult {
+                row_to_col: vec![0],
+                cost: benefit.get(0, 0),
+            },
+            prices,
+        );
     }
 
     let bmax = benefit.data().iter().cloned().fold(f64::NEG_INFINITY, f64::max);
     let bmin = benefit.data().iter().cloned().fold(f64::INFINITY, f64::min);
     let range = (bmax - bmin).max(1e-12);
 
-    let mut prices = vec![0.0f64; n];
     let mut row_of: Vec<Option<usize>> = vec![None; n]; // object -> person
     let mut col_of: Vec<Option<usize>> = vec![None; n]; // person -> object
 
@@ -119,16 +142,30 @@ pub fn solve_max_benefit(benefit: &Matrix, cfg: &AuctionConfig) -> AssignmentRes
         .enumerate()
         .map(|(r, &c)| benefit.get(r, c))
         .sum();
-    AssignmentResult {
-        row_to_col,
-        cost: total,
-    }
+    (
+        AssignmentResult {
+            row_to_col,
+            cost: total,
+        },
+        prices,
+    )
 }
 
 /// Solve min-cost assignment via the auction on negated costs. `resolution`
 /// (when known, e.g. 1/16 for migration costs) drives ε_final for exactness;
 /// pass `None` for near-optimal on arbitrary float costs.
 pub fn solve_min_cost(cost: &Matrix, resolution: Option<f64>) -> AssignmentResult {
+    solve_min_cost_warm(cost, resolution, None).0
+}
+
+/// [`solve_min_cost`] with warm-start prices threaded through. The prices
+/// are duals of the negated-benefit problem — opaque to callers, who only
+/// round-trip them between solves of the same recurring instance shape.
+pub fn solve_min_cost_warm(
+    cost: &Matrix,
+    resolution: Option<f64>,
+    init_prices: Option<&[f64]>,
+) -> (AssignmentResult, Vec<f64>) {
     let n = cost.rows();
     let mut benefit = Matrix::zeros(n, n);
     for i in 0..n {
@@ -140,17 +177,20 @@ pub fn solve_min_cost(cost: &Matrix, resolution: Option<f64>) -> AssignmentResul
     if let Some(q) = resolution {
         cfg.eps_final = q / (n as f64 + 1.0);
     }
-    let r = solve_max_benefit(&benefit, &cfg);
+    let (r, prices) = solve_max_benefit_warm(&benefit, &cfg, init_prices);
     let total = r
         .row_to_col
         .iter()
         .enumerate()
         .map(|(row, &c)| cost.get(row, c))
         .sum();
-    AssignmentResult {
-        row_to_col: r.row_to_col,
-        cost: total,
-    }
+    (
+        AssignmentResult {
+            row_to_col: r.row_to_col,
+            cost: total,
+        },
+        prices,
+    )
 }
 
 #[cfg(test)]
@@ -255,5 +295,60 @@ mod tests {
         assert_eq!(solve_min_cost(&Matrix::zeros(0, 0), None).cost, 0.0);
         let one = Matrix::from_rows(&[&[2.0]]);
         assert_eq!(solve_min_cost(&one, None).row_to_col, vec![0]);
+    }
+
+    #[test]
+    fn warm_start_none_is_bit_identical_to_cold() {
+        let mut rng = crate::util::rng::Pcg64::new(91);
+        for _ in 0..20 {
+            let n = 2 + rng.below(8) as usize;
+            let mut m = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    m.set(i, j, rng.below(33) as f64 / 16.0);
+                }
+            }
+            let cold = solve_min_cost(&m, Some(1.0 / 16.0));
+            let (warm, _) = solve_min_cost_warm(&m, Some(1.0 / 16.0), None);
+            assert_eq!(cold.row_to_col, warm.row_to_col);
+            assert_eq!(cold.cost.to_bits(), warm.cost.to_bits());
+        }
+    }
+
+    #[test]
+    fn warm_started_solve_stays_optimal() {
+        // ε-CS holds from any initial prices, so a solve warm-started with
+        // the duals of a *different* instance must still be exactly optimal
+        // on quantized costs (though possibly via a different argmin).
+        forall(
+            "warm-started auction optimal",
+            49,
+            40,
+            |r| {
+                let n = 2 + r.below(8) as usize;
+                let mut a = Matrix::zeros(n, n);
+                let mut b = Matrix::zeros(n, n);
+                for i in 0..n {
+                    for j in 0..n {
+                        a.set(i, j, r.below(33) as f64 / 16.0);
+                        // b perturbs a on a few entries — the cross-round
+                        // cost-matrix drift the service's warm starts see.
+                        let drift = if r.below(4) == 0 {
+                            r.below(8) as f64 / 16.0
+                        } else {
+                            0.0
+                        };
+                        b.set(i, j, a.get(i, j) + drift);
+                    }
+                }
+                (a, b)
+            },
+            |(a, b)| {
+                let (_, prices) = solve_min_cost_warm(a, Some(1.0 / 16.0), None);
+                let (warm, _) = solve_min_cost_warm(b, Some(1.0 / 16.0), Some(&prices));
+                let exact = hungarian::solve_min_cost(b);
+                approx_eq(warm.cost, exact.cost, 1e-9)
+            },
+        );
     }
 }

@@ -1,0 +1,312 @@
+//! Batched matching instances: content signatures, closed-form pruning and
+//! the per-round [`Batch`] collector behind [`super::service`].
+//!
+//! Every Algorithm 3 node-pair instance is identified by the *content* of
+//! the (previous, next) node pair it prices: which jobs sit on each GPU
+//! slot and each job's amortization divisor. Two pairs with equal content
+//! produce bit-identical cost matrices, so content keys are what the
+//! service dedups within a round and caches across rounds. Keys compare by
+//! full equality (the hash only routes the lookup), so distinct instances
+//! can never collide.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cluster::PlacementPlan;
+use crate::jobs::JobId;
+use crate::linalg::Matrix;
+
+/// Content of one GPU slot: each tenant job with its amortization divisor
+/// (the job's cluster-wide GPU count), in slot order.
+pub type GpuSig = Vec<(JobId, usize)>;
+
+/// Content of one node: its GPUs' slot signatures in topology order. Equal
+/// signatures ⇒ bit-identical Algorithm 3 cost matrices.
+pub type NodeSig = Vec<GpuSig>;
+
+/// A matching instance's identity: the solving engine (name *and*
+/// configuration fingerprint) plus the (prev, next) node-pair content it
+/// was built from. The engine identity is part of the key because engines
+/// — and differently-configured instances of the same engine, e.g.
+/// auctions at different resolutions — legitimately return *different*
+/// optimal permutations; one service must never serve one solver's cached
+/// assignment to another. The node signatures are `Arc`-shared (hash/eq
+/// delegate to the content) so probing a cache of `n²` pairs costs `n`
+/// signature allocations per round, not `n²`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PairKey {
+    pub engine: &'static str,
+    pub engine_cfg: u64,
+    pub prev: Arc<NodeSig>,
+    pub next: Arc<NodeSig>,
+}
+
+/// Amortization divisor for `job`: its GPU count, read preferentially from
+/// the previous round's plan — exactly the `prev_map.or(next_map)` lookup
+/// order the pre-service `gpu_pair_cost` used, so signature-built matrices
+/// are bit-identical to the ones the old code built in place.
+fn job_size(job: JobId, prev: &PlacementPlan, next: &PlacementPlan) -> usize {
+    let p = prev.gpus_of(job).len();
+    if p > 0 {
+        p
+    } else {
+        next.gpus_of(job).len().max(1)
+    }
+}
+
+/// Build one node's signature over `gpus` of `plan`, sizing every tenant
+/// against both rounds' plans (see [`job_size`]).
+pub fn node_sig(
+    plan: &PlacementPlan,
+    gpus: &[usize],
+    prev: &PlacementPlan,
+    next: &PlacementPlan,
+) -> NodeSig {
+    gpus.iter()
+        .map(|&g| {
+            plan.jobs_on(g)
+                .iter()
+                .map(|&j| (j, job_size(j, prev, next)))
+                .collect()
+        })
+        .collect()
+}
+
+/// Migration cost between two GPU-slot signatures (Algorithm 3 lines 4–7):
+/// every job in the symmetric difference contributes `1/(2·num_gpus)`.
+/// Same iteration and addition order as the pre-service `gpu_pair_cost`,
+/// hence bit-identical entries.
+fn sig_pair_cost(u: &GpuSig, v: &GpuSig) -> f64 {
+    let mut cost = 0.0;
+    for &(j, sz) in u {
+        if !v.iter().any(|&(jv, _)| jv == j) {
+            cost += 1.0 / (2.0 * sz as f64);
+        }
+    }
+    for &(j, sz) in v {
+        if !u.iter().any(|&(ju, _)| ju == j) {
+            cost += 1.0 / (2.0 * sz as f64);
+        }
+    }
+    cost
+}
+
+/// The full Algorithm 3 cost matrix for a (prev, next) node pair — a pure
+/// function of the pair's content signatures.
+pub fn pair_cost_matrix(prev: &NodeSig, next: &NodeSig) -> Matrix {
+    let mut c = Matrix::zeros(prev.len(), next.len());
+    for (a, u) in prev.iter().enumerate() {
+        for (b, v) in next.iter().enumerate() {
+            c.set(a, b, sig_pair_cost(u, v));
+        }
+    }
+    c
+}
+
+/// Whether a node hosts no jobs at all.
+pub fn sig_is_empty(sig: &NodeSig) -> bool {
+    sig.iter().all(|s| s.is_empty())
+}
+
+/// Whether a node's content admits the closed-form one-sided total while
+/// preserving bit-parity with an engine solve. Two conditions, both on the
+/// divisors `k` (job GPU counts):
+///
+/// * `k` is a power of two, so every contribution `1/(2k)` is an exact
+///   dyadic f64 and sums of them are exact — i.e. independent of the
+///   summation order, which is what lets a column-order closed form equal
+///   a solver's permutation-order total bit for bit;
+/// * `k ≤ 8`, so every matrix entry is a multiple of 1/16 — the native
+///   auction engine's default exactness resolution. An exact engine
+///   (Hungarian, or the auction on its grid) then returns exactly the
+///   optimal total the closed form computes.
+pub fn sig_is_exact_prunable(sig: &NodeSig) -> bool {
+    sig.iter()
+        .flatten()
+        .all(|&(_, sz)| sz.is_power_of_two() && sz <= 8)
+}
+
+/// Closed-form optimal matching cost of one all-empty node against `sig`
+/// (either orientation): the cost matrix is constant along the empty side,
+/// so every permutation is optimal and the total is the sum of all of
+/// `sig`'s tenant contributions. Caller must have checked
+/// [`sig_is_exact_prunable`].
+pub fn one_sided_cost(sig: &NodeSig) -> f64 {
+    let mut total = 0.0;
+    for s in sig {
+        for &(_, sz) in s {
+            total += 1.0 / (2.0 * sz as f64);
+        }
+    }
+    total
+}
+
+/// A round's collected matching instances after prune/cache filtering: the
+/// unique cost matrices still needing an engine solve, each with the
+/// content key (when known) under which its solution should be cached.
+#[derive(Debug, Default)]
+pub struct Batch {
+    matrices: Vec<Matrix>,
+    keys: Vec<Option<PairKey>>,
+    index_of: HashMap<PairKey, usize>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.matrices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.matrices.is_empty()
+    }
+
+    pub fn matrices(&self) -> &[Matrix] {
+        &self.matrices
+    }
+
+    pub fn keys(&self) -> &[Option<PairKey>] {
+        &self.keys
+    }
+
+    /// Add an instance by content key, building its matrix only if the key
+    /// is new. Returns `(slot, was_duplicate)`.
+    pub fn push_keyed(&mut self, key: PairKey, dedup: bool) -> (usize, bool) {
+        if dedup {
+            if let Some(&i) = self.index_of.get(&key) {
+                return (i, true);
+            }
+        }
+        let i = self.matrices.len();
+        self.matrices.push(pair_cost_matrix(&key.prev, &key.next));
+        if dedup {
+            self.index_of.insert(key.clone(), i);
+        }
+        self.keys.push(Some(key));
+        (i, false)
+    }
+
+    /// Add a raw matrix with no content identity (no dedup, no caching).
+    pub fn push_matrix(&mut self, matrix: Matrix) -> usize {
+        let i = self.matrices.len();
+        self.matrices.push(matrix);
+        self.keys.push(None);
+        i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::hungarian;
+
+    fn sig(slots: &[&[(JobId, usize)]]) -> NodeSig {
+        slots.iter().map(|s| s.to_vec()).collect()
+    }
+
+    #[test]
+    fn pair_cost_matrix_prices_symmetric_difference() {
+        // prev node: job 1 on slot 0, empty slot 1.
+        // next node: job 1 on slot 1, job 2 on slot 0.
+        let prev = sig(&[&[(1, 1)], &[]]);
+        let next = sig(&[&[(2, 1)], &[(1, 1)]]);
+        let c = pair_cost_matrix(&prev, &next);
+        // (slot0, slot0): job1 leaves (1/2), job2 arrives (1/2) = 1.0
+        assert_eq!(c.get(0, 0), 1.0);
+        // (slot0, slot1): job1 stays = 0.0
+        assert_eq!(c.get(0, 1), 0.0);
+        // (slot1, slot0): job2 arrives = 0.5
+        assert_eq!(c.get(1, 0), 0.5);
+        // (slot1, slot1): job1 arrives = 0.5
+        assert_eq!(c.get(1, 1), 0.5);
+    }
+
+    #[test]
+    fn multi_gpu_divisors_amortize() {
+        // A 4-GPU job contributes 1/8 per differing slot.
+        let prev = sig(&[&[(7, 4)]]);
+        let next = sig(&[&[]]);
+        let c = pair_cost_matrix(&prev, &next);
+        assert_eq!(c.get(0, 0), 0.125);
+    }
+
+    #[test]
+    fn emptiness_and_prunability() {
+        assert!(sig_is_empty(&sig(&[&[], &[]])));
+        assert!(!sig_is_empty(&sig(&[&[], &[(1, 1)]])));
+        assert!(sig_is_exact_prunable(&sig(&[&[(1, 1)], &[(2, 8)]])));
+        assert!(!sig_is_exact_prunable(&sig(&[&[(1, 3)]])), "1/6 not dyadic");
+        assert!(!sig_is_exact_prunable(&sig(&[&[(1, 16)]])), "1/32 off-grid");
+    }
+
+    #[test]
+    fn one_sided_cost_matches_solver_total() {
+        // Empty × nonempty: the closed form must equal the Hungarian total
+        // on the actual matrix, bit for bit (dyadic divisors).
+        let empty = sig(&[&[], &[], &[], &[]]);
+        let busy = sig(&[&[(1, 1), (2, 2)], &[(3, 8)], &[], &[(4, 4), (5, 1)]]);
+        assert!(sig_is_exact_prunable(&busy));
+        let c = pair_cost_matrix(&empty, &busy);
+        let solved = hungarian::solve_min_cost(&c);
+        assert_eq!(one_sided_cost(&busy).to_bits(), solved.cost.to_bits());
+        // And in the transposed orientation.
+        let ct = pair_cost_matrix(&busy, &empty);
+        let solved_t = hungarian::solve_min_cost(&ct);
+        assert_eq!(one_sided_cost(&busy).to_bits(), solved_t.cost.to_bits());
+    }
+
+    fn key(engine: &'static str, prev: NodeSig, next: NodeSig) -> PairKey {
+        PairKey {
+            engine,
+            engine_cfg: 0,
+            prev: Arc::new(prev),
+            next: Arc::new(next),
+        }
+    }
+
+    #[test]
+    fn batch_dedups_by_content() {
+        let a = key("hungarian", sig(&[&[(1, 1)]]), sig(&[&[(2, 1)]]));
+        let b = a.clone();
+        let c = key("hungarian", sig(&[&[(1, 1)]]), sig(&[&[(3, 1)]]));
+        let mut batch = Batch::default();
+        let (s0, d0) = batch.push_keyed(a, true);
+        let (s1, d1) = batch.push_keyed(b, true);
+        let (s2, d2) = batch.push_keyed(c, true);
+        assert_eq!((s0, d0), (0, false));
+        assert_eq!((s1, d1), (0, true));
+        assert_eq!((s2, d2), (1, false));
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn batch_without_dedup_keeps_duplicates() {
+        let a = key("hungarian", sig(&[&[(1, 1)]]), sig(&[&[(2, 1)]]));
+        let mut batch = Batch::default();
+        batch.push_keyed(a.clone(), false);
+        batch.push_keyed(a, false);
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn keys_equal_by_content_and_distinguish_engines() {
+        let a = key("hungarian", sig(&[&[(1, 1)]]), sig(&[]));
+        // Same content behind fresh allocations: equal + same hash bucket.
+        let b = key("hungarian", sig(&[&[(1, 1)]]), sig(&[]));
+        assert_eq!(a, b);
+        // Same content, different engine: distinct (engines may return
+        // different optimal permutations on degenerate matrices).
+        let c = key("auction", sig(&[&[(1, 1)]]), sig(&[]));
+        assert_ne!(a, c);
+        // Same engine name, different configuration: also distinct.
+        let d = PairKey {
+            engine_cfg: 7,
+            ..b.clone()
+        };
+        assert_ne!(b, d);
+        let mut m = HashMap::new();
+        m.insert(a, 1);
+        assert!(m.contains_key(&b));
+        assert!(!m.contains_key(&c));
+        assert!(!m.contains_key(&d));
+    }
+}

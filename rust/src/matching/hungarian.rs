@@ -43,10 +43,30 @@ pub fn solve_min_cost(cost: &Matrix) -> AssignmentResult {
     solve_min_cost_rect(cost)
 }
 
+/// Reusable working buffers for [`solve_min_cost_rect_in`]. Batch solvers
+/// keep one arena per worker thread so the six per-solve vectors are
+/// allocated once per worker instead of once per instance.
+#[derive(Debug, Default)]
+pub struct SolveScratch {
+    u: Vec<f64>,
+    v: Vec<f64>,
+    p: Vec<usize>,
+    way: Vec<usize>,
+    minv: Vec<f64>,
+    used: Vec<bool>,
+}
+
 /// Rectangular min-cost assignment: every *row* gets a distinct column
 /// (requires `rows ≤ cols`). O(rows² · cols) — much cheaper than padding
 /// to square when the sides are unbalanced (the packing-policy shape).
 pub fn solve_min_cost_rect(cost: &Matrix) -> AssignmentResult {
+    solve_min_cost_rect_in(cost, &mut SolveScratch::default())
+}
+
+/// [`solve_min_cost_rect`] with caller-owned scratch buffers (the batch
+/// hot path). Identical algorithm; results are bit-identical regardless of
+/// what previous solves used the arena.
+pub fn solve_min_cost_rect_in(cost: &Matrix, scratch: &mut SolveScratch) -> AssignmentResult {
     let n = cost.rows();
     let m = cost.cols();
     assert!(n <= m, "rectangular hungarian needs rows <= cols");
@@ -58,14 +78,21 @@ pub fn solve_min_cost_rect(cost: &Matrix) -> AssignmentResult {
     }
 
     const INF: f64 = f64::INFINITY;
-    // 1-indexed arrays with column 0 as sentinel (e-maxx formulation).
-    let mut u = vec![0.0f64; n + 1];
-    let mut v = vec![0.0f64; m + 1];
+    // 1-indexed arrays with column 0 as sentinel (e-maxx formulation);
     // p[j] = row matched to column j (0 = none); p[0] = row being inserted.
-    let mut p = vec![0usize; m + 1];
-    let mut way = vec![0usize; m + 1];
-    let mut minv = vec![INF; m + 1];
-    let mut used = vec![false; m + 1];
+    let SolveScratch { u, v, p, way, minv, used } = scratch;
+    u.clear();
+    u.resize(n + 1, 0.0);
+    v.clear();
+    v.resize(m + 1, 0.0);
+    p.clear();
+    p.resize(m + 1, 0);
+    way.clear();
+    way.resize(m + 1, 0);
+    minv.clear();
+    minv.resize(m + 1, INF);
+    used.clear();
+    used.resize(m + 1, false);
 
     for i in 1..=n {
         p[0] = i;
@@ -290,6 +317,28 @@ mod tests {
                 approx_eq(after.cost, base.cost + shift, 1e-9)
             },
         );
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // One arena reused across differently-sized solves must reproduce
+        // the fresh-allocation results exactly (the batch-solver contract).
+        let mut rng = Pcg64::new(77);
+        let mut scratch = SolveScratch::default();
+        for _ in 0..50 {
+            let n = 1 + rng.below(8) as usize;
+            let m = n + rng.below(5) as usize;
+            let mut c = Matrix::zeros(n, m);
+            for i in 0..n {
+                for j in 0..m {
+                    c.set(i, j, rng.range_f64(0.0, 10.0));
+                }
+            }
+            let fresh = solve_min_cost_rect(&c);
+            let reused = solve_min_cost_rect_in(&c, &mut scratch);
+            assert_eq!(fresh.row_to_col, reused.row_to_col);
+            assert_eq!(fresh.cost.to_bits(), reused.cost.to_bits());
+        }
     }
 
     #[test]

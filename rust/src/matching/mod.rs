@@ -8,12 +8,19 @@
 //! * [`max_weight_matching`] — the partial max-weight bipartite matching
 //!   shape of the packing policy (Algorithm 4),
 //! * [`MatchingEngine`] — a pluggable solver trait so the scheduler can run
-//!   on the native solvers or the PJRT-loaded artifact interchangeably.
+//!   on the native solvers or the PJRT-loaded artifact interchangeably,
+//! * [`batch`] / [`service`] — the batched matching service: content-keyed
+//!   pruning, dedup and cross-round caching plus parallel batch solving
+//!   for every matching instance a scheduling round generates.
 
 pub mod auction;
+pub mod batch;
 pub mod hungarian;
+pub mod service;
 
-pub use hungarian::{AssignmentResult, FORBIDDEN};
+pub use batch::{node_sig, pair_cost_matrix, GpuSig, NodeSig, PairKey};
+pub use hungarian::{AssignmentResult, SolveScratch, FORBIDDEN};
+pub use service::{MatchingService, MatchingServiceStats, NodePairRound, ServiceConfig};
 
 use crate::linalg::Matrix;
 
@@ -52,6 +59,79 @@ pub trait MatchingEngine: Send + Sync {
         }
     }
 
+    /// Like [`Self::solve_min_cost_rect`] but reusing caller-owned scratch
+    /// buffers across solves (the batch hot path). Engines without a
+    /// scratch-aware native path ignore the arena; results are identical
+    /// either way.
+    fn solve_min_cost_rect_scratch(
+        &self,
+        cost: &Matrix,
+        _scratch: &mut SolveScratch,
+    ) -> AssignmentResult {
+        self.solve_min_cost_rect(cost)
+    }
+
+    /// Solve a batch of independent (square or rectangular) instances.
+    /// Default: a sequential loop over [`Self::solve_min_cost_rect_scratch`]
+    /// with one shared scratch arena. Engines with a real batched path —
+    /// e.g. the PJRT/AOT auction artifact padding many instances through
+    /// one device dispatch — override this (and [`Self::has_native_batch`]).
+    /// Implementations must be positional (`out[i]` solves `costs[i]`) and
+    /// bit-identical to the sequential loop.
+    fn solve_batch(&self, costs: &[Matrix]) -> Vec<AssignmentResult> {
+        let mut scratch = SolveScratch::default();
+        costs
+            .iter()
+            .map(|c| self.solve_min_cost_rect_scratch(c, &mut scratch))
+            .collect()
+    }
+
+    /// Whether [`Self::solve_batch`] is a true batched implementation; the
+    /// matching service then prefers it over its own thread fan-out.
+    fn has_native_batch(&self) -> bool {
+        false
+    }
+
+    /// Whether this engine's solves are *exactly* optimal on the
+    /// migration-cost grid (matrices whose entries are multiples of 1/16).
+    /// The matching service's one-sided closed-form pruning is
+    /// bit-identical to an engine solve only under this guarantee, so it
+    /// is applied only for engines that opt in. Conservative default:
+    /// `false` — an engine that does not declare exactness (e.g. an f32
+    /// device artifact, or the auction with `resolution: None`) keeps its
+    /// every instance solved rather than priced in closed form.
+    fn exact_on_migration_costs(&self) -> bool {
+        false
+    }
+
+    /// Whether [`Self::solve_min_cost_warm`] actually consumes warm-start
+    /// hints. The matching service only takes its sequential warm-start
+    /// path for engines that do; everyone else keeps the batched path.
+    fn supports_warm_start(&self) -> bool {
+        false
+    }
+
+    /// Fingerprint of the engine *configuration* (not just its kind), so
+    /// cached solutions from differently-configured engines sharing a
+    /// [`Self::name`] never serve each other. Engines with tunable
+    /// parameters that change solutions (e.g. the auction's resolution)
+    /// must fold them in; parameterless engines keep the default.
+    fn config_fingerprint(&self) -> u64 {
+        0
+    }
+
+    /// Square solve with an optional engine-specific warm-start hint, also
+    /// returning the hint to retain for the next similar instance (the
+    /// auction's dual prices). Engines without warm starts ignore the hint
+    /// and return `None`.
+    fn solve_min_cost_warm(
+        &self,
+        cost: &Matrix,
+        _warm: Option<&[f64]>,
+    ) -> (AssignmentResult, Option<Vec<f64>>) {
+        (self.solve_min_cost(cost), None)
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -66,6 +146,19 @@ impl MatchingEngine for HungarianEngine {
 
     fn solve_min_cost_rect(&self, cost: &Matrix) -> AssignmentResult {
         hungarian::solve_min_cost_rect(cost)
+    }
+
+    fn solve_min_cost_rect_scratch(
+        &self,
+        cost: &Matrix,
+        scratch: &mut SolveScratch,
+    ) -> AssignmentResult {
+        hungarian::solve_min_cost_rect_in(cost, scratch)
+    }
+
+    /// Exact everywhere, hence exact on the migration grid.
+    fn exact_on_migration_costs(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -91,6 +184,32 @@ impl Default for AuctionEngine {
 impl MatchingEngine for AuctionEngine {
     fn solve_min_cost(&self, cost: &Matrix) -> AssignmentResult {
         auction::solve_min_cost(cost, self.resolution)
+    }
+
+    fn solve_min_cost_warm(
+        &self,
+        cost: &Matrix,
+        warm: Option<&[f64]>,
+    ) -> (AssignmentResult, Option<Vec<f64>>) {
+        let (sol, prices) = auction::solve_min_cost_warm(cost, self.resolution, warm);
+        (sol, Some(prices))
+    }
+
+    /// Exact on the 1/16 grid only when every grid entry is a multiple of
+    /// the configured resolution (ε-scaling then terminates below the
+    /// grid spacing, which makes the assignment exactly optimal).
+    fn exact_on_migration_costs(&self) -> bool {
+        matches!(self.resolution, Some(q) if q > 0.0 && ((1.0 / 16.0) / q).fract() == 0.0)
+    }
+
+    fn supports_warm_start(&self) -> bool {
+        true
+    }
+
+    /// The resolution changes both exactness and the returned argmin, so
+    /// it is part of the cache identity.
+    fn config_fingerprint(&self) -> u64 {
+        self.resolution.map(f64::to_bits).unwrap_or(u64::MAX)
     }
 
     fn name(&self) -> &'static str {
@@ -319,6 +438,44 @@ mod tests {
                 approx_eq(h, a, 1e-6)
             },
         );
+    }
+
+    #[test]
+    fn default_solve_batch_matches_per_instance_solves() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(73);
+        let matrices: Vec<Matrix> = (0..12)
+            .map(|_| {
+                let n = 1 + rng.below(6) as usize;
+                let m = n + rng.below(3) as usize;
+                let mut c = Matrix::zeros(n, m);
+                for i in 0..n {
+                    for j in 0..m {
+                        c.set(i, j, rng.below(64) as f64 / 16.0);
+                    }
+                }
+                c
+            })
+            .collect();
+        for engine in [
+            &HungarianEngine as &dyn MatchingEngine,
+            &AuctionEngine::default(),
+        ] {
+            // The auction's default rect path pads; only feed it squares.
+            let usable: Vec<Matrix> = matrices
+                .iter()
+                .filter(|c| engine.name() != "auction" || c.rows() == c.cols())
+                .cloned()
+                .collect();
+            let batched = engine.solve_batch(&usable);
+            assert_eq!(batched.len(), usable.len());
+            for (c, sol) in usable.iter().zip(&batched) {
+                let single = engine.solve_min_cost_rect(c);
+                assert_eq!(single.row_to_col, sol.row_to_col);
+                assert_eq!(single.cost.to_bits(), sol.cost.to_bits());
+            }
+            assert!(!engine.has_native_batch());
+        }
     }
 
     #[test]

@@ -1,0 +1,801 @@
+//! The batched matching service: every graph-matching instance a
+//! scheduling round generates — the `num_nodes²` Algorithm 3 node-pair
+//! matchings, the Algorithm 2 node matching, Algorithm 5's flat
+//! cluster-wide matching and Algorithm 4's packing matching — flows
+//! through one [`MatchingService`] that
+//!
+//! 1. **prunes** trivial node pairs before solving: empty×empty pairs
+//!    resolve to cost 0 with no matrix, empty×nonempty pairs get the
+//!    closed-form one-sided total (gated on [`sig_is_exact_prunable`] so
+//!    the closed form is bit-identical to what a solve would return);
+//! 2. **dedups** identical cost matrices by content key within a round
+//!    (symmetric clusters solve each unique instance once) and **caches**
+//!    solved instances by content across rounds — a node pair whose job
+//!    sets did not change since the previous round is a lookup, not a
+//!    rebuild-and-solve;
+//! 3. **solves the surviving unique instances as one batch**, either via
+//!    the engine's native [`MatchingEngine::solve_batch`] (the AOT auction
+//!    artifact's hook) or across a `std::thread::scope` worker pool with a
+//!    per-worker [`SolveScratch`] arena. Results are positionally
+//!    deterministic and bit-identical to sequential per-instance solves.
+//!
+//! Parity contract: with [`ServiceConfig::default`] every consumer's
+//! output (plans, migration counts, costs, packing matchings) is
+//! bit-identical to [`ServiceConfig::sequential_reference`], which
+//! reproduces the pre-service sequential path — property-tested in
+//! `tests/properties.rs` and end-to-end in `tests/integration_sim.rs`.
+//! The one deliberate exception is [`ServiceConfig::warm_start`] (default
+//! off): auction dual prices retained per node-pair position warm-start
+//! the next round's solve, which preserves *optimality* on quantized
+//! costs but may pick a different equally-optimal assignment.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::linalg::Matrix;
+
+use super::batch::{
+    one_sided_cost, pair_cost_matrix, sig_is_empty, sig_is_exact_prunable, Batch, NodeSig,
+    PairKey,
+};
+use super::hungarian::SolveScratch;
+use super::{AssignmentResult, MatchingEngine};
+
+/// Optimization toggles for [`MatchingService`]. Each flag is independent
+/// so parity tests can bisect a divergence to one optimization.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Closed-form costs for empty×empty and (exact-prunable)
+    /// empty×nonempty node pairs: no matrix is built, no solve runs.
+    pub prune: bool,
+    /// Within-round content dedup: identical cost matrices solve once.
+    pub dedup: bool,
+    /// Cross-round content cache: a pair whose node contents did not
+    /// change since a previous solve is a lookup.
+    pub cache: bool,
+    /// Solve the unique batch across a scoped worker pool.
+    pub parallel: bool,
+    /// Minimum unique instances before the pool is engaged — below this,
+    /// thread spawn costs more than the solves themselves.
+    pub parallel_threshold: usize,
+    /// Worker cap; 0 = `std::thread::available_parallelism()`.
+    pub workers: usize,
+    /// Retain auction dual prices per node-pair position and warm-start
+    /// that position's next solve. Off by default: warm starts preserve
+    /// optimality but may return a different equally-optimal assignment,
+    /// which breaks bit-parity with the cold path. Note the interaction
+    /// with `cache`: a pair whose content is *unchanged* is a cache hit
+    /// and never re-solves, so with both enabled warm starts only fire on
+    /// positions whose cost matrix actually changed (the intended case —
+    /// a changed matrix close to last round's is where retained prices
+    /// help); with `cache` off every recurring solve warm-starts.
+    pub warm_start: bool,
+    /// Cross-round cache entry cap; the cache is epoch-cleared when it
+    /// would exceed this (bounds memory on month-long simulations).
+    pub max_cache_entries: usize,
+    /// Cross-round cache *weight* cap, in signature GPU slots summed over
+    /// both sides of every entry. Entry counts alone do not bound bytes —
+    /// Algorithm 5's whole-cluster instances carry O(total GPUs) slots
+    /// each — so the cache also epoch-clears when its total slot weight
+    /// would exceed this.
+    pub max_cache_slots: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            prune: true,
+            dedup: true,
+            cache: true,
+            parallel: true,
+            parallel_threshold: 64,
+            workers: 0,
+            warm_start: false,
+            max_cache_entries: 65_536,
+            max_cache_slots: 262_144,
+        }
+    }
+}
+
+impl ServiceConfig {
+    /// Everything off: the service degenerates to the pre-service
+    /// build-all, solve-sequentially path. This is the reference side of
+    /// every parity test.
+    pub fn sequential_reference() -> ServiceConfig {
+        ServiceConfig {
+            prune: false,
+            dedup: false,
+            cache: false,
+            parallel: false,
+            parallel_threshold: usize::MAX,
+            workers: 1,
+            warm_start: false,
+            max_cache_entries: 0,
+            max_cache_slots: 0,
+        }
+    }
+}
+
+/// Per-round service counters, drained by
+/// [`MatchingService::take_round_stats`] into `MigrationOutcome` and the
+/// Fig. 14(b) decision-time breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MatchingServiceStats {
+    /// Matching instances the round generated (before any filtering).
+    pub instances: usize,
+    /// Instances resolved by closed-form pruning (no matrix, no solve).
+    pub pruned: usize,
+    /// Instances that shared an identical in-round instance's solve.
+    pub deduped: usize,
+    /// Instances resolved from the cross-round content cache.
+    pub cache_hits: usize,
+    /// Cost matrices actually constructed.
+    pub built: usize,
+    /// Engine solves actually performed.
+    pub solved: usize,
+    /// Solves that received a warm-start price hint.
+    pub warm_starts: usize,
+    /// Wall time spent inside engine solves.
+    pub solve_wall_s: f64,
+}
+
+impl MatchingServiceStats {
+    /// Fold a concurrently-produced stats block into this one: counts add,
+    /// solve wall time takes the max (the POP partition-stitch rule, where
+    /// partitions run on parallel threads).
+    pub fn absorb_parallel(&mut self, o: &MatchingServiceStats) {
+        self.instances += o.instances;
+        self.pruned += o.pruned;
+        self.deduped += o.deduped;
+        self.cache_hits += o.cache_hits;
+        self.built += o.built;
+        self.solved += o.solved;
+        self.warm_starts += o.warm_starts;
+        self.solve_wall_s = self.solve_wall_s.max(o.solve_wall_s);
+    }
+}
+
+/// One round's node-pair phase output: the Algorithm 2 node cost matrix
+/// plus the per-pair GPU assignments that were solved along the way.
+/// Pruned pairs have no eager assignment — the migration policy resolves
+/// the few it actually matches via [`MatchingService::pair_assignment`].
+pub struct NodePairRound {
+    pub node_cost: Matrix,
+    assignments: Vec<Option<Arc<AssignmentResult>>>,
+    cols: usize,
+}
+
+impl NodePairRound {
+    pub fn assignment(&self, k: usize, l: usize) -> Option<&Arc<AssignmentResult>> {
+        self.assignments[k * self.cols + l].as_ref()
+    }
+}
+
+/// The service: per-round prune/dedup/batch orchestration plus the
+/// cross-round content cache and warm-start price store. Engines are
+/// passed per call (the scheduler owns its `Arc<dyn MatchingEngine>`), so
+/// one service composes with any engine, including the PJRT-loaded AOT
+/// auction artifact — cached solutions and retained prices are keyed by
+/// `engine.name()` alongside the pair content, so mixing engines through
+/// one service can never serve one engine's assignment to another.
+pub struct MatchingService {
+    pub cfg: ServiceConfig,
+    cache: HashMap<PairKey, Arc<AssignmentResult>>,
+    /// Total signature slots held by `cache` (the byte-ish weight the
+    /// `max_cache_slots` budget bounds).
+    cache_slots: usize,
+    warm_prices: HashMap<(&'static str, u64, usize, usize), Vec<f64>>,
+    stats: MatchingServiceStats,
+}
+
+impl MatchingService {
+    pub fn new(cfg: ServiceConfig) -> MatchingService {
+        MatchingService {
+            cfg,
+            cache: HashMap::new(),
+            cache_slots: 0,
+            warm_prices: HashMap::new(),
+            stats: MatchingServiceStats::default(),
+        }
+    }
+
+    pub fn with_defaults() -> MatchingService {
+        MatchingService::new(ServiceConfig::default())
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+        self.cache_slots = 0;
+        self.warm_prices.clear();
+    }
+
+    /// Drain the counters accumulated since the last drain (one scheduling
+    /// round's worth when drained at the end of the migration stage, the
+    /// round's last matching consumer).
+    pub fn take_round_stats(&mut self) -> MatchingServiceStats {
+        std::mem::take(&mut self.stats)
+    }
+
+    pub fn peek_round_stats(&self) -> MatchingServiceStats {
+        self.stats
+    }
+
+    /// The tentpole entry point: price every (prev, next) node pair of a
+    /// round (Algorithm 2 lines 3–5) as one pruned, deduped, cached,
+    /// batch-solved unit. Entry `(k, l)` of the returned matrix is the
+    /// optimal Algorithm 3 matching cost of previous node `k` against next
+    /// node `l`, bit-identical to solving each pair individually.
+    pub fn node_pair_round(
+        &mut self,
+        engine: &dyn MatchingEngine,
+        prev_sigs: &[Arc<NodeSig>],
+        next_sigs: &[Arc<NodeSig>],
+    ) -> NodePairRound {
+        let n = prev_sigs.len();
+        let m = next_sigs.len();
+        // Algorithm 3 matches equally-sized GPU lists; a silent mismatch
+        // would mis-size every cost matrix.
+        let width = prev_sigs.first().map(|s| s.len()).unwrap_or(0);
+        assert!(
+            prev_sigs.iter().chain(next_sigs.iter()).all(|s| s.len() == width),
+            "node GPU lists must all have the same length"
+        );
+
+        let mut node_cost = Matrix::zeros(n, m);
+        let mut assignments: Vec<Option<Arc<AssignmentResult>>> = vec![None; n * m];
+        let prev_empty: Vec<bool> = prev_sigs.iter().map(|s| sig_is_empty(s)).collect();
+        let next_empty: Vec<bool> = next_sigs.iter().map(|s| sig_is_empty(s)).collect();
+        // One-sided closed forms additionally need the engine to be exact
+        // on the 1/16 migration-cost grid — an approximate engine could
+        // return a (worse) near-optimal total where the closed form is the
+        // true optimum, breaking bit-parity with the reference path.
+        let engine_exact = engine.exact_on_migration_costs();
+        let prev_prunable: Vec<bool> = prev_sigs
+            .iter()
+            .map(|s| engine_exact && sig_is_exact_prunable(s))
+            .collect();
+        let next_prunable: Vec<bool> = next_sigs
+            .iter()
+            .map(|s| engine_exact && sig_is_exact_prunable(s))
+            .collect();
+        let engine_name = engine.name();
+        let engine_cfg = engine.config_fingerprint();
+
+        let mut batch = Batch::default();
+        // (pair index, batch slot) links, filled in after the batch solve.
+        let mut links: Vec<(usize, usize)> = Vec::new();
+        self.stats.instances += n * m;
+        for k in 0..n {
+            for l in 0..m {
+                let idx = k * m + l;
+                if self.cfg.prune {
+                    if prev_empty[k] && next_empty[l] {
+                        // All-zero matrix: every engine's total is exactly
+                        // 0 regardless of the permutation it picks, so this
+                        // prune needs no exactness gate (entry stays 0.0).
+                        self.stats.pruned += 1;
+                        continue;
+                    }
+                    if prev_empty[k] && next_prunable[l] {
+                        node_cost.set(k, l, one_sided_cost(&next_sigs[l]));
+                        self.stats.pruned += 1;
+                        continue;
+                    }
+                    if next_empty[l] && prev_prunable[k] {
+                        node_cost.set(k, l, one_sided_cost(&prev_sigs[k]));
+                        self.stats.pruned += 1;
+                        continue;
+                    }
+                }
+                if self.cfg.cache || self.cfg.dedup {
+                    let key = PairKey {
+                        engine: engine_name,
+                        engine_cfg,
+                        prev: Arc::clone(&prev_sigs[k]),
+                        next: Arc::clone(&next_sigs[l]),
+                    };
+                    if self.cfg.cache {
+                        if let Some(sol) = self.cache.get(&key) {
+                            self.stats.cache_hits += 1;
+                            node_cost.set(k, l, sol.cost);
+                            assignments[idx] = Some(Arc::clone(sol));
+                            continue;
+                        }
+                    }
+                    let (slot, dup) = batch.push_keyed(key, self.cfg.dedup);
+                    if dup {
+                        self.stats.deduped += 1;
+                    } else {
+                        self.stats.built += 1;
+                    }
+                    links.push((idx, slot));
+                } else {
+                    let slot =
+                        batch.push_matrix(pair_cost_matrix(&prev_sigs[k], &next_sigs[l]));
+                    self.stats.built += 1;
+                    links.push((idx, slot));
+                }
+            }
+        }
+
+        // The sequential warm path only pays off for engines that actually
+        // consume price hints; everyone else keeps the batched path.
+        let solved = if self.cfg.warm_start && engine.supports_warm_start() {
+            self.solve_batch_warm(engine, &batch, &links, m)
+        } else {
+            self.solve_batch_now(engine, batch.matrices())
+        };
+        debug_assert_eq!(solved.len(), batch.len());
+        if self.cfg.cache {
+            for (key, sol) in batch.keys().iter().zip(&solved) {
+                if let Some(key) = key {
+                    self.cache_insert(key.clone(), Arc::clone(sol));
+                }
+            }
+        }
+        for &(idx, slot) in &links {
+            let sol = &solved[slot];
+            node_cost.set(idx / m, idx % m, sol.cost);
+            assignments[idx] = Some(Arc::clone(sol));
+        }
+        NodePairRound {
+            node_cost,
+            assignments,
+            cols: m,
+        }
+    }
+
+    /// GPU assignment for one (prev, next) node-pair content — the lazy
+    /// path for pairs whose *cost* was pruned but which the node matching
+    /// then selected. Content-cached, so e.g. the all-empty pair's zero
+    /// matrix is solved once ever per engine behaviour.
+    pub fn pair_assignment(
+        &mut self,
+        engine: &dyn MatchingEngine,
+        prev: &Arc<NodeSig>,
+        next: &Arc<NodeSig>,
+    ) -> Arc<AssignmentResult> {
+        let key = PairKey {
+            engine: engine.name(),
+            engine_cfg: engine.config_fingerprint(),
+            prev: Arc::clone(prev),
+            next: Arc::clone(next),
+        };
+        if self.cfg.cache {
+            if let Some(sol) = self.cache.get(&key) {
+                self.stats.cache_hits += 1;
+                return Arc::clone(sol);
+            }
+        }
+        let matrix = pair_cost_matrix(prev, next);
+        self.stats.built += 1;
+        let t0 = Instant::now();
+        let sol = Arc::new(engine.solve_min_cost(&matrix));
+        self.stats.solved += 1;
+        self.stats.solve_wall_s += t0.elapsed().as_secs_f64();
+        if self.cfg.cache {
+            self.cache_insert(key, Arc::clone(&sol));
+        }
+        sol
+    }
+
+    /// One standalone pair instance (Algorithm 5's whole-cluster matching
+    /// is a single "node pair" spanning every GPU): counted, cached,
+    /// solved.
+    pub fn solve_pair(
+        &mut self,
+        engine: &dyn MatchingEngine,
+        prev: &Arc<NodeSig>,
+        next: &Arc<NodeSig>,
+    ) -> Arc<AssignmentResult> {
+        self.stats.instances += 1;
+        self.pair_assignment(engine, prev, next)
+    }
+
+    /// Solve one square instance directly (the Algorithm 2 node matrix —
+    /// fresh floats every round, so content caching would never hit).
+    pub fn solve_square(
+        &mut self,
+        engine: &dyn MatchingEngine,
+        cost: &Matrix,
+    ) -> AssignmentResult {
+        self.stats.instances += 1;
+        self.stats.built += 1;
+        let t0 = Instant::now();
+        let sol = engine.solve_min_cost(cost);
+        self.stats.solved += 1;
+        self.stats.solve_wall_s += t0.elapsed().as_secs_f64();
+        sol
+    }
+
+    /// Algorithm 4's max-weight packing matching, routed through the
+    /// service so packing solves land in the same per-round stats (the
+    /// reduction itself lives in [`super::max_weight_matching`]).
+    pub fn max_weight(
+        &mut self,
+        engine: &dyn MatchingEngine,
+        n_left: usize,
+        n_right: usize,
+        edges: &[super::Edge],
+    ) -> Vec<super::MatchedPair> {
+        self.stats.instances += 1;
+        self.stats.built += 1;
+        let t0 = Instant::now();
+        let out = super::max_weight_matching(n_left, n_right, edges, engine);
+        self.stats.solved += 1;
+        self.stats.solve_wall_s += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    /// Solve `matrices` positionally. Three interchangeable paths — the
+    /// engine's native batch, the scoped worker pool, or a sequential
+    /// loop — all bit-identical because every instance is solved by the
+    /// same deterministic per-instance entry point.
+    fn solve_batch_now(
+        &mut self,
+        engine: &dyn MatchingEngine,
+        matrices: &[Matrix],
+    ) -> Vec<Arc<AssignmentResult>> {
+        if matrices.is_empty() {
+            return Vec::new();
+        }
+        let t0 = Instant::now();
+        let workers = self.worker_count(matrices.len());
+        let solved: Vec<AssignmentResult> = if engine.has_native_batch()
+            || !self.cfg.parallel
+            || matrices.len() < self.cfg.parallel_threshold
+            || workers <= 1
+        {
+            engine.solve_batch(matrices)
+        } else {
+            let chunk = matrices.len().div_ceil(workers);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = matrices
+                    .chunks(chunk)
+                    .map(|part| {
+                        scope.spawn(move || {
+                            // Per-worker scratch arena, reused across the
+                            // worker's whole chunk.
+                            let mut scratch = SolveScratch::default();
+                            part.iter()
+                                .map(|c| engine.solve_min_cost_rect_scratch(c, &mut scratch))
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("matching worker panicked"))
+                    .collect()
+            })
+        };
+        self.stats.solved += matrices.len();
+        self.stats.solve_wall_s += t0.elapsed().as_secs_f64();
+        solved.into_iter().map(Arc::new).collect()
+    }
+
+    /// Warm-start path: sequential by design (prices are retained per
+    /// node-pair position, so each solve feeds the next round's hint).
+    fn solve_batch_warm(
+        &mut self,
+        engine: &dyn MatchingEngine,
+        batch: &Batch,
+        links: &[(usize, usize)],
+        cols: usize,
+    ) -> Vec<Arc<AssignmentResult>> {
+        // Each slot's first consuming position owns the retained prices
+        // (per engine identity — prices from one solver configuration
+        // mean nothing to another).
+        let engine_name = engine.name();
+        let engine_cfg = engine.config_fingerprint();
+        let mut first_pos: Vec<Option<(usize, usize)>> = vec![None; batch.len()];
+        for &(idx, slot) in links {
+            if first_pos[slot].is_none() {
+                first_pos[slot] = Some((idx / cols, idx % cols));
+            }
+        }
+        let t0 = Instant::now();
+        let mut out = Vec::with_capacity(batch.len());
+        for (slot, matrix) in batch.matrices().iter().enumerate() {
+            let pos = first_pos[slot].expect("every batch slot has a consumer");
+            let price_key = (engine_name, engine_cfg, pos.0, pos.1);
+            let warm = self
+                .warm_prices
+                .get(&price_key)
+                .filter(|p| p.len() == matrix.cols())
+                .map(|p| p.as_slice());
+            if warm.is_some() {
+                self.stats.warm_starts += 1;
+            }
+            let (sol, prices) = engine.solve_min_cost_warm(matrix, warm);
+            if let Some(prices) = prices {
+                self.warm_prices.insert(price_key, prices);
+            }
+            out.push(Arc::new(sol));
+        }
+        self.stats.solved += batch.len();
+        self.stats.solve_wall_s += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    fn worker_count(&self, len: usize) -> usize {
+        let avail = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let cap = if self.cfg.workers == 0 {
+            avail
+        } else {
+            self.cfg.workers
+        };
+        cap.min(len).max(1)
+    }
+
+    fn cache_insert(&mut self, key: PairKey, sol: Arc<AssignmentResult>) {
+        let weight = key.prev.len() + key.next.len();
+        if self.cache.len() >= self.cfg.max_cache_entries
+            || self.cache_slots + weight > self.cfg.max_cache_slots
+        {
+            // Epoch reset: simpler than LRU bookkeeping and bounds memory;
+            // a steady-state round refills its working set in one pass.
+            self.cache.clear();
+            self.cache_slots = 0;
+        }
+        if self.cache.insert(key, sol).is_none() {
+            self.cache_slots += weight;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::{AuctionEngine, HungarianEngine};
+
+    fn sig(slots: &[&[(u64, usize)]]) -> Arc<NodeSig> {
+        Arc::new(slots.iter().map(|s| s.to_vec()).collect())
+    }
+
+    /// 1 busy node (jobs 1, 2) + `empties` empty nodes, 2 GPUs per node.
+    fn sigs_sparse(empties: usize) -> Vec<Arc<NodeSig>> {
+        let mut v = vec![sig(&[&[(1, 1)], &[(2, 1)]])];
+        for _ in 0..empties {
+            v.push(sig(&[&[], &[]]));
+        }
+        v
+    }
+
+    fn reference_round(prev: &[Arc<NodeSig>], next: &[Arc<NodeSig>]) -> NodePairRound {
+        let mut svc = MatchingService::new(ServiceConfig::sequential_reference());
+        svc.node_pair_round(&HungarianEngine, prev, next)
+    }
+
+    fn assert_rounds_match(a: &NodePairRound, b: &NodePairRound, n: usize, m: usize) {
+        for k in 0..n {
+            for l in 0..m {
+                assert_eq!(
+                    a.node_cost.get(k, l).to_bits(),
+                    b.node_cost.get(k, l).to_bits(),
+                    "cost diverged at pair ({k},{l})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_skips_empty_pairs_with_exact_costs() {
+        let prev = sigs_sparse(3);
+        let next = sigs_sparse(3);
+        let mut svc = MatchingService::with_defaults();
+        let round = svc.node_pair_round(&HungarianEngine, &prev, &next);
+        let stats = svc.take_round_stats();
+        assert_eq!(stats.instances, 16);
+        // 3×3 empty×empty + 3+3 empty×busy pairs prune; busy×busy solves.
+        assert_eq!(stats.pruned, 15);
+        assert_eq!(stats.solved, 1);
+        let reference = reference_round(&prev, &next);
+        assert_rounds_match(&round, &reference, 4, 4);
+    }
+
+    #[test]
+    fn dedup_collapses_identical_instances() {
+        // Two identical busy prev nodes against two identical busy next
+        // nodes: 4 instances, 1 unique solve.
+        let busy = sig(&[&[(1, 1)], &[(2, 2)]]);
+        let prev = vec![busy.clone(), busy.clone()];
+        let next = vec![busy.clone(), busy.clone()];
+        let mut svc = MatchingService::with_defaults();
+        let round = svc.node_pair_round(&HungarianEngine, &prev, &next);
+        let stats = svc.take_round_stats();
+        assert_eq!(stats.instances, 4);
+        assert_eq!(stats.built, 1);
+        assert_eq!(stats.deduped, 3);
+        assert_eq!(stats.solved, 1);
+        let reference = reference_round(&prev, &next);
+        assert_rounds_match(&round, &reference, 2, 2);
+        // Deduped pairs share the identical assignment object.
+        for k in 0..2 {
+            for l in 0..2 {
+                assert!(Arc::ptr_eq(
+                    round.assignment(0, 0).unwrap(),
+                    round.assignment(k, l).unwrap()
+                ));
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hits_across_rounds_and_invalidates_on_change() {
+        let prev = vec![sig(&[&[(1, 1)], &[(2, 1)]]), sig(&[&[(3, 1)], &[]])];
+        let next = prev.clone();
+        let mut svc = MatchingService::with_defaults();
+        svc.node_pair_round(&HungarianEngine, &prev, &next);
+        let first = svc.take_round_stats();
+        assert!(first.solved > 0);
+        // Same contents again: all non-pruned pairs are cache hits.
+        let round2 = svc.node_pair_round(&HungarianEngine, &prev, &next);
+        let second = svc.take_round_stats();
+        assert_eq!(second.solved, 0);
+        assert_eq!(second.cache_hits + second.pruned + second.deduped, 4);
+        let reference = reference_round(&prev, &next);
+        assert_rounds_match(&round2, &reference, 2, 2);
+        // Changed content must not hit the stale entry.
+        let changed = vec![sig(&[&[(1, 1)], &[(9, 1)]]), sig(&[&[(3, 1)], &[]])];
+        let round3 = svc.node_pair_round(&HungarianEngine, &prev, &changed);
+        let reference3 = reference_round(&prev, &changed);
+        assert_rounds_match(&round3, &reference3, 2, 2);
+    }
+
+    #[test]
+    fn parallel_pool_matches_sequential_batch() {
+        // Many distinct busy pairs with the pool forced on.
+        let prev: Vec<Arc<NodeSig>> =
+            (0..6).map(|i| sig(&[&[(i, 1)], &[(100 + i, 2)]])).collect();
+        let next: Vec<Arc<NodeSig>> =
+            (0..6).map(|i| sig(&[&[(200 + i, 1)], &[(i, 1)]])).collect();
+        let mut par = MatchingService::new(ServiceConfig {
+            parallel_threshold: 1,
+            ..Default::default()
+        });
+        let a = par.node_pair_round(&HungarianEngine, &prev, &next);
+        let b = reference_round(&prev, &next);
+        assert_rounds_match(&a, &b, 6, 6);
+    }
+
+    #[test]
+    fn auction_engine_parity_on_node_pairs() {
+        let prev = sigs_sparse(2);
+        let next = vec![
+            sig(&[&[(2, 1)], &[(9, 1)]]),
+            sig(&[&[], &[]]),
+            sig(&[&[(1, 1)], &[]]),
+        ];
+        let engine = AuctionEngine::default();
+        let mut svc = MatchingService::with_defaults();
+        let a = svc.node_pair_round(&engine, &prev, &next);
+        let mut seq = MatchingService::new(ServiceConfig::sequential_reference());
+        let b = seq.node_pair_round(&engine, &prev, &next);
+        assert_rounds_match(&a, &b, 3, 3);
+    }
+
+    #[test]
+    fn warm_start_preserves_costs() {
+        // Warm-started auction solves must price every pair identically to
+        // the cold run (assignments may legitimately differ).
+        let prev: Vec<Arc<NodeSig>> =
+            (0..3).map(|i| sig(&[&[(i, 1)], &[(50 + i, 1)]])).collect();
+        let next: Vec<Arc<NodeSig>> =
+            (0..3).map(|i| sig(&[&[(50 + i, 1)], &[(i, 1)]])).collect();
+        let engine = AuctionEngine::default();
+        let mut warm = MatchingService::new(ServiceConfig {
+            warm_start: true,
+            cache: false, // force re-solves so warm starts actually fire
+            ..Default::default()
+        });
+        let w1 = warm.node_pair_round(&engine, &prev, &next);
+        let s1 = warm.take_round_stats();
+        assert_eq!(s1.warm_starts, 0, "no prices retained yet");
+        let w2 = warm.node_pair_round(&engine, &prev, &next);
+        let s2 = warm.take_round_stats();
+        assert!(s2.warm_starts > 0, "second round should warm-start");
+        let cold = reference_round(&prev, &next);
+        assert_rounds_match(&w1, &cold, 3, 3);
+        assert_rounds_match(&w2, &cold, 3, 3);
+    }
+
+    #[test]
+    fn cache_eviction_bounds_memory() {
+        let mut svc = MatchingService::new(ServiceConfig {
+            max_cache_entries: 4,
+            ..Default::default()
+        });
+        for i in 0..20u64 {
+            let prev = vec![sig(&[&[(i, 1)], &[]])];
+            let next = vec![sig(&[&[(1000 + i, 1)], &[]])];
+            svc.node_pair_round(&HungarianEngine, &prev, &next);
+        }
+        assert!(svc.cache_len() <= 4);
+    }
+
+    #[test]
+    fn cache_slot_budget_bounds_wide_entries() {
+        // Whole-cluster (Algorithm 5) signatures are O(total GPUs) wide;
+        // the slot budget must bound the cache even when the entry count
+        // stays tiny.
+        let mut svc = MatchingService::new(ServiceConfig {
+            max_cache_slots: 10,
+            ..Default::default()
+        });
+        for i in 0..10u64 {
+            let wide = sig(&[&[(i, 1)], &[], &[], &[]]); // weight 4 + 4
+            let other = sig(&[&[(100 + i, 1)], &[], &[], &[]]);
+            svc.pair_assignment(&HungarianEngine, &wide, &other);
+            assert_eq!(svc.cache_len(), 1, "slot budget must epoch-clear");
+        }
+    }
+
+    #[test]
+    fn cache_is_engine_keyed() {
+        // Zero matrices are exactly where engines return different optimal
+        // permutations (our Hungarian: identity; the auction: reversed).
+        // One service used with both engines must keep their cached
+        // assignments apart — each engine gets its own solve back.
+        use crate::matching::pair_cost_matrix;
+        let empty = sig(&[&[], &[], &[]]);
+        let auction = AuctionEngine::default();
+        let mut svc = MatchingService::with_defaults();
+        let h = svc.pair_assignment(&HungarianEngine, &empty, &empty);
+        let a = svc.pair_assignment(&auction, &empty, &empty);
+        let h2 = svc.pair_assignment(&HungarianEngine, &empty, &empty);
+        assert_eq!(h.row_to_col, h2.row_to_col, "hungarian entry stable");
+        let matrix = pair_cost_matrix(&empty, &empty);
+        assert_eq!(h.row_to_col, HungarianEngine.solve_min_cost(&matrix).row_to_col);
+        assert_eq!(a.row_to_col, auction.solve_min_cost(&matrix).row_to_col);
+    }
+
+    #[test]
+    fn pair_assignment_caches_pruned_pairs() {
+        let empty = sig(&[&[], &[]]);
+        let mut svc = MatchingService::with_defaults();
+        let a = svc.pair_assignment(&HungarianEngine, &empty, &empty);
+        let stats1 = svc.take_round_stats();
+        assert_eq!(stats1.solved, 1);
+        let b = svc.pair_assignment(&HungarianEngine, &empty, &empty);
+        let stats2 = svc.take_round_stats();
+        assert_eq!(stats2.solved, 0);
+        assert_eq!(stats2.cache_hits, 1);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    #[should_panic(expected = "same length")]
+    fn unequal_gpu_lists_rejected() {
+        let mut svc = MatchingService::with_defaults();
+        let prev = vec![sig(&[&[], &[]])];
+        let next = vec![sig(&[&[]])]; // one-slot node vs two-slot node
+        svc.node_pair_round(&HungarianEngine, &prev, &next);
+    }
+
+    #[test]
+    fn approximate_engine_disables_one_sided_pruning() {
+        // The auction with `resolution: None` is only near-optimal, so the
+        // exact one-sided closed forms must not be used for it — only the
+        // engine-independent empty×empty prune may fire, and the serviced
+        // result must still match the engine's own sequential solves.
+        let prev = vec![sig(&[&[], &[]]), sig(&[&[(1, 1)], &[(2, 1)]])];
+        let next = vec![sig(&[&[(1, 1)], &[(2, 1)]]), sig(&[&[], &[]])];
+        let engine = AuctionEngine { resolution: None };
+        assert!(!engine.exact_on_migration_costs());
+        let mut svc = MatchingService::with_defaults();
+        let a = svc.node_pair_round(&engine, &prev, &next);
+        let stats = svc.take_round_stats();
+        assert_eq!(stats.pruned, 1, "only empty×empty may prune: {stats:?}");
+        let mut seq = MatchingService::new(ServiceConfig::sequential_reference());
+        let b = seq.node_pair_round(&engine, &prev, &next);
+        assert_rounds_match(&a, &b, 2, 2);
+    }
+}

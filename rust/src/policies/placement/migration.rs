@@ -12,13 +12,15 @@
 //!   its GPU set changed (the policy Fig. 1 criticizes).
 //! * [`MigrationMode::None`] — identity (for ablations).
 
-use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cluster::{ClusterSpec, PlacementPlan};
 use crate::jobs::JobId;
-use crate::linalg::Matrix;
-use crate::matching::{AssignmentResult, MatchingEngine};
+use crate::matching::{
+    node_sig, MatchingEngine, MatchingService, MatchingServiceStats, NodeSig,
+};
 
 /// Which migration policy to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,79 +42,37 @@ pub struct MigrationOutcome {
     pub cost: f64,
     /// Wall time spent deciding.
     pub decide_time_s: f64,
+    /// Matching-service counters drained at the end of the round (this is
+    /// the round's last matching consumer, so with a shared service these
+    /// include the packing stage's solves too).
+    pub service: MatchingServiceStats,
 }
 
-/// Algorithm 3: optimal GPU matching between one previous-round node and
-/// one new-round node. Returns (cost, assignment prev_gpu -> next_gpu).
-/// Job sizes come straight from the plans' live job→GPU indexes.
-fn node_level_matching(
-    prev: &PlacementPlan,
-    next: &PlacementPlan,
-    prev_gpus: &[usize],
-    next_gpus: &[usize],
-    engine: &dyn MatchingEngine,
-) -> (f64, AssignmentResult) {
-    let k = prev_gpus.len();
-    let mut c = Matrix::zeros(k, k);
-    for (a, &u) in prev_gpus.iter().enumerate() {
-        for (b, &v) in next_gpus.iter().enumerate() {
-            c.set(
-                a,
-                b,
-                gpu_pair_cost(
-                    prev.jobs_on(u),
-                    next.jobs_on(v),
-                    prev.job_gpu_map(),
-                    next.job_gpu_map(),
-                ),
-            );
-        }
-    }
-    let sol = engine.solve_min_cost(&c);
-    (sol.cost, sol)
-}
-
-/// Per-GPU migration cost between GPU `u`'s job set and GPU `v`'s job set
-/// (Algorithm 3 lines 4–7): each job in the symmetric difference costs
-/// 1/(2·num_gpus(job)). A job's amortization divisor is its own GPU count,
-/// read from the plans' job→GPU indexes (the two rounds agree on common
-/// jobs, so consult either).
-fn gpu_pair_cost(
-    jobs_u: &[JobId],
-    jobs_v: &[JobId],
-    prev_map: &BTreeMap<JobId, Vec<usize>>,
-    next_map: &BTreeMap<JobId, Vec<usize>>,
-) -> f64 {
-    let mut cost = 0.0;
-    let lookup = |j: JobId| {
-        prev_map
-            .get(&j)
-            .or_else(|| next_map.get(&j))
-            .map(|gpus| gpus.len())
-            .unwrap_or(1)
-            .max(1)
-    };
-    for &j in jobs_u {
-        if !jobs_v.contains(&j) {
-            cost += 1.0 / (2.0 * lookup(j) as f64);
-        }
-    }
-    for &j in jobs_v {
-        if !jobs_u.contains(&j) {
-            cost += 1.0 / (2.0 * lookup(j) as f64);
-        }
-    }
-    cost
-}
-
-/// Run the selected migration policy: produce the physical realization of
-/// `next` given the physical `prev`.
+/// Run the selected migration policy with a throwaway default-config
+/// matching service. Same results as [`migrate_with`]; schedulers that
+/// decide every round hold a persistent service instead so the
+/// cross-round cost-matrix cache actually carries over.
 pub fn migrate(
     spec: &ClusterSpec,
     prev: &PlacementPlan,
     next: &PlacementPlan,
     mode: MigrationMode,
     engine: &dyn MatchingEngine,
+) -> MigrationOutcome {
+    let mut service = MatchingService::with_defaults();
+    migrate_with(spec, prev, next, mode, engine, &mut service)
+}
+
+/// Run the selected migration policy: produce the physical realization of
+/// `next` given the physical `prev`. Every matching instance is routed
+/// through `service` (pruned/deduped/cached/batched per its config).
+pub fn migrate_with(
+    spec: &ClusterSpec,
+    prev: &PlacementPlan,
+    next: &PlacementPlan,
+    mode: MigrationMode,
+    engine: &dyn MatchingEngine,
+    service: &mut MatchingService,
 ) -> MigrationOutcome {
     let t0 = Instant::now();
     assert_eq!(prev.num_gpus(), spec.total_gpus());
@@ -124,9 +84,10 @@ pub fn migrate(
             migrations: next.migrations_from(prev),
             cost: next.migrations_from(prev) as f64,
             decide_time_s: 0.0,
+            service: service.take_round_stats(),
         },
-        MigrationMode::Flat => flat_migrate(prev, next, engine),
-        MigrationMode::Tesserae => tesserae_migrate(spec, prev, next, engine),
+        MigrationMode::Flat => flat_migrate(prev, next, engine, service),
+        MigrationMode::Tesserae => tesserae_migrate(spec, prev, next, engine, service),
     };
     MigrationOutcome {
         decide_time_s: t0.elapsed().as_secs_f64(),
@@ -134,54 +95,77 @@ pub fn migrate(
     }
 }
 
+/// Restrict both plans to the jobs present in both rounds (Algorithm 2
+/// line 2).
+fn filter_to_common(
+    prev: &PlacementPlan,
+    next: &PlacementPlan,
+) -> (PlacementPlan, PlacementPlan) {
+    let common: BTreeSet<JobId> = prev.jobs().intersection(&next.jobs()).copied().collect();
+    let mut prev_f = prev.clone();
+    let gone_prev: BTreeSet<JobId> = prev.jobs().difference(&common).copied().collect();
+    prev_f.remove_jobs(&gone_prev);
+    let mut next_f = next.clone();
+    let gone_next: BTreeSet<JobId> = next.jobs().difference(&common).copied().collect();
+    next_f.remove_jobs(&gone_next);
+    (prev_f, next_f)
+}
+
 /// Algorithm 2: remove jobs absent from either round, match GPUs within
-/// node pairs (Alg. 3), then match nodes with the Hungarian algorithm.
+/// node pairs (Alg. 3) — all `num_nodes²` instances as one service batch —
+/// then match nodes with the Hungarian algorithm.
 fn tesserae_migrate(
     spec: &ClusterSpec,
     prev: &PlacementPlan,
     next: &PlacementPlan,
     engine: &dyn MatchingEngine,
+    service: &mut MatchingService,
 ) -> MigrationOutcome {
-    // Line 2: restrict both plans to jobs present in both rounds.
-    let common: std::collections::BTreeSet<JobId> =
-        prev.jobs().intersection(&next.jobs()).copied().collect();
-    let mut prev_f = prev.clone();
-    let gone_prev: std::collections::BTreeSet<JobId> =
-        prev.jobs().difference(&common).copied().collect();
-    prev_f.remove_jobs(&gone_prev);
-    let mut next_f = next.clone();
-    let gone_next: std::collections::BTreeSet<JobId> =
-        next.jobs().difference(&common).copied().collect();
-    next_f.remove_jobs(&gone_next);
+    let (prev_f, next_f) = filter_to_common(prev, next);
 
     let nodes = spec.num_nodes;
-    // Lines 3-5: per node pair, Algorithm 3.
-    let mut node_cost = Matrix::zeros(nodes, nodes);
-    let mut node_plans: Vec<Vec<Option<AssignmentResult>>> = vec![vec![None; nodes]; nodes];
-    for k in 0..nodes {
-        let prev_gpus: Vec<usize> = spec.gpus_of_node(k).collect();
-        for l in 0..nodes {
-            let next_gpus: Vec<usize> = spec.gpus_of_node(l).collect();
-            let (c, m) =
-                node_level_matching(&prev_f, &next_f, &prev_gpus, &next_gpus, engine);
-            node_cost.set(k, l, c);
-            node_plans[k][l] = Some(m);
-        }
-    }
+    // Each node's GPU list, collected once — the compose loop below indexes
+    // into these instead of re-enumerating `gpus_of_node` per matched slot.
+    let node_gpus: Vec<Vec<usize>> = (0..nodes)
+        .map(|k| spec.gpus_of_node(k).collect())
+        .collect();
+    // Each signature built once and Arc-shared with the service: its n²
+    // cache-key probes are then refcount bumps, not deep copies.
+    let prev_sigs: Vec<Arc<NodeSig>> = node_gpus
+        .iter()
+        .map(|g| Arc::new(node_sig(&prev_f, g, &prev_f, &next_f)))
+        .collect();
+    let next_sigs: Vec<Arc<NodeSig>> = node_gpus
+        .iter()
+        .map(|g| Arc::new(node_sig(&next_f, g, &prev_f, &next_f)))
+        .collect();
+
+    // Lines 3-5: every node pair's Algorithm 3 instance, batched.
+    let round = service.node_pair_round(engine, &prev_sigs, &next_sigs);
     // Line 6: Hungarian over the node cost matrix.
-    let node_sol = engine.solve_min_cost(&node_cost);
+    let node_sol = service.solve_square(engine, &round.node_cost);
 
     // Compose: logical GPU g (on logical node l) is realized on the
     // physical GPU chosen by the matched node pair's GPU assignment.
     let mut new_gpu_of = vec![usize::MAX; spec.total_gpus()];
     for (k, &l) in node_sol.row_to_col.iter().enumerate() {
-        let m = node_plans[k][l].as_ref().unwrap();
+        let m = match round.assignment(k, l) {
+            Some(sol) => Arc::clone(sol),
+            // The pair's cost was pruned; its assignment is solved lazily
+            // (and content-cached) only because the node matching chose it.
+            None => service.pair_assignment(engine, &prev_sigs[k], &next_sigs[l]),
+        };
+        let prev_g = &node_gpus[k];
+        let next_g = &node_gpus[l];
+        assert_eq!(
+            m.row_to_col.len(),
+            prev_g.len(),
+            "node-pair assignment width diverged from the node's GPU count"
+        );
         // m.row_to_col[a] = b: physical gpu (node k, slot a) hosts the job
         // set of logical gpu (node l, slot b).
         for (a, &b) in m.row_to_col.iter().enumerate() {
-            let physical = spec.gpus_of_node(k).nth(a).unwrap();
-            let logical = spec.gpus_of_node(l).nth(b).unwrap();
-            new_gpu_of[logical] = physical;
+            new_gpu_of[next_g[b]] = prev_g[a];
         }
     }
     let plan = next.relabeled(&new_gpu_of);
@@ -190,39 +174,26 @@ fn tesserae_migrate(
         cost: node_sol.cost,
         plan,
         decide_time_s: 0.0,
+        service: service.take_round_stats(),
     }
 }
 
-/// Algorithm 5: flat GPU-level matching over the whole cluster.
+/// Algorithm 5: flat GPU-level matching over the whole cluster — one
+/// whole-cluster "node pair" instance of the service, content-cached so a
+/// steady-state round whose filtered plans did not change is a lookup.
 fn flat_migrate(
     prev: &PlacementPlan,
     next: &PlacementPlan,
     engine: &dyn MatchingEngine,
+    service: &mut MatchingService,
 ) -> MigrationOutcome {
-    let common: std::collections::BTreeSet<JobId> =
-        prev.jobs().intersection(&next.jobs()).copied().collect();
-    let mut prev_f = prev.clone();
-    prev_f.remove_jobs(&prev.jobs().difference(&common).copied().collect());
-    let mut next_f = next.clone();
-    next_f.remove_jobs(&next.jobs().difference(&common).copied().collect());
+    let (prev_f, next_f) = filter_to_common(prev, next);
 
     let n = prev.num_gpus();
-    let mut c = Matrix::zeros(n, n);
-    for u in 0..n {
-        for v in 0..n {
-            c.set(
-                u,
-                v,
-                gpu_pair_cost(
-                    prev_f.jobs_on(u),
-                    next_f.jobs_on(v),
-                    prev_f.job_gpu_map(),
-                    next_f.job_gpu_map(),
-                ),
-            );
-        }
-    }
-    let sol = engine.solve_min_cost(&c);
+    let all_gpus: Vec<usize> = (0..n).collect();
+    let prev_sig = Arc::new(node_sig(&prev_f, &all_gpus, &prev_f, &next_f));
+    let next_sig = Arc::new(node_sig(&next_f, &all_gpus, &prev_f, &next_f));
+    let sol = service.solve_pair(engine, &prev_sig, &next_sig);
     // sol.row_to_col[u] = v: physical gpu u hosts logical gpu v's jobs.
     let mut new_gpu_of = vec![usize::MAX; n];
     for (u, &v) in sol.row_to_col.iter().enumerate() {
@@ -234,6 +205,7 @@ fn flat_migrate(
         cost: sol.cost,
         plan,
         decide_time_s: 0.0,
+        service: service.take_round_stats(),
     }
 }
 
@@ -407,5 +379,64 @@ mod tests {
         let t = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
         let f = migrate(&spec, &prev, &next, MigrationMode::Flat, &HungarianEngine);
         assert_eq!(t.migrations, f.migrations);
+    }
+
+    #[test]
+    fn service_stats_surface_per_round() {
+        // A 4-node cluster with 2 busy nodes: the stats must account for
+        // every generated instance (16 node pairs + 1 node matrix) and the
+        // empty pairs must prune rather than solve.
+        let spec = ClusterSpec::new(4, 2, GpuType::A100);
+        let prev = plan(8, &[(1, &[0]), (2, &[2])]);
+        let next = plan(8, &[(2, &[0]), (1, &[2])]);
+        let out = migrate(&spec, &prev, &next, MigrationMode::Tesserae, &HungarianEngine);
+        let s = out.service;
+        assert_eq!(s.instances, 16 + 1, "16 node pairs + node matrix");
+        // 4 empty×empty + 8 empty×busy pairs prune; 4 busy×busy pairs and
+        // the node matrix solve eagerly; the matched empty pairs resolve
+        // lazily (one zero-matrix solve, then a content-cache hit).
+        assert_eq!(s.pruned, 12, "{s:?}");
+        assert_eq!(s.built, s.solved, "every built matrix is solved: {s:?}");
+        assert!(s.solved >= 5, "{s:?}");
+        assert!(
+            s.pruned + s.deduped + s.cache_hits + s.built >= s.instances,
+            "every instance resolved somehow: {s:?}"
+        );
+        assert!(s.solve_wall_s >= 0.0);
+    }
+
+    #[test]
+    fn persistent_service_matches_throwaway_service() {
+        // A service carried across rounds (cache warm) must produce exactly
+        // what per-call throwaway services produce.
+        use crate::matching::MatchingService;
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let rounds = [
+            plan(4, &[(1, &[0]), (2, &[1]), (3, &[2])]),
+            plan(4, &[(3, &[0]), (1, &[1]), (2, &[2])]),
+            // Three identical rounds at the tail: the second and third
+            // replay of the same contents must hit the warm cache.
+            plan(4, &[(1, &[0]), (2, &[1]), (4, &[3])]),
+            plan(4, &[(1, &[0]), (2, &[1]), (4, &[3])]),
+            plan(4, &[(1, &[0]), (2, &[1]), (4, &[3])]),
+        ];
+        let mut svc = MatchingService::with_defaults();
+        let mut total_hits = 0;
+        for w in rounds.windows(2) {
+            let warm = migrate_with(
+                &spec,
+                &w[0],
+                &w[1],
+                MigrationMode::Tesserae,
+                &HungarianEngine,
+                &mut svc,
+            );
+            let cold = migrate(&spec, &w[0], &w[1], MigrationMode::Tesserae, &HungarianEngine);
+            assert_eq!(warm.plan, cold.plan);
+            assert_eq!(warm.migrations, cold.migrations);
+            assert_eq!(warm.cost.to_bits(), cold.cost.to_bits());
+            total_hits += warm.service.cache_hits;
+        }
+        assert!(total_hits > 0, "stable rounds should hit the warm cache");
     }
 }

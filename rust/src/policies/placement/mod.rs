@@ -7,5 +7,5 @@ pub mod migration;
 pub mod packing;
 
 pub use allocate::{allocate_without_packing, Allocation};
-pub use migration::{migrate, MigrationMode, MigrationOutcome};
-pub use packing::{pack, PackedPair, PackingConfig, StrategyMode};
+pub use migration::{migrate, migrate_with, MigrationMode, MigrationOutcome};
+pub use packing::{pack, pack_with, PackedPair, PackingConfig, StrategyMode};

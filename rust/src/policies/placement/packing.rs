@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use crate::estimator::ThroughputSource;
 use crate::jobs::{JobId, ParallelismStrategy};
-use crate::matching::{max_weight_matching, Edge, MatchingEngine};
+use crate::matching::{Edge, MatchingEngine, MatchingService};
 use crate::policies::JobInfo;
 
 /// How packed LLMs pick their parallelism strategy (Fig. 15's arms).
@@ -118,6 +118,21 @@ pub fn pack(
     cfg: &PackingConfig,
     engine: &dyn MatchingEngine,
 ) -> Vec<PackedPair> {
+    let mut service = MatchingService::with_defaults();
+    pack_with(placed, pending, source, cfg, engine, &mut service)
+}
+
+/// [`pack`] with the matching solves routed through a caller-owned
+/// [`MatchingService`], so packing's matchings land in the same per-round
+/// service stats as the migration stage's.
+pub fn pack_with(
+    placed: &[&JobInfo],
+    pending: &[&JobInfo],
+    source: &dyn ThroughputSource,
+    cfg: &PackingConfig,
+    engine: &dyn MatchingEngine,
+    service: &mut MatchingService,
+) -> Vec<PackedPair> {
     let t0 = Instant::now();
     if placed.is_empty() || pending.is_empty() {
         return vec![];
@@ -173,7 +188,7 @@ pub fn pack(
         if edges.is_empty() {
             continue;
         }
-        let matches = max_weight_matching(pl_idx.len(), pe_idx.len(), &edges, engine);
+        let matches = service.max_weight(engine, pl_idx.len(), pe_idx.len(), &edges);
         for m in matches {
             let (_, _, sa, sb) = meta
                 .iter()
@@ -350,6 +365,28 @@ mod tests {
             &HungarianEngine,
         );
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pack_with_service_matches_direct_engine_path() {
+        let placed = [info(1, PointNet, 1), info(2, Dcgan, 1), info(5, ResNet50, 2)];
+        let pending = [info(3, ResNet50, 1), info(4, PointNet, 1), info(6, Dcgan, 2)];
+        let pl: Vec<&JobInfo> = placed.iter().collect();
+        let pe: Vec<&JobInfo> = pending.iter().collect();
+        let src = oracle();
+        let cfg = PackingConfig::default();
+        let direct = pack(&pl, &pe, &src, &cfg, &HungarianEngine);
+        let mut service = MatchingService::with_defaults();
+        let routed = pack_with(&pl, &pe, &src, &cfg, &HungarianEngine, &mut service);
+        assert_eq!(direct.len(), routed.len());
+        for (a, b) in direct.iter().zip(&routed) {
+            assert_eq!((a.placed, a.pending), (b.placed, b.pending));
+            assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+        }
+        // The service saw one matching instance per GPU-count group.
+        let stats = service.take_round_stats();
+        assert!(stats.instances >= 1);
+        assert_eq!(stats.instances, stats.solved);
     }
 
     #[test]

@@ -19,8 +19,8 @@ use std::time::Instant;
 use crate::estimator::ThroughputSource;
 use crate::jobs::ParallelismStrategy;
 use crate::linalg::{solve_lp, Lp, Matrix};
-use crate::matching::MatchingEngine;
-use crate::policies::placement::{allocate_without_packing, migrate, MigrationMode};
+use crate::matching::{MatchingEngine, MatchingService};
+use crate::policies::placement::{allocate_without_packing, migrate_with, MigrationMode};
 use crate::policies::JobInfo;
 
 use super::{best_isolated_strategies, DecisionTimings, RoundDecision, RoundInput, Scheduler};
@@ -40,6 +40,9 @@ pub struct GavelScheduler {
     pub packing: bool,
     source: Arc<dyn ThroughputSource>,
     engine: Arc<dyn MatchingEngine>,
+    /// Persistent matching service for the migration stage (only exercised
+    /// when `migration` is a real matching mode, e.g. Fig. 11's "w/" arm).
+    service: MatchingService,
     /// Migration realization (Gavel's own policy is the identity baseline;
     /// Fig. 11's "w/" arm swaps in Tesserae's algorithm).
     pub migration: MigrationMode,
@@ -62,6 +65,7 @@ impl GavelScheduler {
             packing,
             source,
             engine,
+            service: MatchingService::with_defaults(),
             migration: MigrationMode::GavelBaseline,
             pair_window: 6,
         }
@@ -224,12 +228,13 @@ impl Scheduler for GavelScheduler {
         }
         let packing_s = t1.elapsed().as_secs_f64();
 
-        let outcome = migrate(
+        let outcome = migrate_with(
             input.spec,
             input.prev_plan,
             &plan,
             self.migration,
             self.engine.as_ref(),
+            &mut self.service,
         );
 
         RoundDecision {
@@ -242,6 +247,7 @@ impl Scheduler for GavelScheduler {
                 packing_s,
                 migration_s: outcome.decide_time_s,
                 total_s: t_total.elapsed().as_secs_f64(),
+                matching: outcome.service,
             },
         }
     }

@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 
 use crate::cluster::{ClusterSpec, PlacementPlan};
 use crate::jobs::{JobId, ParallelismStrategy};
+use crate::matching::MatchingServiceStats;
 use crate::policies::JobInfo;
 
 /// Everything a scheduler sees at the start of a round.
@@ -33,6 +34,10 @@ pub struct DecisionTimings {
     pub packing_s: f64,
     pub migration_s: f64,
     pub total_s: f64,
+    /// The round's matching-service counters: instances generated, how
+    /// many were pruned/deduped/cache-hit instead of solved, and the wall
+    /// time inside engine solves.
+    pub matching: MatchingServiceStats,
 }
 
 /// A scheduler's output for one round.

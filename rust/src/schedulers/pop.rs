@@ -152,10 +152,12 @@ impl Scheduler for PopScheduler {
             }
             strategies.extend(d.strategies);
             packed_pairs.extend(d.packed_pairs);
-            // Parallel solve: wall time is the max across partitions.
+            // Parallel solve: wall time is the max across partitions;
+            // matching-service counts add, solve wall takes the max.
             timings.scheduling_s = timings.scheduling_s.max(d.timings.scheduling_s);
             timings.packing_s = timings.packing_s.max(d.timings.packing_s);
             timings.migration_s = timings.migration_s.max(d.timings.migration_s);
+            timings.matching.absorb_parallel(&d.timings.matching);
         }
         let migrations = plan.migrations_from(input.prev_plan);
         timings.total_s = t_total.elapsed().as_secs_f64();

@@ -8,9 +8,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::estimator::ThroughputSource;
-use crate::matching::MatchingEngine;
+use crate::matching::{MatchingEngine, MatchingService, ServiceConfig};
 use crate::policies::placement::{
-    allocate_without_packing, migrate, pack, MigrationMode, PackingConfig,
+    allocate_without_packing, migrate_with, pack_with, MigrationMode, PackingConfig,
 };
 use crate::policies::scheduling::SchedulingPolicy;
 use crate::policies::JobInfo;
@@ -23,6 +23,9 @@ pub struct TesseraeScheduler {
     policy: Box<dyn SchedulingPolicy>,
     source: Arc<dyn ThroughputSource>,
     engine: Arc<dyn MatchingEngine>,
+    /// Persistent across rounds so the matching service's cost-matrix
+    /// cache and dual-price store carry over (the cross-round win).
+    service: MatchingService,
     /// `None` disables GPU sharing entirely.
     pub packing: Option<PackingConfig>,
     pub migration: MigrationMode,
@@ -42,9 +45,17 @@ impl TesseraeScheduler {
             policy,
             source,
             engine,
+            service: MatchingService::with_defaults(),
             packing,
             migration,
         }
+    }
+
+    /// Replace the matching-service configuration (e.g.
+    /// [`ServiceConfig::sequential_reference`] for the parity tests and
+    /// the batched-vs-sequential benches). Drops any cached state.
+    pub fn set_service_config(&mut self, cfg: ServiceConfig) {
+        self.service = MatchingService::new(cfg);
     }
 
     /// Tesserae-T: Tiresias (2D-LAS) scheduling + full packing + the
@@ -139,12 +150,13 @@ impl Scheduler for TesseraeScheduler {
         let t1 = Instant::now();
         let mut packed_pairs = Vec::new();
         if let Some(cfg) = &self.packing {
-            let pairs = pack(
+            let pairs = pack_with(
                 &placed_infos,
                 &pending_infos,
                 self.source.as_ref(),
                 cfg,
                 self.engine.as_ref(),
+                &mut self.service,
             );
             for p in pairs {
                 let gpus = plan.gpus_of(p.placed).to_vec();
@@ -156,13 +168,15 @@ impl Scheduler for TesseraeScheduler {
         }
         let packing_s = t1.elapsed().as_secs_f64();
 
-        // 4. Migration minimization (line 16).
-        let outcome = migrate(
+        // 4. Migration minimization (line 16). Drains the round's service
+        // stats (packing included) into the outcome.
+        let outcome = migrate_with(
             input.spec,
             input.prev_plan,
             &plan,
             self.migration,
             self.engine.as_ref(),
+            &mut self.service,
         );
 
         RoundDecision {
@@ -175,6 +189,7 @@ impl Scheduler for TesseraeScheduler {
                 packing_s,
                 migration_s: outcome.decide_time_s,
                 total_s: t_total.elapsed().as_secs_f64(),
+                matching: outcome.service,
             },
         }
     }
@@ -323,6 +338,48 @@ mod tests {
         });
         assert!(d.timings.total_s > 0.0);
         assert!(d.timings.total_s >= d.timings.migration_s);
+        // The migration stage generated matching instances and the drained
+        // service stats rode along on the decision.
+        assert!(d.timings.matching.instances > 0);
+        assert!(d.timings.matching.solved <= d.timings.matching.instances);
+    }
+
+    #[test]
+    fn sequential_reference_config_matches_default_service() {
+        use crate::matching::ServiceConfig;
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let active = vec![
+            info(1, ModelKind::ResNet50, 2, 50.0),
+            info(2, ModelKind::Dcgan, 1, 30.0),
+            info(3, ModelKind::PointNet, 1, 20.0),
+            info(4, ModelKind::Dcgan, 1, 10.0),
+        ];
+        let mut fast = make(TesseraeScheduler::tesserae_t);
+        let mut slow = make(TesseraeScheduler::tesserae_t);
+        slow.set_service_config(ServiceConfig::sequential_reference());
+        let mut prev_fast = PlacementPlan::new(4);
+        let mut prev_slow = PlacementPlan::new(4);
+        for round in 0..4u64 {
+            let df = fast.decide(&RoundInput {
+                now: round as f64 * 360.0,
+                round,
+                active: &active,
+                prev_plan: &prev_fast,
+                spec: &spec,
+            });
+            let ds = slow.decide(&RoundInput {
+                now: round as f64 * 360.0,
+                round,
+                active: &active,
+                prev_plan: &prev_slow,
+                spec: &spec,
+            });
+            assert_eq!(df.plan, ds.plan, "round {round} plans diverged");
+            assert_eq!(df.migrations, ds.migrations);
+            assert_eq!(df.packed_pairs, ds.packed_pairs);
+            prev_fast = df.plan;
+            prev_slow = ds.plan;
+        }
     }
 
     #[test]

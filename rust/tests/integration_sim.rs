@@ -155,6 +155,57 @@ fn v100_cluster_slower_but_complete() {
 }
 
 #[test]
+fn serviced_scheduler_matches_sequential_reference_end_to_end() {
+    // ISSUE 2's end-to-end parity acceptance: a full simulation with the
+    // batched/pruned/cached matching service must reproduce the
+    // per-instance sequential path bit-for-bit, per job.
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator};
+    use tesserae::matching::{HungarianEngine, ServiceConfig};
+    use tesserae::profiler::Profiler;
+    use tesserae::schedulers::TesseraeScheduler;
+    use tesserae::simulator::{simulate, SimConfig};
+
+    let s = scale();
+    let trace = s.shockwave_trace();
+    let spec = s.spec(GpuType::A100);
+    let truth = Profiler::new(spec.gpu_type, s.seed);
+    let build = || {
+        TesseraeScheduler::tesserae_t(
+            Arc::new(CachedSource::new(OracleEstimator::new(truth.clone()))),
+            Arc::new(HungarianEngine),
+        )
+    };
+    let cfg = SimConfig::new(spec);
+    let mut serviced = build();
+    let mut reference = build();
+    reference.set_service_config(ServiceConfig::sequential_reference());
+    let ra = simulate(&trace, &mut serviced, &truth, &cfg);
+    let rb = simulate(&trace, &mut reference, &truth, &cfg);
+    assert_eq!(ra.avg_jct.to_bits(), rb.avg_jct.to_bits());
+    assert_eq!(ra.makespan.to_bits(), rb.makespan.to_bits());
+    assert_eq!(ra.total_migrations, rb.total_migrations);
+    assert_eq!(ra.rounds, rb.rounds);
+    assert_eq!(ra.outcomes.len(), rb.outcomes.len());
+    for (id, oa) in &ra.outcomes {
+        let ob = &rb.outcomes[id];
+        assert_eq!(oa.jct.to_bits(), ob.jct.to_bits(), "job {id}");
+        assert_eq!(oa.migrations, ob.migrations, "job {id}");
+    }
+    // The serviced run must have exercised the new machinery: solves
+    // happened, and fewer of them than instances generated.
+    let instances: usize = ra.timings.iter().map(|t| t.matching.instances).sum();
+    let solved: usize = ra.timings.iter().map(|t| t.matching.solved).sum();
+    assert!(solved > 0);
+    assert!(
+        solved < instances,
+        "service never avoided a solve: {solved} of {instances}"
+    );
+    let ref_solved: usize = rb.timings.iter().map(|t| t.matching.solved).sum();
+    assert!(ref_solved >= instances, "reference must solve every instance");
+}
+
+#[test]
 fn refactored_simulator_reproduces_seed_metrics_bit_for_bit() {
     // The refactor's parity contract: with gap skipping disabled the
     // simulator walks exactly the seed's round-by-round path, so the

@@ -7,8 +7,11 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use tesserae::cluster::{ClusterSpec, GpuType, PlacementPlan};
 use tesserae::jobs::JobId;
-use tesserae::matching::{max_weight_matching, AuctionEngine, HungarianEngine};
-use tesserae::policies::placement::{migrate, MigrationMode};
+use tesserae::matching::{
+    max_weight_matching, AuctionEngine, HungarianEngine, MatchingEngine, MatchingService,
+    ServiceConfig,
+};
+use tesserae::policies::placement::{migrate, migrate_with, MigrationMode};
 use tesserae::util::prop::forall;
 use tesserae::util::rng::Pcg64;
 
@@ -294,6 +297,135 @@ fn tesserae_migration_preserves_consolidation() {
                 if next.is_consolidated(j, spec) && !out.plan.is_consolidated(j, spec) {
                     return Err(format!("job {j} lost consolidation"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn matching_service_is_bit_identical_to_sequential_solves() {
+    // ISSUE 2's parity acceptance: with pruning, dedup, caching and the
+    // parallel pool all enabled, every migration outcome (plan, count,
+    // cost) is bit-identical to per-instance sequential solves — across
+    // random plans, both migration modes and both native engines.
+    forall(
+        "batched service == sequential reference",
+        131,
+        40,
+        |rng| {
+            let spec = ClusterSpec::new(
+                2 + rng.below(4) as usize,
+                2 + rng.below(3) as usize,
+                GpuType::A100,
+            );
+            let mut prev = random_plan(&spec, rng, 0);
+            let mut next = random_plan(&spec, rng, 1000);
+            overlay_common(&mut prev, &mut next, rng);
+            (spec, prev, next)
+        },
+        |(spec, prev, next)| {
+            let auction = AuctionEngine::default();
+            let engines: [&dyn MatchingEngine; 2] = [&HungarianEngine, &auction];
+            for mode in [MigrationMode::Tesserae, MigrationMode::Flat] {
+                for engine in engines {
+                    let mut batched = MatchingService::new(ServiceConfig {
+                        parallel_threshold: 1, // force the worker pool
+                        ..Default::default()
+                    });
+                    let mut reference =
+                        MatchingService::new(ServiceConfig::sequential_reference());
+                    let a = migrate_with(spec, prev, next, mode, engine, &mut batched);
+                    let b = migrate_with(spec, prev, next, mode, engine, &mut reference);
+                    if a.plan != b.plan {
+                        return Err(format!("{mode:?}/{}: plans diverged", engine.name()));
+                    }
+                    if a.migrations != b.migrations {
+                        return Err(format!(
+                            "{mode:?}/{}: migrations {} != {}",
+                            engine.name(),
+                            a.migrations,
+                            b.migrations
+                        ));
+                    }
+                    if a.cost.to_bits() != b.cost.to_bits() {
+                        return Err(format!(
+                            "{mode:?}/{}: cost {} != {}",
+                            engine.name(),
+                            a.cost,
+                            b.cost
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn matching_service_cache_replay_matches_cold_rebuilds() {
+    // Cross-round cache invalidation: one service carried across an
+    // evolving round sequence must produce exactly what a cold service
+    // produces per round; and replaying an identical round must resolve
+    // every node-pair instance without a single new pair solve.
+    forall(
+        "warm cache replay == cold rebuild",
+        137,
+        20,
+        |rng| {
+            let spec = ClusterSpec::new(3, 2, GpuType::A100);
+            let mut plans = vec![random_plan(&spec, rng, 0)];
+            for r in 1..5u64 {
+                // Evolve: drop a job, add a job, keep the rest in place —
+                // the partial-churn shape whose unchanged node pairs the
+                // cache should reuse.
+                let mut p = plans[(r - 1) as usize].clone();
+                let jobs: Vec<JobId> = p.jobs().into_iter().collect();
+                if !jobs.is_empty() && rng.f64() < 0.7 {
+                    p.remove(jobs[rng.below(jobs.len() as u64) as usize]);
+                }
+                if rng.f64() < 0.7 {
+                    let empty = p.empty_gpus();
+                    if !empty.is_empty() {
+                        let g = empty[rng.below(empty.len() as u64) as usize];
+                        p.place(10_000 * r + rng.below(10), &[g]);
+                    }
+                }
+                plans.push(p);
+            }
+            (spec, plans)
+        },
+        |(spec, plans)| {
+            let mut warm = MatchingService::with_defaults();
+            for w in plans.windows(2) {
+                let a = migrate_with(
+                    spec,
+                    &w[0],
+                    &w[1],
+                    MigrationMode::Tesserae,
+                    &HungarianEngine,
+                    &mut warm,
+                );
+                let b = migrate(spec, &w[0], &w[1], MigrationMode::Tesserae, &HungarianEngine);
+                if a.plan != b.plan || a.migrations != b.migrations {
+                    return Err("warm service diverged from cold rebuild".into());
+                }
+            }
+            // Replay the last window twice more: after the first replay the
+            // cache holds every pair content, so the second must solve only
+            // the (uncacheable) node matrix.
+            let (p, n) = (&plans[plans.len() - 2], &plans[plans.len() - 1]);
+            let r1 = migrate_with(spec, p, n, MigrationMode::Tesserae, &HungarianEngine, &mut warm);
+            let r2 = migrate_with(spec, p, n, MigrationMode::Tesserae, &HungarianEngine, &mut warm);
+            if r1.plan != r2.plan {
+                return Err("replayed round changed the outcome".into());
+            }
+            if r2.service.solved != 1 {
+                return Err(format!(
+                    "replay should only solve the node matrix: {:?}",
+                    r2.service
+                ));
             }
             Ok(())
         },
