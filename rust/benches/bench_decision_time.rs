@@ -1,10 +1,18 @@
 //! Fig. 2 / Fig. 14: scheduler decision time vs active jobs on a 256-GPU
-//! cluster, plus Tesserae-T's overhead breakdown and the matching-engine
-//! comparison.
+//! cluster at the paper's job counts (2048+), plus Tesserae-T's overhead
+//! breakdown and the matching-engine comparison.
+//!
+//! Both sweeps checkpoint per cell (`BENCH_fig2_checkpoint.json` /
+//! `BENCH_fig14b_checkpoint.json`): a budget-capped or interrupted run
+//! keeps every completed measurement, and re-running resumes from the
+//! files instead of re-measuring. Delete the files for a fresh sweep.
+//!
+//! Budget override: TESSERAE_FIG2_BUDGET_SECS (default 60).
 
 use std::time::Duration;
 
-use tesserae::experiments::scalability;
+use tesserae::experiments::scalability::{self, FIG2_PAPER_JOB_COUNTS};
+use tesserae::util::checkpoint::Checkpoint;
 
 fn main() {
     let budget = Duration::from_secs(
@@ -13,11 +21,30 @@ fn main() {
             .and_then(|v| v.parse().ok())
             .unwrap_or(60),
     );
+    let mut fig2_ckpt = Checkpoint::load_or_new("BENCH_fig2_checkpoint.json");
+    if !fig2_ckpt.is_empty() {
+        println!(
+            "resuming fig2 from {} cells in {}",
+            fig2_ckpt.len(),
+            fig2_ckpt.path().display()
+        );
+    }
     println!(
         "{}",
-        scalability::fig2_decision_time(&[250, 500, 1000, 2000, 3000], budget)
+        scalability::fig2_decision_time_checkpointed(
+            &FIG2_PAPER_JOB_COUNTS,
+            budget,
+            Some(&mut fig2_ckpt),
+        )
     );
-    println!("{}", scalability::fig14b_breakdown(&[250, 500, 1000, 2000]));
+    let mut fig14_ckpt = Checkpoint::load_or_new("BENCH_fig14b_checkpoint.json");
+    println!(
+        "{}",
+        scalability::fig14b_breakdown_checkpointed(
+            &[250, 500, 1000, 2048],
+            Some(&mut fig14_ckpt),
+        )
+    );
     println!(
         "{}",
         scalability::matching_engine_comparison(&[16, 64, 128, 256], true)

@@ -1,0 +1,184 @@
+//! LP-core benchmark: the dense tableau simplex vs the sparse revised
+//! simplex on real Gavel-shaped allocation instances, cold vs
+//! warm-started, across job counts.
+//!
+//! Emits `BENCH_lp.json` and asserts the PR's acceptance criteria inline:
+//! the two solvers agree on the optimal objective within 1e-6, and the
+//! warm-started round-over-round revised solve is ≥ 5x faster than a cold
+//! dense solve at 1024 jobs (in practice it is orders of magnitude
+//! faster; 5x is the floor that keeps the assert robust on loaded CI
+//! machines).
+//!
+//! Scale override: TESSERAE_BENCH_LP_SIZES=64,256,1024
+
+use std::time::Instant;
+
+use tesserae::experiments::scalability::synthetic_active_jobs;
+use tesserae::linalg::{solve_lp, solve_sparse_lp};
+use tesserae::schedulers::gavel::{
+    allocation_objective_into, build_allocation_lp, candidate_pairs,
+};
+use tesserae::schedulers::GavelObjective;
+use tesserae::util::benchutil::{fmt_duration, Table};
+use tesserae::util::json::Json;
+
+const TOTAL_GPUS: usize = 256;
+const WARM_ROUNDS: usize = 8;
+
+fn sizes() -> Vec<usize> {
+    std::env::var("TESSERAE_BENCH_LP_SIZES")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![64, 256, 1024])
+}
+
+fn main() {
+    let source: std::sync::Arc<dyn tesserae::estimator::ThroughputSource> =
+        std::sync::Arc::new(tesserae::estimator::CachedSource::new(
+            tesserae::estimator::OracleEstimator::new(tesserae::profiler::Profiler::new(
+                tesserae::cluster::GpuType::A100,
+                21,
+            )),
+        ));
+
+    let mut t = Table::new(&[
+        "jobs",
+        "vars",
+        "rows",
+        "dense cold",
+        "revised cold",
+        "revised warm (avg)",
+        "warm vs dense",
+    ]);
+    let mut cases = Vec::new();
+    let mut speedup_at_1024: Option<f64> = None;
+
+    for n in sizes() {
+        let mut jobs = synthetic_active_jobs(n, 21);
+        let pairs = candidate_pairs(&jobs, true, 6);
+        let mut lp = build_allocation_lp(&jobs, &pairs, TOTAL_GPUS);
+        allocation_objective_into(
+            GavelObjective::Las,
+            &jobs,
+            &pairs,
+            source.as_ref(),
+            &mut lp.objective,
+        );
+
+        // Cold solves: revised, then the retained dense tableau on the
+        // materialized instance (bounds as explicit rows — the seed
+        // formulation).
+        let t0 = Instant::now();
+        let (rev_cold, mut warm) = solve_sparse_lp(&lp, None).expect("revised cold solve");
+        let revised_cold_s = t0.elapsed().as_secs_f64();
+
+        let dense_lp = lp.to_dense_lp();
+        let t0 = Instant::now();
+        let dense = solve_lp(&dense_lp).expect("dense cold solve");
+        let dense_cold_s = t0.elapsed().as_secs_f64();
+
+        assert!(
+            (rev_cold.objective - dense.objective).abs()
+                <= 1e-6 * (1.0 + dense.objective.abs()),
+            "{n} jobs: revised {} vs dense {} objective",
+            rev_cold.objective,
+            dense.objective
+        );
+
+        // Warm rounds: drift the LAS weights (the round-over-round Gavel
+        // case — attained service grows, structure unchanged), re-patch
+        // the objective in place and re-solve from the previous basis.
+        let mut warm_total_s = 0.0;
+        let mut warm_iters = 0usize;
+        for _round in 0..WARM_ROUNDS {
+            for (i, j) in jobs.iter_mut().enumerate() {
+                j.attained_service += 360.0 * (1 + i % 5) as f64;
+            }
+            allocation_objective_into(
+                GavelObjective::Las,
+                &jobs,
+                &pairs,
+                source.as_ref(),
+                &mut lp.objective,
+            );
+            let t0 = Instant::now();
+            let (sol, next_warm) = solve_sparse_lp(&lp, Some(&warm)).expect("warm solve");
+            warm_total_s += t0.elapsed().as_secs_f64();
+            warm_iters += sol.iterations;
+            warm = next_warm;
+        }
+        let warm_avg_s = warm_total_s / WARM_ROUNDS as f64;
+
+        // Final-round parity: warm must land on the same optimum a cold
+        // revised solve of the current objective finds.
+        let (final_cold, _) = solve_sparse_lp(&lp, None).expect("final cold solve");
+        let (final_warm, _) = solve_sparse_lp(&lp, Some(&warm)).expect("final warm solve");
+        assert!(
+            (final_warm.objective - final_cold.objective).abs()
+                <= 1e-8 * (1.0 + final_cold.objective.abs()),
+            "{n} jobs: warm {} vs cold {} after drift",
+            final_warm.objective,
+            final_cold.objective
+        );
+
+        let speedup = dense_cold_s / warm_avg_s.max(1e-9);
+        if n == 1024 {
+            speedup_at_1024 = Some(speedup);
+        }
+        t.row(&[
+            format!("{n}"),
+            format!("{}", lp.num_vars()),
+            format!("{}", lp.num_rows()),
+            fmt_duration(dense_cold_s),
+            fmt_duration(revised_cold_s),
+            fmt_duration(warm_avg_s),
+            format!("{speedup:.1}x"),
+        ]);
+        cases.push(Json::obj(vec![
+            ("jobs", Json::num(n as f64)),
+            ("vars", Json::num(lp.num_vars() as f64)),
+            ("rows", Json::num(lp.num_rows() as f64)),
+            ("pairs", Json::num(pairs.len() as f64)),
+            ("dense_cold_s", Json::num(dense_cold_s)),
+            ("revised_cold_s", Json::num(revised_cold_s)),
+            ("revised_warm_avg_s", Json::num(warm_avg_s)),
+            ("warm_rounds", Json::num(WARM_ROUNDS as f64)),
+            ("dense_objective", Json::num(dense.objective)),
+            ("revised_objective", Json::num(rev_cold.objective)),
+            ("cold_iterations", Json::num(rev_cold.iterations as f64)),
+            (
+                "warm_avg_iterations",
+                Json::num(warm_iters as f64 / WARM_ROUNDS as f64),
+            ),
+            ("warm_vs_dense_speedup", Json::num(speedup)),
+        ]));
+    }
+
+    println!(
+        "LP core: dense tableau vs sparse revised simplex (Gavel-shaped, {TOTAL_GPUS} GPUs)\n{}",
+        t.render()
+    );
+
+    // Acceptance: warm-started round-over-round Gavel solves are ≥ 5x
+    // faster than cold dense solves at 1024 jobs.
+    if let Some(speedup) = speedup_at_1024 {
+        assert!(
+            speedup >= 5.0,
+            "acceptance failed: warm revised only {speedup:.2}x vs cold dense at 1024 jobs"
+        );
+        println!("acceptance: warm revised {speedup:.1}x >= 5x vs cold dense at 1024 jobs");
+    } else {
+        println!("note: 1024-job case not in TESSERAE_BENCH_LP_SIZES; acceptance skipped");
+    }
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("lp")),
+        ("total_gpus", Json::num(TOTAL_GPUS as f64)),
+        ("cases", Json::arr(cases)),
+    ]);
+    match std::fs::write("BENCH_lp.json", json.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_lp.json"),
+        Err(e) => println!("could not write BENCH_lp.json: {e}"),
+    }
+}

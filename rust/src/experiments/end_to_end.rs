@@ -75,7 +75,8 @@ pub fn cdf_rows(results: &[(&str, &SimResult)]) -> String {
     t.render()
 }
 
-/// Fig. 11: Tesserae-T vs Gavel, plus the migration-algorithm ablation
+/// Fig. 11: Tesserae-T vs the optimization-based baselines (Gavel and
+/// partition-parallel POP-8), plus the migration-algorithm ablation
 /// (paper: packing JCT 1.15–1.41x; migration −36%, JCT 1.22x).
 pub fn fig11_vs_gavel(scale: &Scale) -> String {
     let trace = scale.shockwave_trace();
@@ -85,11 +86,13 @@ pub fn fig11_vs_gavel(scale: &Scale) -> String {
             SchedKind::TesseraeT,
             SchedKind::TesseraeTBasicMigration,
             SchedKind::Gavel,
+            SchedKind::Pop(8),
         ],
         &trace,
         spec,
         scale.seed,
     );
+    let pop = results.pop().unwrap();
     let gavel = results.pop().unwrap();
     let basic = results.pop().unwrap();
     let ours = results.pop().unwrap();
@@ -101,7 +104,7 @@ pub fn fig11_vs_gavel(scale: &Scale) -> String {
         "migrations",
         "JCT vs Gavel",
     ]);
-    for r in [&ours, &basic, &gavel] {
+    for r in [&ours, &basic, &gavel, &pop] {
         t.row(&[
             r.scheduler.clone(),
             format!("{:.0}", r.avg_jct),
@@ -197,6 +200,7 @@ pub fn fig17_gavel_trace(scale: &Scale) -> String {
         SchedKind::Tiresias,
         SchedKind::TiresiasSingle,
         SchedKind::Gavel,
+        SchedKind::Pop(8),
     ];
     let results: Vec<SimResult> = run_sims_parallel(&kinds, &trace, spec, scale.seed);
     let ours = &results[0];

@@ -1,13 +1,18 @@
-//! Dense linear-algebra substrate: matrices, Cholesky factorization (for the
-//! Gaussian-process estimator) and a dense simplex LP solver (for the
-//! Gavel / POP baselines). Implemented from scratch — the offline crate set
-//! has no linear algebra crates.
+//! Linear-algebra substrate: dense matrices, Cholesky factorization (for
+//! the Gaussian-process estimator), a dense tableau simplex (retained as
+//! the parity oracle) and the sparse revised-simplex LP core that the
+//! Gavel / POP baselines solve through. Implemented from scratch — the
+//! offline crate set has no linear algebra crates.
 
 pub mod lp;
 pub mod matrix;
+pub mod revised;
+pub mod sparse;
 
 pub use lp::{solve_lp, Lp, LpError, LpSolution};
 pub use matrix::Matrix;
+pub use revised::{solve_sparse_lp, SparseLp, WarmStart};
+pub use sparse::{CscBuilder, CscMatrix};
 
 /// Cholesky factorization of a symmetric positive-definite matrix:
 /// returns lower-triangular `L` with `L Lᵀ = A`. Errors if `A` is not SPD

@@ -1,0 +1,945 @@
+//! Sparse revised-simplex LP solver with bounded variables and warm starts.
+//!
+//! This is the scalable substrate behind the Gavel / POP baselines. The
+//! dense tableau solver (`super::lp`) carries the full `m × (n + m)`
+//! tableau through every pivot; Gavel's allocation LPs are almost entirely
+//! sparse (one dense capacity row plus coupling rows with ≤ 3 nonzeros per
+//! column) and their `x_j ≤ 1` box rows used to dominate the tableau. The
+//! revised method stores the constraints once in CSC form, keeps only an
+//! LU factorization of the current `m × m` basis (updated by eta vectors,
+//! periodically refactorized), and handles `0 ≤ x_j ≤ u_j` natively so box
+//! constraints cost bound flips instead of rows:
+//!
+//! maximize    cᵀx
+//! subject to  A x ≤ b,  0 ≤ x ≤ u,  b ≥ 0   (u_j = +∞ allowed)
+//!
+//! Determinism mirrors the dense solver: Dantzig pricing (most favorable
+//! reduced cost, lowest index on ties) with a Bland's-rule fallback once
+//! degenerate stalling is detected, and lowest-variable-index tie-breaks
+//! in the ratio test — so repeated solves of one instance pivot
+//! identically, and the Bland fallback guarantees termination.
+//!
+//! [`WarmStart`] captures the optimal basis + nonbasic bound statuses of a
+//! solve. Re-solving after an objective change (the Gavel round-over-round
+//! case: job weights drift, constraint structure unchanged) restarts from
+//! that basis — still primal feasible — and typically needs a handful of
+//! pivots instead of thousands. An incompatible or infeasible warm start
+//! silently falls back to a cold start, so callers may always pass one.
+
+use super::lp::{Lp, LpError, LpSolution};
+use super::matrix::Matrix;
+use super::sparse::CscMatrix;
+
+/// LP instance with sparse constraints and native variable upper bounds.
+#[derive(Debug, Clone)]
+pub struct SparseLp {
+    /// Objective coefficients (maximized), length n.
+    pub objective: Vec<f64>,
+    /// Structural constraint matrix, m × n (`A x ≤ b`).
+    pub constraints: CscMatrix,
+    /// Right-hand sides, length m; must be non-negative.
+    pub rhs: Vec<f64>,
+    /// Per-variable upper bounds, length n; `f64::INFINITY` for unbounded.
+    pub upper: Vec<f64>,
+}
+
+impl SparseLp {
+    /// Wrap a dense standard-form LP (no finite bounds).
+    pub fn from_dense(lp: &Lp) -> SparseLp {
+        SparseLp {
+            objective: lp.objective.clone(),
+            constraints: CscMatrix::from_dense(&lp.constraints),
+            rhs: lp.rhs.clone(),
+            upper: vec![f64::INFINITY; lp.objective.len()],
+        }
+    }
+
+    /// Materialize as a dense standard-form LP with every finite upper
+    /// bound appended as an explicit `x_j ≤ u_j` row — the formulation the
+    /// dense tableau solver accepts. Parity tests solve both sides.
+    pub fn to_dense_lp(&self) -> Lp {
+        let n = self.objective.len();
+        let m = self.rhs.len();
+        let bounded: Vec<usize> = (0..n).filter(|&j| self.upper[j].is_finite()).collect();
+        let dense = self.constraints.to_dense();
+        let mut a = Matrix::zeros(m + bounded.len(), n);
+        for r in 0..m {
+            for c in 0..n {
+                a.set(r, c, dense.get(r, c));
+            }
+        }
+        let mut rhs = self.rhs.clone();
+        for (extra, &j) in bounded.iter().enumerate() {
+            a.set(m + extra, j, 1.0);
+            rhs.push(self.upper[j]);
+        }
+        Lp {
+            objective: self.objective.clone(),
+            constraints: a,
+            rhs,
+        }
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.objective.len()
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rhs.len()
+    }
+}
+
+/// Basis snapshot from a completed solve: which of the `n + m` variables
+/// (structural then slack) are basic, and which nonbasic variables rest at
+/// their upper bound. Opaque to callers; feed it back into
+/// [`solve_sparse_lp`] to warm-start the next solve of a same-shaped
+/// instance.
+#[derive(Debug, Clone)]
+pub struct WarmStart {
+    n: usize,
+    m: usize,
+    basis: Vec<usize>,
+    at_upper: Vec<bool>,
+}
+
+impl WarmStart {
+    fn compatible(&self, n: usize, m: usize) -> bool {
+        if self.n != n || self.m != m || self.basis.len() != m {
+            return false;
+        }
+        if self.at_upper.len() != n + m {
+            return false;
+        }
+        let mut seen = vec![false; n + m];
+        for &v in &self.basis {
+            if v >= n + m || seen[v] {
+                return false;
+            }
+            seen[v] = true;
+        }
+        true
+    }
+}
+
+/// Reduced-cost / pivot tolerance (matches the dense solver's `EPS`).
+const EPS: f64 = 1e-9;
+/// Below this a factorization pivot counts as singular.
+const PIVOT_TOL: f64 = 1e-10;
+/// Eta-file length that triggers a refactorization (and an exact
+/// recomputation of the basic values, bounding drift).
+const REFACTOR_EVERY: usize = 64;
+/// Bound violation beyond which a warm-start basis is rejected.
+const WARM_FEAS_TOL: f64 = 1e-6;
+
+/// Sparse LU factors of a basis matrix, `P B = L U` with partial pivoting.
+/// Built left-looking with a dense accumulator: O(m² + fill) per
+/// factorization, which the near-triangular Gavel bases keep tiny.
+struct LuFactors {
+    m: usize,
+    /// Column `k` of `L` (unit diagonal implicit): `(original_row,
+    /// multiplier)` for rows pivoted *after* step `k`.
+    l_cols: Vec<Vec<(usize, f64)>>,
+    /// Column `j` of `U` above the diagonal: `(step k < j, value)`.
+    u_cols: Vec<Vec<(usize, f64)>>,
+    u_diag: Vec<f64>,
+    /// Step `k` → original row chosen as pivot.
+    pivot_row: Vec<usize>,
+    /// Original row → step at which it was pivoted.
+    rank_of_row: Vec<usize>,
+}
+
+/// Scatter basis column `var` (structural CSC column or slack unit vector)
+/// into `(stamp, work)` generation `gen`.
+fn scatter_basis_col(
+    lp: &SparseLp,
+    var: usize,
+    gen: u32,
+    stamp: &mut [u32],
+    work: &mut [f64],
+) {
+    let n = lp.objective.len();
+    if var < n {
+        let (rows, vals) = lp.constraints.col(var);
+        for (&i, &v) in rows.iter().zip(vals) {
+            stamp[i] = gen;
+            work[i] = v;
+        }
+    } else {
+        let i = var - n;
+        stamp[i] = gen;
+        work[i] = 1.0;
+    }
+}
+
+fn factorize(lp: &SparseLp, basis: &[usize]) -> Result<LuFactors, LpError> {
+    let m = basis.len();
+    let mut f = LuFactors {
+        m,
+        l_cols: Vec::with_capacity(m),
+        u_cols: Vec::with_capacity(m),
+        u_diag: Vec::with_capacity(m),
+        pivot_row: Vec::with_capacity(m),
+        rank_of_row: vec![usize::MAX; m],
+    };
+    let mut work = vec![0.0f64; m];
+    let mut stamp = vec![0u32; m];
+    let mut gen = 0u32;
+    for (step, &var) in basis.iter().enumerate() {
+        gen += 1;
+        scatter_basis_col(lp, var, gen, &mut stamp, &mut work);
+        // Left-looking elimination by the previous pivots, in step order.
+        let mut ucol = Vec::new();
+        for k in 0..step {
+            let pr = f.pivot_row[k];
+            let xk = if stamp[pr] == gen { work[pr] } else { 0.0 };
+            if xk == 0.0 {
+                continue;
+            }
+            ucol.push((k, xk));
+            for &(i, l) in &f.l_cols[k] {
+                if stamp[i] == gen {
+                    work[i] -= l * xk;
+                } else {
+                    stamp[i] = gen;
+                    work[i] = -l * xk;
+                }
+            }
+        }
+        // Partial pivoting over the not-yet-pivoted rows (lowest original
+        // row wins ties, keeping the factorization deterministic).
+        let mut pr = usize::MAX;
+        let mut best = 0.0f64;
+        for i in 0..m {
+            if f.rank_of_row[i] == usize::MAX && stamp[i] == gen {
+                let a = work[i].abs();
+                if a > best {
+                    best = a;
+                    pr = i;
+                }
+            }
+        }
+        if pr == usize::MAX || best < PIVOT_TOL {
+            return Err(LpError::BadInput(format!(
+                "singular basis at factorization step {step}"
+            )));
+        }
+        let diag = work[pr];
+        let mut lcol = Vec::new();
+        for i in 0..m {
+            if i != pr && f.rank_of_row[i] == usize::MAX && stamp[i] == gen && work[i] != 0.0 {
+                lcol.push((i, work[i] / diag));
+            }
+        }
+        f.pivot_row.push(pr);
+        f.rank_of_row[pr] = step;
+        f.u_diag.push(diag);
+        f.u_cols.push(ucol);
+        f.l_cols.push(lcol);
+    }
+    Ok(f)
+}
+
+impl LuFactors {
+    /// Solve `B z = x` (FTRAN). `x` is indexed by original row and is
+    /// consumed as scratch; the result is indexed by basis position.
+    fn ftran(&self, mut x: Vec<f64>) -> Vec<f64> {
+        let m = self.m;
+        let mut y = vec![0.0; m];
+        for k in 0..m {
+            let v = x[self.pivot_row[k]];
+            if v != 0.0 {
+                for &(i, l) in &self.l_cols[k] {
+                    x[i] -= l * v;
+                }
+            }
+            y[k] = v;
+        }
+        for j in (0..m).rev() {
+            let zj = y[j] / self.u_diag[j];
+            y[j] = zj;
+            if zj != 0.0 {
+                for &(k, u) in &self.u_cols[j] {
+                    y[k] -= u * zj;
+                }
+            }
+        }
+        y
+    }
+
+    /// Solve `Bᵀ y = c` (BTRAN). `c` is indexed by basis position; the
+    /// result is indexed by original row.
+    fn btran(&self, c: &[f64]) -> Vec<f64> {
+        let m = self.m;
+        let mut w = vec![0.0; m];
+        for j in 0..m {
+            let mut s = c[j];
+            for &(k, u) in &self.u_cols[j] {
+                s -= u * w[k];
+            }
+            w[j] = s / self.u_diag[j];
+        }
+        for k in (0..m).rev() {
+            let mut s = w[k];
+            for &(i, l) in &self.l_cols[k] {
+                s -= l * w[self.rank_of_row[i]];
+            }
+            w[k] = s;
+        }
+        let mut y = vec![0.0; m];
+        for k in 0..m {
+            y[self.pivot_row[k]] = w[k];
+        }
+        y
+    }
+}
+
+/// One product-form update: replacing basis position `r` with a column
+/// whose FTRAN image was `w` multiplies the basis by `E = I + (w − e_r)
+/// e_rᵀ`, so `E⁻¹` is applied after the base FTRAN and `E⁻ᵀ` before the
+/// base BTRAN.
+struct Eta {
+    r: usize,
+    wr: f64,
+    /// Positions `≠ r` with nonzero `w`.
+    entries: Vec<(usize, f64)>,
+}
+
+/// The factorized basis: base LU plus the eta file accumulated since the
+/// last refactorization.
+struct FactorizedBasis {
+    lu: LuFactors,
+    etas: Vec<Eta>,
+}
+
+impl FactorizedBasis {
+    fn fresh(lp: &SparseLp, basis: &[usize]) -> Result<FactorizedBasis, LpError> {
+        Ok(FactorizedBasis {
+            lu: factorize(lp, basis)?,
+            etas: Vec::new(),
+        })
+    }
+
+    fn ftran(&self, x: Vec<f64>) -> Vec<f64> {
+        let mut z = self.lu.ftran(x);
+        for e in &self.etas {
+            let zr = z[e.r] / e.wr;
+            z[e.r] = zr;
+            if zr != 0.0 {
+                for &(i, w) in &e.entries {
+                    z[i] -= w * zr;
+                }
+            }
+        }
+        z
+    }
+
+    fn btran(&self, c: &[f64]) -> Vec<f64> {
+        let mut c = c.to_vec();
+        for e in self.etas.iter().rev() {
+            let mut dot = e.wr * c[e.r];
+            for &(i, w) in &e.entries {
+                dot += w * c[i];
+            }
+            c[e.r] -= (dot - c[e.r]) / e.wr;
+        }
+        self.lu.btran(&c)
+    }
+
+    fn push_eta(&mut self, r: usize, w: &[f64]) {
+        let entries: Vec<(usize, f64)> = w
+            .iter()
+            .enumerate()
+            .filter(|&(i, &v)| i != r && v != 0.0)
+            .map(|(i, &v)| (i, v))
+            .collect();
+        self.etas.push(Eta {
+            r,
+            wr: w[r],
+            entries,
+        });
+    }
+}
+
+#[inline]
+fn upper_of(lp: &SparseLp, var: usize) -> f64 {
+    if var < lp.objective.len() {
+        lp.upper[var]
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[inline]
+fn cost_of(lp: &SparseLp, var: usize) -> f64 {
+    if var < lp.objective.len() {
+        lp.objective[var]
+    } else {
+        0.0
+    }
+}
+
+/// Exact basic values for the current statuses:
+/// `x_B = B⁻¹ (b − Σ_{j nonbasic at upper} u_j A_j)`.
+fn basic_values(
+    lp: &SparseLp,
+    factors: &FactorizedBasis,
+    at_upper: &[bool],
+) -> Vec<f64> {
+    let n = lp.objective.len();
+    let mut rhs = lp.rhs.clone();
+    for (j, &up) in at_upper.iter().take(n).enumerate() {
+        if up {
+            lp.constraints.col_axpy(j, -lp.upper[j], &mut rhs);
+        }
+    }
+    factors.ftran(rhs)
+}
+
+/// Factorize `basis` and compute its basic values; errors if the basis is
+/// singular or any basic value violates its bounds by more than
+/// [`WARM_FEAS_TOL`] (the warm-start rejection path).
+fn install_basis(
+    lp: &SparseLp,
+    basis: &[usize],
+    at_upper: &[bool],
+) -> Result<(FactorizedBasis, Vec<f64>), LpError> {
+    let factors = FactorizedBasis::fresh(lp, basis)?;
+    let x_b = basic_values(lp, &factors, at_upper);
+    for (pos, &var) in basis.iter().enumerate() {
+        let ub = upper_of(lp, var);
+        if x_b[pos] < -WARM_FEAS_TOL || x_b[pos] > ub + WARM_FEAS_TOL {
+            return Err(LpError::BadInput(format!(
+                "basis infeasible: position {pos} value {} outside [0, {ub}]",
+                x_b[pos]
+            )));
+        }
+    }
+    Ok((factors, x_b))
+}
+
+/// Solve a bounded LP with the sparse revised simplex, optionally from a
+/// previous solve's [`WarmStart`]. Returns the solution plus the handle
+/// for the next round.
+pub fn solve_sparse_lp(
+    lp: &SparseLp,
+    warm: Option<&WarmStart>,
+) -> Result<(LpSolution, WarmStart), LpError> {
+    let n = lp.objective.len();
+    let m = lp.rhs.len();
+    if lp.constraints.rows() != m || lp.constraints.cols() != n {
+        return Err(LpError::BadInput(format!(
+            "constraint matrix {}x{} does not match rhs {} / objective {}",
+            lp.constraints.rows(),
+            lp.constraints.cols(),
+            m,
+            n
+        )));
+    }
+    if lp.upper.len() != n {
+        return Err(LpError::BadInput("upper-bound vector length mismatch".into()));
+    }
+    if lp.rhs.iter().any(|&b| b < 0.0 || b.is_nan()) {
+        return Err(LpError::BadInput("rhs must be non-negative".into()));
+    }
+    if lp.upper.iter().any(|&u| u < 0.0 || u.is_nan()) {
+        return Err(LpError::BadInput("upper bounds must be non-negative".into()));
+    }
+
+    let nv = n + m;
+
+    // Adopt the warm basis when compatible; otherwise (or if it turns out
+    // singular / infeasible below) cold-start from the all-slack basis.
+    let mut basis: Vec<usize> = (n..nv).collect();
+    let mut at_upper = vec![false; nv];
+    let mut warm_adopted = false;
+    if let Some(ws) = warm {
+        if ws.compatible(n, m) {
+            basis.copy_from_slice(&ws.basis);
+            at_upper.copy_from_slice(&ws.at_upper);
+            for j in 0..nv {
+                if at_upper[j] && !upper_of(lp, j).is_finite() {
+                    at_upper[j] = false;
+                }
+            }
+            for &v in &basis {
+                at_upper[v] = false;
+            }
+            warm_adopted = true;
+        }
+    }
+
+    let (mut factors, mut x_b) = match install_basis(lp, &basis, &at_upper) {
+        Ok(state) => state,
+        Err(_) if warm_adopted => {
+            basis = (n..nv).collect();
+            at_upper = vec![false; nv];
+            install_basis(lp, &basis, &at_upper)?
+        }
+        Err(e) => return Err(e),
+    };
+
+    let mut in_basis_pos = vec![usize::MAX; nv];
+    for (pos, &v) in basis.iter().enumerate() {
+        in_basis_pos[v] = pos;
+    }
+
+    let max_iters = 50 * (m + n).max(64);
+    let bland_after = 10 * (m + n);
+    let mut iters = 0usize;
+
+    loop {
+        // Duals for the current basis.
+        let c_b: Vec<f64> = basis.iter().map(|&v| cost_of(lp, v)).collect();
+        let y = factors.btran(&c_b);
+
+        // Pricing: Dantzig (most favorable |reduced cost|, lowest index on
+        // ties), Bland fallback (lowest favorable index) once stalling is
+        // possible — the same discipline as the dense solver.
+        let use_bland = iters > bland_after;
+        let mut enter: Option<usize> = None;
+        let mut best = EPS;
+        for j in 0..nv {
+            if in_basis_pos[j] != usize::MAX {
+                continue;
+            }
+            let u_j = upper_of(lp, j);
+            if u_j <= 0.0 {
+                continue; // fixed at zero
+            }
+            let d = if j < n {
+                lp.objective[j] - lp.constraints.col_dot(j, &y)
+            } else {
+                -y[j - n]
+            };
+            let favorable = if at_upper[j] { d < -EPS } else { d > EPS };
+            if !favorable {
+                continue;
+            }
+            if use_bland {
+                enter = Some(j);
+                break;
+            }
+            if d.abs() > best {
+                best = d.abs();
+                enter = Some(j);
+            }
+        }
+        let Some(q) = enter else {
+            // Optimal: extract structural values from statuses.
+            let mut x = vec![0.0; n];
+            for (j, xj) in x.iter_mut().enumerate() {
+                if in_basis_pos[j] != usize::MAX {
+                    *xj = x_b[in_basis_pos[j]].clamp(0.0, lp.upper[j]);
+                } else if at_upper[j] {
+                    *xj = lp.upper[j];
+                }
+            }
+            let objective = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+            return Ok((
+                LpSolution {
+                    x,
+                    objective,
+                    iterations: iters,
+                },
+                WarmStart {
+                    n,
+                    m,
+                    basis,
+                    at_upper,
+                },
+            ));
+        };
+
+        // Direction: entering from its lower bound moves up (σ = +1), from
+        // its upper bound down (σ = −1); basic values respond by −σ t w.
+        let sigma = if at_upper[q] { -1.0 } else { 1.0 };
+        let mut col = vec![0.0; m];
+        if q < n {
+            lp.constraints.col_axpy(q, 1.0, &mut col);
+        } else {
+            col[q - n] = 1.0;
+        }
+        let w = factors.ftran(col);
+
+        // Ratio test. The entering variable's own range u_q seeds the
+        // step; a basic row beats it on ties (`< t + EPS`), and ties among
+        // rows go to the lowest basic variable index (Bland).
+        let mut t_best = upper_of(lp, q);
+        let mut leave: Option<(usize, bool)> = None;
+        for (pos, &wp) in w.iter().enumerate() {
+            let dir = sigma * wp;
+            let (ratio, to_upper) = if dir > EPS {
+                (x_b[pos].max(0.0) / dir, false)
+            } else if dir < -EPS {
+                let ub = upper_of(lp, basis[pos]);
+                if !ub.is_finite() {
+                    continue;
+                }
+                ((ub - x_b[pos]).max(0.0) / (-dir), true)
+            } else {
+                continue;
+            };
+            let replace = match leave {
+                None => ratio < t_best + EPS,
+                Some((cur, _)) => {
+                    ratio < t_best - EPS
+                        || (ratio < t_best + EPS && basis[pos] < basis[cur])
+                }
+            };
+            if replace {
+                t_best = t_best.min(ratio);
+                leave = Some((pos, to_upper));
+            }
+        }
+        if !t_best.is_finite() {
+            return Err(LpError::Unbounded);
+        }
+        iters += 1;
+        if iters > max_iters {
+            return Err(LpError::Stalled);
+        }
+
+        match leave {
+            None => {
+                // Bound flip: q jumps to its opposite bound, no pivot.
+                let t = t_best;
+                if t != 0.0 {
+                    for (pos, &wp) in w.iter().enumerate() {
+                        x_b[pos] -= t * sigma * wp;
+                    }
+                }
+                at_upper[q] = !at_upper[q];
+            }
+            Some((r, to_upper)) => {
+                let t = t_best.max(0.0);
+                for (pos, &wp) in w.iter().enumerate() {
+                    x_b[pos] -= t * sigma * wp;
+                }
+                let entering_value = if sigma > 0.0 {
+                    t
+                } else {
+                    upper_of(lp, q) - t
+                };
+                let leaving = basis[r];
+                at_upper[leaving] = to_upper;
+                in_basis_pos[leaving] = usize::MAX;
+                basis[r] = q;
+                in_basis_pos[q] = r;
+                at_upper[q] = false;
+                x_b[r] = entering_value;
+                factors.push_eta(r, &w);
+                if factors.etas.len() >= REFACTOR_EVERY {
+                    factors = FactorizedBasis::fresh(lp, &basis)?;
+                    x_b = basic_values(lp, &factors, &at_upper);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::solve_lp;
+    use crate::util::prop::{approx_eq, forall};
+    use crate::util::rng::Pcg64;
+
+    fn unbounded_above(objective: Vec<f64>, rows: &[&[f64]], rhs: Vec<f64>) -> SparseLp {
+        let n = objective.len();
+        SparseLp {
+            objective,
+            constraints: CscMatrix::from_dense(&Matrix::from_rows(rows)),
+            rhs,
+            upper: vec![f64::INFINITY; n],
+        }
+    }
+
+    #[test]
+    fn textbook_two_vars() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18 -> x=2, y=6, obj=36.
+        let lp = unbounded_above(
+            vec![3.0, 5.0],
+            &[&[1.0, 0.0], &[0.0, 2.0], &[3.0, 2.0]],
+            vec![4.0, 12.0, 18.0],
+        );
+        let (s, _) = solve_sparse_lp(&lp, None).unwrap();
+        assert!((s.objective - 36.0).abs() < 1e-8);
+        assert!((s.x[0] - 2.0).abs() < 1e-8);
+        assert!((s.x[1] - 6.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn native_bounds_solve_without_rows() {
+        // max 2x + y s.t. x + y <= 2, x <= 1, y <= 2 (bounds, not rows)
+        // -> x = 1, y = 1, obj = 3; x rests at its upper bound.
+        let lp = SparseLp {
+            objective: vec![2.0, 1.0],
+            constraints: CscMatrix::from_dense(&Matrix::from_rows(&[&[1.0, 1.0]])),
+            rhs: vec![2.0],
+            upper: vec![1.0, 2.0],
+        };
+        let (s, _) = solve_sparse_lp(&lp, None).unwrap();
+        assert!((s.objective - 3.0).abs() < 1e-8, "obj {}", s.objective);
+        assert!((s.x[0] - 1.0).abs() < 1e-8);
+        assert!((s.x[1] - 1.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        let lp = unbounded_above(vec![1.0, 0.0], &[&[0.0, 1.0]], vec![1.0]);
+        assert_eq!(solve_sparse_lp(&lp, None).unwrap_err(), LpError::Unbounded);
+    }
+
+    #[test]
+    fn bounded_zero_column_is_not_unbounded() {
+        // Same shape, but the zero column has a finite bound: the optimum
+        // saturates it with a bound flip.
+        let lp = SparseLp {
+            objective: vec![1.0, 0.0],
+            constraints: CscMatrix::from_dense(&Matrix::from_rows(&[&[0.0, 1.0]])),
+            rhs: vec![1.0],
+            upper: vec![3.0, f64::INFINITY],
+        };
+        let (s, _) = solve_sparse_lp(&lp, None).unwrap();
+        assert!((s.objective - 3.0).abs() < 1e-9);
+        assert!((s.x[0] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Beale's cycling example; the Bland fallback must terminate at
+        // obj = 0.05 exactly as the dense solver does.
+        let lp = unbounded_above(
+            vec![0.75, -150.0, 0.02, -6.0],
+            &[
+                &[0.25, -60.0, -0.04, 9.0],
+                &[0.5, -90.0, -0.02, 3.0],
+                &[0.0, 0.0, 1.0, 0.0],
+            ],
+            vec![0.0, 0.0, 1.0],
+        );
+        let (s, _) = solve_sparse_lp(&lp, None).unwrap();
+        assert!((s.objective - 0.05).abs() < 1e-8, "obj {}", s.objective);
+    }
+
+    #[test]
+    fn bad_input_rejected() {
+        let lp = SparseLp {
+            objective: vec![1.0],
+            constraints: CscMatrix::zeros(1, 1),
+            rhs: vec![-1.0],
+            upper: vec![1.0],
+        };
+        assert!(matches!(solve_sparse_lp(&lp, None), Err(LpError::BadInput(_))));
+        let lp2 = SparseLp {
+            objective: vec![1.0],
+            constraints: CscMatrix::zeros(1, 1),
+            rhs: vec![1.0],
+            upper: vec![-0.5],
+        };
+        assert!(matches!(solve_sparse_lp(&lp2, None), Err(LpError::BadInput(_))));
+    }
+
+    /// Random Gavel-shaped fractional knapsack: unique optimum a.s., so
+    /// the revised solution must match the dense tableau solution
+    /// componentwise after 1e-6 rounding — the PR's parity criterion.
+    #[test]
+    fn knapsack_matches_dense_componentwise() {
+        forall(
+            "revised == dense on knapsacks (x and objective)",
+            29,
+            40,
+            |r| {
+                let n = 2 + r.below(14) as usize;
+                let p: Vec<f64> = (0..n).map(|_| r.range_f64(0.1, 4.0)).collect();
+                let g: Vec<f64> = (0..n).map(|_| r.range_f64(0.5, 8.0)).collect();
+                let cap = r.range_f64(1.0, g.iter().sum::<f64>());
+                (p, g, cap)
+            },
+            |(p, g, cap)| {
+                let n = p.len();
+                let lp = SparseLp {
+                    objective: p.clone(),
+                    constraints: CscMatrix::from_dense(&Matrix::from_vec(1, n, g.clone())),
+                    rhs: vec![*cap],
+                    upper: vec![1.0; n],
+                };
+                let (rev, _) = solve_sparse_lp(&lp, None).map_err(|e| e.to_string())?;
+                let dense = solve_lp(&lp.to_dense_lp()).map_err(|e| e.to_string())?;
+                approx_eq(rev.objective, dense.objective, 1e-6)?;
+                for (j, (a, b)) in rev.x.iter().zip(&dense.x).enumerate() {
+                    if (a - b).abs() > 1e-6 {
+                        return Err(format!("x[{j}] diverges: {a} vs {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Randomized sparse / degenerate / upper-bounded instances: both
+    /// solvers claim optimality, so the objectives must agree within 1e-6
+    /// even when alternate optima exist, and the revised solution must be
+    /// feasible for its own constraints.
+    #[test]
+    fn random_instances_match_dense_objective() {
+        forall(
+            "revised == dense objective on random sparse LPs",
+            31,
+            60,
+            |r| {
+                let n = 1 + r.below(8) as usize;
+                let m = 1 + r.below(6) as usize;
+                let c: Vec<f64> = (0..n).map(|_| r.range_f64(0.0, 2.0)).collect();
+                let mut a = Matrix::zeros(m, n);
+                for i in 0..m {
+                    for j in 0..n {
+                        if r.f64() < 0.6 {
+                            a.set(i, j, r.range_f64(0.0, 2.0));
+                        }
+                    }
+                }
+                // Mix degenerate rows (b = 0) with slack ones, and finite
+                // with infinite bounds.
+                let b: Vec<f64> = (0..m)
+                    .map(|_| if r.f64() < 0.25 { 0.0 } else { r.range_f64(0.5, 5.0) })
+                    .collect();
+                let u: Vec<f64> = (0..n)
+                    .map(|_| if r.f64() < 0.5 { f64::INFINITY } else { r.range_f64(0.2, 2.0) })
+                    .collect();
+                SparseLp {
+                    objective: c,
+                    constraints: CscMatrix::from_dense(&a),
+                    rhs: b,
+                    upper: u,
+                }
+            },
+            |lp| {
+                let rev = solve_sparse_lp(lp, None);
+                let dense = solve_lp(&lp.to_dense_lp());
+                match (rev, dense) {
+                    (Ok((r, _)), Ok(d)) => {
+                        approx_eq(r.objective, d.objective, 1e-6)?;
+                        // Feasibility of the revised solution.
+                        let ax = lp.constraints.matvec(&r.x);
+                        for (i, (&lhs, &b)) in ax.iter().zip(&lp.rhs).enumerate() {
+                            if lhs > b + 1e-6 {
+                                return Err(format!("row {i} violated: {lhs} > {b}"));
+                            }
+                        }
+                        for (j, &x) in r.x.iter().enumerate() {
+                            if x < -1e-9 || x > lp.upper[j] + 1e-9 {
+                                return Err(format!("x[{j}] = {x} out of bounds"));
+                            }
+                        }
+                        Ok(())
+                    }
+                    (Err(LpError::Unbounded), Err(LpError::Unbounded)) => Ok(()),
+                    (r, d) => Err(format!(
+                        "solvers disagree: revised {:?} vs dense {:?}",
+                        r.map(|(s, _)| s.objective),
+                        d.map(|s| s.objective)
+                    )),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn warm_start_after_objective_change_matches_cold() {
+        let mut rng = Pcg64::new(77);
+        let n = 24;
+        let g: Vec<f64> = (0..n).map(|_| rng.range_f64(0.5, 8.0)).collect();
+        let mut lp = SparseLp {
+            objective: (0..n).map(|_| rng.range_f64(0.1, 4.0)).collect(),
+            constraints: CscMatrix::from_dense(&Matrix::from_vec(1, n, g.clone())),
+            rhs: vec![g.iter().sum::<f64>() * 0.4],
+            upper: vec![1.0; n],
+        };
+        let (cold0, warm) = solve_sparse_lp(&lp, None).unwrap();
+        // Same instance warm-started: optimal immediately, zero pivots.
+        let (resolved, warm) = solve_sparse_lp(&lp, Some(&warm)).unwrap();
+        assert_eq!(resolved.iterations, 0);
+        assert!((resolved.objective - cold0.objective).abs() < 1e-9);
+        // Drift the objective (the Gavel round-over-round case) and check
+        // the warm solve agrees with a cold solve.
+        let mut warm = warm;
+        for round in 0..5 {
+            for c in lp.objective.iter_mut() {
+                *c *= rng.range_f64(0.8, 1.25);
+            }
+            let (hot, next_warm) = solve_sparse_lp(&lp, Some(&warm)).unwrap();
+            let (cold, _) = solve_sparse_lp(&lp, None).unwrap();
+            assert!(
+                (hot.objective - cold.objective).abs()
+                    <= 1e-8 * (1.0 + cold.objective.abs()),
+                "round {round}: warm {} vs cold {}",
+                hot.objective,
+                cold.objective
+            );
+            warm = next_warm;
+        }
+    }
+
+    #[test]
+    fn incompatible_warm_start_falls_back_to_cold() {
+        let lp = unbounded_above(
+            vec![3.0, 5.0],
+            &[&[1.0, 0.0], &[0.0, 2.0], &[3.0, 2.0]],
+            vec![4.0, 12.0, 18.0],
+        );
+        // A warm start from a different-shaped LP must be ignored.
+        let other = SparseLp {
+            objective: vec![1.0],
+            constraints: CscMatrix::from_dense(&Matrix::from_vec(1, 1, vec![1.0])),
+            rhs: vec![1.0],
+            upper: vec![1.0],
+        };
+        let (_, foreign) = solve_sparse_lp(&other, None).unwrap();
+        let (s, _) = solve_sparse_lp(&lp, Some(&foreign)).unwrap();
+        assert!((s.objective - 36.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn refactorization_path_is_exercised() {
+        // Enough structure that the solve needs > REFACTOR_EVERY pivots:
+        // a staircase of coupled rows with generic costs.
+        let mut rng = Pcg64::new(3);
+        let n = 140;
+        let m = 70;
+        let mut a = Matrix::zeros(m, n);
+        for i in 0..m {
+            a.set(i, 2 * i, 1.0);
+            a.set(i, 2 * i + 1, 1.0);
+            if i + 1 < m {
+                a.set(i, 2 * (i + 1), rng.range_f64(0.1, 1.0));
+            }
+        }
+        let lp = SparseLp {
+            objective: (0..n).map(|_| rng.range_f64(0.5, 2.0)).collect(),
+            constraints: CscMatrix::from_dense(&a),
+            rhs: (0..m).map(|_| rng.range_f64(0.5, 2.0)).collect(),
+            upper: vec![1.0; n],
+        };
+        let (rev, _) = solve_sparse_lp(&lp, None).unwrap();
+        let dense = solve_lp(&lp.to_dense_lp()).unwrap();
+        assert!(
+            (rev.objective - dense.objective).abs() <= 1e-6 * (1.0 + dense.objective.abs()),
+            "revised {} vs dense {}",
+            rev.objective,
+            dense.objective
+        );
+    }
+
+    #[test]
+    fn from_dense_roundtrip_agrees() {
+        let dense = Lp {
+            objective: vec![3.0, 5.0],
+            constraints: Matrix::from_rows(&[&[1.0, 0.0], &[0.0, 2.0], &[3.0, 2.0]]),
+            rhs: vec![4.0, 12.0, 18.0],
+        };
+        let (s, _) = solve_sparse_lp(&SparseLp::from_dense(&dense), None).unwrap();
+        let d = solve_lp(&dense).unwrap();
+        assert!((s.objective - d.objective).abs() < 1e-8);
+    }
+}

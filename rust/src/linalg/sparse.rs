@@ -1,0 +1,242 @@
+//! Compressed-sparse-column (CSC) matrix storage.
+//!
+//! This is the constraint-matrix substrate for the revised-simplex LP core
+//! (`super::revised`). Gavel-shaped allocation LPs are extremely sparse —
+//! one dense capacity row plus per-job coupling rows with ≤ 3 nonzeros per
+//! column — so the simplex never touches an `m × n` dense array: pricing
+//! walks columns, and the basis factorization gathers columns on demand.
+
+use super::matrix::Matrix;
+
+/// Immutable CSC matrix: column `j`'s nonzeros are
+/// `row_idx[col_ptr[j]..col_ptr[j + 1]]` / `values[...]`, with row indices
+/// strictly increasing within a column.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// An all-zero matrix (every column empty).
+    pub fn zeros(rows: usize, cols: usize) -> CscMatrix {
+        CscMatrix {
+            rows,
+            cols,
+            col_ptr: vec![0; cols + 1],
+            row_idx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored (nonzero) entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Column `j` as parallel `(row_indices, values)` slices.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Dot product of column `j` with a dense row-space vector.
+    #[inline]
+    pub fn col_dot(&self, j: usize, y: &[f64]) -> f64 {
+        let (rows, vals) = self.col(j);
+        rows.iter().zip(vals).map(|(&i, &v)| y[i] * v).sum()
+    }
+
+    /// `out += scale * column j` (scatter into a dense row-space vector).
+    #[inline]
+    pub fn col_axpy(&self, j: usize, scale: f64, out: &mut [f64]) {
+        let (rows, vals) = self.col(j);
+        for (&i, &v) in rows.iter().zip(vals) {
+            out[i] += scale * v;
+        }
+    }
+
+    /// Build from a dense matrix, dropping exact zeros.
+    pub fn from_dense(a: &Matrix) -> CscMatrix {
+        let mut b = CscBuilder::new(a.rows(), a.cols());
+        for j in 0..a.cols() {
+            for i in 0..a.rows() {
+                let v = a.get(i, j);
+                if v != 0.0 {
+                    b.push(i, v);
+                }
+            }
+            b.end_col();
+        }
+        b.finish()
+    }
+
+    /// Materialize as a dense matrix (tests and the dense-parity path).
+    pub fn to_dense(&self) -> Matrix {
+        let mut a = Matrix::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                a.set(i, j, v);
+            }
+        }
+        a
+    }
+
+    /// `A x` for a dense `x` of length `cols()`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec shape mismatch");
+        let mut out = vec![0.0; self.rows];
+        for (j, &xj) in x.iter().enumerate() {
+            if xj != 0.0 {
+                self.col_axpy(j, xj, &mut out);
+            }
+        }
+        out
+    }
+}
+
+/// Incremental column-by-column CSC builder. Rows must be pushed in
+/// strictly increasing order within each column; `end_col` closes the
+/// current column (empty columns are fine).
+#[derive(Debug)]
+pub struct CscBuilder {
+    rows: usize,
+    cols: usize,
+    col_ptr: Vec<usize>,
+    row_idx: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl CscBuilder {
+    pub fn new(rows: usize, cols_hint: usize) -> CscBuilder {
+        let mut col_ptr = Vec::with_capacity(cols_hint + 1);
+        col_ptr.push(0);
+        CscBuilder {
+            rows,
+            cols: 0,
+            col_ptr,
+            row_idx: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Append a nonzero to the current (open) column.
+    pub fn push(&mut self, row: usize, value: f64) {
+        assert!(row < self.rows, "row {row} out of bounds ({})", self.rows);
+        let col_start = self.col_ptr[self.cols];
+        if self.row_idx.len() > col_start {
+            let prev = self.row_idx[self.row_idx.len() - 1];
+            assert!(prev < row, "rows must increase within a column");
+        }
+        self.row_idx.push(row);
+        self.values.push(value);
+    }
+
+    /// Close the current column.
+    pub fn end_col(&mut self) {
+        self.cols += 1;
+        self.col_ptr.push(self.row_idx.len());
+    }
+
+    pub fn finish(self) -> CscMatrix {
+        CscMatrix {
+            rows: self.rows,
+            cols: self.cols,
+            col_ptr: self.col_ptr,
+            row_idx: self.row_idx,
+            values: self.values,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> Matrix {
+        Matrix::from_rows(&[
+            &[1.0, 0.0, 2.0],
+            &[0.0, 0.0, 3.0],
+            &[4.0, 5.0, 0.0],
+        ])
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let a = example();
+        let s = CscMatrix::from_dense(&a);
+        assert_eq!(s.nnz(), 5);
+        assert_eq!(s.to_dense(), a);
+    }
+
+    #[test]
+    fn builder_matches_from_dense() {
+        let mut b = CscBuilder::new(3, 3);
+        b.push(0, 1.0);
+        b.push(2, 4.0);
+        b.end_col();
+        b.push(2, 5.0);
+        b.end_col();
+        b.push(0, 2.0);
+        b.push(1, 3.0);
+        b.end_col();
+        assert_eq!(b.finish(), CscMatrix::from_dense(&example()));
+    }
+
+    #[test]
+    fn col_access_and_dot() {
+        let s = CscMatrix::from_dense(&example());
+        let (rows, vals) = s.col(2);
+        assert_eq!(rows, &[0, 1]);
+        assert_eq!(vals, &[2.0, 3.0]);
+        let y = [1.0, 10.0, 100.0];
+        assert_eq!(s.col_dot(0, &y), 1.0 + 400.0);
+        assert_eq!(s.col_dot(2, &y), 2.0 + 30.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = example();
+        let s = CscMatrix::from_dense(&a);
+        let x = vec![2.0, -1.0, 0.5];
+        assert_eq!(s.matvec(&x), a.matvec(&x));
+    }
+
+    #[test]
+    fn empty_columns_are_fine() {
+        let mut b = CscBuilder::new(2, 3);
+        b.end_col();
+        b.push(1, 7.0);
+        b.end_col();
+        b.end_col();
+        let s = b.finish();
+        assert_eq!(s.cols(), 3);
+        assert_eq!(s.col(0), (&[][..], &[][..]));
+        assert_eq!(s.col(1), (&[1][..], &[7.0][..]));
+        assert_eq!(s.nnz(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "rows must increase")]
+    fn builder_rejects_unsorted_rows() {
+        let mut b = CscBuilder::new(3, 1);
+        b.push(2, 1.0);
+        b.push(1, 1.0);
+    }
+}

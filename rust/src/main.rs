@@ -14,6 +14,7 @@ use tesserae::cluster::GpuType;
 use tesserae::coordinator::{run_cluster, ExecConfig, ExecJob};
 use tesserae::experiments::{self, ablations, end_to_end, scalability, Scale, SchedKind};
 use tesserae::trace::{Trace, TraceParams};
+use tesserae::util::checkpoint::Checkpoint;
 use tesserae::util::cli::Args;
 
 const USAGE: &str = "\
@@ -27,6 +28,8 @@ commands:
                                gavel gavel-ftf pop
   figure      <fig1|fig2|fig3|fig7|fig8|fig9|fig11|fig12|fig13|fig14|fig15|
                fig16|fig17|fig18|table2> [--scale quick|standard|paper]
+              fig2/fig14 also take [--budget-secs N] [--checkpoint PATH]
+              (per-cell resume-safe JSON; re-runs skip completed cells)
   serve       [--jobs N] [--nodes N] [--gpus-per-node G] [--round-secs F]
   engines     [--sizes 8,32,64] [--no-aot]
 ";
@@ -136,10 +139,21 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     let scale = parse_scale(args);
     let report = match id {
         "fig1" => ablations::fig1_migration_example(),
-        "fig2" | "fig14a" => scalability::fig2_decision_time(
-            &[250, 500, 1000, 2000, 3000],
-            std::time::Duration::from_secs(args.get_u64("budget-secs", 120)),
-        ),
+        "fig2" | "fig14a" => {
+            let budget = std::time::Duration::from_secs(args.get_u64("budget-secs", 120));
+            let counts = scalability::FIG2_PAPER_JOB_COUNTS;
+            match args.get("checkpoint") {
+                Some(path) => {
+                    let mut ckpt = Checkpoint::load_or_new(path);
+                    scalability::fig2_decision_time_checkpointed(
+                        &counts,
+                        budget,
+                        Some(&mut ckpt),
+                    )
+                }
+                None => scalability::fig2_decision_time(&counts, budget),
+            }
+        }
         "fig3" => end_to_end::fig3_real_migration_overhead(args.get_f64("round-secs", 0.5))?,
         "fig7" => ablations::fig7_packing_example(),
         "fig8" => ablations::fig8_parallelism_packing(),
@@ -147,7 +161,16 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "fig11" => end_to_end::fig11_vs_gavel(&scale),
         "fig12" => end_to_end::fig12_vs_tiresias_single(&scale),
         "fig13" => end_to_end::fig13_ftf(&scale),
-        "fig14" | "fig14b" => scalability::fig14b_breakdown(&[250, 500, 1000, 2000]),
+        "fig14" | "fig14b" => {
+            let counts = [250, 500, 1000, 2048];
+            match args.get("checkpoint") {
+                Some(path) => {
+                    let mut ckpt = Checkpoint::load_or_new(path);
+                    scalability::fig14b_breakdown_checkpointed(&counts, Some(&mut ckpt))
+                }
+                None => scalability::fig14b_breakdown(&counts),
+            }
+        }
         "fig15" => ablations::fig15_strategy_impact(&scale),
         "fig16" => ablations::fig16_noise_sensitivity(&scale, &[0.0, 0.2, 0.4, 0.6, 0.8, 1.0]),
         "fig17" => end_to_end::fig17_gavel_trace(&scale),

@@ -1,0 +1,127 @@
+//! Resume-safe JSON checkpoints for long experiment sweeps.
+//!
+//! The paper-scale Fig. 2 / Fig. 14 sweeps measure individual cells that
+//! can each take minutes; a budget cap or an interrupted run used to
+//! discard everything already measured. A [`Checkpoint`] is a flat
+//! `key → JSON` store flushed to disk after every completed cell
+//! (write-temp-then-rename, so a kill mid-write never corrupts completed
+//! work); re-running the sweep with the same file skips finished cells.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::json::Json;
+
+/// A persistent map of completed experiment cells.
+#[derive(Debug)]
+pub struct Checkpoint {
+    path: PathBuf,
+    cells: BTreeMap<String, Json>,
+}
+
+impl Checkpoint {
+    /// Open `path`, loading any previously completed cells. A missing or
+    /// unparsable file starts empty (the sweep just re-measures).
+    pub fn load_or_new(path: impl AsRef<Path>) -> Checkpoint {
+        let path = path.as_ref().to_path_buf();
+        let cells = fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|doc| doc.get("cells").and_then(Json::as_obj).cloned())
+            .unwrap_or_default();
+        Checkpoint { path, cells }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.cells.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Record a completed cell and flush the file.
+    pub fn put(&mut self, key: &str, value: Json) -> io::Result<()> {
+        self.cells.insert(key.to_string(), value);
+        self.save()
+    }
+
+    fn save(&self) -> io::Result<()> {
+        let doc = Json::Obj(
+            [("cells".to_string(), Json::Obj(self.cells.clone()))]
+                .into_iter()
+                .collect(),
+        );
+        // Append (not replace-extension): distinct checkpoint paths must
+        // never collapse onto one temp file.
+        let mut tmp_name = self.path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        fs::write(&tmp, doc.to_string_pretty())?;
+        fs::rename(&tmp, &self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tesserae_ckpt_{tag}_{}.json", std::process::id()))
+    }
+
+    #[test]
+    fn cells_survive_reload() {
+        let path = tmp_path("reload");
+        let _ = fs::remove_file(&path);
+        let mut c = Checkpoint::load_or_new(&path);
+        assert!(c.is_empty());
+        c.put("fig2/gavel/256", Json::obj(vec![("total_s", Json::num(1.5))]))
+            .unwrap();
+        c.put("fig2/gavel/512", Json::obj(vec![("total_s", Json::num(4.0))]))
+            .unwrap();
+        drop(c);
+        let re = Checkpoint::load_or_new(&path);
+        assert_eq!(re.len(), 2);
+        assert_eq!(
+            re.get("fig2/gavel/256")
+                .and_then(|v| v.get("total_s"))
+                .and_then(Json::as_f64),
+            Some(1.5)
+        );
+        assert!(re.get("fig2/gavel/1024").is_none());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_or_garbage_file_starts_empty() {
+        let path = tmp_path("garbage");
+        let _ = fs::remove_file(&path);
+        assert!(Checkpoint::load_or_new(&path).is_empty());
+        fs::write(&path, "{not json").unwrap();
+        assert!(Checkpoint::load_or_new(&path).is_empty());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn put_overwrites_existing_key() {
+        let path = tmp_path("overwrite");
+        let _ = fs::remove_file(&path);
+        let mut c = Checkpoint::load_or_new(&path);
+        c.put("k", Json::num(1.0)).unwrap();
+        c.put("k", Json::num(2.0)).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get("k").and_then(Json::as_f64), Some(2.0));
+        let _ = fs::remove_file(&path);
+    }
+}

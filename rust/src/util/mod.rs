@@ -3,6 +3,7 @@
 //! contains none of `rand`, `serde`, `clap`, `criterion`, `proptest`.
 
 pub mod benchutil;
+pub mod checkpoint;
 pub mod cli;
 pub mod json;
 pub mod prop;

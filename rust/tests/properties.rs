@@ -556,3 +556,84 @@ fn lp_allocation_never_exceeds_capacity() {
         },
     );
 }
+
+#[test]
+fn revised_simplex_matches_dense_on_gavel_instances() {
+    // The tentpole's parity contract at integration level: randomized
+    // Gavel-shaped allocation LPs (mixed GPU demands, packing pairs,
+    // degenerate capacity bindings, native 0≤x≤1 bounds) solved by the
+    // sparse revised simplex must reach the same optimum as the retained
+    // dense tableau solver run on the materialized instance — and the
+    // revised solution must respect capacity, coupling rows and bounds.
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+    use tesserae::experiments::scalability::synthetic_active_jobs;
+    use tesserae::linalg::{solve_lp, solve_sparse_lp};
+    use tesserae::profiler::Profiler;
+    use tesserae::schedulers::gavel::{
+        allocation_objective_into, build_allocation_lp, candidate_pairs,
+    };
+    use tesserae::schedulers::GavelObjective;
+
+    let source: Arc<dyn ThroughputSource> = Arc::new(CachedSource::new(OracleEstimator::new(
+        Profiler::new(GpuType::A100, 11),
+    )));
+    forall(
+        "revised == dense on Gavel-shaped LPs",
+        137,
+        10,
+        |rng| {
+            let n = 4 + rng.below(36) as usize;
+            let total_gpus = 4 + rng.below(64) as usize;
+            let packing = rng.f64() < 0.8;
+            let window = 1 + rng.below(6) as usize;
+            let objective = if rng.f64() < 0.5 {
+                GavelObjective::Las
+            } else {
+                GavelObjective::Ftf
+            };
+            (synthetic_active_jobs(n, rng.next_u64()), total_gpus, packing, window, objective)
+        },
+        |(jobs, total_gpus, packing, window, objective)| {
+            let pairs = candidate_pairs(jobs, *packing, *window);
+            let mut lp = build_allocation_lp(jobs, &pairs, *total_gpus);
+            allocation_objective_into(
+                *objective,
+                jobs,
+                &pairs,
+                source.as_ref(),
+                &mut lp.objective,
+            );
+            let (rev, warm) = solve_sparse_lp(&lp, None).map_err(|e| e.to_string())?;
+            let dense = solve_lp(&lp.to_dense_lp()).map_err(|e| e.to_string())?;
+            if (rev.objective - dense.objective).abs() > 1e-6 * (1.0 + dense.objective.abs()) {
+                return Err(format!(
+                    "objective diverges: revised {} vs dense {}",
+                    rev.objective, dense.objective
+                ));
+            }
+            // Feasibility of the revised solution against the sparse rows.
+            let ax = lp.constraints.matvec(&rev.x);
+            for (i, (&lhs, &b)) in ax.iter().zip(&lp.rhs).enumerate() {
+                if lhs > b + 1e-6 {
+                    return Err(format!("row {i} violated: {lhs} > {b}"));
+                }
+            }
+            for (j, &x) in rev.x.iter().enumerate() {
+                if !(-1e-9..=1.0 + 1e-9).contains(&x) {
+                    return Err(format!("x[{j}] = {x} outside [0, 1]"));
+                }
+            }
+            // Warm-started re-solve of the identical instance is a no-op
+            // that lands on the same optimum.
+            let (hot, _) = solve_sparse_lp(&lp, Some(&warm)).map_err(|e| e.to_string())?;
+            if (hot.objective - rev.objective).abs() > 1e-9 * (1.0 + rev.objective.abs()) {
+                return Err(format!(
+                    "warm replay diverges: {} vs {}",
+                    hot.objective, rev.objective
+                ));
+            }
+            Ok(())
+        },
+    );
+}
