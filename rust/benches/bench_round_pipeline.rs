@@ -1,0 +1,119 @@
+//! Round-pipeline benchmark (ISSUE 4 acceptance artifact): consecutive
+//! churned scheduling rounds driven through the staged pipeline with the
+//! shared worker pool at budget 1 (sequential reference) vs the full
+//! budget (sharded), at 32/64-node scale for Tesserae-T (matching batches,
+//! packing-edge and strategy generation shard) and POP-8 (partition LP
+//! solves shard). Decisions are asserted bit-identical between the two
+//! budgets; emits `BENCH_round_pipeline.json` with per-config wall times
+//! and speedups. Acceptance: the best 64-node arm must reach ≥1.5x.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use tesserae::cluster::{ClusterSpec, GpuType, PlacementPlan};
+use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+use tesserae::experiments::scalability::{churn_active_jobs, synthetic_active_jobs};
+use tesserae::experiments::{build_scheduler, SchedKind};
+use tesserae::matching::HungarianEngine;
+use tesserae::profiler::Profiler;
+use tesserae::schedulers::RoundInput;
+use tesserae::util::json::Json;
+use tesserae::util::pool::WorkerPool;
+
+const ROUNDS: u64 = 4;
+
+/// Drive `ROUNDS` consecutive decisions (fresh scheduler, ~15% job churn
+/// per round so caches see realistic steady state) and return the total
+/// wall plus every round's realized plan for the parity assert.
+fn run_rounds(
+    kind: SchedKind,
+    n_jobs: usize,
+    spec: &ClusterSpec,
+    seed: u64,
+) -> (f64, Vec<PlacementPlan>) {
+    let truth = Profiler::new(spec.gpu_type, seed);
+    let source: Arc<dyn ThroughputSource> =
+        Arc::new(CachedSource::new(OracleEstimator::new(truth)));
+    let mut sched = build_scheduler(kind, source, Arc::new(HungarianEngine));
+    let mut active = synthetic_active_jobs(n_jobs, seed);
+    let mut prev = PlacementPlan::new(spec.total_gpus());
+    let mut plans = Vec::with_capacity(ROUNDS as usize);
+    let t0 = Instant::now();
+    for round in 0..ROUNDS {
+        let d = sched.decide(&RoundInput {
+            now: 1e6 + round as f64 * 360.0,
+            round,
+            active: &active,
+            prev_plan: &prev,
+            spec,
+        });
+        prev = d.plan.clone();
+        plans.push(d.plan);
+        active = churn_active_jobs(&active, seed ^ (round + 1));
+    }
+    (t0.elapsed().as_secs_f64(), plans)
+}
+
+fn main() {
+    let pool = WorkerPool::global();
+    let budget = pool.budget();
+    let mut entries = Vec::new();
+    let mut best64 = 0.0f64;
+    println!("== Staged round pipeline: sequential (budget 1) vs sharded (budget {budget}) ==");
+    println!("   ({ROUNDS} churned consecutive rounds per arm; plans asserted bit-identical)");
+    for (nodes, kind, name) in [
+        (32usize, SchedKind::TesseraeT, "tesserae-t"),
+        (64, SchedKind::TesseraeT, "tesserae-t"),
+        (32, SchedKind::Pop(8), "pop-8"),
+        (64, SchedKind::Pop(8), "pop-8"),
+    ] {
+        let spec = ClusterSpec::new(nodes, 8, GpuType::A100);
+        // Contended cluster: 2 jobs per GPU keeps the packing edge space,
+        // the busy node-pair matchings and the POP partition LPs large.
+        let n_jobs = spec.total_gpus() * 2;
+        let seed = 42 + nodes as u64;
+        let (seq_s, seq_plans) = {
+            let _sequential = pool.budget_override(1);
+            run_rounds(kind, n_jobs, &spec, seed)
+        };
+        let (par_s, par_plans) = run_rounds(kind, n_jobs, &spec, seed);
+        assert_eq!(
+            seq_plans, par_plans,
+            "{name}@{nodes}: sharded decisions diverged from sequential"
+        );
+        let speedup = seq_s / par_s.max(1e-12);
+        println!(
+            "{name:>10} {nodes:>3}x8 ({n_jobs:>4} jobs): sharded {:>9.3}ms vs sequential \
+             {:>9.3}ms = {speedup:>5.2}x per {ROUNDS} rounds",
+            par_s * 1e3,
+            seq_s * 1e3,
+        );
+        if nodes == 64 {
+            best64 = best64.max(speedup);
+        }
+        entries.push(Json::obj(vec![
+            ("scheduler", Json::str(name)),
+            ("nodes", Json::num(nodes as f64)),
+            ("gpus_per_node", Json::num(8.0)),
+            ("jobs", Json::num(n_jobs as f64)),
+            ("rounds", Json::num(ROUNDS as f64)),
+            ("thread_budget", Json::num(budget as f64)),
+            ("sequential_s", Json::num(seq_s)),
+            ("sharded_s", Json::num(par_s)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    assert!(
+        best64 >= 1.5,
+        "acceptance: best 64-node sharded speedup {best64:.2}x < 1.5x"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("round_pipeline")),
+        ("entries", Json::arr(entries)),
+    ]);
+    match std::fs::write("BENCH_round_pipeline.json", json.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_round_pipeline.json"),
+        Err(e) => println!("could not write BENCH_round_pipeline.json: {e}"),
+    }
+}

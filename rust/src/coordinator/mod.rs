@@ -20,22 +20,22 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::cluster::{ClusterSpec, GpuType, PlacementPlan};
-use crate::estimator::OracleEstimator;
+use crate::estimator::{CachedSource, OracleEstimator};
 use crate::jobs::{JobId, ModelKind};
-use crate::matching::{HungarianEngine, MatchingService};
-use crate::policies::placement::{
-    allocate_without_packing, migrate_with, pack_with, MigrationMode, PackingConfig,
-};
-use crate::policies::scheduling::{SchedulingPolicy, TiresiasLas};
+use crate::matching::HungarianEngine;
+use crate::policies::placement::{MigrationMode, PackingConfig};
+use crate::policies::scheduling::TiresiasLas;
 use crate::policies::JobInfo;
 use crate::profiler::Profiler;
 use crate::runtime::train::ParamState;
 use crate::runtime::{Manifest, Runtime, TrainSession};
+use crate::schedulers::{pipeline, RoundInput, TesseraeScheduler};
 use crate::util::rng::Pcg64;
 
 /// A job submitted to the real-execution cluster.
@@ -280,12 +280,21 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
         .collect();
 
     let profiler = Profiler::new(GpuType::A100, cfg.seed);
-    let source = OracleEstimator::new(profiler);
-    let policy = TiresiasLas::default();
-    let engine = HungarianEngine;
-    // One matching service for the whole run: node-pair cost matrices cache
-    // across rounds exactly as in the simulator.
-    let mut matching_service = MatchingService::with_defaults();
+    // The coordinator consumes the same staged round pipeline as the
+    // simulated schedulers: one persistent `TesseraeScheduler` provider
+    // (Tiresias order, the configured packing/migration modes) driven by
+    // `pipeline::run_round`, so its matching-service caches carry across
+    // rounds exactly as in simulation. The source is memoized: the
+    // Estimate stage prices the whole job window every round, and the
+    // lookups repeat across rounds.
+    let mut scheduler = TesseraeScheduler::new(
+        "coordinator",
+        Box::new(TiresiasLas::default()),
+        Arc::new(CachedSource::new(OracleEstimator::new(profiler))),
+        Arc::new(HungarianEngine),
+        cfg.packing.then(PackingConfig::default),
+        cfg.migration,
+    );
 
     let mut prev_plan = PlacementPlan::new(total_gpus);
     let mut total_migrations = 0usize;
@@ -324,37 +333,20 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
             continue;
         }
 
-        // --- placement: allocate -> pack -> migrate (Listing 1) ---
-        let order = policy.order(&active);
-        let ordered: Vec<&JobInfo> = order.iter().map(|&i| &active[i]).collect();
-        let alloc = allocate_without_packing(&spec, &ordered);
-        let mut plan = alloc.plan;
-        if cfg.packing {
-            let by_id: BTreeMap<_, _> = active.iter().map(|j| (j.id, j)).collect();
-            let placed: Vec<&JobInfo> = alloc.placed.iter().map(|id| by_id[id]).collect();
-            let pending: Vec<&JobInfo> = alloc.pending.iter().map(|id| by_id[id]).collect();
-            for p in pack_with(
-                &placed,
-                &pending,
-                &source,
-                &PackingConfig::default(),
-                &engine,
-                &mut matching_service,
-            ) {
-                let gpus = plan.gpus_of(p.placed).to_vec();
-                plan.place(p.pending, &gpus);
-            }
-        }
-        let outcome = migrate_with(
-            &spec,
-            &prev_plan,
-            &plan,
-            cfg.migration,
-            &engine,
-            &mut matching_service,
+        // --- placement: the staged round pipeline (Estimate → Schedule →
+        // Pack → Migrate → Commit, Listing 1) ---
+        let decision = pipeline::run_round(
+            &mut scheduler,
+            &RoundInput {
+                now: round as f64,
+                round,
+                active: &active,
+                prev_plan: &prev_plan,
+                spec: &spec,
+            },
         );
-        let plan = outcome.plan;
-        total_migrations += outcome.migrations;
+        let plan = decision.plan;
+        total_migrations += decision.migrations;
 
         // --- checkpoint movement for migrated jobs (measured, Fig. 3) ---
         let t_ckpt = Instant::now();

@@ -181,32 +181,21 @@ pub fn fig18_estimators(scale: &Scale) -> String {
         ),
     ];
 
-    // One thread per estimator: each scenario owns its source (Arc) and
-    // runs against the shared immutable trace.
+    // One pool worker per estimator: each scenario owns its source (Arc)
+    // and runs against the shared immutable trace.
     let seed = scale.seed;
     let trace_ref = &trace;
     let results: Vec<(String, usize, crate::simulator::SimResult)> =
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = sources
-                .into_iter()
-                .map(|(name, source)| {
-                    scope.spawn(move || {
-                        let samples = source.profiling_samples();
-                        let r = run_sim_with_source(
-                            SchedKind::TesseraeT,
-                            trace_ref,
-                            spec,
-                            seed,
-                            source,
-                        );
-                        (name, samples, r)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("estimator thread panicked"))
-                .collect()
+        crate::util::pool::WorkerPool::global().map(&sources, 0, 1, |_, (name, source)| {
+            let samples = source.profiling_samples();
+            let r = run_sim_with_source(
+                SchedKind::TesseraeT,
+                trace_ref,
+                spec,
+                seed,
+                Arc::clone(source),
+            );
+            (name.clone(), samples, r)
         });
 
     let mut t = Table::new(&[

@@ -260,28 +260,27 @@ pub fn run_sim(
     )
 }
 
-/// Run several (scheduler, decision-noise) scenarios over the same trace on
-/// one thread each (`std::thread::scope` — the crate is std-only). Every
-/// scenario builds its own profiler/estimator/scheduler stack from
-/// `(spec, seed)` inside its thread, so nothing mutable is shared and the
-/// results are bit-identical to sequential [`run_sim`] calls, in input
-/// order (asserted by `parallel_sweep_matches_sequential`).
+/// Run several (scheduler, decision-noise) scenarios over the same trace
+/// on the process-wide shared worker pool. Every scenario builds its own
+/// profiler/estimator/scheduler stack from `(spec, seed)` inside its
+/// worker, so nothing mutable is shared and the results are bit-identical
+/// to sequential [`run_sim`] calls, in input order (asserted by
+/// `parallel_sweep_matches_sequential`). Because scenario workers lease
+/// from the same budget as the intra-round parallelism (matching batches,
+/// POP partitions, sharded per-job work), a sweep that saturates the
+/// budget at scenario level automatically runs each simulation's interior
+/// sequentially instead of oversubscribing the machine — see
+/// EXPERIMENTS.md "Thread budgets" for choosing between the two regimes.
 pub fn run_sim_scenarios(
     scenarios: &[(SchedKind, f64)],
     trace: &Trace,
     spec: ClusterSpec,
     seed: u64,
 ) -> Vec<SimResult> {
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = scenarios
-            .iter()
-            .map(|&(kind, noise)| scope.spawn(move || run_sim(kind, trace, spec, seed, noise)))
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("scenario thread panicked"))
-            .collect()
-    })
+    crate::util::pool::WorkerPool::global()
+        .map(scenarios, 0, 1, |_, &(kind, noise)| {
+            run_sim(kind, trace, spec, seed, noise)
+        })
 }
 
 /// [`run_sim_scenarios`] for the common noise-free SchedKind sweep.
@@ -396,6 +395,40 @@ mod tests {
             assert_eq!(r.makespan.to_bits(), s.makespan.to_bits());
             assert_eq!(r.total_migrations, s.total_migrations);
             assert_eq!(r.rounds, s.rounds);
+        }
+    }
+
+    #[test]
+    fn sweep_under_tiny_thread_budget_matches_unbounded_sweep() {
+        // With a budget of 2 the scenario layer exhausts the pool and
+        // every simulation's interior runs inline; results must still be
+        // bit-identical to the unbounded sweep (chunking never reorders).
+        let scale = Scale {
+            jobs: 12,
+            nodes: 2,
+            gpus_per_node: 2,
+            jobs_per_hour: 240.0,
+            seed: 9,
+        };
+        let trace = scale.shockwave_trace();
+        let spec = scale.spec(GpuType::A100);
+        let scenarios = [
+            (SchedKind::TesseraeT, 0.0),
+            (SchedKind::Gavel, 0.0),
+            (SchedKind::Pop(2), 0.0),
+            (SchedKind::Tiresias, 0.0),
+        ];
+        let bounded = {
+            let _budget = crate::util::pool::WorkerPool::global().budget_override(2);
+            run_sim_scenarios(&scenarios, &trace, spec, scale.seed)
+        };
+        let unbounded = run_sim_scenarios(&scenarios, &trace, spec, scale.seed);
+        for (a, b) in bounded.iter().zip(&unbounded) {
+            assert_eq!(a.scheduler, b.scheduler);
+            assert_eq!(a.avg_jct.to_bits(), b.avg_jct.to_bits());
+            assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+            assert_eq!(a.total_migrations, b.total_migrations);
+            assert_eq!(a.rounds, b.rounds);
         }
     }
 }

@@ -211,13 +211,16 @@ pub fn fig14b_breakdown(job_counts: &[usize]) -> String {
 }
 
 /// Fig. 14(b) with per-cell checkpointing: Tesserae-T decision-time
-/// breakdown plus the matching-service columns (instances generated vs
-/// pruned / deduped / cache-hit / actually solved, and wall time inside
-/// engine solves). Cells are keyed `fig14b/{jobs}` and reused on resume.
+/// breakdown — the legacy scheduling/packing/migration buckets plus one
+/// column per pipeline stage (estimate/schedule/pack/migrate/commit) —
+/// and the matching-service columns (instances generated vs pruned /
+/// deduped / cache-hit / actually solved, and wall time inside engine
+/// solves). Cells are keyed `fig14b/{jobs}` and reused on resume.
 pub fn fig14b_breakdown_checkpointed(
     job_counts: &[usize],
     mut ckpt: Option<&mut Checkpoint>,
 ) -> String {
+    use crate::schedulers::Stage;
     let spec = ClusterSpec::scale_256();
     let mut t = Table::new(&[
         "active jobs",
@@ -225,6 +228,11 @@ pub fn fig14b_breakdown_checkpointed(
         "packing",
         "migration",
         "total",
+        "estimate",
+        "schedule",
+        "pack",
+        "migrate",
+        "commit",
         "inst",
         "pruned",
         "dedup",
@@ -232,11 +240,21 @@ pub fn fig14b_breakdown_checkpointed(
         "solved",
         "solve time",
     ]);
+    // Per-stage checkpoint keys, aligned with `Stage::ALL`.
+    const STAGE_FIELDS: [&str; Stage::COUNT] = [
+        "estimate_s",
+        "schedule_s",
+        "pack_s",
+        "migrate_s",
+        "commit_s",
+    ];
     let field = |cell: &Json, key: &str| cell.get(key).and_then(Json::as_f64).unwrap_or(0.0);
     for &n in job_counts {
         let key = format!("fig14b/{n}");
         // Only a cell where every rendered field parses counts as stored;
-        // anything else re-measures rather than rendering zeros.
+        // anything else re-measures rather than rendering zeros. (Stage
+        // fields are required too, so pre-pipeline checkpoints re-measure
+        // instead of rendering zero stages.)
         const FIG14B_FIELDS: [&str; 10] = [
             "scheduling_s",
             "packing_s",
@@ -251,7 +269,7 @@ pub fn fig14b_breakdown_checkpointed(
         ];
         let stored = ckpt.as_ref().and_then(|c| {
             let cell = c.get(&key)?;
-            for f in FIG14B_FIELDS {
+            for f in FIG14B_FIELDS.iter().chain(STAGE_FIELDS.iter()) {
                 cell.get(f).and_then(Json::as_f64)?;
             }
             Some(cell.clone())
@@ -261,12 +279,17 @@ pub fn fig14b_breakdown_checkpointed(
             None => {
                 let d = measure_decision(SchedKind::TesseraeT, n, &spec, 13);
                 let m = d.matching;
-                let cell = Json::obj(vec![
+                let mut fields = vec![
                     ("jobs", Json::num(n as f64)),
                     ("scheduling_s", Json::num(d.scheduling_s)),
                     ("packing_s", Json::num(d.packing_s)),
                     ("migration_s", Json::num(d.migration_s)),
                     ("total_s", Json::num(d.total_s)),
+                ];
+                for (name, stage) in STAGE_FIELDS.into_iter().zip(Stage::ALL) {
+                    fields.push((name, Json::num(d.stage(stage))));
+                }
+                fields.extend([
                     ("instances", Json::num(m.instances as f64)),
                     ("pruned", Json::num(m.pruned as f64)),
                     ("deduped", Json::num(m.deduped as f64)),
@@ -274,6 +297,7 @@ pub fn fig14b_breakdown_checkpointed(
                     ("solved", Json::num(m.solved as f64)),
                     ("solve_wall_s", Json::num(m.solve_wall_s)),
                 ]);
+                let cell = Json::obj(fields);
                 if let Some(c) = ckpt.as_mut() {
                     if let Err(e) = c.put(&key, cell.clone()) {
                         eprintln!("checkpoint write failed for {key}: {e}");
@@ -282,12 +306,17 @@ pub fn fig14b_breakdown_checkpointed(
                 cell
             }
         };
-        t.row(&[
+        let mut row = vec![
             format!("{n}"),
             format!("{:.4}s", field(&cell, "scheduling_s")),
             format!("{:.4}s", field(&cell, "packing_s")),
             format!("{:.4}s", field(&cell, "migration_s")),
             format!("{:.4}s", field(&cell, "total_s")),
+        ];
+        for name in STAGE_FIELDS {
+            row.push(format!("{:.4}s", field(&cell, name)));
+        }
+        row.extend([
             format!("{}", field(&cell, "instances") as u64),
             format!("{}", field(&cell, "pruned") as u64),
             format!("{}", field(&cell, "deduped") as u64),
@@ -295,10 +324,12 @@ pub fn fig14b_breakdown_checkpointed(
             format!("{}", field(&cell, "solved") as u64),
             format!("{:.4}s", field(&cell, "solve_wall_s")),
         ]);
+        t.row(&row);
     }
     format!(
         "Fig. 14(b) — Tesserae-T overhead breakdown (paper: scheduling+packing \
-         grow with jobs; migration flat in jobs, set by GPU count)\n{}",
+         grow with jobs; migration flat in jobs, set by GPU count; \
+         estimate..commit are the staged-pipeline columns)\n{}",
         t.render()
     )
 }

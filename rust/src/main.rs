@@ -32,6 +32,11 @@ commands:
               (per-cell resume-safe JSON; re-runs skip completed cells)
   serve       [--jobs N] [--nodes N] [--gpus-per-node G] [--round-secs F]
   engines     [--sizes 8,32,64] [--no-aot]
+
+global options:
+  --threads N  thread budget for the shared worker pool (matching batches,
+               POP partitions, sharded per-job work, scenario sweeps);
+               default: TESSERAE_THREADS env var, else all cores
 ";
 
 fn parse_scale(args: &Args) -> Scale {
@@ -57,6 +62,12 @@ fn parse_kind(name: &str) -> Option<SchedKind> {
 
 fn main() -> ExitCode {
     let args = Args::from_env();
+    // One knob for every source of parallelism: install the shared worker
+    // pool's thread budget before any work runs.
+    let threads = args.get_usize("threads", 0);
+    if threads > 0 {
+        tesserae::util::pool::WorkerPool::global().install_budget(threads);
+    }
     let Some(cmd) = args.subcommand() else {
         eprint!("{USAGE}");
         return ExitCode::FAILURE;

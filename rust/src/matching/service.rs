@@ -15,9 +15,11 @@
 //!    rebuild-and-solve;
 //! 3. **solves the surviving unique instances as one batch**, either via
 //!    the engine's native [`MatchingEngine::solve_batch`] (the AOT auction
-//!    artifact's hook) or across a `std::thread::scope` worker pool with a
-//!    per-worker [`SolveScratch`] arena. Results are positionally
-//!    deterministic and bit-identical to sequential per-instance solves.
+//!    artifact's hook) or across the process-wide shared
+//!    [`WorkerPool`] (deterministic chunked map, one [`SolveScratch`]
+//!    arena per chunk). Results are positionally deterministic and
+//!    bit-identical to sequential per-instance solves for any thread
+//!    budget.
 //!
 //! Parity contract: with [`ServiceConfig::default`] every consumer's
 //! output (plans, migration counts, costs, packing matchings) is
@@ -34,6 +36,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::linalg::Matrix;
+use crate::util::pool::WorkerPool;
 
 use super::batch::{
     one_sided_cost, pair_cost_matrix, sig_is_empty, sig_is_exact_prunable, Batch, NodeSig,
@@ -54,12 +57,14 @@ pub struct ServiceConfig {
     /// Cross-round content cache: a pair whose node contents did not
     /// change since a previous solve is a lookup.
     pub cache: bool,
-    /// Solve the unique batch across a scoped worker pool.
+    /// Solve the unique batch across the shared worker pool.
     pub parallel: bool,
     /// Minimum unique instances before the pool is engaged — below this,
     /// thread spawn costs more than the solves themselves.
     pub parallel_threshold: usize,
-    /// Worker cap; 0 = `std::thread::available_parallelism()`.
+    /// Worker cap; 0 = the shared pool's thread budget
+    /// (`--threads` / `TESSERAE_THREADS`, defaulting to
+    /// `std::thread::available_parallelism()`).
     pub workers: usize,
     /// Retain auction dual prices per node-pair position and warm-start
     /// that position's next solve. Off by default: warm starts preserve
@@ -433,9 +438,9 @@ impl MatchingService {
     }
 
     /// Solve `matrices` positionally. Three interchangeable paths — the
-    /// engine's native batch, the scoped worker pool, or a sequential
-    /// loop — all bit-identical because every instance is solved by the
-    /// same deterministic per-instance entry point.
+    /// engine's native batch, the shared worker pool's chunked map, or a
+    /// sequential loop — all bit-identical because every instance is
+    /// solved by the same deterministic per-instance entry point.
     fn solve_batch_now(
         &mut self,
         engine: &dyn MatchingEngine,
@@ -445,33 +450,23 @@ impl MatchingService {
             return Vec::new();
         }
         let t0 = Instant::now();
-        let workers = self.worker_count(matrices.len());
         let solved: Vec<AssignmentResult> = if engine.has_native_batch()
             || !self.cfg.parallel
             || matrices.len() < self.cfg.parallel_threshold
-            || workers <= 1
         {
             engine.solve_batch(matrices)
         } else {
-            let chunk = matrices.len().div_ceil(workers);
-            std::thread::scope(|scope| {
-                let handles: Vec<_> = matrices
-                    .chunks(chunk)
-                    .map(|part| {
-                        scope.spawn(move || {
-                            // Per-worker scratch arena, reused across the
-                            // worker's whole chunk.
-                            let mut scratch = SolveScratch::default();
-                            part.iter()
-                                .map(|c| engine.solve_min_cost_rect_scratch(c, &mut scratch))
-                                .collect::<Vec<_>>()
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .flat_map(|h| h.join().expect("matching worker panicked"))
-                    .collect()
+            // `cfg.workers` caps the worker count (0 = the pool's budget);
+            // a budget of 1, or a pool already fully leased by an outer
+            // caller (scenario sweeps), degrades to the same sequential
+            // loop `solve_batch` runs.
+            WorkerPool::global().run_chunks(matrices, self.cfg.workers, 8, |_, part| {
+                // Per-worker scratch arena, reused across the worker's
+                // whole chunk.
+                let mut scratch = SolveScratch::default();
+                part.iter()
+                    .map(|c| engine.solve_min_cost_rect_scratch(c, &mut scratch))
+                    .collect::<Vec<_>>()
             })
         };
         self.stats.solved += matrices.len();
@@ -521,18 +516,6 @@ impl MatchingService {
         self.stats.solved += batch.len();
         self.stats.solve_wall_s += t0.elapsed().as_secs_f64();
         out
-    }
-
-    fn worker_count(&self, len: usize) -> usize {
-        let avail = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        let cap = if self.cfg.workers == 0 {
-            avail
-        } else {
-            self.cfg.workers
-        };
-        cap.min(len).max(1)
     }
 
     fn cache_insert(&mut self, key: PairKey, sol: Arc<AssignmentResult>) {

@@ -164,25 +164,32 @@ pub fn pack_with(
             .iter()
             .map(|&j| candidates(pending[j], cfg.strategy_mode))
             .collect();
+        // The group's placed × pending candidate-edge evaluations are
+        // independent throughput lookups — the packing hot path at paper
+        // scale — so they shard per placed-side row across the shared
+        // worker pool. Each worker filters its own row (packing only
+        // helps if the combined throughput beats the configured
+        // threshold; default 1.0: running the placed job alone), so only
+        // surviving edges are ever materialized; rows concatenate
+        // in-order, keeping the edge list bit-identical to an inline
+        // double loop.
+        let row_edges = crate::util::pool::WorkerPool::global().map(&pl_idx, 0, 8, |gi, &i| {
+            pe_idx
+                .iter()
+                .enumerate()
+                .filter_map(|(gj, &j)| {
+                    best_edge(placed[i], pending[j], &pl_cands[gi], &pe_cands[gj], source)
+                        .filter(|(w, _, _)| *w > cfg.min_weight)
+                        .map(|(w, sa, sb)| (gj, w, sa, sb))
+                })
+                .collect::<Vec<_>>()
+        });
         let mut edges: Vec<Edge> = Vec::new();
         let mut meta: Vec<(usize, usize, ParallelismStrategy, ParallelismStrategy)> = Vec::new();
-        for (gi, &i) in pl_idx.iter().enumerate() {
-            for (gj, &j) in pe_idx.iter().enumerate() {
-                if let Some((w, sa, sb)) = best_edge(
-                    placed[i],
-                    pending[j],
-                    &pl_cands[gi],
-                    &pe_cands[gj],
-                    source,
-                ) {
-                    // Packing only helps if the combined throughput beats
-                    // the configured threshold (default 1.0: running the
-                    // placed job alone).
-                    if w > cfg.min_weight {
-                        edges.push((gi, gj, w));
-                        meta.push((gi, gj, sa, sb));
-                    }
-                }
+        for (gi, row) in row_edges.into_iter().enumerate() {
+            for (gj, w, sa, sb) in row {
+                edges.push((gi, gj, w));
+                meta.push((gi, gj, sa, sb));
             }
         }
         if edges.is_empty() {

@@ -23,7 +23,6 @@
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::estimator::ThroughputSource;
 use crate::jobs::ParallelismStrategy;
@@ -31,7 +30,9 @@ use crate::linalg::{solve_sparse_lp, CscBuilder, SparseLp, WarmStart};
 use crate::matching::{MatchingEngine, MatchingService};
 use crate::policies::placement::{allocate_without_packing, migrate_with, MigrationMode};
 use crate::policies::JobInfo;
+use crate::util::pool::WorkerPool;
 
+use super::pipeline::{self, RoundContext, Stage, StageProvider};
 use super::{best_isolated_strategies, DecisionTimings, RoundDecision, RoundInput, Scheduler};
 
 /// Objective flavors: LAS-weighted (default Gavel) or finish-time fairness
@@ -130,7 +131,9 @@ pub fn build_allocation_lp(
 }
 
 /// Write this round's LP objective — per-job weights then per-pair packed
-/// weights — into `out` (length `jobs.len() + pairs.len()`).
+/// weights — into `out` (length `jobs.len() + pairs.len()`). The per-pair
+/// throughput lookups are independent, so they shard across the shared
+/// worker pool; the written values are identical for any thread budget.
 pub fn allocation_objective_into(
     objective: GavelObjective,
     jobs: &[JobInfo],
@@ -144,16 +147,17 @@ pub fn allocation_objective_into(
     for (slot, j) in out.iter_mut().zip(jobs) {
         *slot = job_weight(objective, j);
     }
-    for (p, &(a, b)) in pairs.iter().enumerate() {
+    let pair_weights = WorkerPool::global().map(pairs, 0, 128, |_, &(a, b)| {
         let ja = &jobs[a];
         let jb = &jobs[b];
-        out[n + p] = source
+        source
             .normalized_pair((ja.model, &dp), (jb.model, &dp), ja.num_gpus)
             .map(|(na, nb)| {
                 job_weight(objective, ja) * na + job_weight(objective, jb) * nb
             })
-            .unwrap_or(0.0);
-    }
+            .unwrap_or(0.0)
+    });
+    out[n..].copy_from_slice(&pair_weights);
 }
 
 /// The built LP for one job window, kept across rounds. While the window
@@ -191,6 +195,10 @@ pub struct GavelScheduler {
     lp_cache: Option<LpCache>,
     lp_rebuilds: usize,
     lp_patches: usize,
+    /// Round scratch carried between pipeline stages: the LP's per-job
+    /// scores (Schedule) and chosen pair allocations (consumed by Pack).
+    round_scores: Vec<f64>,
+    round_pairs: Vec<(usize, usize, f64)>,
 }
 
 impl GavelScheduler {
@@ -211,6 +219,8 @@ impl GavelScheduler {
             lp_cache: None,
             lp_rebuilds: 0,
             lp_patches: 0,
+            round_scores: Vec::new(),
+            round_pairs: Vec::new(),
         }
     }
 
@@ -220,16 +230,14 @@ impl GavelScheduler {
         (self.lp_rebuilds, self.lp_patches)
     }
 
-    /// Build (or reuse) and solve the allocation LP; returns per-job
-    /// scores and chosen pair allocations.
-    fn solve_allocation(
-        &mut self,
-        input: &RoundInput,
-    ) -> (Vec<f64>, Vec<(usize, usize, f64)>, usize) {
+    /// Estimate-stage half of the LP round: build (or reuse) the cached
+    /// instance for this job window and patch the objective in place.
+    /// Weights drift every round even when the window is static, so the
+    /// objective is always re-patched.
+    fn prepare_lp(&mut self, input: &RoundInput) {
         let jobs = input.active;
-        let n = jobs.len();
-        if n == 0 {
-            return (vec![], vec![], 0);
+        if jobs.is_empty() {
+            return;
         }
         let total_gpus = input.spec.total_gpus();
         let structure: Vec<(u64, u32)> = jobs.iter().map(|j| (j.id, j.num_gpus)).collect();
@@ -258,8 +266,6 @@ impl GavelScheduler {
         let objective = self.objective;
         let source = Arc::clone(&self.source);
         let cache = self.lp_cache.as_mut().expect("cache just ensured");
-        // Weights drift every round even when the window is static, so the
-        // objective is always re-patched in place.
         allocation_objective_into(
             objective,
             jobs,
@@ -267,7 +273,16 @@ impl GavelScheduler {
             source.as_ref(),
             &mut cache.lp.objective,
         );
-        let nv = cache.lp.objective.len();
+    }
+
+    /// Schedule-stage half: solve the prepared LP (warm-started where the
+    /// window was unchanged); returns per-job scores and chosen pair
+    /// allocations.
+    fn solve_prepared(&mut self, n: usize) -> (Vec<f64>, Vec<(usize, usize, f64)>) {
+        let cache = self
+            .lp_cache
+            .as_mut()
+            .expect("estimate stage prepared the LP");
         match solve_sparse_lp(&cache.lp, cache.warm.as_ref()) {
             Ok((sol, warm)) => {
                 cache.warm = Some(warm);
@@ -279,12 +294,111 @@ impl GavelScheduler {
                     .filter(|(p, _)| sol.x[n + *p] > 0.25)
                     .map(|(p, &(a, b))| (a, b, sol.x[n + p]))
                     .collect();
-                (scores, chosen, nv)
+                (scores, chosen)
             }
             Err(_) => {
                 cache.warm = None;
-                (cache.lp.objective[..n].to_vec(), vec![], nv)
+                (cache.lp.objective[..n].to_vec(), vec![])
             }
+        }
+    }
+}
+
+impl StageProvider for GavelScheduler {
+    /// Ensure the cached LP instance matches this round's job window and
+    /// patch the (drifted) objective weights in place.
+    fn estimate(&mut self, cx: &mut RoundContext) {
+        self.round_scores.clear();
+        self.round_pairs.clear();
+        self.prepare_lp(cx.input);
+    }
+
+    /// Solve the LP and realize the fractional allocation: priority score
+    /// = LP allocation corrected by rounds already received (Gavel's
+    /// round-robin rule), then the consolidated allocation walk.
+    fn schedule(&mut self, cx: &mut RoundContext) {
+        let jobs = cx.input.active;
+        if !jobs.is_empty() {
+            let (scores, chosen) = self.solve_prepared(jobs.len());
+            self.round_scores = scores;
+            self.round_pairs = chosen;
+        }
+        let scores = &self.round_scores;
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        order.sort_by(|&a, &b| {
+            let sa =
+                scores.get(a).copied().unwrap_or(0.0) / (1.0 + jobs[a].rounds_received as f64);
+            let sb =
+                scores.get(b).copied().unwrap_or(0.0) / (1.0 + jobs[b].rounds_received as f64);
+            sb.partial_cmp(&sa).unwrap().then(jobs[a].id.cmp(&jobs[b].id))
+        });
+        cx.order = order;
+        let ordered: Vec<&JobInfo> = cx.order.iter().map(|&i| &jobs[i]).collect();
+        let alloc = allocate_without_packing(cx.input.spec, &ordered);
+        cx.plan = alloc.plan;
+        cx.placed = alloc.placed;
+        cx.pending = alloc.pending;
+        cx.by_id = jobs.iter().map(|j| (j.id, j)).collect();
+        let placed_infos: Vec<&JobInfo> = cx.placed.iter().map(|id| cx.by_id[id]).collect();
+        cx.strategies = best_isolated_strategies(&placed_infos, self.source.as_ref());
+    }
+
+    /// Apply LP-chosen packings where one side is placed and the other
+    /// pending.
+    fn pack(&mut self, cx: &mut RoundContext) {
+        let placed_set: std::collections::BTreeSet<_> = cx.placed.iter().copied().collect();
+        let pending_set: std::collections::BTreeSet<_> = cx.pending.iter().copied().collect();
+        let mut by_alloc = std::mem::take(&mut self.round_pairs);
+        by_alloc.sort_by(|x, y| y.2.partial_cmp(&x.2).unwrap());
+        for (a, b, _) in by_alloc {
+            let (ja, jb) = (&cx.input.active[a], &cx.input.active[b]);
+            let (host, guest) = if placed_set.contains(&ja.id) && pending_set.contains(&jb.id) {
+                (ja, jb)
+            } else if placed_set.contains(&jb.id) && pending_set.contains(&ja.id) {
+                (jb, ja)
+            } else {
+                continue;
+            };
+            let gpus = cx.plan.gpus_of(host.id).to_vec();
+            if gpus.is_empty() || !cx.plan.gpus_of(guest.id).is_empty() {
+                continue;
+            }
+            if gpus.iter().any(|&g| cx.plan.free_capacity(g) == 0) {
+                continue;
+            }
+            cx.plan.place(guest.id, &gpus);
+            cx.strategies.insert(guest.id, ParallelismStrategy::DataParallel);
+            cx.packed_pairs.push((host.id, guest.id));
+        }
+    }
+
+    fn migrate(&mut self, cx: &mut RoundContext) {
+        cx.outcome = Some(migrate_with(
+            cx.input.spec,
+            cx.input.prev_plan,
+            &cx.plan,
+            self.migration,
+            self.engine.as_ref(),
+            &mut self.service,
+        ));
+    }
+
+    fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+        let outcome = cx.outcome.take().expect("migrate stage ran");
+        RoundDecision {
+            plan: outcome.plan,
+            strategies: std::mem::take(&mut cx.strategies),
+            packed_pairs: std::mem::take(&mut cx.packed_pairs),
+            migrations: outcome.migrations,
+            timings: DecisionTimings {
+                stage_s: cx.stage_s,
+                scheduling_s: cx.stage_s[Stage::Estimate.index()]
+                    + cx.stage_s[Stage::Schedule.index()],
+                packing_s: cx.stage_s[Stage::Pack.index()],
+                migration_s: outcome.decide_time_s,
+                total_s: 0.0, // driver fills
+                matching: outcome.service,
+            },
         }
     }
 }
@@ -299,82 +413,7 @@ impl Scheduler for GavelScheduler {
     }
 
     fn decide(&mut self, input: &RoundInput) -> RoundDecision {
-        let t_total = Instant::now();
-        let t0 = Instant::now();
-        let (scores, pair_allocs, _nv) = self.solve_allocation(input);
-        let scheduling_s = t0.elapsed().as_secs_f64();
-
-        // Realize the fractional allocation: priority score = LP allocation
-        // corrected by rounds already received (Gavel's round-robin rule).
-        let mut order: Vec<usize> = (0..input.active.len()).collect();
-        order.sort_by(|&a, &b| {
-            let sa = scores.get(a).copied().unwrap_or(0.0)
-                / (1.0 + input.active[a].rounds_received as f64);
-            let sb = scores.get(b).copied().unwrap_or(0.0)
-                / (1.0 + input.active[b].rounds_received as f64);
-            sb.partial_cmp(&sa)
-                .unwrap()
-                .then(input.active[a].id.cmp(&input.active[b].id))
-        });
-        let ordered: Vec<&JobInfo> = order.iter().map(|&i| &input.active[i]).collect();
-        let alloc = allocate_without_packing(input.spec, &ordered);
-        let mut plan = alloc.plan;
-        let by_id: BTreeMap<_, _> = input.active.iter().map(|j| (j.id, j)).collect();
-        let placed_infos: Vec<&JobInfo> = alloc.placed.iter().map(|id| by_id[id]).collect();
-        let mut strategies = best_isolated_strategies(&placed_infos, self.source.as_ref());
-
-        // Apply LP-chosen packings where one side is placed and the other
-        // pending.
-        let t1 = Instant::now();
-        let mut packed_pairs = Vec::new();
-        let placed_set: std::collections::BTreeSet<_> = alloc.placed.iter().copied().collect();
-        let pending_set: std::collections::BTreeSet<_> = alloc.pending.iter().copied().collect();
-        let mut by_alloc = pair_allocs;
-        by_alloc.sort_by(|x, y| y.2.partial_cmp(&x.2).unwrap());
-        for (a, b, _) in by_alloc {
-            let (ja, jb) = (&input.active[a], &input.active[b]);
-            let (host, guest) = if placed_set.contains(&ja.id) && pending_set.contains(&jb.id) {
-                (ja, jb)
-            } else if placed_set.contains(&jb.id) && pending_set.contains(&ja.id) {
-                (jb, ja)
-            } else {
-                continue;
-            };
-            let gpus = plan.gpus_of(host.id).to_vec();
-            if gpus.is_empty() || !plan.gpus_of(guest.id).is_empty() {
-                continue;
-            }
-            if gpus.iter().any(|&g| plan.free_capacity(g) == 0) {
-                continue;
-            }
-            plan.place(guest.id, &gpus);
-            strategies.insert(guest.id, ParallelismStrategy::DataParallel);
-            packed_pairs.push((host.id, guest.id));
-        }
-        let packing_s = t1.elapsed().as_secs_f64();
-
-        let outcome = migrate_with(
-            input.spec,
-            input.prev_plan,
-            &plan,
-            self.migration,
-            self.engine.as_ref(),
-            &mut self.service,
-        );
-
-        RoundDecision {
-            plan: outcome.plan,
-            strategies,
-            packed_pairs,
-            migrations: outcome.migrations,
-            timings: DecisionTimings {
-                scheduling_s,
-                packing_s,
-                migration_s: outcome.decide_time_s,
-                total_s: t_total.elapsed().as_secs_f64(),
-                matching: outcome.service,
-            },
-        }
+        pipeline::run_round(self, input)
     }
 }
 

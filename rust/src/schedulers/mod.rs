@@ -3,10 +3,12 @@
 //! Tiresias (Single), Gavel, Gavel-FTF and POP.
 
 pub mod gavel;
+pub mod pipeline;
 pub mod pop;
 pub mod tesserae;
 
 pub use gavel::{GavelObjective, GavelScheduler};
+pub use pipeline::{run_round, RoundContext, Stage, StageProvider};
 pub use pop::PopScheduler;
 pub use tesserae::TesseraeScheduler;
 
@@ -30,6 +32,14 @@ pub struct RoundInput<'a> {
 /// Decision-time breakdown (Fig. 14(b)).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct DecisionTimings {
+    /// Per-pipeline-stage wall clock (Estimate / Schedule / Pack /
+    /// Migrate / Commit), written by the pipeline driver; sums to
+    /// `total_s` within driver-overhead tolerance (debug-asserted in
+    /// [`pipeline::run_round`]).
+    pub stage_s: [f64; Stage::COUNT],
+    /// Legacy Fig. 14(b) bucket: estimation + scheduling (priority order /
+    /// LP solve and the allocation walk — the Estimate and Schedule
+    /// stages together).
     pub scheduling_s: f64,
     pub packing_s: f64,
     pub migration_s: f64,
@@ -38,6 +48,13 @@ pub struct DecisionTimings {
     /// many were pruned/deduped/cache-hit instead of solved, and the wall
     /// time inside engine solves.
     pub matching: MatchingServiceStats,
+}
+
+impl DecisionTimings {
+    /// Wall clock of one pipeline stage.
+    pub fn stage(&self, stage: Stage) -> f64 {
+        self.stage_s[stage.index()]
+    }
 }
 
 /// A scheduler's output for one round.
@@ -60,15 +77,17 @@ pub trait Scheduler: Send {
     fn decide(&mut self, input: &RoundInput) -> RoundDecision;
 }
 
-/// Shared helper: assign each placed job its best isolated strategy
-/// according to `source` (packed jobs are overridden by the packing policy).
+/// Shared helper: assign each job its best isolated strategy according to
+/// `source` (packed jobs are overridden by the packing policy). The
+/// per-job candidate enumeration is independent work, so it shards across
+/// the process-wide worker pool; results are keyed by job id, making the
+/// map identical for any thread budget.
 pub(crate) fn best_isolated_strategies(
     infos: &[&JobInfo],
     source: &dyn crate::estimator::ThroughputSource,
 ) -> BTreeMap<JobId, ParallelismStrategy> {
-    infos
-        .iter()
-        .map(|j| {
+    crate::util::pool::WorkerPool::global()
+        .map(infos, 0, 64, |_, j| {
             let best = ParallelismStrategy::candidates(j.model, j.num_gpus)
                 .into_iter()
                 .max_by(|a, b| {
@@ -80,5 +99,6 @@ pub(crate) fn best_isolated_strategies(
                 .unwrap_or(ParallelismStrategy::DataParallel);
             (j.id, best)
         })
+        .into_iter()
         .collect()
 }

@@ -1,0 +1,249 @@
+//! The staged round pipeline: one scheduling round decomposed into typed
+//! stages — `Estimate → Schedule → Pack → Migrate → Commit` — driven by
+//! [`run_round`] over a [`StageProvider`]. Every scheduler
+//! (`TesseraeScheduler`, `GavelScheduler`, `PopScheduler`) and the
+//! real-execution coordinator runs through this driver; `decide()` is a
+//! thin wrapper.
+//!
+//! Stage semantics (providers may leave stages empty, never reorder them):
+//!
+//! * **Estimate** — per-job inputs for the round: the scheduling policy's
+//!   priority order, LP objective weights, POP's partition split. Sharded
+//!   per-job work (via [`crate::util::pool::WorkerPool`]) lives here and
+//!   in Schedule.
+//! * **Schedule** — turn estimates into a logical allocation: the
+//!   no-packing allocation walk + per-placed-job strategy selection, the
+//!   Gavel LP solve + realization, POP's partition solves + stitch.
+//! * **Pack** — GPU sharing: Algorithm 4's matching (Tesserae) or the LP's
+//!   chosen pair variables (Gavel).
+//! * **Migrate** — physical realization against the previous round's plan
+//!   (Algorithms 2+3 / 5 / the Gavel baseline), producing the
+//!   [`MigrationOutcome`].
+//! * **Commit** — assemble the [`RoundDecision`], including the legacy
+//!   `scheduling_s`/`packing_s`/`migration_s` timing fields.
+//!
+//! The [`RoundContext`] carries the artifacts between stages: the ordered
+//! job window, the allocation (placed/pending + evolving plan), the packed
+//! pairs and the migration outcome. Scheduler-specific scratch (LP scores,
+//! partition groups) stays inside the provider.
+//!
+//! The driver measures per-stage wall clock into
+//! `DecisionTimings::stage_s` (one entry per stage, Fig. 14(b)'s new
+//! columns) and debug-asserts the stage times account for `total_s`.
+//! Determinism contract: a provider's stages must produce bit-identical
+//! artifacts for any worker-pool budget — the pipeline introduces *where*
+//! work happens, never *what* is computed. This staging is also the seam
+//! for overlapping round `r+1`'s Estimate with round `r`'s Migrate tail.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::cluster::PlacementPlan;
+use crate::jobs::{JobId, ParallelismStrategy};
+use crate::policies::placement::MigrationOutcome;
+use crate::policies::JobInfo;
+
+use super::{RoundDecision, RoundInput};
+
+/// The pipeline's typed stages, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Estimate,
+    Schedule,
+    Pack,
+    Migrate,
+    Commit,
+}
+
+impl Stage {
+    /// Number of stages (the width of `DecisionTimings::stage_s`).
+    pub const COUNT: usize = 5;
+
+    /// All stages in execution order.
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Estimate,
+        Stage::Schedule,
+        Stage::Pack,
+        Stage::Migrate,
+        Stage::Commit,
+    ];
+
+    /// Index into `DecisionTimings::stage_s`.
+    pub fn index(self) -> usize {
+        match self {
+            Stage::Estimate => 0,
+            Stage::Schedule => 1,
+            Stage::Pack => 2,
+            Stage::Migrate => 3,
+            Stage::Commit => 4,
+        }
+    }
+
+    /// Column/report label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Estimate => "estimate",
+            Stage::Schedule => "schedule",
+            Stage::Pack => "pack",
+            Stage::Migrate => "migrate",
+            Stage::Commit => "commit",
+        }
+    }
+}
+
+/// Artifacts carried between stages of one round. Providers fill the
+/// fields their stages produce and read what earlier stages left.
+pub struct RoundContext<'a> {
+    pub input: &'a RoundInput<'a>,
+    /// Estimate: priority order as indices into `input.active`.
+    pub order: Vec<usize>,
+    /// Schedule: id → info for the round's job window, built once and
+    /// shared with later stages (Pack resolves placed/pending infos
+    /// through it instead of rebuilding the map).
+    pub by_id: BTreeMap<JobId, &'a JobInfo>,
+    /// Schedule: jobs placed / left pending, in priority order.
+    pub placed: Vec<JobId>,
+    pub pending: Vec<JobId>,
+    /// Schedule → Pack: the evolving *logical* plan.
+    pub plan: PlacementPlan,
+    /// Final per-job strategies for the decision.
+    pub strategies: BTreeMap<JobId, ParallelismStrategy>,
+    /// Pack: (placed, pending) pairs sharing GPUs this round.
+    pub packed_pairs: Vec<(JobId, JobId)>,
+    /// Migrate: the physical realization (`None` for providers that remap
+    /// inline, e.g. POP's pre-stitched partition plans).
+    pub outcome: Option<MigrationOutcome>,
+    /// Migrate: Definition-1 migration count when `outcome` is `None`.
+    pub migrations: usize,
+    /// Per-stage wall clock, written by the driver as stages complete —
+    /// `commit` can already read the first four entries.
+    pub stage_s: [f64; Stage::COUNT],
+}
+
+impl<'a> RoundContext<'a> {
+    pub fn new(input: &'a RoundInput<'a>) -> RoundContext<'a> {
+        RoundContext {
+            input,
+            order: Vec::new(),
+            by_id: BTreeMap::new(),
+            placed: Vec::new(),
+            pending: Vec::new(),
+            plan: PlacementPlan::new(input.spec.total_gpus()),
+            strategies: BTreeMap::new(),
+            packed_pairs: Vec::new(),
+            outcome: None,
+            migrations: 0,
+            stage_s: [0.0; Stage::COUNT],
+        }
+    }
+}
+
+/// A scheduler expressed as pipeline stages. `decide()` becomes
+/// `pipeline::run_round(self, input)`.
+pub trait StageProvider {
+    fn estimate(&mut self, cx: &mut RoundContext);
+    fn schedule(&mut self, cx: &mut RoundContext);
+    fn pack(&mut self, cx: &mut RoundContext);
+    fn migrate(&mut self, cx: &mut RoundContext);
+    /// Assemble the decision. The driver overwrites `stage_s` and
+    /// `total_s` on the returned timings; the provider is responsible for
+    /// the legacy breakdown fields and the matching-service stats.
+    fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision;
+}
+
+/// Drive one round through the staged pipeline, timing each stage.
+pub fn run_round<P: StageProvider + ?Sized>(
+    provider: &mut P,
+    input: &RoundInput,
+) -> RoundDecision {
+    // Stage times are differences of boundary timestamps on one clock, so
+    // they sum to the measured total by construction — OS preemption
+    // anywhere lands inside some stage instead of an unattributed gap
+    // (the context setup before the first boundary is attributed to
+    // Estimate).
+    let t_total = Instant::now();
+    let mut cx = RoundContext::new(input);
+    let mut last_s = 0.0f64;
+    for stage in [Stage::Estimate, Stage::Schedule, Stage::Pack, Stage::Migrate] {
+        match stage {
+            Stage::Estimate => provider.estimate(&mut cx),
+            Stage::Schedule => provider.schedule(&mut cx),
+            Stage::Pack => provider.pack(&mut cx),
+            Stage::Migrate => provider.migrate(&mut cx),
+            Stage::Commit => unreachable!("commit is driven separately"),
+        }
+        let boundary_s = t_total.elapsed().as_secs_f64();
+        cx.stage_s[stage.index()] = boundary_s - last_s;
+        last_s = boundary_s;
+    }
+    let mut decision = provider.commit(&mut cx);
+    cx.stage_s[Stage::Commit.index()] = t_total.elapsed().as_secs_f64() - last_s;
+    decision.timings.stage_s = cx.stage_s;
+    decision.timings.total_s = t_total.elapsed().as_secs_f64();
+    // The five stages are the whole round; only the final total_s read
+    // sits outside the last boundary, so the sum is exact up to that one
+    // instant (plus float rounding).
+    let staged: f64 = cx.stage_s.iter().sum();
+    debug_assert!(
+        decision.timings.total_s - staged <= 1e-3 + 0.01 * decision.timings.total_s,
+        "stage times must sum to the round total: {staged}s of {}s",
+        decision.timings.total_s
+    );
+    decision
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, GpuType};
+    use crate::schedulers::DecisionTimings;
+
+    /// Minimal provider: no-op stages, empty decision.
+    struct Noop;
+
+    impl StageProvider for Noop {
+        fn estimate(&mut self, _cx: &mut RoundContext) {}
+        fn schedule(&mut self, cx: &mut RoundContext) {
+            cx.placed.clear();
+        }
+        fn pack(&mut self, _cx: &mut RoundContext) {}
+        fn migrate(&mut self, _cx: &mut RoundContext) {}
+        fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+            RoundDecision {
+                plan: cx.plan.clone(),
+                strategies: cx.strategies.clone(),
+                packed_pairs: cx.packed_pairs.clone(),
+                migrations: cx.migrations,
+                timings: DecisionTimings::default(),
+            }
+        }
+    }
+
+    #[test]
+    fn driver_times_every_stage_and_total() {
+        let spec = ClusterSpec::new(1, 2, GpuType::A100);
+        let prev = crate::cluster::PlacementPlan::new(2);
+        let input = RoundInput {
+            now: 0.0,
+            round: 0,
+            active: &[],
+            prev_plan: &prev,
+            spec: &spec,
+        };
+        let d = run_round(&mut Noop, &input);
+        assert!(d.timings.total_s > 0.0);
+        assert!(d.timings.stage_s.iter().all(|&s| s >= 0.0));
+        let staged: f64 = d.timings.stage_s.iter().sum();
+        assert!(staged <= d.timings.total_s);
+        assert!(d.plan.jobs().is_empty());
+    }
+
+    #[test]
+    fn stage_indices_are_dense_and_ordered() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.index(), i);
+        }
+        let names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(names, ["estimate", "schedule", "pack", "migrate", "commit"]);
+    }
+}

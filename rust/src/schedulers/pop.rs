@@ -5,36 +5,45 @@
 //! Gavel but still superlinear in active jobs — both effects fall out of
 //! this construction.
 //!
-//! The `k` partition LPs solve concurrently on a scoped worker pool
-//! (atomic work-queue over `min(k, cores)` threads, mirroring
-//! `MatchingService`'s batch-solve pattern). The per-partition
+//! The `k` partition LPs solve concurrently on the process-wide shared
+//! [`WorkerPool`] (deterministic chunked reduction over `&mut` partition
+//! slots — no per-call pool of its own). The per-partition
 //! [`GavelScheduler`]s are *retained across rounds*, so each partition
 //! keeps its cached LP instance and warm-start basis: a round whose job
 //! window is unchanged re-patches `k` objectives and re-solves from `k`
 //! previous bases instead of rebuilding everything. Partitions are
 //! independent, so the pooled solve is bit-identical to a sequential loop
-//! (`parallel = false`), asserted by
+//! (`parallel = false`, or a thread budget of 1), asserted by
 //! `pop_partitions_parallel_matches_sequential`.
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::Arc;
 
 use crate::cluster::{ClusterSpec, PlacementPlan};
 use crate::estimator::ThroughputSource;
 use crate::matching::MatchingEngine;
 use crate::policies::placement::MigrationMode;
 use crate::policies::JobInfo;
+use crate::util::pool::WorkerPool;
 
+use super::pipeline::{self, RoundContext, StageProvider};
 use super::{DecisionTimings, GavelObjective, GavelScheduler, RoundDecision, RoundInput, Scheduler};
+
+/// Estimate-stage output carried to the Schedule stage: the partition
+/// split of one round.
+struct PopRound {
+    k: usize,
+    groups: Vec<Vec<JobInfo>>,
+    sub_specs: Vec<ClusterSpec>,
+    sub_prev: Vec<PlacementPlan>,
+    node_base: Vec<usize>,
+}
 
 /// POP: k-way partitioned Gavel.
 pub struct PopScheduler {
     pub partitions: usize,
     pub objective: GavelObjective,
     pub packing: bool,
-    /// Solve partitions on the scoped worker pool (bit-identical to the
+    /// Solve partitions on the shared worker pool (bit-identical to the
     /// sequential path; the toggle exists for parity tests and timing
     /// studies).
     pub parallel: bool,
@@ -43,6 +52,11 @@ pub struct PopScheduler {
     /// Retained per-partition schedulers (rebuilt only when the effective
     /// partition count changes); index p owns group p's LP cache.
     subs: Vec<GavelScheduler>,
+    /// Round scratch between pipeline stages.
+    round: Option<PopRound>,
+    /// Legacy timing buckets absorbed from this round's sub-decisions
+    /// (max across partitions — they ran concurrently).
+    sub_timings: DecisionTimings,
 }
 
 impl PopScheduler {
@@ -62,6 +76,8 @@ impl PopScheduler {
             source,
             engine,
             subs: Vec::new(),
+            round: None,
+            sub_timings: DecisionTimings::default(),
         }
     }
 
@@ -91,9 +107,9 @@ impl PopScheduler {
 }
 
 /// Run each retained sub-scheduler on its input, either sequentially or
-/// across a scoped worker pool (atomic next-index queue, one uncontended
-/// mutex per slot). Results are positionally deterministic and
-/// bit-identical between the two paths because partitions share no state.
+/// across the shared worker pool's deterministic chunked map. Results are
+/// positionally deterministic and bit-identical between the two paths
+/// because partitions share no state.
 fn decide_partitions(
     subs: &mut [GavelScheduler],
     inputs: &[RoundInput],
@@ -108,48 +124,20 @@ fn decide_partitions(
             .map(|(sub, input)| sub.decide(input))
             .collect();
     }
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(k);
-    let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<(&mut GavelScheduler, Option<RoundDecision>)>> = subs
-        .iter_mut()
-        .map(|sub| Mutex::new((sub, None)))
-        .collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= k {
-                    break;
-                }
-                let mut slot = slots[i].lock().expect("partition slot poisoned");
-                let d = slot.0.decide(&inputs[i]);
-                slot.1 = Some(d);
-            });
-        }
-    });
-    slots
-        .into_iter()
-        .map(|slot| {
-            slot.into_inner()
-                .expect("partition slot poisoned")
-                .1
-                .expect("partition not solved")
-        })
-        .collect()
+    let mut slots: Vec<(&mut GavelScheduler, &RoundInput)> =
+        subs.iter_mut().zip(inputs).collect();
+    WorkerPool::global().map_mut(&mut slots, 0, 1, |_, slot| slot.0.decide(slot.1))
 }
 
-impl Scheduler for PopScheduler {
-    fn name(&self) -> String {
-        format!("pop-{}", self.partitions)
-    }
-
-    fn decide(&mut self, input: &RoundInput) -> RoundDecision {
-        let t_total = Instant::now();
-        // A partition must be able to host the largest job (POP's split
-        // assumes granular workloads); shrink k until that holds.
+impl StageProvider for PopScheduler {
+    /// The partition split: shrink k until a partition can host the
+    /// largest job (POP's split assumes granular workloads), partition
+    /// jobs round-robin (random split in POP; round-robin over the
+    /// id-sorted list is an equivalent unbiased 1/k split here), nodes
+    /// contiguously, and slice the previous physical plan per partition so
+    /// sub-schedulers can still minimize migrations within their slice.
+    fn estimate(&mut self, cx: &mut RoundContext) {
+        let input = cx.input;
         let max_job_nodes = input
             .active
             .iter()
@@ -162,9 +150,6 @@ impl Scheduler for PopScheduler {
         }
         self.ensure_subs(k);
 
-        // Partition jobs round-robin (random split in POP; round-robin over
-        // the id-sorted list is an equivalent unbiased 1/k split here) and
-        // nodes contiguously.
         let mut groups: Vec<Vec<JobInfo>> = vec![Vec::new(); k];
         for (i, j) in input.active.iter().enumerate() {
             groups[i % k].push(j.clone());
@@ -184,9 +169,6 @@ impl Scheduler for PopScheduler {
                 )
             })
             .collect();
-
-        // Slice the previous physical plan per partition so sub-schedulers
-        // can still minimize migrations within their slice.
         let node_base: Vec<usize> = (0..k).map(|p| p * nodes_per).collect();
         let sub_prev: Vec<PlacementPlan> = (0..k)
             .map(|p| {
@@ -207,33 +189,41 @@ impl Scheduler for PopScheduler {
                 plan
             })
             .collect();
+        self.round = Some(PopRound {
+            k,
+            groups,
+            sub_specs,
+            sub_prev,
+            node_base,
+        });
+    }
 
-        let inputs: Vec<RoundInput> = (0..k)
+    /// Solve the k sub-problems on the shared worker pool (POP's speedup)
+    /// and stitch the sub-plans into the global plan.
+    fn schedule(&mut self, cx: &mut RoundContext) {
+        let input = cx.input;
+        let round = self.round.take().expect("estimate stage ran");
+        let inputs: Vec<RoundInput> = (0..round.k)
             .map(|p| RoundInput {
                 now: input.now,
                 round: input.round,
-                active: &groups[p],
-                prev_plan: &sub_prev[p],
-                spec: &sub_specs[p],
+                active: &round.groups[p],
+                prev_plan: &round.sub_prev[p],
+                spec: &round.sub_specs[p],
             })
             .collect();
-
-        // Solve the k sub-problems on the worker pool (POP's speedup).
         let results = decide_partitions(&mut self.subs, &inputs, self.parallel);
 
-        // Stitch sub-plans into the global plan.
-        let mut plan = PlacementPlan::new(input.spec.total_gpus());
-        let mut strategies = BTreeMap::new();
-        let mut packed_pairs = Vec::new();
         let mut timings = DecisionTimings::default();
         for (p, d) in results.into_iter().enumerate() {
-            let base_gpu = node_base[p] * input.spec.gpus_per_node;
+            let base_gpu = round.node_base[p] * input.spec.gpus_per_node;
             for j in d.plan.jobs() {
-                let gpus: Vec<usize> = d.plan.gpus_of(j).iter().map(|g| g + base_gpu).collect();
-                plan.place(j, &gpus);
+                let gpus: Vec<usize> =
+                    d.plan.gpus_of(j).iter().map(|g| g + base_gpu).collect();
+                cx.plan.place(j, &gpus);
             }
-            strategies.extend(d.strategies);
-            packed_pairs.extend(d.packed_pairs);
+            cx.strategies.extend(d.strategies);
+            cx.packed_pairs.extend(d.packed_pairs);
             // Parallel solve: wall time is the max across partitions;
             // matching-service counts add, solve wall takes the max.
             timings.scheduling_s = timings.scheduling_s.max(d.timings.scheduling_s);
@@ -241,16 +231,40 @@ impl Scheduler for PopScheduler {
             timings.migration_s = timings.migration_s.max(d.timings.migration_s);
             timings.matching.absorb_parallel(&d.timings.matching);
         }
-        let migrations = plan.migrations_from(input.prev_plan);
-        timings.total_s = t_total.elapsed().as_secs_f64();
+        self.sub_timings = timings;
+    }
 
+    /// Packing happened inside the partition sub-decisions.
+    fn pack(&mut self, _cx: &mut RoundContext) {}
+
+    /// Partitions realized their slices physically already; the global
+    /// count is the Definition-1 diff against the previous plan.
+    fn migrate(&mut self, cx: &mut RoundContext) {
+        cx.migrations = cx.plan.migrations_from(cx.input.prev_plan);
+    }
+
+    fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+        let timings = std::mem::take(&mut self.sub_timings);
         RoundDecision {
-            plan,
-            strategies,
-            packed_pairs,
-            migrations,
+            plan: std::mem::replace(
+                &mut cx.plan,
+                PlacementPlan::new(cx.input.spec.total_gpus()),
+            ),
+            strategies: std::mem::take(&mut cx.strategies),
+            packed_pairs: std::mem::take(&mut cx.packed_pairs),
+            migrations: cx.migrations,
             timings,
         }
+    }
+}
+
+impl Scheduler for PopScheduler {
+    fn name(&self) -> String {
+        format!("pop-{}", self.partitions)
+    }
+
+    fn decide(&mut self, input: &RoundInput) -> RoundDecision {
+        pipeline::run_round(self, input)
     }
 }
 

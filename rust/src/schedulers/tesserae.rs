@@ -3,9 +3,7 @@
 //! (Algorithms 2+3). The Tiresias and Tiresias (Single) baselines are
 //! configurations of the same engine with packing/migration toggled.
 
-use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::estimator::ThroughputSource;
 use crate::matching::{MatchingEngine, MatchingService, ServiceConfig};
@@ -15,6 +13,7 @@ use crate::policies::placement::{
 use crate::policies::scheduling::SchedulingPolicy;
 use crate::policies::JobInfo;
 
+use super::pipeline::{self, RoundContext, Stage, StageProvider};
 use super::{best_isolated_strategies, DecisionTimings, RoundDecision, RoundInput, Scheduler};
 
 /// Tesserae's composable scheduler engine.
@@ -124,74 +123,90 @@ impl TesseraeScheduler {
     }
 }
 
+impl StageProvider for TesseraeScheduler {
+    /// Scheduling policy: priority order (Listing 1 line 3).
+    fn estimate(&mut self, cx: &mut RoundContext) {
+        cx.order = self.policy.order(cx.input.active);
+    }
+
+    /// Allocation without packing (lines 5-12), then each placed job's
+    /// best isolated strategy (candidate enumeration sharded per job
+    /// across the worker pool; packing overrides individual entries).
+    fn schedule(&mut self, cx: &mut RoundContext) {
+        let ordered: Vec<&JobInfo> = cx.order.iter().map(|&i| &cx.input.active[i]).collect();
+        let alloc = allocate_without_packing(cx.input.spec, &ordered);
+        cx.plan = alloc.plan;
+        cx.placed = alloc.placed;
+        cx.pending = alloc.pending;
+        cx.by_id = cx.input.active.iter().map(|j| (j.id, j)).collect();
+        let placed_infos: Vec<&JobInfo> = cx.placed.iter().map(|id| cx.by_id[id]).collect();
+        cx.strategies = best_isolated_strategies(&placed_infos, self.source.as_ref());
+    }
+
+    /// Packing (lines 13-15).
+    fn pack(&mut self, cx: &mut RoundContext) {
+        let Some(cfg) = &self.packing else {
+            return;
+        };
+        let placed_infos: Vec<&JobInfo> = cx.placed.iter().map(|id| cx.by_id[id]).collect();
+        let pending_infos: Vec<&JobInfo> = cx.pending.iter().map(|id| cx.by_id[id]).collect();
+        let pairs = pack_with(
+            &placed_infos,
+            &pending_infos,
+            self.source.as_ref(),
+            cfg,
+            self.engine.as_ref(),
+            &mut self.service,
+        );
+        for p in pairs {
+            let gpus = cx.plan.gpus_of(p.placed).to_vec();
+            cx.plan.place(p.pending, &gpus);
+            cx.strategies.insert(p.placed, p.placed_strategy.clone());
+            cx.strategies.insert(p.pending, p.pending_strategy.clone());
+            cx.packed_pairs.push((p.placed, p.pending));
+        }
+    }
+
+    /// Migration minimization (line 16). Drains the round's service stats
+    /// (packing included) into the outcome.
+    fn migrate(&mut self, cx: &mut RoundContext) {
+        cx.outcome = Some(migrate_with(
+            cx.input.spec,
+            cx.input.prev_plan,
+            &cx.plan,
+            self.migration,
+            self.engine.as_ref(),
+            &mut self.service,
+        ));
+    }
+
+    fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+        let outcome = cx.outcome.take().expect("migrate stage ran");
+        RoundDecision {
+            plan: outcome.plan,
+            strategies: std::mem::take(&mut cx.strategies),
+            packed_pairs: std::mem::take(&mut cx.packed_pairs),
+            migrations: outcome.migrations,
+            timings: DecisionTimings {
+                stage_s: cx.stage_s,
+                scheduling_s: cx.stage_s[Stage::Estimate.index()]
+                    + cx.stage_s[Stage::Schedule.index()],
+                packing_s: cx.stage_s[Stage::Pack.index()],
+                migration_s: outcome.decide_time_s,
+                total_s: 0.0, // driver fills
+                matching: outcome.service,
+            },
+        }
+    }
+}
+
 impl Scheduler for TesseraeScheduler {
     fn name(&self) -> String {
         self.label.clone()
     }
 
     fn decide(&mut self, input: &RoundInput) -> RoundDecision {
-        let t_total = Instant::now();
-
-        // 1. Scheduling policy: priority order (Listing 1 line 3).
-        let t0 = Instant::now();
-        let order = self.policy.order(input.active);
-        let ordered: Vec<&JobInfo> = order.iter().map(|&i| &input.active[i]).collect();
-        let scheduling_s = t0.elapsed().as_secs_f64();
-
-        // 2. Allocation without packing (lines 5-12).
-        let alloc = allocate_without_packing(input.spec, &ordered);
-        let mut plan = alloc.plan;
-        let by_id: BTreeMap<_, _> = input.active.iter().map(|j| (j.id, j)).collect();
-        let placed_infos: Vec<&JobInfo> = alloc.placed.iter().map(|id| by_id[id]).collect();
-        let pending_infos: Vec<&JobInfo> = alloc.pending.iter().map(|id| by_id[id]).collect();
-        let mut strategies = best_isolated_strategies(&placed_infos, self.source.as_ref());
-
-        // 3. Packing (lines 13-15).
-        let t1 = Instant::now();
-        let mut packed_pairs = Vec::new();
-        if let Some(cfg) = &self.packing {
-            let pairs = pack_with(
-                &placed_infos,
-                &pending_infos,
-                self.source.as_ref(),
-                cfg,
-                self.engine.as_ref(),
-                &mut self.service,
-            );
-            for p in pairs {
-                let gpus = plan.gpus_of(p.placed).to_vec();
-                plan.place(p.pending, &gpus);
-                strategies.insert(p.placed, p.placed_strategy.clone());
-                strategies.insert(p.pending, p.pending_strategy.clone());
-                packed_pairs.push((p.placed, p.pending));
-            }
-        }
-        let packing_s = t1.elapsed().as_secs_f64();
-
-        // 4. Migration minimization (line 16). Drains the round's service
-        // stats (packing included) into the outcome.
-        let outcome = migrate_with(
-            input.spec,
-            input.prev_plan,
-            &plan,
-            self.migration,
-            self.engine.as_ref(),
-            &mut self.service,
-        );
-
-        RoundDecision {
-            plan: outcome.plan,
-            strategies,
-            packed_pairs,
-            migrations: outcome.migrations,
-            timings: DecisionTimings {
-                scheduling_s,
-                packing_s,
-                migration_s: outcome.decide_time_s,
-                total_s: t_total.elapsed().as_secs_f64(),
-                matching: outcome.service,
-            },
-        }
+        pipeline::run_round(self, input)
     }
 }
 
@@ -338,6 +353,19 @@ mod tests {
         });
         assert!(d.timings.total_s > 0.0);
         assert!(d.timings.total_s >= d.timings.migration_s);
+        // Per-stage wall clocks are populated by the pipeline driver and
+        // account for the round (the driver debug-asserts the tolerance;
+        // here we only check the invariant directions).
+        let staged: f64 = d.timings.stage_s.iter().sum();
+        assert!(staged > 0.0 && staged <= d.timings.total_s);
+        assert!(
+            (d.timings.scheduling_s
+                - d.timings.stage(Stage::Estimate)
+                - d.timings.stage(Stage::Schedule))
+            .abs()
+                < 1e-12
+        );
+        assert!((d.timings.packing_s - d.timings.stage(Stage::Pack)).abs() < 1e-12);
         // The migration stage generated matching instances and the drained
         // service stats rode along on the decision.
         assert!(d.timings.matching.instances > 0);

@@ -29,6 +29,7 @@ use crate::policies::JobInfo;
 use crate::profiler::Profiler;
 use crate::schedulers::{DecisionTimings, RoundInput, Scheduler};
 use crate::trace::Trace;
+use crate::util::pool::WorkerPool;
 use crate::util::stats;
 
 /// Simulator configuration.
@@ -219,84 +220,102 @@ pub fn simulate(
         timings.push(decision.timings);
 
         // Advance placed jobs, counting migrations from the plan diff.
+        // Each job's throughput and overhead derivation is pure reads over
+        // the plan, job states and ground truth, so that half shards
+        // across the shared worker pool; the state mutations are then
+        // applied sequentially in the same job-id order, making the round
+        // bit-identical to the inline loop for any thread budget.
         let plan = &decision.plan;
         let dp = ParallelismStrategy::DataParallel;
-        let mut round_migrations = 0usize;
-        for (&job_id, job_gpus) in plan.job_gpu_map() {
-            let gpus: &[usize] = job_gpus;
-            if gpus.is_empty() {
-                continue;
-            }
-            // Identify a packing partner (a job sharing the first GPU).
-            let partner: Option<JobId> = plan
-                .jobs_on(gpus[0])
-                .iter()
-                .copied()
-                .find(|&j| j != job_id);
+        struct Advance {
+            job: JobId,
+            tput: f64,
+            overhead: f64,
+            moved: bool,
+        }
+        let placed: Vec<(JobId, &Vec<usize>)> = plan
+            .job_gpu_map()
+            .iter()
+            .filter(|(_, gpus)| !gpus.is_empty())
+            .map(|(&j, gpus)| (j, gpus))
+            .collect();
+        let advances: Vec<Advance> =
+            WorkerPool::global().map(&placed, 0, 64, |_, &(job_id, job_gpus)| {
+                let gpus: &[usize] = job_gpus;
+                // Identify a packing partner (a job sharing the first GPU).
+                let partner: Option<JobId> = plan
+                    .jobs_on(gpus[0])
+                    .iter()
+                    .copied()
+                    .find(|&j| j != job_id);
 
-            let (model, n, strategy) = {
                 let s = &states[&job_id];
-                (
-                    s.job.model,
-                    s.job.num_gpus,
-                    decision
-                        .strategies
-                        .get(&job_id)
-                        .cloned()
-                        .unwrap_or_else(|| dp.clone()),
-                )
-            };
+                let (model, n) = (s.job.model, s.job.num_gpus);
+                let strategy = decision
+                    .strategies
+                    .get(&job_id)
+                    .cloned()
+                    .unwrap_or_else(|| dp.clone());
 
-            let tput = match partner {
-                Some(p) => {
-                    let ps = &states[&p];
-                    let pstrat = decision
-                        .strategies
-                        .get(&p)
-                        .cloned()
-                        .unwrap_or_else(|| dp.clone());
-                    truth
-                        .true_packed_tput((model, &strategy), (ps.job.model, &pstrat), n)
-                        .map(|(ta, _)| ta)
-                        // The scheduler packed an infeasible pair (possible
-                        // only with bad estimates): the job thrashes and
-                        // makes no progress this round.
-                        .unwrap_or(0.0)
+                let tput = match partner {
+                    Some(p) => {
+                        let ps = &states[&p];
+                        let pstrat = decision
+                            .strategies
+                            .get(&p)
+                            .cloned()
+                            .unwrap_or_else(|| dp.clone());
+                        truth
+                            .true_packed_tput((model, &strategy), (ps.job.model, &pstrat), n)
+                            .map(|(ta, _)| ta)
+                            // The scheduler packed an infeasible pair
+                            // (possible only with bad estimates): the job
+                            // thrashes and makes no progress this round.
+                            .unwrap_or(0.0)
+                    }
+                    None => truth.true_isolated_tput(model, &strategy, n),
+                };
+
+                // Overheads: migration (present in both rounds, moved
+                // GPUs) or cold start (absent from the previous plan).
+                let prev_gpus = prev_plan.gpus_of(job_id);
+                let was_placed = !prev_gpus.is_empty();
+                let moved = was_placed && prev_gpus != gpus;
+                let overhead = if moved {
+                    cfg.migration_overhead_s
+                } else if !was_placed {
+                    cfg.startup_overhead_s
+                } else {
+                    0.0
+                };
+                Advance {
+                    job: job_id,
+                    tput,
+                    overhead,
+                    moved,
                 }
-                None => truth.true_isolated_tput(model, &strategy, n),
-            };
+            });
 
-            // Overheads: migration (present in both rounds, moved GPUs) or
-            // cold start (absent from the previous plan).
-            let prev_gpus = prev_plan.gpus_of(job_id);
-            let was_placed = !prev_gpus.is_empty();
-            let moved = was_placed && prev_gpus != gpus;
-            let overhead = if moved {
-                cfg.migration_overhead_s
-            } else if !was_placed {
-                cfg.startup_overhead_s
-            } else {
-                0.0
-            };
-            let effective = (cfg.round_duration - overhead).max(0.0);
-
-            let s = states.get_mut(&job_id).unwrap();
-            if moved {
+        let mut round_migrations = 0usize;
+        for adv in advances {
+            let effective = (cfg.round_duration - adv.overhead).max(0.0);
+            let s = states.get_mut(&adv.job).unwrap();
+            if adv.moved {
                 s.migrations += 1;
                 round_migrations += 1;
             }
             s.rounds_received += 1;
             s.attained_service += s.job.num_gpus as f64 * effective;
-            if s.finish_time.is_none() && tput > 0.0 {
+            if s.finish_time.is_none() && adv.tput > 0.0 {
                 let remaining = s.job.total_iters - s.completed_iters;
-                let needed = remaining / tput;
+                let needed = remaining / adv.tput;
                 if needed <= effective {
-                    let t_done = now + overhead + needed;
+                    let t_done = now + adv.overhead + needed;
                     s.finish_time = Some(t_done);
                     s.completed_iters = s.job.total_iters;
                     makespan = makespan.max(t_done);
                 } else {
-                    s.completed_iters += tput * effective;
+                    s.completed_iters += adv.tput * effective;
                 }
             }
         }

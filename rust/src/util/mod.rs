@@ -6,6 +6,7 @@ pub mod benchutil;
 pub mod checkpoint;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,438 @@
+//! The process-wide shared worker pool: every source of intra-round
+//! parallelism — `MatchingService` batch solves, POP partition solves,
+//! sharded per-job work in the simulator and the placement policies, and
+//! the scenario-level experiment sweeps — leases threads from one global
+//! budget instead of spinning up its own `std::thread::scope` pool per
+//! call. Before this existed, `run_sim_scenarios` running one thread per
+//! scenario *on top of* per-call pools inside each scenario oversubscribed
+//! the machine by `scenarios × cores`; with the shared budget, whoever
+//! leases first gets the threads and everything nested underneath runs
+//! inline on its caller.
+//!
+//! Determinism contract: every entry point is a *chunked reduction* —
+//! items are split into contiguous chunks, each chunk is processed in
+//! input order on one worker, and per-chunk outputs are concatenated in
+//! chunk order. Results are therefore positionally identical to a
+//! sequential loop for **any** thread budget, including 1 (the parity
+//! tests' reference side). Nothing here may reorder work or fold results
+//! associatively across chunk boundaries.
+//!
+//! The budget comes from one knob: `tesserae --threads N` (the CLI calls
+//! [`WorkerPool::install_budget`]) or the `TESSERAE_THREADS` environment
+//! variable, defaulting to `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Env knob read once per process when no budget was installed via CLI.
+pub const THREADS_ENV: &str = "TESSERAE_THREADS";
+
+/// The shared pool: a thread *budget* plus a lease counter. Threads are
+/// not kept parked — chunks run on `std::thread::scope` workers — but the
+/// lease accounting is process-wide, which is what prevents nested callers
+/// from oversubscribing.
+pub struct WorkerPool {
+    /// Installed budget; 0 = fall back to env / available parallelism.
+    installed: AtomicUsize,
+    /// Extra (non-caller) worker threads currently leased, process-wide.
+    leased: AtomicUsize,
+}
+
+static POOL: WorkerPool = WorkerPool {
+    installed: AtomicUsize::new(0),
+    leased: AtomicUsize::new(0),
+};
+
+static DEFAULT_BUDGET: OnceLock<usize> = OnceLock::new();
+static OVERRIDE_LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+
+/// RAII lease of extra worker threads; returns them on drop.
+struct Lease<'a> {
+    pool: &'a WorkerPool,
+    granted: usize,
+}
+
+impl Lease<'_> {
+    /// Give back lease slots beyond `extras` immediately (chunk rounding
+    /// can need fewer workers than were leased; holding the surplus for
+    /// the call's duration would starve nested pool users).
+    fn shrink_to(&mut self, extras: usize) {
+        if self.granted > extras {
+            self.pool
+                .leased
+                .fetch_sub(self.granted - extras, Ordering::Release);
+            self.granted = extras;
+        }
+    }
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        if self.granted > 0 {
+            self.pool.leased.fetch_sub(self.granted, Ordering::Release);
+        }
+    }
+}
+
+/// Guard from [`WorkerPool::budget_override`]: serializes budget
+/// experiments (tests, benches) and restores the previous budget on drop.
+pub struct BudgetGuard {
+    prev: usize,
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for BudgetGuard {
+    fn drop(&mut self) {
+        POOL.installed.store(self.prev, Ordering::Release);
+    }
+}
+
+impl WorkerPool {
+    /// The process-wide pool.
+    pub fn global() -> &'static WorkerPool {
+        &POOL
+    }
+
+    /// Install the thread budget (the `--threads` CLI knob). 0 restores
+    /// the default (env var, then available parallelism).
+    pub fn install_budget(&self, threads: usize) {
+        self.installed.store(threads, Ordering::Release);
+    }
+
+    /// The resolved thread budget: installed > `TESSERAE_THREADS` >
+    /// `available_parallelism`, never 0.
+    pub fn budget(&self) -> usize {
+        let installed = self.installed.load(Ordering::Acquire);
+        if installed != 0 {
+            return installed;
+        }
+        *DEFAULT_BUDGET.get_or_init(|| {
+            std::env::var(THREADS_ENV)
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .unwrap_or_else(|| {
+                    std::thread::available_parallelism()
+                        .map(|p| p.get())
+                        .unwrap_or(1)
+                })
+        })
+    }
+
+    /// Exclusive scoped budget override for tests and benches: takes a
+    /// process-global lock (so concurrent overrides cannot interleave),
+    /// installs `threads`, and restores the previous value when the guard
+    /// drops. Work on other threads keeps running — it just sees the
+    /// overridden budget, which never affects results (only wall-clock).
+    pub fn budget_override(&self, threads: usize) -> BudgetGuard {
+        let lock = OVERRIDE_LOCK
+            .get_or_init(|| Mutex::new(()))
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        let prev = self.installed.swap(threads, Ordering::AcqRel);
+        BudgetGuard { prev, _lock: lock }
+    }
+
+    /// Extra workers currently leased (observability / tests).
+    pub fn leased(&self) -> usize {
+        self.leased.load(Ordering::Acquire)
+    }
+
+    /// Try to lease up to `want` extra workers. The caller's own thread is
+    /// never counted — a budget of `B` admits at most `B - 1` leased
+    /// extras, so `B` threads ever run work at once.
+    fn lease_extra(&self, want: usize) -> Lease<'_> {
+        let cap = self.budget().saturating_sub(1);
+        let mut cur = self.leased.load(Ordering::Acquire);
+        loop {
+            let avail = cap.saturating_sub(cur);
+            let n = want.min(avail);
+            if n == 0 {
+                return Lease {
+                    pool: self,
+                    granted: 0,
+                };
+            }
+            match self.leased.compare_exchange_weak(
+                cur,
+                cur + n,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    return Lease {
+                        pool: self,
+                        granted: n,
+                    }
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// How many workers (including the caller) a job of `items` items
+    /// should use under `max_workers` (0 = budget) and a minimum chunk
+    /// size of `min_per_worker` items.
+    fn plan_workers(&self, items: usize, max_workers: usize, min_per_worker: usize) -> usize {
+        let min_per = min_per_worker.max(1);
+        if items <= min_per {
+            return 1;
+        }
+        let budget = self.budget();
+        let cap = if max_workers == 0 {
+            budget
+        } else {
+            max_workers.min(budget)
+        };
+        cap.min(items.div_ceil(min_per)).max(1)
+    }
+
+    /// Chunk-level map: split `items` into contiguous chunks, run
+    /// `f(chunk_start_index, chunk)` per chunk (chunk 0 on the calling
+    /// thread, the rest on leased scoped workers), and concatenate the
+    /// per-chunk outputs in chunk order. Each invocation must return
+    /// exactly `chunk.len()` results, making the concatenation positionally
+    /// identical to a sequential pass for any budget.
+    pub fn run_chunks<T, U, F>(
+        &self,
+        items: &[T],
+        max_workers: usize,
+        min_per_worker: usize,
+        f: F,
+    ) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(usize, &[T]) -> Vec<U> + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let want = self.plan_workers(n, max_workers, min_per_worker);
+        if want <= 1 {
+            let out = f(0, items);
+            debug_assert_eq!(out.len(), n, "chunk closure must map 1:1");
+            return out;
+        }
+        let mut lease = self.lease_extra(want - 1);
+        let workers = 1 + lease.granted;
+        if workers <= 1 {
+            drop(lease);
+            let out = f(0, items);
+            debug_assert_eq!(out.len(), n, "chunk closure must map 1:1");
+            return out;
+        }
+        let chunk = n.div_ceil(workers);
+        // Chunk rounding can use fewer workers than leased (e.g. 4 items
+        // over 3 workers → 2 chunks); return the surplus before working.
+        let workers = n.div_ceil(chunk);
+        lease.shrink_to(workers - 1);
+        let mut parts: Vec<Vec<U>> = Vec::with_capacity(workers);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = items.chunks(chunk);
+            let mine = rest.next().expect("n > 0");
+            let handles: Vec<_> = rest
+                .enumerate()
+                .map(|(i, part)| {
+                    let start = (i + 1) * chunk;
+                    scope.spawn(move || {
+                        let out = f(start, part);
+                        debug_assert_eq!(out.len(), part.len(), "chunk closure must map 1:1");
+                        out
+                    })
+                })
+                .collect();
+            let out = f(0, mine);
+            debug_assert_eq!(out.len(), mine.len(), "chunk closure must map 1:1");
+            parts.push(out);
+            for h in handles {
+                parts.push(h.join().expect("pool worker panicked"));
+            }
+        });
+        drop(lease);
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Item-level map over shared items: `f(item_index, &item)` in input
+    /// order, chunk-scheduled like [`WorkerPool::run_chunks`].
+    pub fn map<T, U, F>(
+        &self,
+        items: &[T],
+        max_workers: usize,
+        min_per_worker: usize,
+        f: F,
+    ) -> Vec<U>
+    where
+        T: Sync,
+        U: Send,
+        F: Fn(usize, &T) -> U + Sync,
+    {
+        self.run_chunks(items, max_workers, min_per_worker, |start, part| {
+            part.iter()
+                .enumerate()
+                .map(|(i, t)| f(start + i, t))
+                .collect()
+        })
+    }
+
+    /// Item-level map over *mutable* items (POP's retained per-partition
+    /// sub-schedulers): each item is visited exactly once, results in input
+    /// order. Chunks are `chunks_mut` slices, so items never alias.
+    pub fn map_mut<T, U, F>(
+        &self,
+        items: &mut [T],
+        max_workers: usize,
+        min_per_worker: usize,
+        f: F,
+    ) -> Vec<U>
+    where
+        T: Send,
+        U: Send,
+        F: Fn(usize, &mut T) -> U + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let inline = |items: &mut [T]| -> Vec<U> {
+            items
+                .iter_mut()
+                .enumerate()
+                .map(|(i, t)| f(i, t))
+                .collect()
+        };
+        let want = self.plan_workers(n, max_workers, min_per_worker);
+        if want <= 1 {
+            return inline(items);
+        }
+        let mut lease = self.lease_extra(want - 1);
+        let workers = 1 + lease.granted;
+        if workers <= 1 {
+            drop(lease);
+            return inline(items);
+        }
+        let chunk = n.div_ceil(workers);
+        // As in `run_chunks`: chunk rounding can use fewer workers than
+        // leased; return the surplus before working.
+        let workers = n.div_ceil(chunk);
+        lease.shrink_to(workers - 1);
+        let mut parts: Vec<Vec<U>> = Vec::with_capacity(workers);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = items.chunks_mut(chunk);
+            let mine = rest.next().expect("n > 0");
+            let handles: Vec<_> = rest
+                .enumerate()
+                .map(|(i, part)| {
+                    let start = (i + 1) * chunk;
+                    scope.spawn(move || {
+                        part.iter_mut()
+                            .enumerate()
+                            .map(|(j, t)| f(start + j, t))
+                            .collect::<Vec<U>>()
+                    })
+                })
+                .collect();
+            parts.push(
+                mine.iter_mut()
+                    .enumerate()
+                    .map(|(j, t)| f(j, t))
+                    .collect(),
+            );
+            for h in handles {
+                parts.push(h.join().expect("pool worker panicked"));
+            }
+        });
+        drop(lease);
+        parts.into_iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_input_order_at_any_budget() {
+        let items: Vec<usize> = (0..1000).collect();
+        let expect: Vec<usize> = items.iter().map(|i| i * 3).collect();
+        for budget in [1usize, 2, 8] {
+            let pool = WorkerPool::global();
+            let _guard = pool.budget_override(budget);
+            let got = pool.map(&items, 0, 1, |_, &i| i * 3);
+            assert_eq!(got, expect, "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn run_chunks_concatenates_in_chunk_order() {
+        let items: Vec<u64> = (0..500).collect();
+        let pool = WorkerPool::global();
+        let _guard = pool.budget_override(4);
+        let got = pool.run_chunks(&items, 0, 1, |start, part| {
+            // Per-chunk scratch (the MatchingService pattern): the output
+            // must still be positionally exact.
+            let mut scratch = 0u64;
+            part.iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    scratch += 1;
+                    (start + i) as u64 * 1000 + v
+                })
+                .collect()
+        });
+        let expect: Vec<u64> = (0..500u64).map(|i| i * 1000 + i).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn map_mut_visits_every_item_once() {
+        let mut items: Vec<u32> = vec![0; 777];
+        let pool = WorkerPool::global();
+        let _guard = pool.budget_override(6);
+        let idx = pool.map_mut(&mut items, 0, 1, |i, slot| {
+            *slot += 1;
+            i
+        });
+        assert!(items.iter().all(|&v| v == 1));
+        assert_eq!(idx, (0..777).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_calls_degrade_to_inline_under_exhausted_budget() {
+        let pool = WorkerPool::global();
+        let _guard = pool.budget_override(2);
+        // The outer call leases the single extra worker; inner calls see
+        // an exhausted budget and run inline — but results are identical.
+        let items: Vec<usize> = (0..64).collect();
+        let got = pool.map(&items, 0, 1, |_, &i| {
+            let inner: Vec<usize> = pool.map(&(0..8).collect::<Vec<_>>(), 0, 1, |_, &j| i + j);
+            inner.iter().sum::<usize>()
+        });
+        let expect: Vec<usize> = (0..64).map(|i| (0..8).map(|j| i + j).sum()).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn small_inputs_stay_inline() {
+        let pool = WorkerPool::global();
+        let items: Vec<usize> = (0..10).collect();
+        // min_per_worker larger than the input: plan_workers must answer 1
+        // (no lease, no threads), and the map must still be exact.
+        assert_eq!(pool.plan_workers(items.len(), 0, 64), 1);
+        let got = pool.map(&items, 0, 64, |_, &i| i);
+        assert_eq!(got, items);
+    }
+
+    #[test]
+    fn budget_override_restores_previous_value() {
+        let pool = WorkerPool::global();
+        let outer = pool.budget_override(3);
+        assert_eq!(pool.budget(), 3);
+        drop(outer);
+        // Back to the default (env or available parallelism), never 0.
+        assert!(pool.budget() >= 1);
+    }
+}

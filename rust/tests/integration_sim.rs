@@ -259,3 +259,45 @@ fn refactored_simulator_reproduces_seed_metrics_bit_for_bit() {
         }
     }
 }
+
+#[test]
+fn pool_budget_one_vs_many_simulations_are_identical() {
+    // ISSUE 4's pipeline parity acceptance: a full simulation with the
+    // shared worker pool at budget 1 (every sharded stage inline) must be
+    // bit-identical, per job, to the same simulation at a multi-thread
+    // budget — across all three scheduler families.
+    use tesserae::util::pool::WorkerPool;
+
+    let s = scale();
+    let trace = s.shockwave_trace();
+    let spec = s.spec(GpuType::A100);
+    for kind in [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(2)] {
+        let run = |budget: usize| {
+            let _budget = WorkerPool::global().budget_override(budget);
+            run_sim(kind, &trace, spec, s.seed, 0.0)
+        };
+        let sequential = run(1);
+        let sharded = run(8);
+        assert_eq!(
+            sequential.avg_jct.to_bits(),
+            sharded.avg_jct.to_bits(),
+            "{kind:?} avg JCT"
+        );
+        assert_eq!(
+            sequential.makespan.to_bits(),
+            sharded.makespan.to_bits(),
+            "{kind:?} makespan"
+        );
+        assert_eq!(sequential.total_migrations, sharded.total_migrations, "{kind:?}");
+        assert_eq!(sequential.rounds, sharded.rounds, "{kind:?}");
+        assert_eq!(sequential.unfinished, 0, "{kind:?}");
+        assert_eq!(sequential.outcomes.len(), sharded.outcomes.len(), "{kind:?}");
+        for (id, oa) in &sequential.outcomes {
+            let ob = &sharded.outcomes[id];
+            assert_eq!(oa.jct.to_bits(), ob.jct.to_bits(), "{kind:?} job {id}");
+            assert_eq!(oa.ftf.to_bits(), ob.ftf.to_bits(), "{kind:?} job {id}");
+            assert_eq!(oa.migrations, ob.migrations, "{kind:?} job {id}");
+            assert_eq!(oa.rounds_run, ob.rounds_run, "{kind:?} job {id}");
+        }
+    }
+}

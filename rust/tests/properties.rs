@@ -637,3 +637,135 @@ fn revised_simplex_matches_dense_on_gavel_instances() {
         },
     );
 }
+
+// ======================================================= round pipeline
+
+/// The staged round pipeline's parity contract (ISSUE 4): for every
+/// scheduler family, consecutive churned decisions under a worker-pool
+/// budget of 1 (everything inline/sequential) are bit-identical to the
+/// same decisions under a multi-thread budget — plans, strategies, packed
+/// pairs and migration counts.
+#[test]
+fn staged_pipeline_is_bit_identical_across_pool_budgets() {
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+    use tesserae::experiments::scalability::{churn_active_jobs, synthetic_active_jobs};
+    use tesserae::experiments::{build_scheduler, SchedKind};
+    use tesserae::profiler::Profiler;
+    use tesserae::schedulers::RoundInput;
+    use tesserae::util::pool::WorkerPool;
+
+    let spec = ClusterSpec::new(6, 4, GpuType::A100);
+    for seed in [3u64, 17, 91] {
+        for kind in [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(3)] {
+            let run = |budget: usize| {
+                let _budget = WorkerPool::global().budget_override(budget);
+                let truth = Profiler::new(spec.gpu_type, seed);
+                let source: Arc<dyn ThroughputSource> =
+                    Arc::new(CachedSource::new(OracleEstimator::new(truth)));
+                let mut sched =
+                    build_scheduler(kind, source, Arc::new(HungarianEngine));
+                let mut active = synthetic_active_jobs(40, seed);
+                let mut prev = PlacementPlan::new(spec.total_gpus());
+                let mut decisions = Vec::new();
+                for round in 0..3u64 {
+                    let d = sched.decide(&RoundInput {
+                        now: round as f64 * 360.0,
+                        round,
+                        active: &active,
+                        prev_plan: &prev,
+                        spec: &spec,
+                    });
+                    prev = d.plan.clone();
+                    decisions.push((d.plan, d.strategies, d.packed_pairs, d.migrations));
+                    active = churn_active_jobs(&active, seed ^ (round + 7));
+                }
+                decisions
+            };
+            let sequential = run(1);
+            let sharded = run(6);
+            assert_eq!(sequential, sharded, "{kind:?} seed {seed}");
+        }
+    }
+}
+
+/// Replay of the pre-refactor monolithic `decide()` — priority order →
+/// allocate → pack → migrate run inline from the public pieces — against
+/// the staged pipeline, across churned rounds: realized plans, packed
+/// pairs and migration counts must be bit-identical.
+#[test]
+fn staged_tesserae_matches_monolithic_replay() {
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+    use tesserae::experiments::scalability::{churn_active_jobs, synthetic_active_jobs};
+    use tesserae::policies::placement::{
+        allocate_without_packing, pack_with, PackingConfig,
+    };
+    use tesserae::policies::scheduling::{SchedulingPolicy, TiresiasLas};
+    use tesserae::policies::JobInfo;
+    use tesserae::profiler::Profiler;
+    use tesserae::schedulers::{RoundInput, Scheduler, TesseraeScheduler};
+
+    let spec = ClusterSpec::new(4, 4, GpuType::A100);
+    for seed in [5u64, 23] {
+        let truth = Profiler::new(spec.gpu_type, seed);
+        let source: Arc<dyn ThroughputSource> =
+            Arc::new(CachedSource::new(OracleEstimator::new(truth)));
+        let engine = HungarianEngine;
+        let mut staged =
+            TesseraeScheduler::tesserae_t(Arc::clone(&source), Arc::new(HungarianEngine));
+        // The monolithic replay keeps its own persistent service, exactly
+        // as the pre-refactor scheduler did.
+        let mut service = MatchingService::with_defaults();
+        let policy = TiresiasLas::default();
+        let mut active = synthetic_active_jobs(30, seed);
+        let mut prev_staged = PlacementPlan::new(spec.total_gpus());
+        let mut prev_mono = PlacementPlan::new(spec.total_gpus());
+        for round in 0..4u64 {
+            let d = staged.decide(&RoundInput {
+                now: round as f64 * 360.0,
+                round,
+                active: &active,
+                prev_plan: &prev_staged,
+                spec: &spec,
+            });
+
+            let order = policy.order(&active);
+            let ordered: Vec<&JobInfo> = order.iter().map(|&i| &active[i]).collect();
+            let alloc = allocate_without_packing(&spec, &ordered);
+            let mut plan = alloc.plan;
+            let by_id: std::collections::BTreeMap<_, _> =
+                active.iter().map(|j| (j.id, j)).collect();
+            let placed: Vec<&JobInfo> = alloc.placed.iter().map(|id| by_id[id]).collect();
+            let pending: Vec<&JobInfo> = alloc.pending.iter().map(|id| by_id[id]).collect();
+            let mut pairs = Vec::new();
+            for p in pack_with(
+                &placed,
+                &pending,
+                source.as_ref(),
+                &PackingConfig::default(),
+                &engine,
+                &mut service,
+            ) {
+                let gpus = plan.gpus_of(p.placed).to_vec();
+                plan.place(p.pending, &gpus);
+                pairs.push((p.placed, p.pending));
+            }
+            let outcome = migrate_with(
+                &spec,
+                &prev_mono,
+                &plan,
+                MigrationMode::Tesserae,
+                &engine,
+                &mut service,
+            );
+
+            assert_eq!(d.plan, outcome.plan, "seed {seed} round {round}");
+            assert_eq!(d.packed_pairs, pairs, "seed {seed} round {round}");
+            assert_eq!(d.migrations, outcome.migrations, "seed {seed} round {round}");
+            prev_staged = d.plan;
+            prev_mono = outcome.plan;
+            active = churn_active_jobs(&active, seed ^ (round + 11));
+        }
+    }
+}
