@@ -8,13 +8,26 @@
 //! files instead of re-measuring. Delete the files for a fresh sweep.
 //!
 //! Budget override: TESSERAE_FIG2_BUDGET_SECS (default 60).
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) runs tiny job counts
+//! with no checkpoint files.
 
 use std::time::Duration;
 
 use tesserae::experiments::scalability::{self, FIG2_PAPER_JOB_COUNTS};
+use tesserae::util::benchutil::smoke_mode;
 use tesserae::util::checkpoint::Checkpoint;
 
 fn main() {
+    if smoke_mode() {
+        println!(
+            "{}",
+            scalability::fig2_decision_time_checkpointed(&[16], Duration::from_secs(5), None)
+        );
+        println!("{}", scalability::fig14b_breakdown_checkpointed(&[16], None));
+        println!("{}", scalability::matching_engine_comparison(&[8], false));
+        println!("smoke mode: tiny sweeps, no checkpoint files written");
+        return;
+    }
     let budget = Duration::from_secs(
         std::env::var("TESSERAE_FIG2_BUDGET_SECS")
             .ok()

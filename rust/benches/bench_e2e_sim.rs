@@ -7,6 +7,8 @@
 //! trace — into `BENCH_e2e_sim.json` so later PRs have a baseline to beat.
 //!
 //! Scale override: TESSERAE_BENCH_SCALE=quick|standard|paper
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) runs the quick scale
+//! on one figure plus a tiny simulation, writing no JSON.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -146,6 +148,23 @@ fn perf_trajectory() -> (String, Json) {
 }
 
 fn main() {
+    if tesserae::util::benchutil::smoke_mode() {
+        let scale = Scale::quick();
+        let (fig9, _, _) = end_to_end::fig9_tesserae_vs_tiresias(&scale);
+        println!("{fig9}\n");
+        let spec = ClusterSpec::new(2, 4, GpuType::A100);
+        let trace = Trace::shockwave(&TraceParams {
+            num_jobs: 8,
+            jobs_per_hour: 40.0,
+            seed: 7,
+        });
+        let (r, wall) = timed_sim(SchedKind::TesseraeT, &trace, spec, 7, true);
+        println!(
+            "smoke sim: {} rounds in {:.2}s, avg JCT {:.0}s — no JSON written",
+            r.rounds, wall, r.avg_jct
+        );
+        return;
+    }
     let scale = scale();
     println!(
         "bench scale: {} jobs on {} GPUs\n",

@@ -1,5 +1,8 @@
 //! Estimator benchmarks: Fig. 18 (estimator quality vs profiling budget),
 //! Fig. 16 (noise sensitivity) and construction-cost micro-timings.
+//!
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) runs only the
+//! construction micro-timings on the quick harness.
 
 use tesserae::cluster::GpuType;
 use tesserae::estimator::{
@@ -7,17 +10,20 @@ use tesserae::estimator::{
 };
 use tesserae::experiments::{ablations, Scale};
 use tesserae::profiler::Profiler;
-use tesserae::util::benchutil::Bench;
+use tesserae::util::benchutil::{smoke_mode, Bench};
 
 fn main() {
-    let scale = Scale::standard();
-    println!("{}", ablations::fig18_estimators(&scale));
-    println!(
-        "{}",
-        ablations::fig16_noise_sensitivity(&scale, &[0.0, 0.25, 0.5, 1.0])
-    );
+    let smoke = smoke_mode();
+    if !smoke {
+        let scale = Scale::standard();
+        println!("{}", ablations::fig18_estimators(&scale));
+        println!(
+            "{}",
+            ablations::fig16_noise_sensitivity(&scale, &[0.0, 0.25, 0.5, 1.0])
+        );
+    }
 
-    let mut bench = Bench::new();
+    let mut bench = if smoke { Bench::quick() } else { Bench::new() };
     let p = Profiler::new(GpuType::A100, 3);
     bench.run("oracle build", || {
         OracleEstimator::new(p.clone()).profiling_samples()
@@ -29,4 +35,7 @@ fn main() {
         MatrixCompletionEstimator::new(p.clone(), 0.4, 1).profiling_samples()
     });
     println!("{}", bench.report());
+    if smoke {
+        println!("smoke mode: figure sweeps skipped");
+    }
 }

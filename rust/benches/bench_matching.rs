@@ -1,10 +1,16 @@
 //! Matching-engine benchmark: native Hungarian vs native auction vs the
 //! AOT JAX/Pallas auction executed through PJRT, across problem sizes.
-//! Also times the rectangular fast path that the packing policy uses.
+//! Also times the rectangular fast path that the packing policy uses and
+//! the arena "fill" kernels (bitset Hungarian, allocation-free auction)
+//! against their allocating counterparts, with in-bench parity asserts.
+//!
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) runs tiny sizes on
+//! the quick harness.
 
 use tesserae::linalg::Matrix;
-use tesserae::matching::{auction, hungarian, MatchingEngine};
-use tesserae::util::benchutil::Bench;
+use tesserae::matching::auction::AuctionScratch;
+use tesserae::matching::{auction, hungarian, MatchingEngine, SolveScratch};
+use tesserae::util::benchutil::{smoke_mode, Bench};
 use tesserae::util::rng::Pcg64;
 
 fn random_cost(n: usize, m: usize, rng: &mut Pcg64) -> Matrix {
@@ -18,25 +24,75 @@ fn random_cost(n: usize, m: usize, rng: &mut Pcg64) -> Matrix {
 }
 
 fn main() {
-    let mut bench = Bench::new();
+    let smoke = smoke_mode();
+    let mut bench = if smoke { Bench::quick() } else { Bench::new() };
     let mut rng = Pcg64::new(11);
+    let squares: &[usize] = if smoke { &[8] } else { &[8, 32, 64, 128, 256] };
+    let rects: &[(usize, usize)] = if smoke {
+        &[(8, 16)]
+    } else {
+        &[(32, 256), (64, 512), (128, 1024)]
+    };
+
+    let mut scratch = SolveScratch::default();
+    let mut auction_scratch = AuctionScratch::default();
+    let mut auction_out: Vec<usize> = Vec::new();
 
     println!("== square assignment (migration-policy shape) ==");
-    for n in [8usize, 32, 64, 128, 256] {
+    for &n in squares {
         let cost = random_cost(n, n, &mut rng);
+        let exact = hungarian::solve_min_cost(&cost).cost;
         bench.run(&format!("hungarian n={n}"), || {
             hungarian::solve_min_cost(&cost).cost
         });
+        // Arena kernel: identical totals, zero steady-state allocations.
+        assert_eq!(
+            hungarian::solve_min_cost_rect_fill(&cost, &mut scratch).1.to_bits(),
+            exact.to_bits(),
+            "fill kernel parity at n={n}"
+        );
+        bench.run(&format!("hungarian(fill) n={n}"), || {
+            hungarian::solve_min_cost_rect_fill(&cost, &mut scratch).1
+        });
+        let cold = auction::solve_min_cost(&cost, Some(1.0 / 16.0)).cost;
         bench.run(&format!("auction(native) n={n}"), || {
             auction::solve_min_cost(&cost, Some(1.0 / 16.0)).cost
+        });
+        assert_eq!(
+            auction::solve_min_cost_fill(
+                &cost,
+                Some(1.0 / 16.0),
+                &mut auction_scratch,
+                &mut auction_out,
+            )
+            .to_bits(),
+            cold.to_bits(),
+            "auction fill kernel parity at n={n}"
+        );
+        bench.run(&format!("auction(fill) n={n}"), || {
+            auction::solve_min_cost_fill(
+                &cost,
+                Some(1.0 / 16.0),
+                &mut auction_scratch,
+                &mut auction_out,
+            )
         });
     }
 
     println!("== rectangular assignment (packing-policy shape) ==");
-    for (n, m) in [(32usize, 256usize), (64, 512), (128, 1024)] {
+    for &(n, m) in rects {
         let cost = random_cost(n, m, &mut rng);
+        let exact = hungarian::solve_min_cost_rect(&cost).cost;
         bench.run(&format!("hungarian rect {n}x{m}"), || {
             hungarian::solve_min_cost_rect(&cost).cost
+        });
+        assert_eq!(
+            hungarian::solve_min_cost_rect_fill(&cost, &mut scratch).1.to_bits(),
+            exact.to_bits(),
+            "rect fill kernel parity at {n}x{m}"
+        );
+        bench.run(&format!("hungarian(fill) rect {n}x{m}"), || {
+            hungarian::solve_min_cost_rect_fill(&cost, &mut scratch).1
         });
     }
 
@@ -44,7 +100,7 @@ fn main() {
     match tesserae::runtime::AotAssignmentEngine::discover() {
         Ok(engine) => {
             println!("== AOT auction via PJRT (includes padding + channel hop) ==");
-            for n in [8usize, 32, 64, 128, 256] {
+            for &n in squares {
                 let cost = random_cost(n, n, &mut rng);
                 let exact = hungarian::solve_min_cost(&cost).cost;
                 let got = engine.solve_min_cost(&cost).cost;

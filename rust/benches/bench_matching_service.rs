@@ -5,6 +5,9 @@
 //! `BENCH_matching_service.json` with instances/sec, prune/dedup/cache-hit
 //! rates and the batched-vs-sequential speedup. The acceptance line is
 //! ≥2x at 64 nodes sparse (where pruning and caching bite hardest).
+//!
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) runs one tiny
+//! config, skips the acceptance assert and writes no JSON.
 
 use std::time::Instant;
 
@@ -87,15 +90,21 @@ fn run_rounds(
 
 fn main() {
     const ROUNDS: usize = 5;
+    let smoke = tesserae::util::benchutil::smoke_mode();
     let mut entries = Vec::new();
     println!("== Tesserae migration: matching service vs sequential per-instance solves ==");
     println!("   (per-round average over {ROUNDS} rounds; service carries its cache across rounds)");
-    for (nodes, occupancy, label) in [
-        (16usize, 0.15, "sparse"),
-        (32, 0.15, "sparse"),
-        (64, 0.15, "sparse"),
-        (64, 0.5, "half-full"),
-    ] {
+    let configs: Vec<(usize, f64, &str)> = if smoke {
+        vec![(4, 0.5, "smoke")]
+    } else {
+        vec![
+            (16, 0.15, "sparse"),
+            (32, 0.15, "sparse"),
+            (64, 0.15, "sparse"),
+            (64, 0.5, "half-full"),
+        ]
+    };
+    for (nodes, occupancy, label) in configs {
         let spec = ClusterSpec::new(nodes, 8, GpuType::A100);
         let jobs = ((spec.total_gpus() as f64) * occupancy) as usize;
         let plans = plan_sequence(&spec, jobs, ROUNDS, 42 + nodes as u64);
@@ -150,6 +159,10 @@ fn main() {
                 "acceptance: 64-node sparse speedup {speedup:.2}x < 2x"
             );
         }
+    }
+    if smoke {
+        println!("smoke mode: tiny config, acceptance assert and JSON output skipped");
+        return;
     }
 
     let json = Json::obj(vec![

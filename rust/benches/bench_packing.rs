@@ -1,5 +1,8 @@
 //! Packing benchmarks: Fig. 8 (strategy-aware packing throughput), Fig. 15
 //! (strategy impact on LLM JCT) and micro-timings of Algorithm 4 itself.
+//!
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) runs only a tiny
+//! Algorithm 4 micro-timing on the quick harness.
 
 use std::collections::BTreeSet;
 
@@ -39,18 +42,22 @@ fn jobs(n: usize, seed: u64) -> Vec<JobInfo> {
 }
 
 fn main() {
-    println!("{}", ablations::fig8_parallelism_packing());
-    let scale = Scale::standard();
-    println!("{}", ablations::fig15_strategy_impact(&scale));
-    println!(
-        "{}",
-        ablations::ablation_pack_threshold(&scale, &[0.5, 0.8, 1.0, 1.2])
-    );
+    let smoke = tesserae::util::benchutil::smoke_mode();
+    if !smoke {
+        println!("{}", ablations::fig8_parallelism_packing());
+        let scale = Scale::standard();
+        println!("{}", ablations::fig15_strategy_impact(&scale));
+        println!(
+            "{}",
+            ablations::ablation_pack_threshold(&scale, &[0.5, 0.8, 1.0, 1.2])
+        );
+    }
 
     // Algorithm 4 micro-benchmark.
-    let mut bench = Bench::new();
+    let mut bench = if smoke { Bench::quick() } else { Bench::new() };
+    let sizes: &[usize] = if smoke { &[16] } else { &[64, 256, 1024] };
     let source = CachedSource::new(OracleEstimator::new(Profiler::new(GpuType::A100, 3)));
-    for n in [64usize, 256, 1024] {
+    for &n in sizes {
         let all = jobs(2 * n, n as u64);
         let placed: Vec<&JobInfo> = all[..n].iter().collect();
         let pending: Vec<&JobInfo> = all[n..].iter().collect();

@@ -6,6 +6,18 @@
 //! solves shard). Decisions are asserted bit-identical between the two
 //! budgets; emits `BENCH_round_pipeline.json` with per-config wall times
 //! and speedups. Acceptance: the best 64-node arm must reach ≥1.5x.
+//!
+//! Allocation audit (ISSUE 6): when built with `--features alloc_audit`
+//! the counting global allocator is installed, and this bench additionally
+//! asserts that *steady-state* rounds (round ≥ 1, arenas grown to size)
+//! perform **zero heap allocations inside matching solve kernels** — the
+//! per-thread-measured `kernel_allocs` counter of every steady round must
+//! be 0. Whole-round allocation counts are reported alongside for
+//! context (rounds as a whole do allocate: plans, result handoff, LP
+//! solves; the zero claim is scoped to the matching kernels).
+//!
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) runs a tiny config,
+//! skips the speedup acceptance assert and writes no JSON.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -17,6 +29,8 @@ use tesserae::experiments::{build_scheduler, SchedKind};
 use tesserae::matching::HungarianEngine;
 use tesserae::profiler::Profiler;
 use tesserae::schedulers::RoundInput;
+use tesserae::util::alloc;
+use tesserae::util::benchutil::smoke_mode;
 use tesserae::util::json::Json;
 use tesserae::util::pool::WorkerPool;
 
@@ -24,13 +38,15 @@ const ROUNDS: u64 = 4;
 
 /// Drive `ROUNDS` consecutive decisions (fresh scheduler, ~15% job churn
 /// per round so caches see realistic steady state) and return the total
-/// wall plus every round's realized plan for the parity assert.
+/// wall, every round's realized plan for the parity assert, and each
+/// round's (matching-kernel allocations, whole-round allocations) pair
+/// from the counting allocator (all zeros unless `alloc_audit` is on).
 fn run_rounds(
     kind: SchedKind,
     n_jobs: usize,
     spec: &ClusterSpec,
     seed: u64,
-) -> (f64, Vec<PlacementPlan>) {
+) -> (f64, Vec<PlacementPlan>, Vec<(usize, usize)>) {
     let truth = Profiler::new(spec.gpu_type, seed);
     let source: Arc<dyn ThroughputSource> =
         Arc::new(CachedSource::new(OracleEstimator::new(truth)));
@@ -38,8 +54,10 @@ fn run_rounds(
     let mut active = synthetic_active_jobs(n_jobs, seed);
     let mut prev = PlacementPlan::new(spec.total_gpus());
     let mut plans = Vec::with_capacity(ROUNDS as usize);
+    let mut allocs = Vec::with_capacity(ROUNDS as usize);
     let t0 = Instant::now();
     for round in 0..ROUNDS {
+        let round_alloc0 = alloc::allocs();
         let d = sched.decide(&RoundInput {
             now: 1e6 + round as f64 * 360.0,
             round,
@@ -47,36 +65,46 @@ fn run_rounds(
             prev_plan: &prev,
             spec,
         });
+        allocs.push((d.timings.matching.kernel_allocs, alloc::allocs() - round_alloc0));
         prev = d.plan.clone();
         plans.push(d.plan);
         active = churn_active_jobs(&active, seed ^ (round + 1));
     }
-    (t0.elapsed().as_secs_f64(), plans)
+    (t0.elapsed().as_secs_f64(), plans, allocs)
 }
 
 fn main() {
+    let smoke = smoke_mode();
     let pool = WorkerPool::global();
     let budget = pool.budget();
     let mut entries = Vec::new();
     let mut best64 = 0.0f64;
     println!("== Staged round pipeline: sequential (budget 1) vs sharded (budget {budget}) ==");
     println!("   ({ROUNDS} churned consecutive rounds per arm; plans asserted bit-identical)");
-    for (nodes, kind, name) in [
-        (32usize, SchedKind::TesseraeT, "tesserae-t"),
-        (64, SchedKind::TesseraeT, "tesserae-t"),
-        (32, SchedKind::Pop(8), "pop-8"),
-        (64, SchedKind::Pop(8), "pop-8"),
-    ] {
+    if alloc::audit_enabled() {
+        println!("   (alloc_audit on: steady-state matching kernels asserted allocation-free)");
+    }
+    let configs: Vec<(usize, SchedKind, &str)> = if smoke {
+        vec![(4, SchedKind::TesseraeT, "tesserae-t")]
+    } else {
+        vec![
+            (32, SchedKind::TesseraeT, "tesserae-t"),
+            (64, SchedKind::TesseraeT, "tesserae-t"),
+            (32, SchedKind::Pop(8), "pop-8"),
+            (64, SchedKind::Pop(8), "pop-8"),
+        ]
+    };
+    for (nodes, kind, name) in configs {
         let spec = ClusterSpec::new(nodes, 8, GpuType::A100);
         // Contended cluster: 2 jobs per GPU keeps the packing edge space,
         // the busy node-pair matchings and the POP partition LPs large.
         let n_jobs = spec.total_gpus() * 2;
         let seed = 42 + nodes as u64;
-        let (seq_s, seq_plans) = {
+        let (seq_s, seq_plans, _) = {
             let _sequential = pool.budget_override(1);
             run_rounds(kind, n_jobs, &spec, seed)
         };
-        let (par_s, par_plans) = run_rounds(kind, n_jobs, &spec, seed);
+        let (par_s, par_plans, par_allocs) = run_rounds(kind, n_jobs, &spec, seed);
         assert_eq!(
             seq_plans, par_plans,
             "{name}@{nodes}: sharded decisions diverged from sequential"
@@ -88,9 +116,26 @@ fn main() {
             par_s * 1e3,
             seq_s * 1e3,
         );
+        if alloc::audit_enabled() {
+            for (round, &(kernel, whole)) in par_allocs.iter().enumerate() {
+                println!(
+                    "{name:>10} {nodes:>3}x8 round {round}: {kernel} kernel allocs, \
+                     {whole} whole-round allocs"
+                );
+                // Round 0 grows the arenas; every later round must run its
+                // matching kernels without touching the heap.
+                assert!(
+                    round == 0 || kernel == 0,
+                    "{name}@{nodes} round {round}: matching kernels made {kernel} heap \
+                     allocations in steady state"
+                );
+            }
+        }
         if nodes == 64 {
             best64 = best64.max(speedup);
         }
+        let steady_kernel_allocs: usize =
+            par_allocs.iter().skip(1).map(|&(k, _)| k).sum();
         entries.push(Json::obj(vec![
             ("scheduler", Json::str(name)),
             ("nodes", Json::num(nodes as f64)),
@@ -101,7 +146,19 @@ fn main() {
             ("sequential_s", Json::num(seq_s)),
             ("sharded_s", Json::num(par_s)),
             ("speedup", Json::num(speedup)),
+            ("alloc_audit", Json::Bool(alloc::audit_enabled())),
+            ("steady_kernel_allocs", Json::num(steady_kernel_allocs as f64)),
+            (
+                "whole_round_allocs",
+                Json::arr(
+                    par_allocs.iter().map(|&(_, w)| Json::num(w as f64)).collect(),
+                ),
+            ),
         ]));
+    }
+    if smoke {
+        println!("smoke mode: tiny config, acceptance assert and JSON output skipped");
+        return;
     }
     assert!(
         best64 >= 1.5,

@@ -1,24 +1,29 @@
 //! PJRT runtime benchmarks: AOT artifact compile + execute latency per
 //! assignment bucket, GP posterior latency, and train-step throughput
 //! (the real-execution cluster's per-GPU compute rate).
+//!
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) shrinks sizes to one
+//! bucket on the quick harness (still a no-op without built artifacts).
 
 use tesserae::linalg::Matrix;
 use tesserae::matching::MatchingEngine;
 use tesserae::runtime::{AotAssignmentEngine, GpArtifact, Manifest, Runtime, TrainSession};
-use tesserae::util::benchutil::Bench;
+use tesserae::util::benchutil::{smoke_mode, Bench};
 use tesserae::util::rng::Pcg64;
 
 fn main() {
+    let smoke = smoke_mode();
     let Ok(manifest) = Manifest::discover() else {
         println!("artifacts not built; run `make artifacts` first");
         return;
     };
-    let mut bench = Bench::new();
+    let mut bench = if smoke { Bench::quick() } else { Bench::new() };
     let mut rng = Pcg64::new(5);
+    let sizes: &[usize] = if smoke { &[8] } else { &[8, 32, 64, 128, 256] };
 
     // Assignment artifact latency per bucket.
     let engine = AotAssignmentEngine::start(manifest.clone()).expect("engine");
-    for n in [8usize, 32, 64, 128, 256] {
+    for &n in sizes {
         let mut cost = Matrix::zeros(n, n);
         for i in 0..n {
             for j in 0..n {

@@ -11,7 +11,7 @@ pub mod sparse;
 
 pub use lp::{solve_lp, Lp, LpError, LpSolution};
 pub use matrix::Matrix;
-pub use revised::{solve_sparse_lp, SparseLp, WarmStart};
+pub use revised::{repair_warm_start, solve_sparse_lp, SparseLp, WarmStart};
 pub use sparse::{CscBuilder, CscMatrix};
 
 /// Cholesky factorization of a symmetric positive-definite matrix:

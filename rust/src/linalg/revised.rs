@@ -103,6 +103,75 @@ pub struct WarmStart {
 }
 
 impl WarmStart {
+    /// Carry this basis onto a *successor* instance whose variables and
+    /// rows are a remapping of the current ones (the arrival/departure
+    /// case). `var_map[j]` / `row_map[i]` give the new index of old
+    /// structural variable `j` / old row `i`, or `None` if it departed.
+    ///
+    /// Departed basic variables are dropped; freed basis positions are
+    /// refilled with the lowest-index unused slacks, so the result is
+    /// always a structurally complete basis for the `new_n × new_m`
+    /// instance. It is usually *primal infeasible* (the window changed) —
+    /// feed it through [`repair_warm_start`] before solving.
+    pub fn remapped(
+        &self,
+        var_map: &[Option<usize>],
+        row_map: &[Option<usize>],
+        new_n: usize,
+        new_m: usize,
+    ) -> WarmStart {
+        assert_eq!(var_map.len(), self.n, "var_map length mismatch");
+        assert_eq!(row_map.len(), self.m, "row_map length mismatch");
+        let nv = new_n + new_m;
+        let mut at_upper = vec![false; nv];
+        for (j, &up) in self.at_upper.iter().take(self.n).enumerate() {
+            if up {
+                if let Some(nj) = var_map[j] {
+                    debug_assert!(nj < new_n, "var_map target out of range");
+                    at_upper[nj] = true;
+                }
+            }
+        }
+        // Slacks never rest at an upper bound (theirs is infinite).
+        let mut in_basis = vec![false; nv];
+        let mut basis = Vec::with_capacity(new_m);
+        for &v in &self.basis {
+            let mapped = if v < self.n {
+                var_map[v]
+            } else {
+                row_map[v - self.n].map(|r| {
+                    debug_assert!(r < new_m, "row_map target out of range");
+                    new_n + r
+                })
+            };
+            if let Some(nv_idx) = mapped {
+                if !in_basis[nv_idx] && basis.len() < new_m {
+                    in_basis[nv_idx] = true;
+                    basis.push(nv_idx);
+                }
+            }
+        }
+        for r in 0..new_m {
+            if basis.len() == new_m {
+                break;
+            }
+            let s = new_n + r;
+            if !in_basis[s] {
+                in_basis[s] = true;
+                basis.push(s);
+            }
+        }
+        for &v in &basis {
+            at_upper[v] = false;
+        }
+        WarmStart {
+            n: new_n,
+            m: new_m,
+            basis,
+            at_upper,
+        }
+    }
+
     fn compatible(&self, n: usize, m: usize) -> bool {
         if self.n != n || self.m != m || self.basis.len() != m {
             return false;
@@ -130,6 +199,12 @@ const PIVOT_TOL: f64 = 1e-10;
 const REFACTOR_EVERY: usize = 64;
 /// Bound violation beyond which a warm-start basis is rejected.
 const WARM_FEAS_TOL: f64 = 1e-6;
+/// Residual bound violation the dual-simplex repair drives the basis
+/// below. Strictly tighter than [`WARM_FEAS_TOL`] so a repaired basis
+/// always clears the warm-start feasibility gate in [`solve_sparse_lp`].
+const REPAIR_FEAS_TOL: f64 = 1e-7;
+/// Minimum |pivot row entry| the repair accepts for an entering column.
+const REPAIR_PIVOT_TOL: f64 = 1e-7;
 
 /// Sparse LU factors of a basis matrix, `P B = L U` with partial pivoting.
 /// Built left-looking with a dense accumulator: O(m² + fill) per
@@ -415,6 +490,266 @@ fn install_basis(
         }
     }
     Ok((factors, x_b))
+}
+
+/// One augmenting-path step of the row ↔ basis-column bipartite matching
+/// used by [`patch_structural_singularity`]. Deterministic: support rows
+/// are scanned in CSC (ascending) order.
+fn augment_cover(
+    pos: usize,
+    support: &[Vec<usize>],
+    match_row: &mut [usize],
+    match_pos: &mut [usize],
+    seen: &mut [bool],
+) -> bool {
+    for &r in &support[pos] {
+        if seen[r] {
+            continue;
+        }
+        seen[r] = true;
+        let prev = match_row[r];
+        if prev == usize::MAX || augment_cover(prev, support, match_row, match_pos, seen) {
+            match_row[r] = pos;
+            match_pos[pos] = r;
+            return true;
+        }
+    }
+    false
+}
+
+/// Swap structurally redundant basis members for the slacks of uncovered
+/// rows, so the basis matrix has no zero row / duplicated support.
+///
+/// [`WarmStart::remapped`] refills freed basis slots with the
+/// lowest-index unused slacks — it has no view of the constraint matrix,
+/// so after a departure the coupling row whose covering pair variable
+/// left can end up covered by *no* basis column (a structurally singular
+/// basis that would force the cold fallback). Here, with the LP in hand,
+/// a maximum bipartite matching between rows and basis columns (on the
+/// nonzero support pattern) identifies the uncovered rows and the
+/// redundant basis positions in one pass; each uncovered row gets its own
+/// slack swapped in. Maximality guarantees an unmatched row's slack is
+/// not already basic (the length-1 augmenting path would contradict it).
+/// The result is structurally nonsingular; `FactorizedBasis::fresh`
+/// still backstops numeric singularity.
+fn patch_structural_singularity(lp: &SparseLp, basis: &mut [usize], at_upper: &mut [bool]) {
+    let n = lp.objective.len();
+    let m = lp.rhs.len();
+    let support: Vec<Vec<usize>> = basis
+        .iter()
+        .map(|&v| {
+            if v < n {
+                lp.constraints.col(v).0.to_vec()
+            } else {
+                vec![v - n]
+            }
+        })
+        .collect();
+    let mut match_row = vec![usize::MAX; m];
+    let mut match_pos = vec![usize::MAX; m];
+    let mut seen = vec![false; m];
+    for pos in 0..m {
+        seen.fill(false);
+        augment_cover(pos, &support, &mut match_row, &mut match_pos, &mut seen);
+    }
+    let mut unmatched_rows = (0..m).filter(|&r| match_row[r] == usize::MAX);
+    for pos in 0..m {
+        if match_pos[pos] != usize::MAX {
+            continue;
+        }
+        let r = unmatched_rows
+            .next()
+            .expect("unmatched rows and positions pair off");
+        let slack = n + r;
+        debug_assert!(
+            !basis.contains(&slack),
+            "max matching left a basic slack's row uncovered"
+        );
+        let leaving = basis[pos];
+        at_upper[leaving] = false; // freed member rests at its lower bound
+        basis[pos] = slack;
+        at_upper[slack] = false;
+    }
+}
+
+/// Restore primal feasibility of a (remapped) warm basis with a bounded
+/// dual simplex, without cold-solving. This is the arrival/departure
+/// repair path: after [`WarmStart::remapped`] carried the previous round's
+/// basis onto the perturbed instance, a handful of dual pivots replace the
+/// thousands of primal pivots a cold solve would need.
+///
+/// Best-effort by design: the dual phase only chases feasibility (it
+/// tolerates dual infeasibility, picking the min-|ratio| entering column
+/// as a deterministic heuristic), because the returned handle is then fed
+/// into [`solve_sparse_lp`]'s warm path, which re-verifies feasibility and
+/// finishes to optimality with primal pivots. Any trouble — singular
+/// basis, no eligible entering column, tiny pivots, iteration cap —
+/// returns `None`, and the caller cold-solves. Optimality and parity
+/// therefore never depend on this routine succeeding.
+pub fn repair_warm_start(lp: &SparseLp, warm: &WarmStart) -> Option<WarmStart> {
+    let n = lp.objective.len();
+    let m = lp.rhs.len();
+    if !warm.compatible(n, m) || lp.constraints.rows() != m || lp.constraints.cols() != n {
+        return None;
+    }
+    let nv = n + m;
+    let mut basis = warm.basis.clone();
+    let mut at_upper = warm.at_upper.clone();
+    for (j, up) in at_upper.iter_mut().enumerate() {
+        if *up && !upper_of(lp, j).is_finite() {
+            *up = false;
+        }
+    }
+    for &v in &basis {
+        at_upper[v] = false;
+    }
+    patch_structural_singularity(lp, &mut basis, &mut at_upper);
+    let mut factors = FactorizedBasis::fresh(lp, &basis).ok()?;
+    let mut x_b = basic_values(lp, &factors, &at_upper);
+    let mut in_basis_pos = vec![usize::MAX; nv];
+    for (pos, &v) in basis.iter().enumerate() {
+        in_basis_pos[v] = pos;
+    }
+
+    let max_iters = (4 * (m + n)).max(32);
+    let mut c_b = vec![0.0; m];
+    let mut e_r = vec![0.0; m];
+    for _ in 0..max_iters {
+        // Leaving row: the most-violated basic value (Dantzig-style dual
+        // pricing; deterministic — strict `>` keeps the lowest position on
+        // ties).
+        let mut r = usize::MAX;
+        let mut worst = REPAIR_FEAS_TOL;
+        let mut to_upper = false;
+        for (pos, &xb) in x_b.iter().enumerate() {
+            if -xb > worst {
+                worst = -xb;
+                r = pos;
+                to_upper = false;
+            }
+            let ub = upper_of(lp, basis[pos]);
+            if xb - ub > worst {
+                worst = xb - ub;
+                r = pos;
+                to_upper = true;
+            }
+        }
+        if r == usize::MAX {
+            return Some(WarmStart {
+                n,
+                m,
+                basis,
+                at_upper,
+            });
+        }
+
+        // Pivot row ρ = B⁻ᵀ e_r and duals y for the ratio test.
+        for (pos, &v) in basis.iter().enumerate() {
+            c_b[pos] = cost_of(lp, v);
+        }
+        let y = factors.btran(&c_b);
+        for e in e_r.iter_mut() {
+            *e = 0.0;
+        }
+        e_r[r] = 1.0;
+        let rho = factors.btran(&e_r);
+
+        // Entering column: among nonbasics whose step direction reduces
+        // the violation (sign analysis below), minimize |d_j / α_j| — the
+        // classic dual ratio — breaking ties toward the larger |α| (better
+        // conditioned pivot), then the lowest index (scan order).
+        let mut q = usize::MAX;
+        let mut best_ratio = f64::INFINITY;
+        let mut best_alpha = 0.0f64;
+        for j in 0..nv {
+            if in_basis_pos[j] != usize::MAX {
+                continue;
+            }
+            if upper_of(lp, j) <= 0.0 {
+                continue; // fixed at zero
+            }
+            let alpha = if j < n {
+                lp.constraints.col_dot(j, &rho)
+            } else {
+                rho[j - n]
+            };
+            if alpha.abs() < REPAIR_PIVOT_TOL {
+                continue;
+            }
+            // The leaving value moves by −σ t α (t ≥ 0; σ = +1 entering
+            // from lower, −1 from upper). Violation below zero needs the
+            // value to rise (σα < 0); above the upper bound, to fall
+            // (σα > 0).
+            let sigma_alpha = if at_upper[j] { -alpha } else { alpha };
+            let eligible = if to_upper {
+                sigma_alpha > 0.0
+            } else {
+                sigma_alpha < 0.0
+            };
+            if !eligible {
+                continue;
+            }
+            let d = if j < n {
+                lp.objective[j] - lp.constraints.col_dot(j, &y)
+            } else {
+                -y[j - n]
+            };
+            let ratio = (d / alpha).abs();
+            let replace = ratio < best_ratio - EPS
+                || (ratio < best_ratio + EPS && alpha.abs() > best_alpha.abs() + EPS);
+            if replace {
+                best_ratio = best_ratio.min(ratio);
+                best_alpha = alpha;
+                q = j;
+            }
+        }
+        if q == usize::MAX {
+            return None; // dual ray / nothing usable: cold-solve instead
+        }
+
+        // Pivot: recompute α through the factorization (exact w.r.t. the
+        // eta file), step the leaving variable exactly onto its violated
+        // bound, and swap q in.
+        let sigma = if at_upper[q] { -1.0 } else { 1.0 };
+        let mut col = vec![0.0; m];
+        if q < n {
+            lp.constraints.col_axpy(q, 1.0, &mut col);
+        } else {
+            col[q - n] = 1.0;
+        }
+        let w = factors.ftran(col);
+        let alpha = w[r];
+        if alpha.abs() < REPAIR_PIVOT_TOL {
+            return None;
+        }
+        let delta = if to_upper {
+            x_b[r] - upper_of(lp, basis[r])
+        } else {
+            x_b[r]
+        };
+        let t = delta / (sigma * alpha);
+        if !t.is_finite() || t < -EPS {
+            return None;
+        }
+        let t = t.max(0.0);
+        for (pos, &wp) in w.iter().enumerate() {
+            x_b[pos] -= t * sigma * wp;
+        }
+        let entering_value = if sigma > 0.0 { t } else { upper_of(lp, q) - t };
+        let leaving = basis[r];
+        at_upper[leaving] = to_upper && upper_of(lp, leaving).is_finite();
+        in_basis_pos[leaving] = usize::MAX;
+        basis[r] = q;
+        in_basis_pos[q] = r;
+        at_upper[q] = false;
+        x_b[r] = entering_value;
+        factors.push_eta(r, &w);
+        if factors.etas.len() >= REFACTOR_EVERY {
+            factors = FactorizedBasis::fresh(lp, &basis).ok()?;
+            x_b = basic_values(lp, &factors, &at_upper);
+        }
+    }
+    None
 }
 
 /// Solve a bounded LP with the sparse revised simplex, optionally from a
@@ -929,6 +1264,256 @@ mod tests {
             rev.objective,
             dense.objective
         );
+    }
+
+    /// Drop structural variable `j`: returns the shrunken LP plus the
+    /// var/row maps for [`WarmStart::remapped`].
+    fn drop_var(lp: &SparseLp, j: usize) -> (SparseLp, Vec<Option<usize>>, Vec<Option<usize>>) {
+        let n = lp.num_vars();
+        let m = lp.num_rows();
+        let dense = lp.constraints.to_dense();
+        let mut a = Matrix::zeros(m, n - 1);
+        let mut objective = Vec::with_capacity(n - 1);
+        let mut upper = Vec::with_capacity(n - 1);
+        let mut var_map = vec![None; n];
+        let mut nj = 0usize;
+        for col in 0..n {
+            if col == j {
+                continue;
+            }
+            for row in 0..m {
+                a.set(row, nj, dense.get(row, col));
+            }
+            objective.push(lp.objective[col]);
+            upper.push(lp.upper[col]);
+            var_map[col] = Some(nj);
+            nj += 1;
+        }
+        let row_map = (0..m).map(Some).collect();
+        (
+            SparseLp {
+                objective,
+                constraints: CscMatrix::from_dense(&a),
+                rhs: lp.rhs.clone(),
+                upper,
+            },
+            var_map,
+            row_map,
+        )
+    }
+
+    /// Append a fresh structural variable with the given column / cost /
+    /// bound; old variables and rows map identically.
+    fn add_var(
+        lp: &SparseLp,
+        col: &[f64],
+        cost: f64,
+        ub: f64,
+    ) -> (SparseLp, Vec<Option<usize>>, Vec<Option<usize>>) {
+        let n = lp.num_vars();
+        let m = lp.num_rows();
+        assert_eq!(col.len(), m);
+        let dense = lp.constraints.to_dense();
+        let mut a = Matrix::zeros(m, n + 1);
+        for r in 0..m {
+            for c in 0..n {
+                a.set(r, c, dense.get(r, c));
+            }
+            a.set(r, n, col[r]);
+        }
+        let mut objective = lp.objective.clone();
+        objective.push(cost);
+        let mut upper = lp.upper.clone();
+        upper.push(ub);
+        (
+            SparseLp {
+                objective,
+                constraints: CscMatrix::from_dense(&a),
+                rhs: lp.rhs.clone(),
+                upper,
+            },
+            (0..n).map(Some).collect(),
+            (0..m).map(Some).collect(),
+        )
+    }
+
+    fn gavel_like(rng: &mut Pcg64, n: usize) -> SparseLp {
+        // Capacity row plus a coupling row per pair of adjacent jobs — the
+        // same shape Gavel's allocation LP has.
+        let m = 1 + n / 2;
+        let mut a = Matrix::zeros(m, n);
+        for j in 0..n {
+            a.set(0, j, rng.range_f64(0.5, 8.0));
+            a.set(1 + j / 2, j, 1.0);
+        }
+        let mut rhs = vec![0.0; m];
+        rhs[0] = (0..n).map(|j| a.get(0, j)).sum::<f64>() * 0.4;
+        for r in rhs.iter_mut().skip(1) {
+            *r = 1.0;
+        }
+        SparseLp {
+            objective: (0..n).map(|_| rng.range_f64(0.1, 4.0)).collect(),
+            constraints: CscMatrix::from_dense(&a),
+            rhs,
+            upper: vec![1.0; n],
+        }
+    }
+
+    #[test]
+    fn remapped_identity_is_immediately_optimal() {
+        let mut rng = Pcg64::new(9);
+        let lp = gavel_like(&mut rng, 16);
+        let (cold, warm) = solve_sparse_lp(&lp, None).unwrap();
+        let id_vars: Vec<Option<usize>> = (0..lp.num_vars()).map(Some).collect();
+        let id_rows: Vec<Option<usize>> = (0..lp.num_rows()).map(Some).collect();
+        let same = warm.remapped(&id_vars, &id_rows, lp.num_vars(), lp.num_rows());
+        let repaired = repair_warm_start(&lp, &same).expect("identity remap repairs trivially");
+        let (hot, _) = solve_sparse_lp(&lp, Some(&repaired)).unwrap();
+        assert_eq!(hot.iterations, 0, "identity remap should need no pivots");
+        assert!((hot.objective - cold.objective).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repair_after_departure_matches_cold() {
+        let mut rng = Pcg64::new(41);
+        let lp = gavel_like(&mut rng, 24);
+        let (_, warm) = solve_sparse_lp(&lp, None).unwrap();
+        for j in [0usize, 7, 23] {
+            let (shrunk, var_map, row_map) = drop_var(&lp, j);
+            let carried = warm.remapped(&var_map, &row_map, shrunk.num_vars(), shrunk.num_rows());
+            let repaired = repair_warm_start(&shrunk, &carried);
+            let (hot, _) = solve_sparse_lp(&shrunk, repaired.as_ref()).unwrap();
+            let (cold, _) = solve_sparse_lp(&shrunk, None).unwrap();
+            assert!(
+                (hot.objective - cold.objective).abs() <= 1e-8 * (1.0 + cold.objective.abs()),
+                "drop {j}: repaired {} vs cold {}",
+                hot.objective,
+                cold.objective
+            );
+            let dense = solve_lp(&shrunk.to_dense_lp()).unwrap();
+            assert!(
+                (hot.objective - dense.objective).abs() <= 1e-6 * (1.0 + dense.objective.abs()),
+                "drop {j}: repaired {} vs dense {}",
+                hot.objective,
+                dense.objective
+            );
+        }
+    }
+
+    #[test]
+    fn repair_after_arrival_matches_cold() {
+        let mut rng = Pcg64::new(43);
+        let lp = gavel_like(&mut rng, 24);
+        let m = lp.num_rows();
+        let (_, warm) = solve_sparse_lp(&lp, None).unwrap();
+        let mut col = vec![0.0; m];
+        col[0] = rng.range_f64(0.5, 8.0);
+        col[m - 1] = 1.0;
+        let (grown, var_map, row_map) = add_var(&lp, &col, 3.5, 1.0);
+        let carried = warm.remapped(&var_map, &row_map, grown.num_vars(), grown.num_rows());
+        let repaired = repair_warm_start(&grown, &carried);
+        let (hot, _) = solve_sparse_lp(&grown, repaired.as_ref()).unwrap();
+        let (cold, _) = solve_sparse_lp(&grown, None).unwrap();
+        assert!(
+            (hot.objective - cold.objective).abs() <= 1e-8 * (1.0 + cold.objective.abs()),
+            "repaired {} vs cold {}",
+            hot.objective,
+            cold.objective
+        );
+    }
+
+    /// A remapped basis that leaves a coupling row covered by no basis
+    /// column (the post-departure shape `remapped`'s lowest-index slack
+    /// refill produces) is structurally singular; the repair's matching
+    /// patch must swap the right slack in and still succeed rather than
+    /// bail to the cold fallback.
+    #[test]
+    fn repair_patches_structurally_singular_basis() {
+        // Row 0 capacity, row 1 a coupling row; x0 covers both rows,
+        // x1 only the capacity row.
+        let lp = SparseLp {
+            objective: vec![2.0, 1.0],
+            constraints: CscMatrix::from_dense(&Matrix::from_rows(&[
+                &[3.0, 2.0],
+                &[1.0, 0.0],
+            ])),
+            rhs: vec![4.0, 1.0],
+            upper: vec![1.0, 1.0],
+        };
+        // Basis {x1, slack0}: both columns live in row 0 only — row 1 is
+        // a zero row, so factorization alone would fail.
+        let broken = WarmStart {
+            n: 2,
+            m: 2,
+            basis: vec![1, 2],
+            at_upper: vec![false; 4],
+        };
+        let repaired = repair_warm_start(&lp, &broken)
+            .expect("matching patch must rescue the uncovered row");
+        let (hot, _) = solve_sparse_lp(&lp, Some(&repaired)).unwrap();
+        let (cold, _) = solve_sparse_lp(&lp, None).unwrap();
+        assert!(
+            (hot.objective - cold.objective).abs() <= 1e-8 * (1.0 + cold.objective.abs()),
+            "patched repair {} vs cold {}",
+            hot.objective,
+            cold.objective
+        );
+    }
+
+    /// Randomized churn: every remap+repair(+warm-finish) result must
+    /// match the cold sparse solve and the dense oracle within 1e-6.
+    #[test]
+    fn repair_matches_cold_and_dense_under_random_churn() {
+        forall(
+            "repair == cold == dense under churn",
+            57,
+            40,
+            |r| {
+                let n = 6 + 2 * r.below(8) as usize;
+                let seed = r.below(1 << 30);
+                (n, seed)
+            },
+            |&(n, seed)| {
+                let mut rng = Pcg64::new(seed ^ 0x5eed);
+                let lp = gavel_like(&mut rng, n);
+                let (_, mut warm) = solve_sparse_lp(&lp, None).map_err(|e| e.to_string())?;
+                let mut cur = lp;
+                for step in 0..4 {
+                    // Alternate a departure with an arrival.
+                    let (next, var_map, row_map) = if step % 2 == 0 {
+                        let j = rng.below(cur.num_vars() as u64) as usize;
+                        drop_var(&cur, j)
+                    } else {
+                        let m = cur.num_rows();
+                        let mut col = vec![0.0; m];
+                        col[0] = rng.range_f64(0.5, 8.0);
+                        col[1 + rng.below((m - 1) as u64) as usize] = 1.0;
+                        add_var(&cur, &col, rng.range_f64(0.1, 4.0), 1.0)
+                    };
+                    let carried =
+                        warm.remapped(&var_map, &row_map, next.num_vars(), next.num_rows());
+                    let repaired = repair_warm_start(&next, &carried);
+                    let (hot, next_warm) =
+                        solve_sparse_lp(&next, repaired.as_ref()).map_err(|e| e.to_string())?;
+                    let (cold, _) = solve_sparse_lp(&next, None).map_err(|e| e.to_string())?;
+                    approx_eq(hot.objective, cold.objective, 1e-6)?;
+                    let dense = solve_lp(&next.to_dense_lp()).map_err(|e| e.to_string())?;
+                    approx_eq(hot.objective, dense.objective, 1e-6)?;
+                    warm = next_warm;
+                    cur = next;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn repair_rejects_incompatible_warm_start() {
+        let mut rng = Pcg64::new(5);
+        let lp = gavel_like(&mut rng, 8);
+        let other = gavel_like(&mut rng, 12);
+        let (_, foreign) = solve_sparse_lp(&other, None).unwrap();
+        assert!(repair_warm_start(&lp, &foreign).is_none());
     }
 
     #[test]

@@ -109,6 +109,42 @@ impl CscMatrix {
         }
         out
     }
+
+    /// Reopen this matrix for an in-place rebuild with `rows` rows: the
+    /// column/value buffers are kept (capacity and all) but logically
+    /// emptied, so rebuilding a same-shaped instance round over round is
+    /// allocation-free once the buffers have grown to steady-state size.
+    /// Push columns with [`CscMatrix::push`] / [`CscMatrix::end_col`]
+    /// exactly as with [`CscBuilder`].
+    pub fn reset(&mut self, rows: usize) {
+        self.rows = rows;
+        self.cols = 0;
+        self.col_ptr.clear();
+        self.col_ptr.push(0);
+        self.row_idx.clear();
+        self.values.clear();
+    }
+
+    /// Append a nonzero to the current (open) column of an in-place
+    /// rebuild started by [`CscMatrix::reset`]. Rows must be pushed in
+    /// strictly increasing order within a column.
+    pub fn push(&mut self, row: usize, value: f64) {
+        assert!(row < self.rows, "row {row} out of bounds ({})", self.rows);
+        let col_start = self.col_ptr[self.cols];
+        if self.row_idx.len() > col_start {
+            let prev = self.row_idx[self.row_idx.len() - 1];
+            assert!(prev < row, "rows must increase within a column");
+        }
+        self.row_idx.push(row);
+        self.values.push(value);
+    }
+
+    /// Close the current column of an in-place rebuild (empty columns are
+    /// fine).
+    pub fn end_col(&mut self) {
+        self.cols += 1;
+        self.col_ptr.push(self.row_idx.len());
+    }
 }
 
 /// Incremental column-by-column CSC builder. Rows must be pushed in
@@ -238,5 +274,47 @@ mod tests {
         let mut b = CscBuilder::new(3, 1);
         b.push(2, 1.0);
         b.push(1, 1.0);
+    }
+
+    #[test]
+    fn in_place_rebuild_matches_builder_and_reuses_buffers() {
+        let mut s = CscMatrix::from_dense(&example());
+        let cap_rows = s.row_idx.capacity();
+        let cap_vals = s.values.capacity();
+
+        // Rebuild a different (smaller) instance in place.
+        s.reset(2);
+        s.push(1, 7.0);
+        s.end_col();
+        s.end_col();
+        let mut b = CscBuilder::new(2, 2);
+        b.push(1, 7.0);
+        b.end_col();
+        b.end_col();
+        assert_eq!(s, b.finish());
+        assert_eq!(s.row_idx.capacity(), cap_rows, "rebuild must not shrink buffers");
+        assert_eq!(s.values.capacity(), cap_vals);
+
+        // And rebuild the original again: full round-trip.
+        let a = example();
+        s.reset(a.rows());
+        for j in 0..a.cols() {
+            for i in 0..a.rows() {
+                if a.get(i, j) != 0.0 {
+                    s.push(i, a.get(i, j));
+                }
+            }
+            s.end_col();
+        }
+        assert_eq!(s, CscMatrix::from_dense(&a));
+    }
+
+    #[test]
+    #[should_panic(expected = "rows must increase")]
+    fn in_place_rebuild_rejects_unsorted_rows() {
+        let mut s = CscMatrix::zeros(3, 0);
+        s.reset(3);
+        s.push(2, 1.0);
+        s.push(1, 1.0);
     }
 }

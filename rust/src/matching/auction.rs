@@ -193,6 +193,115 @@ pub fn solve_min_cost_warm(
     )
 }
 
+/// Reusable buffers for [`solve_min_cost_fill`]: prices, the two
+/// assignment maps and the unassigned stack, allocated once per worker
+/// arena instead of once per solve.
+#[derive(Debug, Default)]
+pub struct AuctionScratch {
+    prices: Vec<f64>,
+    row_of: Vec<usize>,
+    col_of: Vec<usize>,
+    unassigned: Vec<usize>,
+}
+
+/// Sentinel for "no person / no object" in the scratch maps.
+const NONE: usize = usize::MAX;
+
+/// Allocation-free [`solve_min_cost`]: the same ε-scaling forward auction
+/// with every working vector living in `scratch` and the benefit negation
+/// (`b = −c`, exact in floating point) folded into the bidding scan
+/// instead of materializing a negated matrix. Results are bit-identical to
+/// [`solve_min_cost`]. Writes the assignment (row → col) into `out` and
+/// returns the total cost.
+pub fn solve_min_cost_fill(
+    cost: &Matrix,
+    resolution: Option<f64>,
+    scratch: &mut AuctionScratch,
+    out: &mut Vec<usize>,
+) -> f64 {
+    let n = cost.rows();
+    assert_eq!(n, cost.cols(), "auction needs a square matrix");
+    out.clear();
+    if n == 0 {
+        return 0.0;
+    }
+    if n == 1 {
+        out.push(0);
+        return cost.get(0, 0);
+    }
+
+    let mut cfg = AuctionConfig::default();
+    if let Some(q) = resolution {
+        cfg.eps_final = q / (n as f64 + 1.0);
+    }
+
+    let AuctionScratch {
+        prices,
+        row_of,
+        col_of,
+        unassigned,
+    } = scratch;
+    prices.clear();
+    prices.resize(n, 0.0);
+    row_of.clear();
+    row_of.resize(n, NONE);
+    col_of.clear();
+    col_of.resize(n, NONE);
+
+    let bmax = cost.data().iter().map(|&c| -c).fold(f64::NEG_INFINITY, f64::max);
+    let bmin = cost.data().iter().map(|&c| -c).fold(f64::INFINITY, f64::min);
+    let range = (bmax - bmin).max(1e-12);
+
+    let mut eps = (range * cfg.eps_start_frac).max(cfg.eps_final);
+    loop {
+        row_of.iter_mut().for_each(|x| *x = NONE);
+        col_of.iter_mut().for_each(|x| *x = NONE);
+        unassigned.clear();
+        unassigned.extend(0..n);
+        let mut rounds = 0usize;
+        while let Some(person) = unassigned.pop() {
+            rounds += 1;
+            assert!(
+                rounds <= cfg.max_rounds,
+                "auction exceeded {} rounds (eps={eps})",
+                cfg.max_rounds
+            );
+            let row = cost.row(person);
+            let mut best_j = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            let mut second_v = f64::NEG_INFINITY;
+            for (j, (&c, &p)) in row.iter().zip(prices.iter()).enumerate() {
+                let v = -c - p;
+                if v > best_v {
+                    second_v = best_v;
+                    best_v = v;
+                    best_j = j;
+                } else if v > second_v {
+                    second_v = v;
+                }
+            }
+            if second_v == f64::NEG_INFINITY {
+                second_v = best_v;
+            }
+            prices[best_j] += best_v - second_v + eps;
+            let evicted = row_of[best_j];
+            row_of[best_j] = person;
+            if evicted != NONE {
+                col_of[evicted] = NONE;
+                unassigned.push(evicted);
+            }
+            col_of[person] = best_j;
+        }
+        if eps <= cfg.eps_final {
+            break;
+        }
+        eps = (eps / cfg.scale).max(cfg.eps_final);
+    }
+
+    out.extend(col_of.iter().copied());
+    out.iter().enumerate().map(|(r, &c)| cost.get(r, c)).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -312,6 +421,29 @@ mod tests {
             let (warm, _) = solve_min_cost_warm(&m, Some(1.0 / 16.0), None);
             assert_eq!(cold.row_to_col, warm.row_to_col);
             assert_eq!(cold.cost.to_bits(), warm.cost.to_bits());
+        }
+    }
+
+    #[test]
+    fn scratch_fill_is_bit_identical_to_cold() {
+        // The arena path folds the cost negation into the scan; every
+        // float op matches the materialized-matrix path, so the outputs
+        // must agree bit for bit — including across arena reuse.
+        let mut rng = crate::util::rng::Pcg64::new(17);
+        let mut scratch = AuctionScratch::default();
+        let mut out = Vec::new();
+        for _ in 0..30 {
+            let n = 1 + rng.below(10) as usize;
+            let mut m = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    m.set(i, j, rng.below(33) as f64 / 16.0);
+                }
+            }
+            let cold = solve_min_cost(&m, Some(1.0 / 16.0));
+            let total = solve_min_cost_fill(&m, Some(1.0 / 16.0), &mut scratch, &mut out);
+            assert_eq!(cold.row_to_col, out);
+            assert_eq!(cold.cost.to_bits(), total.to_bits());
         }
     }
 

@@ -43,17 +43,33 @@ pub fn solve_min_cost(cost: &Matrix) -> AssignmentResult {
     solve_min_cost_rect(cost)
 }
 
-/// Reusable working buffers for [`solve_min_cost_rect_in`]. Batch solvers
-/// keep one arena per worker thread so the six per-solve vectors are
-/// allocated once per worker instead of once per instance.
+/// Reusable working buffers for [`solve_min_cost_rect_in`] /
+/// [`solve_min_cost_rect_fill`]. Batch solvers keep one arena per worker
+/// thread so the per-solve vectors are allocated once per worker instead
+/// of once per instance. The potentials / scratch vectors are plain SoA
+/// arrays and the per-augmentation column mask is a `u64` bitset, so the
+/// inner loops touch dense cache lines and skip visited columns a word at
+/// a time.
 #[derive(Debug, Default)]
 pub struct SolveScratch {
-    u: Vec<f64>,
-    v: Vec<f64>,
-    p: Vec<usize>,
-    way: Vec<usize>,
-    minv: Vec<f64>,
-    used: Vec<bool>,
+    pub(crate) u: Vec<f64>,
+    pub(crate) v: Vec<f64>,
+    pub(crate) p: Vec<usize>,
+    pub(crate) way: Vec<usize>,
+    pub(crate) minv: Vec<f64>,
+    /// Bitset over columns `0..=m` (bit 0 is the sentinel column).
+    pub(crate) used: Vec<u64>,
+    /// Output slot of the allocation-free fill path (row → column).
+    pub(crate) assignment: Vec<usize>,
+    /// Sub-arena for the auction engine's in-place solves.
+    pub(crate) auction: super::auction::AuctionScratch,
+}
+
+impl SolveScratch {
+    /// The assignment written by the last fill-style solve (row → column).
+    pub fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
 }
 
 /// Rectangular min-cost assignment: every *row* gets a distinct column
@@ -67,20 +83,48 @@ pub fn solve_min_cost_rect(cost: &Matrix) -> AssignmentResult {
 /// hot path). Identical algorithm; results are bit-identical regardless of
 /// what previous solves used the arena.
 pub fn solve_min_cost_rect_in(cost: &Matrix, scratch: &mut SolveScratch) -> AssignmentResult {
+    let (_, total) = solve_min_cost_rect_fill(cost, scratch);
+    AssignmentResult {
+        row_to_col: scratch.assignment.clone(),
+        cost: total,
+    }
+}
+
+/// Allocation-free core of the rectangular Hungarian solve: identical
+/// pivots and bit-identical outputs to [`solve_min_cost_rect`], but the
+/// assignment lands in `scratch.assignment` instead of a fresh `Vec` — in
+/// steady state (warm arena) the call performs zero heap allocations,
+/// which is what the counting-allocator audit in `bench_round_pipeline`
+/// asserts. Returns the assignment slice and the total cost.
+pub fn solve_min_cost_rect_fill<'a>(
+    cost: &Matrix,
+    scratch: &'a mut SolveScratch,
+) -> (&'a [usize], f64) {
     let n = cost.rows();
     let m = cost.cols();
     assert!(n <= m, "rectangular hungarian needs rows <= cols");
+    let SolveScratch {
+        u,
+        v,
+        p,
+        way,
+        minv,
+        used,
+        assignment,
+        ..
+    } = scratch;
+    assignment.clear();
     if n == 0 {
-        return AssignmentResult {
-            row_to_col: vec![],
-            cost: 0.0,
-        };
+        return (assignment.as_slice(), 0.0);
     }
 
     const INF: f64 = f64::INFINITY;
     // 1-indexed arrays with column 0 as sentinel (e-maxx formulation);
     // p[j] = row matched to column j (0 = none); p[0] = row being inserted.
-    let SolveScratch { u, v, p, way, minv, used } = scratch;
+    // `used` packs columns 0..=m into u64 words; bit 0 (the sentinel) is
+    // set by the first inner iteration, so scans over `!word` naturally
+    // cover exactly the unvisited real columns, 64 at a time.
+    let words = m / 64 + 1;
     u.clear();
     u.resize(n + 1, 0.0);
     v.clear();
@@ -92,39 +136,58 @@ pub fn solve_min_cost_rect_in(cost: &Matrix, scratch: &mut SolveScratch) -> Assi
     minv.clear();
     minv.resize(m + 1, INF);
     used.clear();
-    used.resize(m + 1, false);
+    used.resize(words, 0);
+    // Valid-bit mask of the last word (bits representing j > m are never
+    // scanned).
+    let top = (m + 1) % 64;
+    let last_mask: u64 = if top == 0 { !0 } else { (1u64 << top) - 1 };
 
     for i in 1..=n {
         p[0] = i;
         let mut j0 = 0usize;
         minv.iter_mut().for_each(|x| *x = INF);
-        used.iter_mut().for_each(|x| *x = false);
+        used.iter_mut().for_each(|x| *x = 0);
         loop {
-            used[j0] = true;
+            used[j0 / 64] |= 1u64 << (j0 % 64);
             let i0 = p[j0];
             let mut delta = INF;
             let mut j1 = 0usize;
             let row = cost.row(i0 - 1);
-            for j in 1..=m {
-                if used[j] {
-                    continue;
+            for (k, &word) in used.iter().enumerate() {
+                let mut free = !word;
+                if k == words - 1 {
+                    free &= last_mask;
                 }
-                let cur = row[j - 1] - u[i0] - v[j];
-                if cur < minv[j] {
-                    minv[j] = cur;
-                    way[j] = j0;
-                }
-                if minv[j] < delta {
-                    delta = minv[j];
-                    j1 = j;
+                // Ascending trailing_zeros preserves the scalar loop's
+                // lowest-j-wins tie-breaks exactly.
+                while free != 0 {
+                    let j = k * 64 + free.trailing_zeros() as usize;
+                    free &= free - 1;
+                    let cur = row[j - 1] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
                 }
             }
-            for j in 0..=m {
-                if used[j] {
+            // Potential update. The branchless sweep also shifts minv of
+            // *used* columns — harmless, those slots are never read again
+            // before the per-row reset — and the used bits then move the
+            // potentials exactly as the scalar loop did.
+            for x in minv.iter_mut() {
+                *x -= delta;
+            }
+            for (k, &word) in used.iter().enumerate() {
+                let mut bits = word;
+                while bits != 0 {
+                    let j = k * 64 + bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
                     u[p[j]] += delta;
                     v[j] -= delta;
-                } else {
-                    minv[j] -= delta;
                 }
             }
             j0 = j1;
@@ -143,21 +206,18 @@ pub fn solve_min_cost_rect_in(cost: &Matrix, scratch: &mut SolveScratch) -> Assi
         }
     }
 
-    let mut row_to_col = vec![usize::MAX; n];
+    assignment.resize(n, usize::MAX);
     for j in 1..=m {
         if p[j] != 0 {
-            row_to_col[p[j] - 1] = j - 1;
+            assignment[p[j] - 1] = j - 1;
         }
     }
-    let total = row_to_col
+    let total = assignment
         .iter()
         .enumerate()
         .map(|(r, &c)| cost.get(r, c))
         .sum();
-    AssignmentResult {
-        row_to_col,
-        cost: total,
-    }
+    (assignment.as_slice(), total)
 }
 
 /// Exhaustive minimum-cost assignment (n! — tests only, n ≤ 8).
@@ -338,6 +398,65 @@ mod tests {
             let reused = solve_min_cost_rect_in(&c, &mut scratch);
             assert_eq!(fresh.row_to_col, reused.row_to_col);
             assert_eq!(fresh.cost.to_bits(), reused.cost.to_bits());
+        }
+    }
+
+    #[test]
+    fn fill_variant_matches_allocating_path() {
+        let mut rng = Pcg64::new(123);
+        let mut scratch = SolveScratch::default();
+        for _ in 0..30 {
+            let n = 1 + rng.below(9) as usize;
+            let m = n + rng.below(6) as usize;
+            let mut c = Matrix::zeros(n, m);
+            for i in 0..n {
+                for j in 0..m {
+                    c.set(i, j, rng.range_f64(0.0, 10.0));
+                }
+            }
+            let fresh = solve_min_cost_rect(&c);
+            let (assignment, total) = solve_min_cost_rect_fill(&c, &mut scratch);
+            assert_eq!(fresh.row_to_col, assignment);
+            assert_eq!(fresh.cost.to_bits(), total.to_bits());
+        }
+    }
+
+    #[test]
+    fn bitset_skips_word_boundaries_correctly() {
+        // Sizes straddling the 63/64/65 and 127/128/129 column boundaries
+        // exercise the last-word mask and multi-word scans.
+        let mut rng = Pcg64::new(321);
+        let mut scratch = SolveScratch::default();
+        for &m in &[63usize, 64, 65, 127, 128, 129] {
+            let n = m.min(40);
+            let mut c = Matrix::zeros(n, m);
+            for i in 0..n {
+                for j in 0..m {
+                    c.set(i, j, rng.range_f64(0.0, 100.0));
+                }
+            }
+            let got = solve_min_cost_rect_in(&c, &mut scratch);
+            // Assignment must be a valid partial permutation into 0..m.
+            let mut seen = vec![false; m];
+            for &col in &got.row_to_col {
+                assert!(col < m && !seen[col]);
+                seen[col] = true;
+            }
+            // And the dual objective must certify optimality: for an
+            // optimal (u, v), u_i + v_j <= c_ij with equality on matches.
+            let brute_n = 6.min(n);
+            let mut small = Matrix::zeros(brute_n, brute_n);
+            for i in 0..brute_n {
+                for j in 0..brute_n {
+                    small.set(i, j, c.get(i, j));
+                }
+            }
+            assert!(
+                (solve_min_cost_rect_in(&small, &mut scratch).cost
+                    - brute_force_min_cost(&small).cost)
+                    .abs()
+                    < 1e-9
+            );
         }
     }
 

@@ -71,6 +71,19 @@ pub trait MatchingEngine: Send + Sync {
         self.solve_min_cost_rect(cost)
     }
 
+    /// Like [`Self::solve_min_cost_rect_scratch`] but writing the assignment
+    /// into `scratch.assignment` instead of allocating an
+    /// [`AssignmentResult`] — the allocation-free batch hot path. Engines
+    /// with arena-native kernels (Hungarian, auction) override this to do
+    /// zero heap allocations in steady state; the default delegates to the
+    /// allocating path and copies. Results are bit-identical either way.
+    fn solve_min_cost_rect_into(&self, cost: &Matrix, scratch: &mut SolveScratch) -> f64 {
+        let sol = self.solve_min_cost_rect_scratch(cost, scratch);
+        scratch.assignment.clear();
+        scratch.assignment.extend_from_slice(&sol.row_to_col);
+        sol.cost
+    }
+
     /// Solve a batch of independent (square or rectangular) instances.
     /// Default: a sequential loop over [`Self::solve_min_cost_rect_scratch`]
     /// with one shared scratch arena. Engines with a real batched path —
@@ -156,6 +169,10 @@ impl MatchingEngine for HungarianEngine {
         hungarian::solve_min_cost_rect_in(cost, scratch)
     }
 
+    fn solve_min_cost_rect_into(&self, cost: &Matrix, scratch: &mut SolveScratch) -> f64 {
+        hungarian::solve_min_cost_rect_fill(cost, scratch).1
+    }
+
     /// Exact everywhere, hence exact on the migration grid.
     fn exact_on_migration_costs(&self) -> bool {
         true
@@ -193,6 +210,23 @@ impl MatchingEngine for AuctionEngine {
     ) -> (AssignmentResult, Option<Vec<f64>>) {
         let (sol, prices) = auction::solve_min_cost_warm(cost, self.resolution, warm);
         (sol, Some(prices))
+    }
+
+    /// Square instances run the arena-native auction kernel; rectangular
+    /// ones keep the padded (allocating) path, as in
+    /// [`MatchingEngine::solve_min_cost_rect`].
+    fn solve_min_cost_rect_into(&self, cost: &Matrix, scratch: &mut SolveScratch) -> f64 {
+        if cost.rows() == cost.cols() {
+            let SolveScratch {
+                assignment, auction, ..
+            } = scratch;
+            auction::solve_min_cost_fill(cost, self.resolution, auction, assignment)
+        } else {
+            let sol = self.solve_min_cost_rect_scratch(cost, scratch);
+            scratch.assignment.clear();
+            scratch.assignment.extend_from_slice(&sol.row_to_col);
+            sol.cost
+        }
     }
 
     /// Exact on the 1/16 grid only when every grid entry is a multiple of
@@ -475,6 +509,37 @@ mod tests {
                 assert_eq!(single.cost.to_bits(), sol.cost.to_bits());
             }
             assert!(!engine.has_native_batch());
+        }
+    }
+
+    #[test]
+    fn rect_into_matches_allocating_path_for_all_engines() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(167);
+        let matrices: Vec<Matrix> = (0..20)
+            .map(|_| {
+                let n = 1 + rng.below(7) as usize;
+                let m = n + rng.below(4) as usize;
+                let mut c = Matrix::zeros(n, m);
+                for i in 0..n {
+                    for j in 0..m {
+                        c.set(i, j, rng.below(64) as f64 / 16.0);
+                    }
+                }
+                c
+            })
+            .collect();
+        for engine in [
+            &HungarianEngine as &dyn MatchingEngine,
+            &AuctionEngine::default(),
+        ] {
+            let mut scratch = SolveScratch::default();
+            for c in &matrices {
+                let want = engine.solve_min_cost_rect(c);
+                let got_cost = engine.solve_min_cost_rect_into(c, &mut scratch);
+                assert_eq!(scratch.assignment(), &want.row_to_col[..], "{}", engine.name());
+                assert_eq!(got_cost.to_bits(), want.cost.to_bits(), "{}", engine.name());
+            }
         }
     }
 

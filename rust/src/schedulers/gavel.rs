@@ -13,8 +13,12 @@
 //! row at all. Across rounds the scheduler caches the built instance —
 //! when the active job window is unchanged only the objective (the drifted
 //! priority weights) is patched in place, and the previous round's optimal
-//! basis warm-starts the re-solve. The dense tableau solver is retained in
-//! `linalg::lp` purely as the parity oracle for tests and `bench_lp`.
+//! basis warm-starts the re-solve. When the window *changes* (arrival /
+//! departure) under the same config, the instance is rebuilt in place and
+//! the basis is carried across by an id-based remap plus a bounded
+//! dual-simplex repair (`linalg::revised::repair_warm_start`) — a handful
+//! of pivots instead of a cold solve. The dense tableau solver is retained
+//! in `linalg::lp` purely as the parity oracle for tests and `bench_lp`.
 //!
 //! Divergence from Gavel's cvxpy implementation (documented in DESIGN.md):
 //! candidate pairs are limited to equal-GPU jobs adjacent in the priority
@@ -26,7 +30,7 @@ use std::sync::Arc;
 
 use crate::estimator::ThroughputSource;
 use crate::jobs::ParallelismStrategy;
-use crate::linalg::{solve_sparse_lp, CscBuilder, SparseLp, WarmStart};
+use crate::linalg::{repair_warm_start, solve_sparse_lp, CscMatrix, SparseLp, WarmStart};
 use crate::matching::{MatchingEngine, MatchingService};
 use crate::policies::placement::{allocate_without_packing, migrate_with, MigrationMode};
 use crate::policies::JobInfo;
@@ -91,7 +95,57 @@ pub fn build_allocation_lp(
     pairs: &[(usize, usize)],
     total_gpus: usize,
 ) -> SparseLp {
+    let mut lp = SparseLp {
+        objective: Vec::new(),
+        constraints: CscMatrix::zeros(0, 0),
+        rhs: Vec::new(),
+        upper: Vec::new(),
+    };
+    build_allocation_lp_into(jobs, pairs, total_gpus, &mut lp);
+    lp
+}
+
+/// In-place variant of [`build_allocation_lp`]: rebuilds `lp` reusing its
+/// CSC / objective / rhs / bound buffers, so carrying a cached instance
+/// across an arrival or departure allocates nothing once the buffers have
+/// grown to steady-state size.
+pub fn build_allocation_lp_into(
+    jobs: &[JobInfo],
+    pairs: &[(usize, usize)],
+    total_gpus: usize,
+    lp: &mut SparseLp,
+) {
     let n = jobs.len();
+    let (job_row, m) = coupling_rows(n, pairs);
+    let nv = n + pairs.len();
+    let c = &mut lp.constraints;
+    c.reset(m);
+    for (i, j) in jobs.iter().enumerate() {
+        c.push(0, j.num_gpus as f64);
+        if job_row[i] != usize::MAX {
+            c.push(job_row[i], 1.0);
+        }
+        c.end_col();
+    }
+    for &(a, b) in pairs {
+        c.push(0, jobs[a].num_gpus as f64);
+        c.push(job_row[a], 1.0);
+        c.push(job_row[b], 1.0);
+        c.end_col();
+    }
+    lp.objective.clear();
+    lp.objective.resize(nv, 0.0);
+    lp.rhs.clear();
+    lp.rhs.resize(m, 1.0);
+    lp.rhs[0] = total_gpus as f64;
+    lp.upper.clear();
+    lp.upper.resize(nv, 1.0);
+}
+
+/// Row layout of [`build_allocation_lp`]: row 0 is cluster capacity, and
+/// jobs that participate in ≥ 1 pair get coupling rows `1..` in job order.
+/// Returns `(job_row, m)` with `usize::MAX` marking "no coupling row".
+fn coupling_rows(n: usize, pairs: &[(usize, usize)]) -> (Vec<usize>, usize) {
     let mut in_pair = vec![false; n];
     for &(a, b) in pairs {
         in_pair[a] = true;
@@ -105,29 +159,49 @@ pub fn build_allocation_lp(
             m += 1;
         }
     }
-    let nv = n + pairs.len();
-    let mut b = CscBuilder::new(m, nv);
-    for (i, j) in jobs.iter().enumerate() {
-        b.push(0, j.num_gpus as f64);
-        if job_row[i] != usize::MAX {
-            b.push(job_row[i], 1.0);
+    (job_row, m)
+}
+
+/// Variable / row maps from one allocation-LP window onto its successor —
+/// the inputs [`WarmStart::remapped`] needs to carry a basis across an
+/// arrival/departure. Structural variables map by job id, pair variables
+/// by ordered id pair, the capacity row to itself, and coupling rows by
+/// job id; departed entries map to `None`.
+pub fn allocation_lp_maps(
+    old_ids: &[u64],
+    old_pairs: &[(usize, usize)],
+    new_jobs: &[JobInfo],
+    new_pairs: &[(usize, usize)],
+) -> (Vec<Option<usize>>, Vec<Option<usize>>) {
+    let new_index: BTreeMap<u64, usize> =
+        new_jobs.iter().enumerate().map(|(i, j)| (j.id, i)).collect();
+    let new_pair_index: BTreeMap<(u64, u64), usize> = new_pairs
+        .iter()
+        .enumerate()
+        .map(|(p, &(a, b))| ((new_jobs[a].id, new_jobs[b].id), p))
+        .collect();
+    let (old_job_row, old_m) = coupling_rows(old_ids.len(), old_pairs);
+    let (new_job_row, _) = coupling_rows(new_jobs.len(), new_pairs);
+    let n_new = new_jobs.len();
+    let mut var_map: Vec<Option<usize>> = Vec::with_capacity(old_ids.len() + old_pairs.len());
+    for id in old_ids {
+        var_map.push(new_index.get(id).copied());
+    }
+    for &(a, b) in old_pairs {
+        let key = (old_ids[a], old_ids[b]);
+        var_map.push(new_pair_index.get(&key).copied().map(|p| n_new + p));
+    }
+    let mut row_map: Vec<Option<usize>> = vec![None; old_m];
+    row_map[0] = Some(0);
+    for (i, id) in old_ids.iter().enumerate() {
+        if old_job_row[i] != usize::MAX {
+            row_map[old_job_row[i]] = new_index.get(id).and_then(|&ni| {
+                let r = new_job_row[ni];
+                (r != usize::MAX).then_some(r)
+            });
         }
-        b.end_col();
     }
-    for &(a, b2) in pairs {
-        b.push(0, jobs[a].num_gpus as f64);
-        b.push(job_row[a], 1.0);
-        b.push(job_row[b2], 1.0);
-        b.end_col();
-    }
-    let mut rhs = vec![1.0; m];
-    rhs[0] = total_gpus as f64;
-    SparseLp {
-        objective: vec![0.0; nv],
-        constraints: b.finish(),
-        rhs,
-        upper: vec![1.0; nv],
-    }
+    (var_map, row_map)
 }
 
 /// Write this round's LP objective — per-job weights then per-pair packed
@@ -163,15 +237,22 @@ pub fn allocation_objective_into(
 /// The built LP for one job window, kept across rounds. While the window
 /// (job ids + GPU demands), cluster size and pairing config are unchanged,
 /// rounds only re-patch the objective and warm-start from the previous
-/// basis; any structural change rebuilds and cold-solves.
+/// basis. A window *change* under the same config rebuilds the instance in
+/// place and carries the basis across via remap + dual-simplex repair
+/// ([`repair_warm_start`]); only a config change cold-rebuilds.
 struct LpCache {
     total_gpus: usize,
     packing: bool,
     pair_window: usize,
+    /// Monotone instance generation, bumped on every structural change.
+    /// A warm handle is usable only while `warm_generation` matches, so
+    /// bases from departed windows are evicted instead of lingering.
+    generation: u64,
     structure: Vec<(u64, u32)>,
     pairs: Vec<(usize, usize)>,
     lp: SparseLp,
     warm: Option<WarmStart>,
+    warm_generation: u64,
 }
 
 /// The Gavel LP scheduler.
@@ -195,6 +276,7 @@ pub struct GavelScheduler {
     lp_cache: Option<LpCache>,
     lp_rebuilds: usize,
     lp_patches: usize,
+    lp_repairs: usize,
     /// Round scratch carried between pipeline stages: the LP's per-job
     /// scores (Schedule) and chosen pair allocations (consumed by Pack).
     round_scores: Vec<f64>,
@@ -219,6 +301,7 @@ impl GavelScheduler {
             lp_cache: None,
             lp_rebuilds: 0,
             lp_patches: 0,
+            lp_repairs: 0,
             round_scores: Vec::new(),
             round_pairs: Vec::new(),
         }
@@ -228,6 +311,13 @@ impl GavelScheduler {
     /// reused the cached instance with only the objective re-patched.
     pub fn lp_stats(&self) -> (usize, usize) {
         (self.lp_rebuilds, self.lp_patches)
+    }
+
+    /// How many rounds serviced a window *change* by rebuilding the cached
+    /// instance in place and repairing the previous basis (dual simplex)
+    /// instead of discarding it and cold-solving.
+    pub fn lp_repairs(&self) -> usize {
+        self.lp_repairs
     }
 
     /// Estimate-stage half of the LP round: build (or reuse) the cached
@@ -241,25 +331,32 @@ impl GavelScheduler {
         }
         let total_gpus = input.spec.total_gpus();
         let structure: Vec<(u64, u32)> = jobs.iter().map(|j| (j.id, j.num_gpus)).collect();
-        let reusable = self.lp_cache.as_ref().is_some_and(|c| {
+        let config_ok = self.lp_cache.as_ref().is_some_and(|c| {
             c.total_gpus == total_gpus
                 && c.packing == self.packing
                 && c.pair_window == self.pair_window
-                && c.structure == structure
         });
-        if reusable {
+        let same_window =
+            config_ok && self.lp_cache.as_ref().is_some_and(|c| c.structure == structure);
+        if same_window {
             self.lp_patches += 1;
+        } else if config_ok {
+            self.repair_cache(jobs, structure);
+            self.lp_repairs += 1;
         } else {
             let pairs = candidate_pairs(jobs, self.packing, self.pair_window);
             let lp = build_allocation_lp(jobs, &pairs, total_gpus);
+            let generation = self.lp_cache.as_ref().map_or(0, |c| c.generation) + 1;
             self.lp_cache = Some(LpCache {
                 total_gpus,
                 packing: self.packing,
                 pair_window: self.pair_window,
+                generation,
                 structure,
                 pairs,
                 lp,
                 warm: None,
+                warm_generation: generation,
             });
             self.lp_rebuilds += 1;
         }
@@ -275,17 +372,53 @@ impl GavelScheduler {
         );
     }
 
-    /// Schedule-stage half: solve the prepared LP (warm-started where the
-    /// window was unchanged); returns per-job scores and chosen pair
-    /// allocations.
+    /// Structural change under an unchanged config: rebuild the cached
+    /// instance *in place* (reusing the CSC / objective / rhs buffers) and
+    /// carry the previous round's basis across via id-based remap plus
+    /// dual-simplex repair, instead of discarding it and cold-solving. A
+    /// failed repair leaves `warm` empty — the stale basis is evicted
+    /// either way, never fed to the solver.
+    fn repair_cache(&mut self, jobs: &[JobInfo], structure: Vec<(u64, u32)>) {
+        let cache = self
+            .lp_cache
+            .as_mut()
+            .expect("repair_cache requires a config-matched cache");
+        let new_pairs = candidate_pairs(jobs, self.packing, self.pair_window);
+        let old_ids: Vec<u64> = cache.structure.iter().map(|&(id, _)| id).collect();
+        let (var_map, row_map) = allocation_lp_maps(&old_ids, &cache.pairs, jobs, &new_pairs);
+        build_allocation_lp_into(jobs, &new_pairs, cache.total_gpus, &mut cache.lp);
+        let repaired = cache
+            .warm
+            .take()
+            .filter(|_| cache.warm_generation == cache.generation)
+            .and_then(|w| {
+                let carried =
+                    w.remapped(&var_map, &row_map, cache.lp.num_vars(), cache.lp.num_rows());
+                repair_warm_start(&cache.lp, &carried)
+            });
+        cache.generation += 1;
+        cache.warm_generation = cache.generation;
+        cache.warm = repaired;
+        cache.structure = structure;
+        cache.pairs = new_pairs;
+    }
+
+    /// Schedule-stage half: solve the prepared LP (warm-started from the
+    /// previous basis — repaired first if the window changed); returns
+    /// per-job scores and chosen pair allocations.
     fn solve_prepared(&mut self, n: usize) -> (Vec<f64>, Vec<(usize, usize, f64)>) {
         let cache = self
             .lp_cache
             .as_mut()
             .expect("estimate stage prepared the LP");
-        match solve_sparse_lp(&cache.lp, cache.warm.as_ref()) {
+        let warm = cache
+            .warm
+            .as_ref()
+            .filter(|_| cache.warm_generation == cache.generation);
+        match solve_sparse_lp(&cache.lp, warm) {
             Ok((sol, warm)) => {
                 cache.warm = Some(warm);
+                cache.warm_generation = cache.generation;
                 let scores = sol.x[..n].to_vec();
                 let chosen: Vec<(usize, usize, f64)> = cache
                     .pairs
@@ -588,7 +721,8 @@ mod tests {
         });
         assert_eq!(s.lp_stats(), (1, 1));
         d2.plan.validate().unwrap();
-        // A changed window (departure) must rebuild.
+        // A changed window (departure) under the same config is repaired
+        // in place — not rebuilt, not counted as a patch.
         let shrunk: Vec<JobInfo> = drifted[1..].to_vec();
         let d3 = s.decide(&RoundInput {
             now: 720.0,
@@ -597,8 +731,109 @@ mod tests {
             prev_plan: &d2.plan,
             spec: &spec,
         });
-        assert_eq!(s.lp_stats(), (2, 1));
+        assert_eq!(s.lp_stats(), (1, 1));
+        assert_eq!(s.lp_repairs(), 1);
         d3.plan.validate().unwrap();
+        // A config change (different cluster size) still cold-rebuilds.
+        let spec2 = ClusterSpec::new(3, 4, GpuType::A100);
+        let prev2 = PlacementPlan::new(12);
+        let d4 = s.decide(&RoundInput {
+            now: 1080.0,
+            round: 3,
+            active: &shrunk,
+            prev_plan: &prev2,
+            spec: &spec2,
+        });
+        assert_eq!(s.lp_stats(), (2, 1));
+        assert_eq!(s.lp_repairs(), 1);
+        d4.plan.validate().unwrap();
+    }
+
+    #[test]
+    fn lp_cache_evicts_stale_window_on_departure() {
+        // Satellite: a departure must not leave the cache describing the
+        // departed window — the entry is retagged to the new generation and
+        // any warm handle is either repaired onto the new instance or
+        // dropped, never left stale.
+        let spec = ClusterSpec::new(2, 4, GpuType::A100);
+        let active: Vec<JobInfo> = (0..10)
+            .map(|i| info(i, ModelKind::ResNet50, 1, i as f64 * 40.0))
+            .collect();
+        let prev = PlacementPlan::new(8);
+        let mut s = gavel(GavelObjective::Las, true);
+        let d1 = s.decide(&RoundInput {
+            now: 0.0,
+            round: 0,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+        });
+        let gen0 = s.lp_cache.as_ref().unwrap().generation;
+        let shrunk: Vec<JobInfo> = active.iter().filter(|j| j.id != 3).cloned().collect();
+        let _d2 = s.decide(&RoundInput {
+            now: 360.0,
+            round: 1,
+            active: &shrunk,
+            prev_plan: &d1.plan,
+            spec: &spec,
+        });
+        assert_eq!(s.lp_repairs(), 1);
+        let cache = s.lp_cache.as_ref().unwrap();
+        assert!(cache.generation > gen0, "departure must bump the generation");
+        assert!(
+            !cache.structure.iter().any(|&(id, _)| id == 3),
+            "stale window lingered after departure"
+        );
+        assert_eq!(
+            cache.warm_generation, cache.generation,
+            "warm handle must be stamped with the live generation"
+        );
+        assert_eq!(cache.pairs, candidate_pairs(&shrunk, true, 6));
+        assert_eq!(cache.lp.num_vars(), shrunk.len() + cache.pairs.len());
+    }
+
+    #[test]
+    fn repaired_window_solve_matches_cold() {
+        // LP-level churn parity: depart a subset of jobs and arrive a new
+        // one, carry the basis across with allocation_lp_maps + remap +
+        // repair, and check the warm-finished solve matches a cold solve.
+        let source: Arc<dyn ThroughputSource> =
+            Arc::new(OracleEstimator::new(Profiler::new(GpuType::A100, 42)));
+        let jobs = crate::experiments::scalability::synthetic_active_jobs(40, 23);
+        let pairs = candidate_pairs(&jobs, true, 6);
+        let mut lp = build_allocation_lp(&jobs, &pairs, 64);
+        allocation_objective_into(
+            GavelObjective::Las,
+            &jobs,
+            &pairs,
+            source.as_ref(),
+            &mut lp.objective,
+        );
+        let (_, warm) = solve_sparse_lp(&lp, None).unwrap();
+        let mut next: Vec<JobInfo> = jobs.iter().filter(|j| j.id % 7 != 3).cloned().collect();
+        next.push(info(900, ModelKind::ResNet50, 2, 0.0));
+        let new_pairs = candidate_pairs(&next, true, 6);
+        let old_ids: Vec<u64> = jobs.iter().map(|j| j.id).collect();
+        let (var_map, row_map) = allocation_lp_maps(&old_ids, &pairs, &next, &new_pairs);
+        let mut lp2 = build_allocation_lp(&next, &new_pairs, 64);
+        allocation_objective_into(
+            GavelObjective::Las,
+            &next,
+            &new_pairs,
+            source.as_ref(),
+            &mut lp2.objective,
+        );
+        let carried = warm.remapped(&var_map, &row_map, lp2.num_vars(), lp2.num_rows());
+        let repaired = repair_warm_start(&lp2, &carried);
+        assert!(repaired.is_some(), "gavel-shaped churn should repair");
+        let (hot, _) = solve_sparse_lp(&lp2, repaired.as_ref()).unwrap();
+        let (cold, _) = solve_sparse_lp(&lp2, None).unwrap();
+        assert!(
+            (hot.objective - cold.objective).abs() <= 1e-6 * (1.0 + cold.objective.abs()),
+            "repaired {} vs cold {}",
+            hot.objective,
+            cold.objective
+        );
     }
 
     #[test]

@@ -1,0 +1,143 @@
+//! Counting global allocator for the allocation-free-round audit.
+//!
+//! Built with `--features alloc_audit`, every heap allocation in the
+//! process is counted — globally (whole-round reporting) and per thread
+//! (so a worker can measure exactly the allocations its own solve kernel
+//! made, unpolluted by concurrent threads). Without the feature the
+//! system allocator is untouched and every reader returns zero, so audit
+//! plumbing can stay compiled into the hot path at no cost.
+//!
+//! The audit exists to *prove* the bench claim in ISSUE 6: steady-state
+//! matching solves allocate nothing. `bench_round_pipeline` asserts
+//! `kernel_allocs == 0` whenever [`audit_enabled`] is true.
+
+#![allow(dead_code)]
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide allocation call count (all threads).
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+/// Process-wide allocated byte count (all threads; frees not subtracted).
+static ALLOC_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    // `const` init: reading/writing the Cell never allocates, which keeps
+    // the accounting safe to run inside `GlobalAlloc::alloc` itself.
+    static THREAD_ALLOC_CALLS: Cell<usize> = const { Cell::new(0) };
+}
+
+#[inline]
+fn record(bytes: usize) {
+    ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+    ALLOC_BYTES.fetch_add(bytes, Ordering::Relaxed);
+    // `try_with`: the TLS slot may already be torn down during thread
+    // exit; missing those late frees' allocations is fine.
+    let _ = THREAD_ALLOC_CALLS.try_with(|c| c.set(c.get() + 1));
+}
+
+/// Whether the counting allocator is installed in this build.
+pub fn audit_enabled() -> bool {
+    cfg!(feature = "alloc_audit")
+}
+
+/// Total allocation calls across all threads since process start
+/// (0 when the audit feature is off).
+pub fn allocs() -> usize {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested across all threads since process start
+/// (0 when the audit feature is off).
+pub fn bytes() -> usize {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
+/// Allocation calls made by the *current thread* (0 when the audit
+/// feature is off). Take a delta around a kernel call to count exactly
+/// its allocations, immune to concurrent threads.
+pub fn thread_allocs() -> usize {
+    THREAD_ALLOC_CALLS.try_with(Cell::get).unwrap_or(0)
+}
+
+#[cfg(feature = "alloc_audit")]
+mod install {
+    use std::alloc::{GlobalAlloc, Layout, System};
+
+    /// [`System`] wrapper that bumps the counters on every allocation.
+    struct CountingAllocator;
+
+    unsafe impl GlobalAlloc for CountingAllocator {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            super::record(layout.size());
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            super::record(layout.size());
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            super::record(new_size);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static GLOBAL: CountingAllocator = CountingAllocator;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn readers_are_consistent_with_feature_flag() {
+        if !audit_enabled() {
+            assert_eq!(allocs(), 0);
+            assert_eq!(bytes(), 0);
+            assert_eq!(thread_allocs(), 0);
+        }
+    }
+
+    #[test]
+    #[cfg_attr(not(feature = "alloc_audit"), ignore = "needs --features alloc_audit")]
+    fn counters_advance_on_allocation() {
+        let before_global = allocs();
+        let before_thread = thread_allocs();
+        let v: Vec<u64> = Vec::with_capacity(1 << 10);
+        std::hint::black_box(&v);
+        assert!(allocs() > before_global, "global counter did not advance");
+        assert!(
+            thread_allocs() > before_thread,
+            "thread counter did not advance"
+        );
+        assert!(bytes() >= (1 << 10) * std::mem::size_of::<u64>());
+    }
+
+    #[test]
+    #[cfg_attr(not(feature = "alloc_audit"), ignore = "needs --features alloc_audit")]
+    fn thread_counter_is_per_thread() {
+        let before = thread_allocs();
+        std::thread::spawn(|| {
+            let v: Vec<u8> = Vec::with_capacity(4096);
+            std::hint::black_box(&v);
+        })
+        .join()
+        .unwrap();
+        // The spawned thread's Vec must not land on this thread's counter.
+        // (Thread spawn itself allocates on *this* thread before handoff,
+        // so only assert the other thread's kernel allocation is not
+        // double-counted: measure a no-alloc window.)
+        let mid = thread_allocs();
+        let x = std::hint::black_box(41u64) + 1;
+        assert_eq!(x, 42);
+        assert_eq!(thread_allocs(), mid);
+        assert!(mid >= before);
+    }
+}

@@ -45,6 +45,16 @@ pub fn fmt_duration(secs: f64) -> String {
     }
 }
 
+/// Whether the bench binary was invoked in smoke mode (`--smoke` on the
+/// command line, or `TESSERAE_BENCH_SMOKE=1`): CI builds every bench and
+/// runs each one briefly at tiny sizes to prove the harness end-to-end.
+/// Smoke runs skip size-gated acceptance asserts and never overwrite the
+/// committed BENCH_*.json artifacts.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("TESSERAE_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Benchmark runner with a wall-clock budget per case.
 pub struct Bench {
     /// Target measurement time per case.

@@ -2,6 +2,7 @@
 //! property-testing helpers. These exist because the offline crate set
 //! contains none of `rand`, `serde`, `clap`, `criterion`, `proptest`.
 
+pub mod alloc;
 pub mod benchutil;
 pub mod checkpoint;
 pub mod cli;

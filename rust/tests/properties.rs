@@ -638,6 +638,104 @@ fn revised_simplex_matches_dense_on_gavel_instances() {
     );
 }
 
+#[test]
+fn repaired_warm_starts_match_cold_and_dense_under_churn() {
+    // ISSUE 6 tentpole contract at integration level: across randomized
+    // Gavel windows, every arrival/departure step's remap + dual-simplex
+    // repair + warm finish must land on the same optimum as a cold sparse
+    // solve of the new window AND the dense tableau oracle, within 1e-6.
+    // 30 cases × 4 churn steps = 120 churned rounds.
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+    use tesserae::experiments::scalability::synthetic_active_jobs;
+    use tesserae::linalg::{repair_warm_start, solve_lp, solve_sparse_lp};
+    use tesserae::profiler::Profiler;
+    use tesserae::schedulers::gavel::{
+        allocation_lp_maps, allocation_objective_into, build_allocation_lp, candidate_pairs,
+    };
+    use tesserae::schedulers::GavelObjective;
+
+    let source: Arc<dyn ThroughputSource> = Arc::new(CachedSource::new(OracleEstimator::new(
+        Profiler::new(GpuType::A100, 19),
+    )));
+    forall(
+        "repair == cold sparse == dense oracle under churn",
+        139,
+        30,
+        |rng| {
+            let n = 6 + rng.below(24) as usize;
+            let total_gpus = 8 + rng.below(56) as usize;
+            let window = 1 + rng.below(6) as usize;
+            (synthetic_active_jobs(n, rng.next_u64()), total_gpus, window, rng.next_u64())
+        },
+        |(jobs0, total_gpus, window, seed)| {
+            let mut jobs = jobs0.clone();
+            let mut rng = Pcg64::new(*seed);
+            let mut pairs = candidate_pairs(&jobs, true, *window);
+            let mut lp = build_allocation_lp(&jobs, &pairs, *total_gpus);
+            allocation_objective_into(
+                GavelObjective::Las,
+                &jobs,
+                &pairs,
+                source.as_ref(),
+                &mut lp.objective,
+            );
+            let (_, mut warm) = solve_sparse_lp(&lp, None).map_err(|e| e.to_string())?;
+            let mut next_id = jobs.iter().map(|j| j.id).max().unwrap_or(0) + 1;
+            for step in 0..4usize {
+                let old_ids: Vec<u64> = jobs.iter().map(|j| j.id).collect();
+                let old_pairs = pairs.clone();
+                if step % 2 == 0 && jobs.len() > 3 {
+                    let k = rng.below(jobs.len() as u64) as usize;
+                    jobs.remove(k);
+                } else {
+                    let mut j = jobs[rng.below(jobs.len() as u64) as usize].clone();
+                    j.id = next_id;
+                    next_id += 1;
+                    j.attained_service = 0.0;
+                    jobs.push(j);
+                }
+                pairs = candidate_pairs(&jobs, true, *window);
+                lp = build_allocation_lp(&jobs, &pairs, *total_gpus);
+                allocation_objective_into(
+                    GavelObjective::Las,
+                    &jobs,
+                    &pairs,
+                    source.as_ref(),
+                    &mut lp.objective,
+                );
+                let (var_map, row_map) =
+                    allocation_lp_maps(&old_ids, &old_pairs, &jobs, &pairs);
+                let carried =
+                    warm.remapped(&var_map, &row_map, lp.num_vars(), lp.num_rows());
+                let repaired = repair_warm_start(&lp, &carried);
+                let (hot, next_warm) =
+                    solve_sparse_lp(&lp, repaired.as_ref()).map_err(|e| e.to_string())?;
+                let (cold, _) = solve_sparse_lp(&lp, None).map_err(|e| e.to_string())?;
+                let dense = solve_lp(&lp.to_dense_lp()).map_err(|e| e.to_string())?;
+                if (hot.objective - cold.objective).abs()
+                    > 1e-6 * (1.0 + cold.objective.abs())
+                {
+                    return Err(format!(
+                        "step {step}: repaired {} vs cold sparse {}",
+                        hot.objective, cold.objective
+                    ));
+                }
+                if (hot.objective - dense.objective).abs()
+                    > 1e-6 * (1.0 + dense.objective.abs())
+                {
+                    return Err(format!(
+                        "step {step}: repaired {} vs dense oracle {}",
+                        hot.objective, dense.objective
+                    ));
+                }
+                warm = next_warm;
+            }
+            Ok(())
+        },
+    );
+}
+
 // ======================================================= round pipeline
 
 /// The staged round pipeline's parity contract (ISSUE 4): for every
