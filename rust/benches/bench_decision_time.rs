@@ -14,7 +14,7 @@
 use std::time::Duration;
 
 use tesserae::experiments::scalability::{self, FIG2_PAPER_JOB_COUNTS};
-use tesserae::util::benchutil::smoke_mode;
+use tesserae::util::benchutil::{bench_meta, smoke_mode};
 use tesserae::util::checkpoint::Checkpoint;
 
 fn main() {
@@ -42,6 +42,12 @@ fn main() {
             fig2_ckpt.path().display()
         );
     }
+    // Provenance cell: which build/machine produced (or resumed) the sweep.
+    // The cell key is never read as a measurement, so it can't collide
+    // with the fig2/fig14b cell validation.
+    if let Err(e) = fig2_ckpt.put("meta", bench_meta()) {
+        tesserae::obs_log!(warn, "fig2 checkpoint meta write failed: {e}");
+    }
     println!(
         "{}",
         scalability::fig2_decision_time_checkpointed(
@@ -51,6 +57,9 @@ fn main() {
         )
     );
     let mut fig14_ckpt = Checkpoint::load_or_new("BENCH_fig14b_checkpoint.json");
+    if let Err(e) = fig14_ckpt.put("meta", bench_meta()) {
+        tesserae::obs_log!(warn, "fig14b checkpoint meta write failed: {e}");
+    }
     println!(
         "{}",
         scalability::fig14b_breakdown_checkpointed(

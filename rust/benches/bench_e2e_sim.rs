@@ -141,6 +141,7 @@ fn perf_trajectory() -> (String, Json) {
 
     let json = Json::obj(vec![
         ("bench", Json::str("e2e_sim")),
+        ("meta", tesserae::util::benchutil::bench_meta()),
         ("dense", Json::arr(dense_entries)),
         ("sparse_gap_skip", Json::arr(sparse_entries)),
     ]);

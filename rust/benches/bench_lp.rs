@@ -279,6 +279,7 @@ fn main() {
 
     let json = Json::obj(vec![
         ("bench", Json::str("lp")),
+        ("meta", tesserae::util::benchutil::bench_meta()),
         ("total_gpus", Json::num(TOTAL_GPUS as f64)),
         ("cases", Json::arr(cases)),
     ]);

@@ -167,6 +167,7 @@ fn main() {
 
     let json = Json::obj(vec![
         ("bench", Json::str("matching_service")),
+        ("meta", tesserae::util::benchutil::bench_meta()),
         ("entries", Json::arr(entries)),
     ]);
     match std::fs::write("BENCH_matching_service.json", json.to_string_pretty()) {

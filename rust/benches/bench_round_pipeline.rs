@@ -29,8 +29,9 @@ use tesserae::experiments::{build_scheduler, SchedKind};
 use tesserae::matching::HungarianEngine;
 use tesserae::profiler::Profiler;
 use tesserae::schedulers::RoundInput;
+use tesserae::obs;
 use tesserae::util::alloc;
-use tesserae::util::benchutil::smoke_mode;
+use tesserae::util::benchutil::{bench_meta, smoke_mode};
 use tesserae::util::json::Json;
 use tesserae::util::pool::WorkerPool;
 
@@ -156,10 +157,96 @@ fn main() {
             ),
         ]));
     }
+    // Telemetry arm (ISSUE 7): the same config measured three ways —
+    // plain (telemetry off), off again (the "disabled overhead" pair:
+    // both arms run identical code with the gate cold, so their min-of-N
+    // ratio bounds what the disabled gate can possibly cost), and on
+    // (spans + metrics recording). Plans must be bit-identical across all
+    // three; that is the determinism contract.
+    let (t_nodes, t_kind, t_name) = if smoke {
+        (4usize, SchedKind::TesseraeT, "tesserae-t")
+    } else {
+        (64usize, SchedKind::TesseraeT, "tesserae-t")
+    };
+    let t_spec = ClusterSpec::new(t_nodes, 8, GpuType::A100);
+    let t_jobs = t_spec.total_gpus() * 2;
+    let t_seed = 42 + t_nodes as u64;
+    let reps = if smoke { 1 } else { 3 };
+    println!("== Telemetry arm: {t_name}@{t_nodes}x8, {reps} rep(s) per mode ==");
+
+    let measure = |reps: usize| {
+        let mut best = f64::INFINITY;
+        let mut plans = Vec::new();
+        for _ in 0..reps {
+            let (s, p, _) = run_rounds(t_kind, t_jobs, &t_spec, t_seed);
+            best = best.min(s);
+            plans = p;
+        }
+        (best, plans)
+    };
+    let (plain_s, plain_plans) = measure(reps);
+    let (off_s, off_plans) = measure(reps);
+    assert_eq!(
+        plain_plans, off_plans,
+        "telemetry arm: identical disabled runs diverged"
+    );
+
+    obs::metrics::reset();
+    obs::recorder::clear();
+    let spans_before = obs::span::recorded_total();
+    obs::set_enabled(true);
+    let (on_s, on_plans) = measure(reps);
+    obs::set_enabled(false);
+    let spans_recorded = obs::span::recorded_total() - spans_before;
+    let snapshot = obs::metrics::snapshot();
+    let flight_rounds = obs::recorder::rounds_recorded();
+
+    if on_plans != plain_plans {
+        obs::recorder::dump_on_failure("bench_round_pipeline telemetry parity");
+        panic!("telemetry arm: plans with telemetry ON diverged from telemetry OFF");
+    }
+    for metric in [
+        "round.total_s",
+        "round.estimate_s",
+        "round.schedule_s",
+        "round.pack_s",
+        "round.migrate_s",
+        "round.commit_s",
+    ] {
+        assert!(
+            snapshot.histograms.contains_key(metric),
+            "telemetry arm: metric '{metric}' missing from snapshot"
+        );
+    }
+    assert!(spans_recorded > 0, "telemetry arm recorded no spans");
+    assert!(flight_rounds > 0, "flight recorder held no rounds");
+    let disabled_overhead = off_s / plain_s.max(1e-12);
+    let enabled_overhead = on_s / plain_s.max(1e-12);
+    println!(
+        "   telemetry: {spans_recorded} spans, {} metric series, {flight_rounds} rounds \
+         in flight recorder",
+        snapshot.series_count()
+    );
+    println!(
+        "   disabled overhead {disabled_overhead:.3}x ({:.3}ms vs {:.3}ms), \
+         enabled {enabled_overhead:.3}x ({:.3}ms)",
+        off_s * 1e3,
+        plain_s * 1e3,
+        on_s * 1e3
+    );
+
     if smoke {
         println!("smoke mode: tiny config, acceptance assert and JSON output skipped");
         return;
     }
+    assert!(
+        disabled_overhead <= 1.02,
+        "acceptance: disabled-telemetry overhead {disabled_overhead:.3}x > 1.02x"
+    );
+    assert!(
+        enabled_overhead <= 2.0,
+        "enabled-telemetry overhead {enabled_overhead:.3}x is wildly out of budget"
+    );
     assert!(
         best64 >= 1.5,
         "acceptance: best 64-node sharded speedup {best64:.2}x < 1.5x"
@@ -167,7 +254,25 @@ fn main() {
 
     let json = Json::obj(vec![
         ("bench", Json::str("round_pipeline")),
+        ("meta", bench_meta()),
         ("entries", Json::arr(entries)),
+        (
+            "telemetry",
+            Json::obj(vec![
+                ("scheduler", Json::str(t_name)),
+                ("nodes", Json::num(t_nodes as f64)),
+                ("jobs", Json::num(t_jobs as f64)),
+                ("reps", Json::num(reps as f64)),
+                ("plain_s", Json::num(plain_s)),
+                ("disabled_s", Json::num(off_s)),
+                ("enabled_s", Json::num(on_s)),
+                ("disabled_overhead", Json::num(disabled_overhead)),
+                ("enabled_overhead", Json::num(enabled_overhead)),
+                ("spans_recorded", Json::num(spans_recorded as f64)),
+                ("metric_series", Json::num(snapshot.series_count() as f64)),
+                ("flight_rounds", Json::num(flight_rounds as f64)),
+            ]),
+        ),
     ]);
     match std::fs::write("BENCH_round_pipeline.json", json.to_string_pretty()) {
         Ok(()) => println!("wrote BENCH_round_pipeline.json"),

@@ -184,7 +184,7 @@ pub fn fig2_decision_time_checkpointed(
                                 ("wall_s", Json::num(wall)),
                             ]),
                         ) {
-                            eprintln!("checkpoint write failed for {key}: {e}");
+                            crate::obs_log!(warn, "checkpoint write failed for {key}: {e}");
                         }
                     }
                     (d.total_s, wall)
@@ -277,6 +277,10 @@ pub fn fig14b_breakdown_checkpointed(
         let cell = match stored {
             Some(cell) => cell,
             None => {
+                // When telemetry is on (e.g. under --trace-out), the cell
+                // also stores the metric delta this measurement produced —
+                // extra keys don't invalidate stored-cell validation.
+                let metrics_base = crate::obs::enabled().then(crate::obs::metrics::snapshot);
                 let d = measure_decision(SchedKind::TesseraeT, n, &spec, 13);
                 let m = d.matching;
                 let mut fields = vec![
@@ -297,10 +301,16 @@ pub fn fig14b_breakdown_checkpointed(
                     ("solved", Json::num(m.solved as f64)),
                     ("solve_wall_s", Json::num(m.solve_wall_s)),
                 ]);
+                if let Some(base) = metrics_base {
+                    fields.push((
+                        "metrics",
+                        crate::obs::metrics::snapshot().delta_since(&base).to_json(),
+                    ));
+                }
                 let cell = Json::obj(fields);
                 if let Some(c) = ckpt.as_mut() {
                     if let Err(e) = c.put(&key, cell.clone()) {
-                        eprintln!("checkpoint write failed for {key}: {e}");
+                        crate::obs_log!(warn, "checkpoint write failed for {key}: {e}");
                     }
                 }
                 cell

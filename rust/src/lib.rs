@@ -27,6 +27,7 @@ pub mod experiments;
 pub mod jobs;
 pub mod linalg;
 pub mod matching;
+pub mod obs;
 pub mod policies;
 pub mod profiler;
 /// The PJRT-backed runtime needs the `xla` crate, which only exists in the

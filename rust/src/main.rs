@@ -37,6 +37,11 @@ global options:
   --threads N  thread budget for the shared worker pool (matching batches,
                POP partitions, sharded per-job work, scenario sweeps);
                default: TESSERAE_THREADS env var, else all cores
+  --trace-out PATH
+               enable telemetry and write a Chrome trace-event JSON file
+               (open in Perfetto or chrome://tracing) covering every round:
+               estimate/schedule/pack/migrate/commit stages, LP solves,
+               matching batches, worker-pool leases and chunks
 ";
 
 fn parse_scale(args: &Args) -> Scale {
@@ -68,6 +73,13 @@ fn main() -> ExitCode {
     if threads > 0 {
         tesserae::util::pool::WorkerPool::global().install_budget(threads);
     }
+    // --trace-out: turn telemetry on for the whole run and retain every
+    // drained span for Chrome trace export at exit.
+    let trace_out = args.get("trace-out").map(str::to_string);
+    if trace_out.is_some() {
+        tesserae::obs::set_enabled(true);
+        tesserae::obs::span::set_retain(true);
+    }
     let Some(cmd) = args.subcommand() else {
         eprint!("{USAGE}");
         return ExitCode::FAILURE;
@@ -83,6 +95,16 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    if let Some(path) = &trace_out {
+        // Sweep up spans still buffered on this thread or in the sink,
+        // then export everything retained over the run.
+        tesserae::obs::span::drain_events();
+        let events = tesserae::obs::span::take_trace();
+        match tesserae::obs::span::write_chrome_trace(path, &events) {
+            Ok(()) => eprintln!("wrote {} trace events to {path}", events.len()),
+            Err(e) => eprintln!("error: trace export to {path} failed: {e}"),
+        }
+    }
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {

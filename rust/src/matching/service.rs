@@ -257,6 +257,7 @@ impl MatchingService {
     ) -> NodePairRound {
         let n = prev_sigs.len();
         let m = next_sigs.len();
+        crate::obs_span!("matching.node_pair_round", { prev_nodes: n, next_nodes: m });
         // Algorithm 3 matches equally-sized GPU lists; a silent mismatch
         // would mis-size every cost matrix.
         let width = prev_sigs.first().map(|s| s.len()).unwrap_or(0);
@@ -469,6 +470,7 @@ impl MatchingService {
         if matrices.is_empty() {
             return Vec::new();
         }
+        crate::obs_span!("matching.batch", { instances: matrices.len() });
         let t0 = Instant::now();
         let solved: Vec<AssignmentResult> = if engine.has_native_batch() {
             engine.solve_batch(matrices)
@@ -545,6 +547,7 @@ impl MatchingService {
         // Each slot's first consuming position owns the retained prices
         // (per engine identity — prices from one solver configuration
         // mean nothing to another).
+        crate::obs_span!("matching.batch_warm", { instances: batch.len() });
         let engine_name = engine.name();
         let engine_cfg = engine.config_fingerprint();
         let mut first_pos: Vec<Option<(usize, usize)>> = vec![None; batch.len()];

@@ -1,0 +1,103 @@
+//! Leveled stderr logging behind `obs::log!`, honoring `TESSERAE_LOG`.
+//!
+//! Replaces the ad-hoc `eprintln!` progress prints: by default only
+//! `error` and `warn` reach stderr (so `cargo test` output stays quiet),
+//! `TESSERAE_LOG=info` or `=debug` turns on progress chatter, and
+//! `TESSERAE_LOG=off` silences everything. Independent of the telemetry
+//! enable flag — a checkpoint-write failure warns even when no one is
+//! tracing.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Env knob: `off`/`error`/`warn`/`info`/`debug` (or `0`..`4`).
+pub const LOG_ENV: &str = "TESSERAE_LOG";
+
+/// Log severity, most severe first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Number of enabled levels: 0 = off, 1 = error only, ... 4 = everything.
+fn parse_threshold(raw: Option<&str>) -> u8 {
+    match raw.map(|s| s.trim().to_ascii_lowercase()).as_deref() {
+        Some("off") | Some("none") | Some("0") => 0,
+        Some("error") | Some("1") => 1,
+        Some("warn") | Some("warning") | Some("2") => 2,
+        Some("info") | Some("3") => 3,
+        Some("debug") | Some("trace") | Some("4") => 4,
+        // Unset or unrecognized: errors + warnings.
+        _ => 2,
+    }
+}
+
+fn threshold() -> u8 {
+    static THRESHOLD: OnceLock<u8> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| parse_threshold(std::env::var(LOG_ENV).ok().as_deref()))
+}
+
+/// Whether `level` currently prints (cheap after first call: one static
+/// read, no env access).
+pub fn level_enabled(level: Level) -> bool {
+    (level as u8) < threshold()
+}
+
+/// Backend of `obs::log!`: format and print to stderr if enabled.
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !level_enabled(level) {
+        return;
+    }
+    eprintln!("[{}] {target}: {args}", level.tag());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_parsing() {
+        assert_eq!(parse_threshold(None), 2);
+        assert_eq!(parse_threshold(Some("garbage")), 2);
+        assert_eq!(parse_threshold(Some("off")), 0);
+        assert_eq!(parse_threshold(Some("ERROR")), 1);
+        assert_eq!(parse_threshold(Some("warn")), 2);
+        assert_eq!(parse_threshold(Some("info")), 3);
+        assert_eq!(parse_threshold(Some("debug")), 4);
+        assert_eq!(parse_threshold(Some(" 3 ")), 3);
+    }
+
+    #[test]
+    fn severity_ordering_matches_thresholds() {
+        // At the default threshold (2), warn prints and info does not.
+        assert!((Level::Error as u8) < 2);
+        assert!((Level::Warn as u8) < 2);
+        assert!((Level::Info as u8) >= 2);
+        assert!((Level::Debug as u8) >= 2);
+        assert!(Level::Error < Level::Warn && Level::Warn < Level::Debug);
+    }
+
+    #[test]
+    fn log_macro_compiles_at_every_level() {
+        // Output may or may not print depending on the env; the test is
+        // that the macro paths type-check and run without panicking.
+        crate::obs_log!(error, "e {}", 1);
+        crate::obs_log!(warn, "w {}", 2);
+        crate::obs_log!(info, "i {}", 3);
+        crate::obs_log!(debug, "d {x}", x = 4);
+    }
+}

@@ -1,0 +1,254 @@
+//! Process-wide metrics registry: named counters, gauges and log-bucket
+//! histograms behind one [`MetricsSnapshot`].
+//!
+//! Write sites are coarse by design — the instrumented layers publish
+//! per-round aggregates (e.g. the whole `MatchingServiceStats` struct
+//! once per round), not per-item increments — so a `Mutex<BTreeMap>` per
+//! kind is plenty and keeps the code std-only. Every write is gated on
+//! [`crate::obs::enabled`]; when telemetry is off the registry is never
+//! touched and scheduling behavior cannot depend on it.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::obs;
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+
+struct Registry {
+    counters: Mutex<BTreeMap<&'static str, u64>>,
+    gauges: Mutex<BTreeMap<&'static str, f64>>,
+    histograms: Mutex<BTreeMap<&'static str, Histogram>>,
+}
+
+fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(|| Registry {
+        counters: Mutex::new(BTreeMap::new()),
+        gauges: Mutex::new(BTreeMap::new()),
+        histograms: Mutex::new(BTreeMap::new()),
+    })
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Add `delta` to the named monotonic counter. No-op when telemetry is
+/// disabled.
+pub fn counter_add(name: &'static str, delta: u64) {
+    if !obs::enabled() || delta == 0 {
+        return;
+    }
+    *lock(&registry().counters).entry(name).or_insert(0) += delta;
+}
+
+/// Set the named gauge to its latest value. No-op when disabled.
+pub fn gauge_set(name: &'static str, value: f64) {
+    if !obs::enabled() {
+        return;
+    }
+    lock(&registry().gauges).insert(name, value);
+}
+
+/// Record one observation into the named histogram. No-op when disabled.
+pub fn observe(name: &'static str, value: f64) {
+    if !obs::enabled() {
+        return;
+    }
+    lock(&registry().histograms)
+        .entry(name)
+        .or_insert_with(Histogram::new)
+        .record(value);
+}
+
+/// Copy the registry's current state. Works regardless of the enabled
+/// flag (reading never perturbs anything).
+pub fn snapshot() -> MetricsSnapshot {
+    let reg = registry();
+    MetricsSnapshot {
+        counters: lock(&reg.counters)
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect(),
+        gauges: lock(&reg.gauges)
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect(),
+        histograms: lock(&reg.histograms)
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.clone()))
+            .collect(),
+    }
+}
+
+/// Clear the registry (benches/tests isolating runs).
+pub fn reset() {
+    let reg = registry();
+    lock(&reg.counters).clear();
+    lock(&reg.gauges).clear();
+    lock(&reg.histograms).clear();
+}
+
+/// A point-in-time copy of the registry, serializable into simulator
+/// reports, checkpoint cells and `BENCH_*.json` artifacts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Total number of named series (the bench telemetry arm's "metric
+    /// count").
+    pub fn series_count(&self) -> usize {
+        self.counters.len() + self.gauges.len() + self.histograms.len()
+    }
+
+    /// What happened since `earlier`: counters subtract (saturating, so a
+    /// reset in between degrades to the later value), gauges keep their
+    /// latest value, histograms bucket-diff. Series absent from `earlier`
+    /// pass through whole.
+    pub fn delta_since(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, &v)| {
+                let base = earlier.counters.get(k).copied().unwrap_or(0);
+                (k.clone(), v.saturating_sub(base))
+            })
+            .collect();
+        let histograms = self
+            .histograms
+            .iter()
+            .map(|(k, v)| match earlier.histograms.get(k) {
+                Some(base) => (k.clone(), v.diff(base)),
+                None => (k.clone(), v.clone()),
+            })
+            .collect();
+        MetricsSnapshot {
+            counters,
+            gauges: self.gauges.clone(),
+            histograms,
+        }
+    }
+
+    /// Serialize as `{counters: {...}, gauges: {...}, histograms:
+    /// {name: {count, mean, p50, p95, p99, min, max, sum}}}`.
+    pub fn to_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::num(v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauges
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::num(v)))
+                .collect(),
+        );
+        let histograms = Json::Obj(
+            self.histograms
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::num(h.count() as f64)),
+                            ("mean", Json::num(h.mean())),
+                            ("p50", Json::num(h.percentile(50.0))),
+                            ("p95", Json::num(h.percentile(95.0))),
+                            ("p99", Json::num(h.percentile(99.0))),
+                            ("min", Json::num(h.min())),
+                            ("max", Json::num(h.max())),
+                            ("sum", Json::num(h.sum())),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_are_inert_when_disabled() {
+        let _guard = obs::enabled_guard(false);
+        let before = snapshot();
+        counter_add("test.metrics.disabled", 7);
+        gauge_set("test.metrics.disabled.g", 1.0);
+        observe("test.metrics.disabled.h", 0.5);
+        let after = snapshot();
+        assert!(!after.counters.contains_key("test.metrics.disabled"));
+        assert!(!after.gauges.contains_key("test.metrics.disabled.g"));
+        assert!(!after.histograms.contains_key("test.metrics.disabled.h"));
+        // Nothing else changed either (we hold the toggle lock, so no
+        // concurrent test can be enabled right now).
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn counters_gauges_histograms_round_trip() {
+        let _guard = obs::enabled_guard(true);
+        counter_add("test.metrics.c", 2);
+        counter_add("test.metrics.c", 3);
+        gauge_set("test.metrics.g", 1.5);
+        gauge_set("test.metrics.g", 2.5);
+        observe("test.metrics.h", 0.010);
+        observe("test.metrics.h", 0.020);
+        let snap = snapshot();
+        assert!(snap.counters["test.metrics.c"] >= 5);
+        assert_eq!(snap.gauges["test.metrics.g"], 2.5);
+        let h = &snap.histograms["test.metrics.h"];
+        assert!(h.count() >= 2);
+        assert!(h.max() >= 0.020);
+
+        let json = snap.to_json();
+        let text = json.to_string_compact();
+        let parsed = Json::parse(&text).unwrap();
+        assert!(parsed
+            .get("counters")
+            .and_then(|c| c.get("test.metrics.c"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+            >= 5.0);
+        assert!(parsed
+            .get("histograms")
+            .and_then(|h| h.get("test.metrics.h"))
+            .and_then(|h| h.get("p99"))
+            .is_some());
+    }
+
+    #[test]
+    fn delta_since_subtracts_counters_and_diffs_histograms() {
+        let _guard = obs::enabled_guard(true);
+        counter_add("test.metrics.delta", 10);
+        observe("test.metrics.delta.h", 1.0);
+        let base = snapshot();
+        counter_add("test.metrics.delta", 4);
+        observe("test.metrics.delta.h", 2.0);
+        observe("test.metrics.delta.h", 2.0);
+        let now = snapshot();
+        let d = now.delta_since(&base);
+        assert_eq!(d.counters["test.metrics.delta"], 4);
+        assert_eq!(d.histograms["test.metrics.delta.h"].count(), 2);
+        // A no-change delta is all zeros.
+        let z = now.delta_since(&now);
+        assert_eq!(z.counters["test.metrics.delta"], 0);
+        assert!(z.histograms["test.metrics.delta.h"].is_empty());
+    }
+}

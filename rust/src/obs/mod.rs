@@ -1,0 +1,209 @@
+//! Flight-recorder telemetry: span tracing, a unified metrics registry,
+//! and a bounded per-round flight recorder — std-only, zero external
+//! dependencies.
+//!
+//! Three pieces:
+//!
+//! - **Span tracing** ([`span`]): `obs::span!("lp.repair", {job_window: n})`
+//!   opens an RAII guard that records a begin/end pair with structured
+//!   key/value args into a per-thread buffer. Completed spans are drained
+//!   once per round and exportable as Chrome trace-event JSON
+//!   (`--trace-out round.trace.json`, loadable in Perfetto or
+//!   `chrome://tracing`), visualizing the full
+//!   Estimate→Schedule→Pack→Migrate→Commit timeline including worker-pool
+//!   lease/chunk activity.
+//! - **Metrics registry** ([`metrics`]): process-wide named counters,
+//!   gauges and log-bucket histograms ([`crate::util::stats::Histogram`])
+//!   absorbing the scattered per-struct counters behind one
+//!   [`MetricsSnapshot`] serialized into simulator reports, fig14b
+//!   checkpoint cells and `BENCH_*.json` artifacts.
+//! - **Flight recorder** ([`recorder`]): a bounded ring buffer of the last
+//!   N rounds' spans + metric deltas, dumped to JSON when a parity or
+//!   `validate()` cross-check fails — so failures in 3072-job sweeps come
+//!   with evidence attached instead of requiring a rerun.
+//!
+//! # Determinism contract
+//!
+//! Telemetry is **off by default** and every recording site is gated on
+//! one relaxed atomic load ([`enabled`]). Nothing recorded here ever feeds
+//! back into a scheduling decision: spans and metrics are written, never
+//! read, on the decision path. Placement plans are bit-identical with
+//! telemetry on vs. off (enforced by property test) and the disabled
+//! overhead is asserted < 2% in `bench_round_pipeline`'s telemetry arm.
+//!
+//! The leveled [`logging`] channel (`obs::log!(warn, ...)`,
+//! `TESSERAE_LOG=debug`) is independent of [`enabled`]: warnings print
+//! even when tracing is off.
+
+pub mod logging;
+pub mod metrics;
+pub mod recorder;
+pub mod span;
+
+// The macros are `#[macro_export]`ed at the crate root (a macro_rules
+// limitation); re-export them here so call sites read `obs::span!` /
+// `obs::log!`. A macro and the module of the same name coexist — they
+// live in different namespaces (the `std::vec` / `vec!` pattern).
+pub use crate::obs_log as log;
+pub use crate::obs_span as span;
+pub use logging::Level;
+pub use metrics::MetricsSnapshot;
+pub use span::{ArgValue, SpanEvent, SpanGuard};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GUARD_LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+
+/// Whether telemetry recording is on. This is the *only* check on the hot
+/// path when telemetry is off: one relaxed load, no fence, no branch
+/// beyond the skip.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn telemetry recording on or off process-wide (the `--trace-out`
+/// flag and bench arms call this once at startup). Tests that toggle
+/// repeatedly must use [`enabled_guard`] instead, which serializes.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Exclusive scoped enable/disable for tests and benches: takes a
+/// process-global lock (so concurrent toggles cannot interleave), sets
+/// the flag, and restores the previous value when the guard drops —
+/// the same pattern as `WorkerPool::budget_override`.
+pub fn enabled_guard(on: bool) -> EnabledGuard {
+    let lock = GUARD_LOCK
+        .get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    let prev = ENABLED.swap(on, Ordering::SeqCst);
+    EnabledGuard { prev, _lock: lock }
+}
+
+/// Guard from [`enabled_guard`]; restores the previous enabled state.
+pub struct EnabledGuard {
+    prev: bool,
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for EnabledGuard {
+    fn drop(&mut self) {
+        ENABLED.store(self.prev, Ordering::SeqCst);
+    }
+}
+
+/// Open a telemetry span for the rest of the enclosing scope.
+///
+/// ```ignore
+/// obs::span!("lp.repair");
+/// obs::span!("matching.batch", { instances: n, workers: w });
+/// ```
+///
+/// Expands to a `let` of an RAII guard, so the span closes when the
+/// scope ends. When telemetry is disabled ([`crate::obs::enabled`] is
+/// false) the cost is one relaxed atomic load — no allocation, no clock
+/// read. Arg values go through [`crate::obs::ArgValue::from`]
+/// (integers, floats, bools, strings).
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr) => {
+        let _obs_span_guard = if $crate::obs::enabled() {
+            Some($crate::obs::SpanGuard::begin($name, ::std::vec::Vec::new()))
+        } else {
+            None
+        };
+    };
+    ($name:expr, { $($key:ident : $val:expr),+ $(,)? }) => {
+        let _obs_span_guard = if $crate::obs::enabled() {
+            Some($crate::obs::SpanGuard::begin(
+                $name,
+                ::std::vec![$((stringify!($key), $crate::obs::ArgValue::from($val))),+],
+            ))
+        } else {
+            None
+        };
+    };
+}
+
+/// Leveled logging honoring `TESSERAE_LOG` (error/warn/info/debug;
+/// default `warn`, so progress chatter is quiet under `cargo test`).
+///
+/// ```ignore
+/// obs::log!(warn, "fig2 checkpoint write failed: {e}");
+/// obs::log!(info, "cell {key} done in {s:.1}s");
+/// ```
+#[macro_export]
+macro_rules! obs_log {
+    (error, $($fmt:tt)+) => {
+        $crate::obs::logging::log(
+            $crate::obs::Level::Error, module_path!(), format_args!($($fmt)+))
+    };
+    (warn, $($fmt:tt)+) => {
+        $crate::obs::logging::log(
+            $crate::obs::Level::Warn, module_path!(), format_args!($($fmt)+))
+    };
+    (info, $($fmt:tt)+) => {
+        $crate::obs::logging::log(
+            $crate::obs::Level::Info, module_path!(), format_args!($($fmt)+))
+    };
+    (debug, $($fmt:tt)+) => {
+        $crate::obs::logging::log(
+            $crate::obs::Level::Debug, module_path!(), format_args!($($fmt)+))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_sets_and_restores() {
+        // Guards must be sequential, never nested: each holds the global
+        // toggle lock for its lifetime (that lock is what serializes
+        // telemetry tests against each other).
+        {
+            let _g = enabled_guard(true);
+            assert!(enabled());
+        }
+        {
+            let _g = enabled_guard(false);
+            assert!(!enabled());
+        }
+    }
+
+    #[test]
+    fn span_macro_is_inert_when_disabled() {
+        let _guard = enabled_guard(false);
+        {
+            crate::obs_span!("test.noop", { items: 3usize });
+        }
+        // Other test threads may have flushed unrelated events into the
+        // sink; only *our* span must be absent.
+        let drained = span::drain_events();
+        assert!(
+            drained.iter().all(|e| e.name != "test.noop"),
+            "disabled span must record nothing"
+        );
+    }
+
+    #[test]
+    fn span_macro_records_when_enabled() {
+        let _guard = enabled_guard(true);
+        span::drain_events(); // discard anything pending from other tests
+        {
+            crate::obs_span!("test.outer", { items: 3usize, tag: "abc" });
+            crate::obs_span!("test.inner");
+        }
+        let events = span::drain_events();
+        let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+        assert!(names.contains(&"test.outer"), "got {names:?}");
+        assert!(names.contains(&"test.inner"), "got {names:?}");
+        let outer = events.iter().find(|e| e.name == "test.outer").unwrap();
+        assert_eq!(outer.args.len(), 2);
+        assert_eq!(outer.args[0].0, "items");
+    }
+}

@@ -1,0 +1,221 @@
+//! Flight recorder: a bounded ring buffer of the last N rounds' spans and
+//! metric deltas, dumped to JSON when an invariant check fails.
+//!
+//! The pipeline driver calls [`record_round`] once per round (only when
+//! telemetry is enabled) with the round's drained spans and the metric
+//! delta since the previous round. When a parity assert or a plan
+//! `validate()` cross-check fails, [`dump_on_failure`] writes everything
+//! the recorder holds to `TESSERAE_FLIGHT_OUT` (default
+//! `tesserae-flight.json`), so a failure deep inside a 3072-job sweep
+//! comes with the evidence attached instead of requiring a rerun.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::obs::metrics::MetricsSnapshot;
+use crate::obs::span::SpanEvent;
+use crate::util::json::Json;
+
+/// Rounds retained, overridable via `TESSERAE_FLIGHT_ROUNDS`.
+pub const DEFAULT_KEEP_ROUNDS: usize = 8;
+
+/// Dump destination env override; default `tesserae-flight.json` in the
+/// working directory.
+pub const FLIGHT_OUT_ENV: &str = "TESSERAE_FLIGHT_OUT";
+
+/// One recorded round: identity, wall clock, the round's spans, and what
+/// the metrics registry accumulated during it.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// Scheduler / call-site label ("tesserae-t", "sim", ...).
+    pub label: String,
+    pub total_s: f64,
+    pub spans: Vec<SpanEvent>,
+    pub metrics_delta: MetricsSnapshot,
+}
+
+impl RoundRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("label", Json::str(&self.label)),
+            ("total_s", Json::num(self.total_s)),
+            ("metrics_delta", self.metrics_delta.to_json()),
+            (
+                "spans",
+                Json::arr(self.spans.iter().map(SpanEvent::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+fn ring() -> &'static Mutex<VecDeque<RoundRecord>> {
+    static RING: OnceLock<Mutex<VecDeque<RoundRecord>>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(VecDeque::new()))
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn keep_rounds() -> usize {
+    static KEEP: OnceLock<usize> = OnceLock::new();
+    *KEEP.get_or_init(|| {
+        std::env::var("TESSERAE_FLIGHT_ROUNDS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(DEFAULT_KEEP_ROUNDS)
+    })
+}
+
+/// Append one round, evicting the oldest beyond the retention window.
+pub fn record_round(record: RoundRecord) {
+    let mut ring = lock(ring());
+    while ring.len() >= keep_rounds() {
+        ring.pop_front();
+    }
+    ring.push_back(record);
+}
+
+/// Rounds currently held (tests / bench reporting).
+pub fn rounds_recorded() -> usize {
+    lock(ring()).len()
+}
+
+/// The most recently recorded round, if any (tests / report embedding).
+pub fn latest_round() -> Option<RoundRecord> {
+    lock(ring()).back().cloned()
+}
+
+/// All held rounds, oldest first (tests / report embedding).
+pub fn rounds() -> Vec<RoundRecord> {
+    lock(ring()).iter().cloned().collect()
+}
+
+/// Drop everything held (benches/tests isolating runs).
+pub fn clear() {
+    lock(ring()).clear();
+}
+
+/// Serialize the recorder's current contents.
+pub fn to_json(context: &str) -> Json {
+    let ring = lock(ring());
+    Json::obj(vec![
+        ("context", Json::str(context)),
+        ("rounds_held", Json::num(ring.len() as f64)),
+        (
+            "rounds",
+            Json::arr(ring.iter().map(RoundRecord::to_json).collect()),
+        ),
+    ])
+}
+
+/// Dump the flight record because an invariant failed. Returns the path
+/// written, or `None` when there is nothing recorded (telemetry off) or
+/// the write itself failed — the caller's panic must proceed regardless,
+/// so this never returns an error.
+pub fn dump_on_failure(context: &str) -> Option<PathBuf> {
+    let path = PathBuf::from(
+        std::env::var(FLIGHT_OUT_ENV).unwrap_or_else(|_| "tesserae-flight.json".to_string()),
+    );
+    dump_to(path, context)
+}
+
+/// As [`dump_on_failure`] but to an explicit path (tests, embedders).
+pub fn dump_to(path: PathBuf, context: &str) -> Option<PathBuf> {
+    if lock(ring()).is_empty() {
+        return None;
+    }
+    let doc = to_json(context);
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => {
+            crate::obs_log!(
+                error,
+                "invariant failed ({context}); flight record of last {} rounds dumped to {}",
+                rounds_recorded(),
+                path.display()
+            );
+            Some(path)
+        }
+        Err(e) => {
+            crate::obs_log!(error, "flight-record dump to {} failed: {e}", path.display());
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::ArgValue;
+
+    fn record(round: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            label: "test".to_string(),
+            total_s: 0.001 * round as f64,
+            spans: vec![SpanEvent {
+                name: "estimate",
+                tid: 0,
+                start_us: 10 * round,
+                dur_us: 5,
+                args: vec![("jobs", ArgValue::U64(round))],
+            }],
+            metrics_delta: MetricsSnapshot::default(),
+        }
+    }
+
+    #[test]
+    fn ring_is_bounded_and_keeps_latest() {
+        // The guard's global lock serializes these tests against each
+        // other and against anything that records rounds while enabled.
+        let _g = crate::obs::enabled_guard(false);
+        clear();
+        for r in 0..(DEFAULT_KEEP_ROUNDS as u64 + 5) {
+            record_round(record(r));
+        }
+        assert_eq!(rounds_recorded(), keep_rounds().min(DEFAULT_KEEP_ROUNDS + 5));
+        let doc = to_json("test");
+        let rounds = doc.get("rounds").and_then(Json::as_arr).unwrap();
+        let last = rounds.last().unwrap();
+        assert_eq!(
+            last.get("round").and_then(Json::as_f64),
+            Some((DEFAULT_KEEP_ROUNDS + 4) as f64)
+        );
+        // Serialized spans carry their args through.
+        assert!(doc
+            .to_string_compact()
+            .contains("\"name\":\"estimate\""));
+        clear();
+    }
+
+    #[test]
+    fn dump_on_failure_writes_a_parsable_file() {
+        let _g = crate::obs::enabled_guard(false);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("tesserae_flight_test_{}.json", std::process::id()));
+        clear();
+        record_round(record(3));
+        let written = dump_to(path, "unit-test parity mismatch");
+        let written = written.expect("dump path");
+        let text = std::fs::read_to_string(&written).unwrap();
+        let doc = Json::parse(&text).expect("flight dump must be valid JSON");
+        assert_eq!(
+            doc.get("context").and_then(Json::as_str),
+            Some("unit-test parity mismatch")
+        );
+        assert!(doc.get("rounds").and_then(Json::as_arr).unwrap().len() == 1);
+        let _ = std::fs::remove_file(&written);
+        clear();
+    }
+
+    #[test]
+    fn empty_recorder_dumps_nothing() {
+        let _g = crate::obs::enabled_guard(false);
+        clear();
+        assert!(dump_on_failure("nothing recorded").is_none());
+    }
+}

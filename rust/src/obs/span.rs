@@ -1,0 +1,449 @@
+//! Span recording: RAII guards writing begin/end events into per-thread
+//! buffers, a process-wide sink they drain into, and Chrome trace-event
+//! JSON export.
+//!
+//! Data flow: [`SpanGuard::begin`]/`drop` push one completed [`SpanEvent`]
+//! into a thread-local buffer (no lock, no syscall). Buffers flush into
+//! the global sink when they hit capacity and when their thread exits —
+//! worker-pool threads are scoped (`std::thread::scope`), so by the time a
+//! pipeline stage returns, every worker event has landed in the sink.
+//! [`drain_events`] (called once per round by the pipeline driver) empties
+//! the sink plus the calling thread's own buffer, optionally retaining a
+//! copy for `--trace-out` export ([`set_retain`] / [`take_trace`]).
+//!
+//! Everything is bounded: per-thread buffers flush at [`TLS_FLUSH_AT`],
+//! the sink and the retained trace stop growing at [`SINK_CAP`] /
+//! [`RETAIN_CAP`] (dropped events are counted, never silently lost).
+
+use std::cell::RefCell;
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A structured span argument value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> Self {
+        ArgValue::U64(v)
+    }
+}
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> Self {
+        ArgValue::U64(v as u64)
+    }
+}
+impl From<u32> for ArgValue {
+    fn from(v: u32) -> Self {
+        ArgValue::U64(v as u64)
+    }
+}
+impl From<i64> for ArgValue {
+    fn from(v: i64) -> Self {
+        ArgValue::I64(v)
+    }
+}
+impl From<i32> for ArgValue {
+    fn from(v: i32) -> Self {
+        ArgValue::I64(v as i64)
+    }
+}
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> Self {
+        ArgValue::F64(v)
+    }
+}
+impl From<bool> for ArgValue {
+    fn from(v: bool) -> Self {
+        ArgValue::Bool(v)
+    }
+}
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> Self {
+        ArgValue::Str(v.to_string())
+    }
+}
+impl From<String> for ArgValue {
+    fn from(v: String) -> Self {
+        ArgValue::Str(v)
+    }
+}
+
+impl ArgValue {
+    pub(crate) fn to_json(&self) -> Json {
+        match self {
+            ArgValue::U64(v) => Json::num(*v as f64),
+            ArgValue::I64(v) => Json::num(*v as f64),
+            ArgValue::F64(v) => Json::num(*v),
+            ArgValue::Bool(v) => Json::Bool(*v),
+            ArgValue::Str(v) => Json::str(v),
+        }
+    }
+}
+
+/// One completed span: a named interval on one thread, with structured
+/// args. Timestamps are microseconds since the process-wide epoch (first
+/// telemetry use), the unit Chrome trace events use natively.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    pub name: &'static str,
+    /// Dense process-local thread id (not the OS tid).
+    pub tid: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+impl SpanEvent {
+    /// Plain serialization for flight-recorder dumps (the Chrome exporter
+    /// has its own richer row shape).
+    pub fn to_json(&self) -> Json {
+        let args = Json::Obj(
+            self.args
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_json()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("tid", Json::num(self.tid as f64)),
+            ("ts_us", Json::num(self.start_us as f64)),
+            ("dur_us", Json::num(self.dur_us as f64)),
+            ("args", args),
+        ])
+    }
+}
+
+/// Per-thread buffer size that triggers a flush into the global sink.
+pub const TLS_FLUSH_AT: usize = 1024;
+/// Sink bound: beyond this many undrained events, new ones are dropped
+/// (and counted) rather than growing without limit.
+pub const SINK_CAP: usize = 1 << 20;
+/// Retained-trace bound for `--trace-out` (≈2M events ≈ a few hundred MB
+/// of JSON — far beyond any round count we trace in practice).
+pub const RETAIN_CAP: usize = 2 << 20;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+static RECORDED: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static RETAIN: AtomicBool = AtomicBool::new(false);
+
+fn sink() -> &'static Mutex<Vec<SpanEvent>> {
+    static SINK: OnceLock<Mutex<Vec<SpanEvent>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn trace_store() -> &'static Mutex<Vec<SpanEvent>> {
+    static TRACE: OnceLock<Mutex<Vec<SpanEvent>>> = OnceLock::new();
+    TRACE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn thread_names() -> &'static Mutex<Vec<(u64, String)>> {
+    static NAMES: OnceLock<Mutex<Vec<(u64, String)>>> = OnceLock::new();
+    NAMES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Microseconds since the process-wide telemetry epoch.
+fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+struct ThreadBuf {
+    tid: u64,
+    events: Vec<SpanEvent>,
+}
+
+impl ThreadBuf {
+    fn new() -> ThreadBuf {
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("worker-{tid}"));
+        lock(thread_names()).push((tid, name));
+        ThreadBuf {
+            tid,
+            events: Vec::new(),
+        }
+    }
+
+    fn flush(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        let mut sink = lock(sink());
+        let room = SINK_CAP.saturating_sub(sink.len());
+        if room >= self.events.len() {
+            sink.append(&mut self.events);
+        } else {
+            let overflow = self.events.len() - room;
+            sink.extend(self.events.drain(..room));
+            self.events.clear();
+            DROPPED.fetch_add(overflow as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf::new());
+}
+
+fn push_event(event: SpanEvent) {
+    RECORDED.fetch_add(1, Ordering::Relaxed);
+    // Thread teardown can outlive the TLS buffer; drop the event then
+    // rather than re-initializing (scoped pool workers flush on exit
+    // long before that point).
+    let _ = BUF.try_with(|buf| {
+        let mut buf = buf.borrow_mut();
+        buf.events.push(event);
+        if buf.events.len() >= TLS_FLUSH_AT {
+            buf.flush();
+        }
+    });
+}
+
+/// RAII span: created by `obs::span!`, records one [`SpanEvent`] covering
+/// its lifetime when dropped. Only ever constructed when
+/// [`crate::obs::enabled`] — the macro does the gating.
+pub struct SpanGuard {
+    name: &'static str,
+    start_us: u64,
+    args: Vec<(&'static str, ArgValue)>,
+}
+
+impl SpanGuard {
+    pub fn begin(name: &'static str, args: Vec<(&'static str, ArgValue)>) -> SpanGuard {
+        SpanGuard {
+            name,
+            start_us: now_us(),
+            args,
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let end = now_us();
+        push_event(SpanEvent {
+            name: self.name,
+            tid: BUF.try_with(|b| b.borrow().tid).unwrap_or(u64::MAX),
+            start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            args: std::mem::take(&mut self.args),
+        });
+    }
+}
+
+/// Total spans recorded since process start (monotonic; survives drains).
+/// The bench telemetry arm reports this as its span count.
+pub fn recorded_total() -> u64 {
+    RECORDED.load(Ordering::Relaxed)
+}
+
+/// Spans dropped at the sink/trace caps (0 in healthy runs).
+pub fn dropped_total() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// When retain mode is on (the `--trace-out` flag), every drained event
+/// is also appended to a process-wide trace for final export.
+pub fn set_retain(on: bool) {
+    RETAIN.store(on, Ordering::SeqCst);
+}
+
+/// Drain all completed spans: the global sink plus the calling thread's
+/// own buffer. Worker threads under `std::thread::scope` have exited (and
+/// therefore flushed) by the time the pipeline driver calls this, so a
+/// per-round drain observes the whole round. Returns events in flush
+/// order (grouped by thread, not globally time-sorted — the Chrome
+/// exporter doesn't need sorting).
+pub fn drain_events() -> Vec<SpanEvent> {
+    let mut events = {
+        let mut sink = lock(sink());
+        std::mem::take(&mut *sink)
+    };
+    let _ = BUF.try_with(|buf| {
+        let mut buf = buf.borrow_mut();
+        events.append(&mut buf.events);
+    });
+    if RETAIN.load(Ordering::Relaxed) && !events.is_empty() {
+        let mut trace = lock(trace_store());
+        let room = RETAIN_CAP.saturating_sub(trace.len());
+        if room < events.len() {
+            DROPPED.fetch_add((events.len() - room) as u64, Ordering::Relaxed);
+        }
+        trace.extend(events.iter().take(room).cloned());
+    }
+    events
+}
+
+/// Take the retained trace accumulated since [`set_retain`]`(true)`.
+pub fn take_trace() -> Vec<SpanEvent> {
+    std::mem::take(&mut *lock(trace_store()))
+}
+
+/// Render events as a Chrome trace-event document (the JSON Object
+/// Format: `{"traceEvents": [...]}` with `ph:"X"` complete events and
+/// `ph:"M"` thread-name metadata), loadable in Perfetto and
+/// `chrome://tracing`.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
+    let mut rows = Vec::with_capacity(events.len() + 8);
+    let mut seen_tids: Vec<u64> = events.iter().map(|e| e.tid).collect();
+    seen_tids.sort_unstable();
+    seen_tids.dedup();
+    {
+        let names = lock(thread_names());
+        for &tid in &seen_tids {
+            let name = names
+                .iter()
+                .find(|(t, _)| *t == tid)
+                .map(|(_, n)| n.clone())
+                .unwrap_or_else(|| format!("worker-{tid}"));
+            rows.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(&name))])),
+            ]));
+        }
+    }
+    for e in events {
+        let args = Json::Obj(
+            e.args
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_json()))
+                .collect(),
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::str(e.name)),
+            ("cat", Json::str("tesserae")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(e.start_us as f64)),
+            ("dur", Json::num(e.dur_us as f64)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(e.tid as f64)),
+            ("args", args),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(rows)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Write `events` to `path` as Chrome trace-event JSON.
+pub fn write_chrome_trace(path: impl AsRef<Path>, events: &[SpanEvent]) -> io::Result<()> {
+    std::fs::write(path, chrome_trace_json(events).to_string_compact())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn spans_cross_threads_into_one_drain() {
+        let _guard = obs::enabled_guard(true);
+        drain_events();
+        std::thread::scope(|scope| {
+            for i in 0..3u64 {
+                scope.spawn(move || {
+                    crate::obs_span!("test.worker", { chunk: i });
+                });
+            }
+            crate::obs_span!("test.caller");
+        });
+        let events = drain_events();
+        let workers = events.iter().filter(|e| e.name == "test.worker").count();
+        let callers = events.iter().filter(|e| e.name == "test.caller").count();
+        assert_eq!(workers, 3, "all scoped-worker spans must flush on exit");
+        assert_eq!(callers, 1);
+        let tids: std::collections::BTreeSet<u64> = events
+            .iter()
+            .filter(|e| e.name == "test.worker")
+            .map(|e| e.tid)
+            .collect();
+        assert_eq!(tids.len(), 3, "each worker thread gets its own tid");
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_as_json() {
+        let events = vec![
+            SpanEvent {
+                name: "round",
+                tid: 0,
+                start_us: 10,
+                dur_us: 500,
+                args: vec![("jobs", ArgValue::U64(64)), ("label", ArgValue::from("x"))],
+            },
+            SpanEvent {
+                name: "estimate",
+                tid: 0,
+                start_us: 12,
+                dur_us: 100,
+                args: vec![],
+            },
+        ];
+        let doc = chrome_trace_json(&events);
+        let text = doc.to_string_compact();
+        let parsed = Json::parse(&text).expect("trace must be valid JSON");
+        let rows = parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .expect("traceEvents array");
+        let round = rows
+            .iter()
+            .find(|r| r.get("name").and_then(Json::as_str) == Some("round"))
+            .expect("round event present");
+        assert_eq!(round.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(round.get("dur").and_then(Json::as_f64), Some(500.0));
+        assert_eq!(
+            round
+                .get("args")
+                .and_then(|a| a.get("jobs"))
+                .and_then(Json::as_f64),
+            Some(64.0)
+        );
+    }
+
+    #[test]
+    fn retain_mode_accumulates_for_export() {
+        let _guard = obs::enabled_guard(true);
+        drain_events();
+        take_trace();
+        set_retain(true);
+        {
+            crate::obs_span!("test.retained");
+        }
+        drain_events();
+        set_retain(false);
+        let trace = take_trace();
+        assert!(
+            trace.iter().any(|e| e.name == "test.retained"),
+            "retained trace must include drained spans"
+        );
+    }
+}

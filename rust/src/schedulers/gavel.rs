@@ -32,6 +32,7 @@ use crate::estimator::ThroughputSource;
 use crate::jobs::ParallelismStrategy;
 use crate::linalg::{repair_warm_start, solve_sparse_lp, CscMatrix, SparseLp, WarmStart};
 use crate::matching::{MatchingEngine, MatchingService};
+use crate::obs::metrics;
 use crate::policies::placement::{allocate_without_packing, migrate_with, MigrationMode};
 use crate::policies::JobInfo;
 use crate::util::pool::WorkerPool;
@@ -329,6 +330,7 @@ impl GavelScheduler {
         if jobs.is_empty() {
             return;
         }
+        crate::obs_span!("lp.prepare", { jobs: jobs.len() });
         let total_gpus = input.spec.total_gpus();
         let structure: Vec<(u64, u32)> = jobs.iter().map(|j| (j.id, j.num_gpus)).collect();
         let config_ok = self.lp_cache.as_ref().is_some_and(|c| {
@@ -340,9 +342,14 @@ impl GavelScheduler {
             config_ok && self.lp_cache.as_ref().is_some_and(|c| c.structure == structure);
         if same_window {
             self.lp_patches += 1;
+            metrics::counter_add("lp.window_hits", 1);
         } else if config_ok {
-            self.repair_cache(jobs, structure);
+            {
+                crate::obs_span!("lp.repair", { job_window: jobs.len() });
+                self.repair_cache(jobs, structure);
+            }
             self.lp_repairs += 1;
+            metrics::counter_add("lp.repairs", 1);
         } else {
             let pairs = candidate_pairs(jobs, self.packing, self.pair_window);
             let lp = build_allocation_lp(jobs, &pairs, total_gpus);
@@ -359,6 +366,7 @@ impl GavelScheduler {
                 warm_generation: generation,
             });
             self.lp_rebuilds += 1;
+            metrics::counter_add("lp.cold_rebuilds", 1);
         }
         let objective = self.objective;
         let source = Arc::clone(&self.source);
@@ -415,6 +423,11 @@ impl GavelScheduler {
             .warm
             .as_ref()
             .filter(|_| cache.warm_generation == cache.generation);
+        crate::obs_span!("lp.solve", {
+            vars: cache.lp.num_vars(),
+            rows: cache.lp.num_rows(),
+            warm: warm.is_some(),
+        });
         match solve_sparse_lp(&cache.lp, warm) {
             Ok((sol, warm)) => {
                 cache.warm = Some(warm);

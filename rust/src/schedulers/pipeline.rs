@@ -36,10 +36,13 @@
 //! for overlapping round `r+1`'s Estimate with round `r`'s Migrate tail.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use crate::cluster::PlacementPlan;
 use crate::jobs::{JobId, ParallelismStrategy};
+use crate::obs;
+use crate::obs::{metrics, recorder, span};
 use crate::policies::placement::MigrationOutcome;
 use crate::policies::JobInfo;
 
@@ -151,11 +154,72 @@ pub trait StageProvider {
     fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision;
 }
 
+/// Rounds currently in flight, process-wide. POP's sub-schedulers drive
+/// nested `run_round` calls on worker-pool threads; only the *outermost*
+/// round drains the span sink and records into the flight recorder, so a
+/// round capture always covers the whole decision (sub-round spans land
+/// inside it). Only touched when telemetry is enabled.
+static ROUND_DEPTH: AtomicUsize = AtomicUsize::new(0);
+
+/// Registry names for the per-stage wall-clock histograms.
+const STAGE_METRIC: [&str; Stage::COUNT] = [
+    "round.estimate_s",
+    "round.schedule_s",
+    "round.pack_s",
+    "round.migrate_s",
+    "round.commit_s",
+];
+
+/// Fold one finished round into the metrics registry: per-stage and total
+/// wall clocks plus the round's matching-service counters (the scattered
+/// `MatchingServiceStats` fields, absorbed behind the one snapshot).
+/// Gated on [`obs::enabled`] inside every registry call.
+fn publish_round_metrics(decision: &RoundDecision) {
+    metrics::counter_add("rounds", 1);
+    metrics::observe("round.total_s", decision.timings.total_s);
+    for stage in Stage::ALL {
+        metrics::observe(STAGE_METRIC[stage.index()], decision.timings.stage_s[stage.index()]);
+    }
+    let m = &decision.timings.matching;
+    metrics::counter_add("matching.instances", m.instances as u64);
+    metrics::counter_add("matching.pruned", m.pruned as u64);
+    metrics::counter_add("matching.deduped", m.deduped as u64);
+    metrics::counter_add("matching.cache_hits", m.cache_hits as u64);
+    metrics::counter_add("matching.built", m.built as u64);
+    metrics::counter_add("matching.solved", m.solved as u64);
+    metrics::counter_add("matching.warm_starts", m.warm_starts as u64);
+    metrics::counter_add("matching.kernel_allocs", m.kernel_allocs as u64);
+    if m.solved > 0 {
+        metrics::observe("matching.solve_wall_s", m.solve_wall_s);
+    }
+    metrics::counter_add("round.migrations", decision.migrations as u64);
+}
+
 /// Drive one round through the staged pipeline, timing each stage.
 pub fn run_round<P: StageProvider + ?Sized>(
     provider: &mut P,
     input: &RoundInput,
 ) -> RoundDecision {
+    // Telemetry state is sampled once per round: the enabled flag cannot
+    // flip mid-round for this call, and when off the only cost below is
+    // this one relaxed load per gate.
+    let telemetry = obs::enabled();
+    let base = if telemetry {
+        let depth = ROUND_DEPTH.fetch_add(1, Ordering::AcqRel);
+        // Metric deltas are only meaningful for the outermost round.
+        (depth == 0).then(metrics::snapshot)
+    } else {
+        None
+    };
+    let round_span = telemetry.then(|| {
+        span::SpanGuard::begin(
+            "round",
+            vec![
+                ("round", span::ArgValue::from(input.round)),
+                ("jobs", span::ArgValue::from(input.active.len())),
+            ],
+        )
+    });
     // Stage times are differences of boundary timestamps on one clock, so
     // they sum to the measured total by construction — OS preemption
     // anywhere lands inside some stage instead of an unattributed gap
@@ -165,6 +229,7 @@ pub fn run_round<P: StageProvider + ?Sized>(
     let mut cx = RoundContext::new(input);
     let mut last_s = 0.0f64;
     for stage in [Stage::Estimate, Stage::Schedule, Stage::Pack, Stage::Migrate] {
+        crate::obs_span!(stage.name(), { round: input.round });
         match stage {
             Stage::Estimate => provider.estimate(&mut cx),
             Stage::Schedule => provider.schedule(&mut cx),
@@ -176,7 +241,10 @@ pub fn run_round<P: StageProvider + ?Sized>(
         cx.stage_s[stage.index()] = boundary_s - last_s;
         last_s = boundary_s;
     }
-    let mut decision = provider.commit(&mut cx);
+    let mut decision = {
+        crate::obs_span!(Stage::Commit.name(), { round: input.round });
+        provider.commit(&mut cx)
+    };
     cx.stage_s[Stage::Commit.index()] = t_total.elapsed().as_secs_f64() - last_s;
     decision.timings.stage_s = cx.stage_s;
     decision.timings.total_s = t_total.elapsed().as_secs_f64();
@@ -189,7 +257,32 @@ pub fn run_round<P: StageProvider + ?Sized>(
         "stage times must sum to the round total: {staged}s of {}s",
         decision.timings.total_s
     );
+    // Close the round span *before* draining so it lands in this round's
+    // capture, then record the round into the flight recorder.
+    drop(round_span);
+    if telemetry {
+        let outermost = ROUND_DEPTH.fetch_sub(1, Ordering::AcqRel) == 1;
+        if let (true, Some(base)) = (outermost, base) {
+            publish_round_metrics(&decision);
+            let metrics_delta = metrics::snapshot().delta_since(&base);
+            let spans = span::drain_events();
+            recorder::record_round(recorder::RoundRecord {
+                round: input.round,
+                label: short_type_name::<P>().to_string(),
+                total_s: decision.timings.total_s,
+                spans,
+                metrics_delta,
+            });
+        }
+    }
     decision
+}
+
+/// "tesserae::schedulers::pop::PopScheduler" → "PopScheduler" (the flight
+/// recorder's round label).
+fn short_type_name<P: ?Sized>() -> &'static str {
+    let full = std::any::type_name::<P>();
+    full.rsplit("::").next().unwrap_or(full)
 }
 
 #[cfg(test)]
@@ -236,6 +329,39 @@ mod tests {
         let staged: f64 = d.timings.stage_s.iter().sum();
         assert!(staged <= d.timings.total_s);
         assert!(d.plan.jobs().is_empty());
+    }
+
+    #[test]
+    fn telemetry_round_capture_has_all_stage_spans() {
+        let _guard = crate::obs::enabled_guard(true);
+        crate::obs::span::drain_events();
+        crate::obs::recorder::clear();
+        let spec = ClusterSpec::new(1, 2, GpuType::A100);
+        let prev = crate::cluster::PlacementPlan::new(2);
+        let input = RoundInput {
+            now: 0.0,
+            round: 7,
+            active: &[],
+            prev_plan: &prev,
+            spec: &spec,
+        };
+        let _ = run_round(&mut Noop, &input);
+        // Other tests' rounds may interleave while telemetry is on; find
+        // ours rather than assuming it is the latest.
+        let rec = crate::obs::recorder::rounds()
+            .into_iter()
+            .rev()
+            .find(|r| r.label == "Noop" && r.round == 7)
+            .expect("round recorded");
+        let names: Vec<&str> = rec.spans.iter().map(|e| e.name).collect();
+        for want in ["round", "estimate", "schedule", "pack", "migrate", "commit"] {
+            assert!(names.contains(&want), "missing span {want} in {names:?}");
+        }
+        // Published metrics surfaced in the round's delta (≥, not ==:
+        // concurrent rounds can publish inside our window).
+        assert!(rec.metrics_delta.counters.get("rounds").copied().unwrap_or(0) >= 1);
+        assert!(rec.metrics_delta.histograms.contains_key("round.total_s"));
+        crate::obs::recorder::clear();
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::collections::BTreeMap;
 
 use crate::cluster::{ClusterSpec, PlacementPlan};
 use crate::jobs::{Job, JobId, ParallelismStrategy};
+use crate::obs::{metrics, recorder, MetricsSnapshot};
 use crate::policies::JobInfo;
 use crate::profiler::Profiler;
 use crate::schedulers::{DecisionTimings, RoundInput, Scheduler};
@@ -87,6 +88,9 @@ pub struct SimResult {
     pub timings: Vec<DecisionTimings>,
     /// Jobs that never completed within `max_rounds` (should be 0).
     pub unfinished: usize,
+    /// What the telemetry registry accumulated over this run; `None`
+    /// unless telemetry was enabled for the whole simulation.
+    pub metrics: Option<MetricsSnapshot>,
 }
 
 impl SimResult {
@@ -152,6 +156,8 @@ pub fn simulate(
     let mut round: u64 = 0;
     // Per-round scratch buffer, reused across rounds.
     let mut active: Vec<JobInfo> = Vec::new();
+    // Registry baseline so the result reports only this run's telemetry.
+    let metrics_base = crate::obs::enabled().then(metrics::snapshot);
 
     loop {
         let now = round as f64 * cfg.round_duration;
@@ -209,7 +215,10 @@ pub fn simulate(
             continue;
         }
 
-        // Scheduler decision.
+        // Scheduler decision. The span covers the whole busy round —
+        // decision plus job advancement — so a Chrome trace shows the
+        // simulator's cadence around the pipeline's stage spans.
+        crate::obs_span!("sim.round", { round: round, active: active.len() });
         let decision = scheduler.decide(&RoundInput {
             now,
             round,
@@ -320,18 +329,31 @@ pub fn simulate(
             }
         }
         // Plan-diff counts are the single source of truth; the scheduler's
-        // self-reported number must agree (Definition 1).
-        debug_assert_eq!(
-            round_migrations,
-            decision.plan.migrations_from(&prev_plan),
-            "per-job migration accounting diverged from the plan diff"
-        );
-        debug_assert_eq!(
-            round_migrations, decision.migrations,
-            "scheduler '{}' self-reported a migration count that disagrees \
-             with the plan diff",
-            scheduler.name()
-        );
+        // self-reported number must agree (Definition 1). On a mismatch the
+        // flight recorder dumps the last rounds' spans and metric deltas
+        // before the panic, so a failure deep in a long sweep ships its own
+        // evidence.
+        if cfg!(debug_assertions) {
+            let plan_diff = decision.plan.migrations_from(&prev_plan);
+            if round_migrations != plan_diff {
+                recorder::dump_on_failure("simulator: per-job migration accounting vs plan diff");
+                panic!(
+                    "per-job migration accounting ({round_migrations}) diverged \
+                     from the plan diff ({plan_diff})"
+                );
+            }
+            if round_migrations != decision.migrations {
+                recorder::dump_on_failure(
+                    "simulator: scheduler self-reported migrations vs plan diff",
+                );
+                panic!(
+                    "scheduler '{}' self-reported a migration count ({}) that \
+                     disagrees with the plan diff ({round_migrations})",
+                    scheduler.name(),
+                    decision.migrations
+                );
+            }
+        }
         total_migrations += round_migrations;
 
         prev_plan = decision.plan;
@@ -372,6 +394,7 @@ pub fn simulate(
         timings,
         unfinished,
         outcomes,
+        metrics: metrics_base.map(|base| metrics::snapshot().delta_since(&base)),
     }
 }
 

@@ -5,6 +5,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 /// Result of timing one benchmark case.
@@ -53,6 +54,69 @@ pub fn fmt_duration(secs: f64) -> String {
 pub fn smoke_mode() -> bool {
     std::env::args().any(|a| a == "--smoke")
         || std::env::var("TESSERAE_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Best-effort git revision: follow `.git/HEAD` (walking up from the
+/// working directory) to the current commit hash. `None` outside a
+/// checkout or on an unreadable repository — benchmark artifacts must
+/// never fail over provenance.
+pub fn git_rev() -> Option<String> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let head = dir.join(".git").join("HEAD");
+        if let Ok(text) = std::fs::read_to_string(&head) {
+            let text = text.trim();
+            return match text.strip_prefix("ref: ") {
+                Some(r) => {
+                    let target = dir.join(".git").join(r.trim());
+                    std::fs::read_to_string(target)
+                        .ok()
+                        .map(|h| h.trim().to_string())
+                }
+                None => Some(text.to_string()), // detached HEAD
+            }
+            .filter(|h| !h.is_empty());
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Provenance block embedded in every `BENCH_*.json` artifact: which code
+/// (crate version + git revision), which machine shape (thread budget,
+/// available cores), which build (feature flags), and which mode (smoke,
+/// telemetry) produced the numbers.
+pub fn bench_meta() -> Json {
+    let pool = crate::util::pool::WorkerPool::global();
+    Json::obj(vec![
+        ("crate_version", Json::str(env!("CARGO_PKG_VERSION"))),
+        (
+            "git_rev",
+            match git_rev() {
+                Some(rev) => Json::str(&rev),
+                None => Json::Null,
+            },
+        ),
+        ("thread_budget", Json::num(pool.budget() as f64)),
+        (
+            "available_parallelism",
+            Json::num(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1) as f64,
+            ),
+        ),
+        (
+            "features",
+            Json::obj(vec![
+                ("pjrt", Json::Bool(cfg!(feature = "pjrt"))),
+                ("alloc_audit", Json::Bool(cfg!(feature = "alloc_audit"))),
+            ]),
+        ),
+        ("smoke", Json::Bool(smoke_mode())),
+        ("telemetry", Json::Bool(crate::obs::enabled())),
+    ])
 }
 
 /// Benchmark runner with a wall-clock budget per case.
@@ -248,6 +312,28 @@ mod tests {
         let (t, v) = b.run_once("once", || 41 + 1);
         assert_eq!(v, 42);
         assert_eq!(t.iters, 1);
+    }
+
+    #[test]
+    fn bench_meta_is_serializable_and_complete() {
+        let meta = bench_meta();
+        let parsed = Json::parse(&meta.to_string_compact()).unwrap();
+        for key in [
+            "crate_version",
+            "git_rev",
+            "thread_budget",
+            "available_parallelism",
+            "features",
+            "smoke",
+            "telemetry",
+        ] {
+            assert!(parsed.get(key).is_some(), "meta missing {key}");
+        }
+        assert!(parsed.get("thread_budget").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert!(parsed
+            .get("features")
+            .and_then(|f| f.get("alloc_audit"))
+            .is_some());
     }
 
     #[test]

@@ -24,6 +24,8 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
+use crate::obs::metrics;
+
 /// Env knob read once per process when no budget was installed via CLI.
 pub const THREADS_ENV: &str = "TESSERAE_THREADS";
 
@@ -71,6 +73,18 @@ impl Drop for Lease<'_> {
         if self.granted > 0 {
             self.pool.leased.fetch_sub(self.granted, Ordering::Release);
         }
+    }
+}
+
+/// Telemetry for one lease attempt (self-gated: no-ops when telemetry is
+/// off). A denied lease (budget exhausted by an outer caller) is this
+/// non-blocking pool's equivalent of a lease wait.
+fn record_lease(granted: usize) {
+    metrics::counter_add("pool.lease_attempts", 1);
+    if granted > 0 {
+        metrics::counter_add("pool.workers_granted", granted as u64);
+    } else {
+        metrics::counter_add("pool.lease_denied", 1);
     }
 }
 
@@ -216,6 +230,11 @@ impl WorkerPool {
             return out;
         }
         let mut lease = self.lease_extra(want - 1);
+        // The lease span covers the whole sharded (or degraded-inline)
+        // section; `granted: 0` records a denied lease — the closest
+        // thing to a "lease wait" this non-blocking pool has.
+        crate::obs_span!("pool.lease", { items: n, want: want - 1, granted: lease.granted });
+        record_lease(lease.granted);
         let workers = 1 + lease.granted;
         if workers <= 1 {
             drop(lease);
@@ -238,13 +257,17 @@ impl WorkerPool {
                 .map(|(i, part)| {
                     let start = (i + 1) * chunk;
                     scope.spawn(move || {
+                        crate::obs_span!("pool.chunk", { start: start, len: part.len() });
                         let out = f(start, part);
                         debug_assert_eq!(out.len(), part.len(), "chunk closure must map 1:1");
                         out
                     })
                 })
                 .collect();
-            let out = f(0, mine);
+            let out = {
+                crate::obs_span!("pool.chunk", { start: 0usize, len: mine.len() });
+                f(0, mine)
+            };
             debug_assert_eq!(out.len(), mine.len(), "chunk closure must map 1:1");
             parts.push(out);
             for h in handles {
@@ -308,6 +331,8 @@ impl WorkerPool {
             return inline(items);
         }
         let mut lease = self.lease_extra(want - 1);
+        crate::obs_span!("pool.lease", { items: n, want: want - 1, granted: lease.granted });
+        record_lease(lease.granted);
         let workers = 1 + lease.granted;
         if workers <= 1 {
             drop(lease);
@@ -328,6 +353,7 @@ impl WorkerPool {
                 .map(|(i, part)| {
                     let start = (i + 1) * chunk;
                     scope.spawn(move || {
+                        crate::obs_span!("pool.chunk", { start: start, len: part.len() });
                         part.iter_mut()
                             .enumerate()
                             .map(|(j, t)| f(start + j, t))
@@ -424,6 +450,29 @@ mod tests {
         assert_eq!(pool.plan_workers(items.len(), 0, 64), 1);
         let got = pool.map(&items, 0, 64, |_, &i| i);
         assert_eq!(got, items);
+    }
+
+    #[test]
+    fn lease_spans_and_counters_recorded_when_enabled() {
+        let _telemetry = crate::obs::enabled_guard(true);
+        crate::obs::span::drain_events();
+        let pool = WorkerPool::global();
+        let _budget = pool.budget_override(4);
+        let items: Vec<usize> = (0..256).collect();
+        let got = pool.map(&items, 0, 1, |_, &i| i * 2);
+        assert_eq!(got.len(), 256);
+        let events = crate::obs::span::drain_events();
+        let lease = events
+            .iter()
+            .find(|e| e.name == "pool.lease")
+            .expect("lease span recorded");
+        assert!(lease.args.iter().any(|(k, _)| *k == "granted"));
+        assert!(
+            events.iter().any(|e| e.name == "pool.chunk"),
+            "chunk spans recorded"
+        );
+        let snap = crate::obs::metrics::snapshot();
+        assert!(snap.counters.get("pool.lease_attempts").copied().unwrap_or(0) >= 1);
     }
 
     #[test]

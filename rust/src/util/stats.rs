@@ -18,12 +18,14 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// p-th percentile (0..=100) with linear interpolation; NaN-free input
-/// assumed. Empty input returns 0.0.
+/// p-th percentile with linear interpolation; NaN-free input assumed.
+/// `p` is clamped into `0..=100` (so p<0 reads the minimum and p>100 the
+/// maximum instead of indexing out of bounds). Empty input returns 0.0.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
+    let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 100.0) };
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let rank = (p / 100.0) * (v.len() as f64 - 1.0);
@@ -65,6 +67,172 @@ pub fn ecdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
             (v[idx], frac)
         })
         .collect()
+}
+
+/// Fixed-bucket log-scale histogram for streaming latency/size
+/// distributions (the telemetry registry's p50/p95/p99 source).
+///
+/// Buckets are logarithmic with [`Histogram::SUBDIV`] buckets per octave
+/// (factor-of-two range), spanning `LO = 1e-9` (1 ns when recording
+/// seconds) up to ~2^60·LO ≈ 1.15e9; values at or below `LO` land in
+/// bucket 0 and values beyond the top land in a final overflow bucket.
+/// Exact `min`/`max`/`sum` are tracked alongside, so percentiles are
+/// clamped into the true observed range (single-sample histograms report
+/// that sample exactly). Memory is a fixed ~2 KiB; recording is O(1) and
+/// allocation-free after construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Smallest resolvable value; everything ≤ this shares bucket 0.
+    pub const LO: f64 = 1e-9;
+    /// Buckets per octave (resolution ≈ 2^(1/4) ≈ 19% per bucket).
+    pub const SUBDIV: usize = 4;
+    /// Octaves covered above `LO` before the overflow bucket.
+    pub const OCTAVES: usize = 60;
+    /// Total bucket count: underflow + OCTAVES·SUBDIV + overflow.
+    pub const NBUCKETS: usize = 1 + Self::OCTAVES * Self::SUBDIV + 1;
+
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: vec![0; Self::NBUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index for `v`. NaN and values ≤ LO map to bucket 0.
+    fn bucket_of(v: f64) -> usize {
+        if v.is_nan() || v <= Self::LO {
+            return 0;
+        }
+        let octs = (v / Self::LO).log2() * Self::SUBDIV as f64;
+        // `v > LO` ⇒ octs > 0; floor+1 keeps bucket 0 exclusive to ≤ LO.
+        (octs.floor() as usize + 1).min(Self::NBUCKETS - 1)
+    }
+
+    /// Upper edge of bucket `i` (the value reported when a percentile
+    /// falls in that bucket, before clamping into [min, max]).
+    fn bucket_upper(i: usize) -> f64 {
+        if i == 0 {
+            Self::LO
+        } else {
+            Self::LO * 2f64.powf(i as f64 / Self::SUBDIV as f64)
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_nan() { 0.0 } else { v };
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Arithmetic mean of recorded values; 0.0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Exact smallest recorded value; 0.0 when empty.
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest recorded value; 0.0 when empty.
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate p-th percentile (`p` clamped into 0..=100): the upper
+    /// edge of the bucket holding the p-th ranked sample, clamped into the
+    /// exact observed [min, max]. Error is bounded by the ~19% bucket
+    /// width. Empty histograms return 0.0.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let p = if p.is_nan() { 0.0 } else { p.clamp(0.0, 100.0) };
+        // Rank of the target sample, 1-based; p=0 reads the first.
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return Histogram::bucket_upper(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Fold `other`'s samples into `self` (bucket-wise add).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples recorded in `self` but not in the earlier snapshot
+    /// `earlier` (bucket-wise saturating subtraction) — the per-round
+    /// delta the flight recorder stores. `min`/`max` keep the later
+    /// snapshot's values (exact extremes of a delta are not recoverable).
+    pub fn diff(&self, earlier: &Histogram) -> Histogram {
+        let mut out = self.clone();
+        for (a, b) in out.buckets.iter_mut().zip(&earlier.buckets) {
+            *a = a.saturating_sub(*b);
+        }
+        out.count = self.count.saturating_sub(earlier.count);
+        out.sum = (self.sum - earlier.sum).max(0.0);
+        if out.count == 0 {
+            out.min = f64::INFINITY;
+            out.max = f64::NEG_INFINITY;
+            out.sum = 0.0;
+        }
+        out
+    }
 }
 
 /// Relative deviation |a-b| / b (guarding b == 0), as a fraction.
@@ -125,5 +293,153 @@ mod tests {
         assert!((rel_dev(105.0, 100.0) - 0.05).abs() < 1e-12);
         assert_eq!(rel_dev(0.0, 0.0), 0.0);
         assert!(rel_dev(1.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        let xs = [7.5];
+        for p in [0.0, 25.0, 50.0, 99.9, 100.0] {
+            assert_eq!(percentile(&xs, p), 7.5);
+        }
+        assert_eq!(median(&xs), 7.5);
+    }
+
+    #[test]
+    fn percentile_clamps_out_of_range_p() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        // p < 0 reads the minimum, p > 100 the maximum — no OOB panic.
+        assert_eq!(percentile(&xs, -10.0), 1.0);
+        assert_eq!(percentile(&xs, 150.0), 4.0);
+        assert_eq!(percentile(&xs, f64::NAN), 1.0);
+        assert_eq!(percentile(&[], 150.0), 0.0);
+    }
+
+    #[test]
+    fn median_and_ecdf_degenerate_inputs() {
+        assert_eq!(median(&[]), 0.0);
+        let one = ecdf(&[3.0], 4);
+        assert_eq!(one.len(), 4);
+        assert!(one.iter().all(|&(v, _)| v == 3.0));
+        assert!((one.last().unwrap().1 - 1.0).abs() < 1e-12);
+        assert!(ecdf(&[1.0, 2.0], 0).is_empty());
+    }
+
+    #[test]
+    fn histogram_empty_and_single() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+
+        let mut h = Histogram::new();
+        h.record(0.125);
+        // A single sample is reported exactly at every percentile: the
+        // bucket edge is clamped into [min, max] = [v, v].
+        for p in [0.0, 50.0, 99.0, 100.0, 250.0] {
+            assert_eq!(h.percentile(p), 0.125);
+        }
+        assert_eq!(h.mean(), 0.125);
+        assert_eq!(h.min(), 0.125);
+        assert_eq!(h.max(), 0.125);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // Values at/below LO land in bucket 0 and report as min.
+        let mut h = Histogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(Histogram::LO);
+        h.record(f64::NAN); // treated as 0.0
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.percentile(100.0), Histogram::LO);
+        assert_eq!(h.min(), -3.0);
+
+        // Distinct octaves land in distinct buckets: p50 of {1ms, 1s}
+        // must not collapse to one value.
+        let mut h = Histogram::new();
+        h.record(1e-3);
+        h.record(1.0);
+        let p25 = h.percentile(25.0);
+        let p100 = h.percentile(100.0);
+        assert!(p25 < 2e-3, "p25 {p25} should sit near the 1ms sample");
+        assert_eq!(p100, 1.0);
+        // Percentile approximation stays within one bucket width (~19%).
+        assert!(p25 >= 1e-3, "bucket upper edge can't undercut the sample");
+
+        // Far beyond the top edge: clamped into the overflow bucket but
+        // max stays exact.
+        let mut h = Histogram::new();
+        h.record(1e30);
+        assert_eq!(h.percentile(50.0), 1e30);
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined_stream() {
+        // Dyadic values: float sums are exact in any accumulation order,
+        // so merged and whole-stream histograms compare bit-equal.
+        let xs: Vec<f64> = (1..=50).map(|i| i as f64 * 0.25).collect();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut whole = Histogram::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            whole.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+        assert_eq!(a.count(), 50);
+        assert!((a.sum() - whole.sum()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let mut h = Histogram::new();
+        let mut rng_state = 0x9e3779b97f4a7c15u64;
+        for _ in 0..1000 {
+            // Cheap xorshift spread over several orders of magnitude.
+            rng_state ^= rng_state << 13;
+            rng_state ^= rng_state >> 7;
+            rng_state ^= rng_state << 17;
+            let v = (rng_state % 1_000_000) as f64 * 1e-6;
+            h.record(v);
+        }
+        let mut last = f64::NEG_INFINITY;
+        for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+            let v = h.percentile(p);
+            assert!(
+                v >= last,
+                "percentile must be monotone in p: p{p} gave {v} < {last}"
+            );
+            last = v;
+        }
+        assert!(h.percentile(99.0) <= h.max());
+        assert!(h.percentile(50.0) >= h.min());
+    }
+
+    #[test]
+    fn histogram_diff_is_the_delta() {
+        let mut earlier = Histogram::new();
+        earlier.record(0.5);
+        earlier.record(2.0);
+        let mut later = earlier.clone();
+        later.record(8.0);
+        later.record(8.0);
+        let d = later.diff(&earlier);
+        assert_eq!(d.count(), 2);
+        assert!((d.sum() - 16.0).abs() < 1e-12);
+        assert_eq!(d.percentile(50.0), 8.0);
+        // Identical snapshots diff to an empty histogram.
+        let z = earlier.diff(&earlier);
+        assert!(z.is_empty());
+        assert_eq!(z.percentile(99.0), 0.0);
+        assert_eq!(z.sum(), 0.0);
     }
 }

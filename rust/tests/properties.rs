@@ -867,3 +867,58 @@ fn staged_tesserae_matches_monolithic_replay() {
         }
     }
 }
+
+// ========================================================== telemetry
+
+/// ISSUE 7's determinism contract: telemetry is write-only — spans,
+/// metrics and the flight recorder are recorded on the decision path but
+/// never read by it — so churned multi-round decision sequences must be
+/// bit-identical with telemetry enabled vs disabled, for every scheduler
+/// family (Tesserae matching/packing, Gavel's LP rounds, POP's recursive
+/// sub-schedulers on pool workers).
+#[test]
+fn decisions_bit_identical_with_telemetry_on_and_off() {
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+    use tesserae::experiments::scalability::{churn_active_jobs, synthetic_active_jobs};
+    use tesserae::experiments::{build_scheduler, SchedKind};
+    use tesserae::profiler::Profiler;
+    use tesserae::schedulers::RoundInput;
+
+    let spec = ClusterSpec::new(6, 4, GpuType::A100);
+    for seed in [7u64, 29] {
+        for kind in [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(3)] {
+            let run = |telemetry: bool| {
+                // The guard's global lock also serializes the two arms
+                // against any other telemetry-toggling test in this binary.
+                let _guard = tesserae::obs::enabled_guard(telemetry);
+                let truth = Profiler::new(spec.gpu_type, seed);
+                let source: Arc<dyn ThroughputSource> =
+                    Arc::new(CachedSource::new(OracleEstimator::new(truth)));
+                let mut sched = build_scheduler(kind, source, Arc::new(HungarianEngine));
+                let mut active = synthetic_active_jobs(40, seed);
+                let mut prev = PlacementPlan::new(spec.total_gpus());
+                let mut decisions = Vec::new();
+                for round in 0..4u64 {
+                    let d = sched.decide(&RoundInput {
+                        now: round as f64 * 360.0,
+                        round,
+                        active: &active,
+                        prev_plan: &prev,
+                        spec: &spec,
+                    });
+                    prev = d.plan.clone();
+                    decisions.push((d.plan, d.strategies, d.packed_pairs, d.migrations));
+                    active = churn_active_jobs(&active, seed ^ (round + 13));
+                }
+                decisions
+            };
+            let off = run(false);
+            let on = run(true);
+            assert_eq!(
+                off, on,
+                "{kind:?} seed {seed}: enabling telemetry changed the decisions"
+            );
+        }
+    }
+}
