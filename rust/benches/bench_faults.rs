@@ -1,0 +1,183 @@
+//! Fault-injection benchmarks: the robustness counterpart to
+//! `bench_e2e_sim`.
+//!
+//! Emits `BENCH_faults.json` with the fault-matrix rows (MTBF sweep ×
+//! Tesserae-T / Gavel / POP) — avg JCT, worst FTF, migrations, evictions,
+//! preemptions, replacements, stragglers and degraded rounds per cell —
+//! and asserts two contracts inline:
+//!
+//!  * rate 0 is bit-parity: a run with `FaultPlan::none()` reproduces the
+//!    plain simulator decisions exactly, for all three scheduler families;
+//!  * at the "paper" fault rate every job still completes and the JCT
+//!    degradation stays bounded (< 3x the fault-free JCT).
+//!
+//! Everything is deterministic per seed; the same seeds always produce the
+//! same JSON.
+//!
+//! Scale override: TESSERAE_BENCH_SCALE=quick|standard|paper
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) runs the parity
+//! check plus one faulted cell at quick scale, writing no JSON.
+
+use tesserae::cluster::GpuType;
+use tesserae::experiments::faults::{fault_scenarios, run_fault_matrix, run_sim_faulted};
+use tesserae::experiments::{run_sim, Scale, SchedKind};
+use tesserae::faults::FaultPlan;
+use tesserae::simulator::SimResult;
+use tesserae::util::json::Json;
+
+fn scale() -> Scale {
+    match std::env::var("TESSERAE_BENCH_SCALE").as_deref() {
+        Ok("quick") => Scale::quick(),
+        Ok("paper") => Scale::paper(),
+        _ => Scale::standard(),
+    }
+}
+
+/// Rate-0 bit-parity: `FaultPlan::none()` through the fault path must be
+/// indistinguishable from the plain simulator, decision for decision.
+fn assert_rate_zero_parity(scale: &Scale) {
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    for kind in [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(4)] {
+        let plain = run_sim(kind, &trace, spec, scale.seed, 0.0);
+        let faulted = run_sim_faulted(kind, &trace, spec, scale.seed, &FaultPlan::none());
+        assert_eq!(
+            plain.avg_jct.to_bits(),
+            faulted.avg_jct.to_bits(),
+            "{}: rate-0 JCT parity broken",
+            plain.scheduler
+        );
+        assert_eq!(plain.makespan.to_bits(), faulted.makespan.to_bits());
+        assert_eq!(plain.total_migrations, faulted.total_migrations);
+        assert_eq!(plain.rounds, faulted.rounds);
+        assert_eq!(faulted.evictions + faulted.preemptions + faulted.stragglers, 0);
+        assert_eq!(faulted.degraded_rounds, 0);
+        for (id, a) in &plain.outcomes {
+            assert_eq!(a.jct.to_bits(), faulted.outcomes[id].jct.to_bits());
+            assert_eq!(a.migrations, faulted.outcomes[id].migrations);
+        }
+        println!(
+            "  rate-0 parity ok: {} ({} rounds, avg JCT {:.0}s)",
+            plain.scheduler, plain.rounds, plain.avg_jct
+        );
+    }
+}
+
+fn cell_json(scenario: &str, kind: SchedKind, r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("scenario", Json::str(scenario)),
+        ("scheduler", Json::str(&kind.label())),
+        ("avg_jct_s", Json::num(r.avg_jct)),
+        ("makespan_s", Json::num(r.makespan)),
+        ("worst_ftf", Json::num(r.worst_ftf())),
+        ("rounds", Json::num(r.rounds as f64)),
+        ("total_migrations", Json::num(r.total_migrations as f64)),
+        ("evictions", Json::num(r.evictions as f64)),
+        ("preemptions", Json::num(r.preemptions as f64)),
+        ("replacements", Json::num(r.replacements as f64)),
+        ("stragglers", Json::num(r.stragglers as f64)),
+        ("degraded_rounds", Json::num(r.degraded_rounds as f64)),
+        ("infeasible_pairs", Json::num(r.infeasible_pairs as f64)),
+        ("unfinished", Json::num(r.unfinished as f64)),
+    ])
+}
+
+fn main() {
+    if tesserae::util::benchutil::smoke_mode() {
+        let scale = Scale::quick();
+        println!("rate-0 bit-parity (quick scale):");
+        assert_rate_zero_parity(&scale);
+        // One faulted cell proves the fault path end-to-end.
+        let trace = scale.shockwave_trace();
+        let spec = scale.spec(GpuType::A100);
+        let scenarios = fault_scenarios(&spec, 100_000);
+        let (label, plan) = &scenarios[2]; // "paper"
+        let r = run_sim_faulted(SchedKind::TesseraeT, &trace, spec, scale.seed, plan);
+        assert_eq!(r.unfinished, 0, "faulted smoke run must drain");
+        println!(
+            "smoke cell [{label}]: {} events -> evictions={} preemptions={} \
+             replacements={} stragglers={} degraded={} avg JCT {:.0}s — no JSON written",
+            plan.len(),
+            r.evictions,
+            r.preemptions,
+            r.replacements,
+            r.stragglers,
+            r.degraded_rounds,
+            r.avg_jct
+        );
+        return;
+    }
+
+    let scale = scale();
+    println!(
+        "bench scale: {} jobs on {} GPUs\n",
+        scale.jobs,
+        scale.nodes * scale.gpus_per_node
+    );
+
+    println!("rate-0 bit-parity:");
+    assert_rate_zero_parity(&scale);
+    println!();
+
+    println!("{}\n", tesserae::experiments::faults::fault_matrix(&scale));
+
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let kinds = [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(4)];
+    let scenarios = fault_scenarios(&spec, 100_000);
+    let t0 = std::time::Instant::now();
+    let results = run_fault_matrix(&kinds, &scenarios, &trace, spec, scale.seed);
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Determinism per seed: rerun one faulted cell and compare bits.
+    let paper_idx = 2 * kinds.len(); // first scheduler of the "paper" row
+    let redo = run_sim_faulted(
+        kinds[0],
+        &trace,
+        spec,
+        scale.seed,
+        &scenarios[2].1,
+    );
+    assert_eq!(
+        results[paper_idx].avg_jct.to_bits(),
+        redo.avg_jct.to_bits(),
+        "faulted runs must be deterministic per seed"
+    );
+    assert_eq!(results[paper_idx].evictions, redo.evictions);
+
+    let mut cells = Vec::new();
+    for (si, (label, _)) in scenarios.iter().enumerate() {
+        for (ki, &kind) in kinds.iter().enumerate() {
+            let r = &results[si * kinds.len() + ki];
+            // Bounded degradation: at paper-scale fault rates the cluster
+            // must still drain, and JCT must stay within 3x of fault-free.
+            if si > 0 {
+                let base = &results[ki];
+                assert_eq!(
+                    r.unfinished, 0,
+                    "{} under '{label}' left jobs unfinished",
+                    r.scheduler
+                );
+                assert!(
+                    r.avg_jct <= 3.0 * base.avg_jct,
+                    "{} under '{label}': avg JCT {:.0}s vs fault-free {:.0}s",
+                    r.scheduler,
+                    r.avg_jct,
+                    base.avg_jct
+                );
+            }
+            cells.push(cell_json(label, kind, r));
+        }
+    }
+    println!("matrix: {} cells in {wall:.1}s", results.len());
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("faults")),
+        ("meta", tesserae::util::benchutil::bench_meta()),
+        ("cells", Json::arr(cells)),
+    ]);
+    match std::fs::write("BENCH_faults.json", json.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_faults.json"),
+        Err(e) => println!("could not write BENCH_faults.json: {e}"),
+    }
+}

@@ -65,6 +65,7 @@ fn run_rounds(
             active: &active,
             prev_plan: &prev,
             spec,
+            health: None,
         });
         allocs.push((d.timings.matching.kernel_allocs, alloc::allocs() - round_alloc0));
         prev = d.plan.clone();

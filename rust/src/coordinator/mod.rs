@@ -343,6 +343,7 @@ pub fn run_cluster(jobs: &[ExecJob], cfg: &ExecConfig) -> Result<ExecReport> {
                 active: &active,
                 prev_plan: &prev_plan,
                 spec: &spec,
+                health: None,
             },
         );
         let plan = decision.plan;

@@ -1,0 +1,228 @@
+//! Fault-matrix experiment: how each scheduler family degrades as
+//! injected failures ramp from none to harsh (§7 robustness study).
+//!
+//! Each cell runs the same trace under a generated [`FaultPlan`] — GPU and
+//! node renewal failures, random preemptions and stragglers — and reports
+//! the fault counters next to the usual JCT/FTF/migration columns. The
+//! fault-free row doubles as the rate-0 bit-parity anchor: its numbers
+//! must match a plain [`super::run_sim`] run exactly (asserted in tests
+//! and again in `bench_faults`).
+
+use std::sync::Arc;
+
+use crate::cluster::{ClusterSpec, GpuType};
+use crate::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+use crate::faults::{FaultConfig, FaultPlan};
+use crate::matching::{HungarianEngine, MatchingEngine};
+use crate::profiler::Profiler;
+use crate::simulator::{simulate, SimConfig, SimResult};
+use crate::trace::Trace;
+use crate::util::benchutil::Table;
+
+use super::{build_scheduler, Scale, SchedKind};
+
+/// [`super::run_sim`] with a fault script wired into the simulator.
+pub fn run_sim_faulted(
+    kind: SchedKind,
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+    faults: &FaultPlan,
+) -> SimResult {
+    let truth = Profiler::new(spec.gpu_type, seed);
+    let source: Arc<dyn ThroughputSource> =
+        Arc::new(CachedSource::new(OracleEstimator::new(truth.clone())));
+    let engine: Arc<dyn MatchingEngine> = Arc::new(HungarianEngine);
+    let mut sched = build_scheduler(kind, source, engine);
+    let mut cfg = SimConfig::new(spec);
+    cfg.faults = faults.clone();
+    simulate(trace, sched.as_mut(), &truth, &cfg)
+}
+
+/// The MTBF sweep rows. MTBFs are per-unit rounds: on an `n`-GPU cluster
+/// the expected cluster-wide GPU failure rate is `n / gpu_mtbf_rounds`
+/// per round. The horizon just needs to outlast the run; events past the
+/// drain round never fire.
+pub fn fault_scenarios(spec: &ClusterSpec, horizon_rounds: u64) -> Vec<(String, FaultPlan)> {
+    let gen = |label: &str, cfg: FaultConfig| {
+        (label.to_string(), FaultPlan::generate(&cfg, spec, horizon_rounds))
+    };
+    vec![
+        ("fault-free".to_string(), FaultPlan::none()),
+        gen(
+            "mild",
+            FaultConfig {
+                gpu_mtbf_rounds: 4_000.0,
+                node_mtbf_rounds: 20_000.0,
+                preempts_per_round: 0.01,
+                stragglers_per_round: 0.01,
+                seed: 11,
+                ..Default::default()
+            },
+        ),
+        gen(
+            "paper",
+            FaultConfig {
+                gpu_mtbf_rounds: 1_000.0,
+                node_mtbf_rounds: 6_000.0,
+                preempts_per_round: 0.03,
+                stragglers_per_round: 0.03,
+                seed: 12,
+                ..Default::default()
+            },
+        ),
+        gen(
+            "harsh",
+            FaultConfig {
+                gpu_mtbf_rounds: 250.0,
+                node_mtbf_rounds: 1_500.0,
+                repair_rounds: 15,
+                preempts_per_round: 0.08,
+                stragglers_per_round: 0.08,
+                seed: 13,
+                ..Default::default()
+            },
+        ),
+    ]
+}
+
+/// Run the full matrix — scenario × scheduler — on the shared worker
+/// pool. Each cell builds its own scheduler stack, so the results are
+/// bit-identical to sequential [`run_sim_faulted`] calls, in input order.
+pub fn run_fault_matrix(
+    kinds: &[SchedKind],
+    scenarios: &[(String, FaultPlan)],
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+) -> Vec<SimResult> {
+    let cells: Vec<(SchedKind, &FaultPlan)> = scenarios
+        .iter()
+        .flat_map(|(_, plan)| kinds.iter().map(move |&k| (k, plan)))
+        .collect();
+    crate::util::pool::WorkerPool::global().map(&cells, 0, 1, |_, &(kind, plan)| {
+        run_sim_faulted(kind, trace, spec, seed, plan)
+    })
+}
+
+/// The printable fault matrix (the `figure faults` CLI entry).
+pub fn fault_matrix(scale: &Scale) -> String {
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let kinds = [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(4)];
+    let scenarios = fault_scenarios(&spec, 100_000);
+    let results = run_fault_matrix(&kinds, &scenarios, &trace, spec, scale.seed);
+
+    let mut t = Table::new(&[
+        "scenario",
+        "scheduler",
+        "avg JCT (s)",
+        "worst FTF",
+        "migr",
+        "evict",
+        "preempt",
+        "replace",
+        "straggle",
+        "degraded",
+        "unfinished",
+    ]);
+    for (si, (label, plan)) in scenarios.iter().enumerate() {
+        for (ki, kind) in kinds.iter().enumerate() {
+            let r = &results[si * kinds.len() + ki];
+            t.row(&[
+                format!("{label} ({} ev)", plan.len()),
+                kind.label(),
+                format!("{:.0}", r.avg_jct),
+                format!("{:.2}", r.worst_ftf()),
+                format!("{}", r.total_migrations),
+                format!("{}", r.evictions),
+                format!("{}", r.preemptions),
+                format!("{}", r.replacements),
+                format!("{}", r.stragglers),
+                format!("{}", r.degraded_rounds),
+                format!("{}", r.unfinished),
+            ]);
+        }
+    }
+    format!(
+        "Fault matrix — MTBF sweep × schedulers (rate 0 row is the bit-parity anchor)\n{}",
+        t.render()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale {
+            jobs: 12,
+            nodes: 2,
+            gpus_per_node: 2,
+            jobs_per_hour: 240.0,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn fault_free_row_matches_plain_run_bitwise() {
+        let scale = tiny();
+        let trace = scale.shockwave_trace();
+        let spec = scale.spec(GpuType::A100);
+        let faulted = run_sim_faulted(
+            SchedKind::TesseraeT,
+            &trace,
+            spec,
+            scale.seed,
+            &FaultPlan::none(),
+        );
+        let plain = super::super::run_sim(SchedKind::TesseraeT, &trace, spec, scale.seed, 0.0);
+        assert_eq!(faulted.avg_jct.to_bits(), plain.avg_jct.to_bits());
+        assert_eq!(faulted.makespan.to_bits(), plain.makespan.to_bits());
+        assert_eq!(faulted.total_migrations, plain.total_migrations);
+        assert_eq!(faulted.rounds, plain.rounds);
+        assert_eq!(faulted.evictions, 0);
+        assert_eq!(faulted.degraded_rounds, 0);
+    }
+
+    #[test]
+    fn matrix_cells_match_sequential_and_are_deterministic() {
+        let scale = tiny();
+        let trace = scale.shockwave_trace();
+        let spec = scale.spec(GpuType::A100);
+        let kinds = [SchedKind::TesseraeT, SchedKind::Gavel];
+        // A hand-rolled harsh scenario small enough for a unit test.
+        let scenarios = vec![
+            ("none".to_string(), FaultPlan::none()),
+            (
+                "faulty".to_string(),
+                FaultPlan::generate(
+                    &FaultConfig {
+                        gpu_mtbf_rounds: 60.0,
+                        preempts_per_round: 0.05,
+                        seed: 5,
+                        ..Default::default()
+                    },
+                    &spec,
+                    2_000,
+                ),
+            ),
+        ];
+        let par = run_fault_matrix(&kinds, &scenarios, &trace, spec, scale.seed);
+        assert_eq!(par.len(), 4);
+        let mut i = 0;
+        for (_, plan) in &scenarios {
+            for &kind in &kinds {
+                let seq = run_sim_faulted(kind, &trace, spec, scale.seed, plan);
+                assert_eq!(par[i].scheduler, seq.scheduler);
+                assert_eq!(par[i].avg_jct.to_bits(), seq.avg_jct.to_bits());
+                assert_eq!(par[i].total_migrations, seq.total_migrations);
+                assert_eq!(par[i].evictions, seq.evictions);
+                assert_eq!(par[i].preemptions, seq.preemptions);
+                assert_eq!(par[i].replacements, seq.replacements);
+                assert_eq!(par[i].unfinished, seq.unfinished);
+                i += 1;
+            }
+        }
+    }
+}

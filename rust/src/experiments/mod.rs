@@ -5,6 +5,7 @@
 
 pub mod ablations;
 pub mod end_to_end;
+pub mod faults;
 pub mod scalability;
 
 use std::sync::Arc;

@@ -100,6 +100,7 @@ pub fn measure_decision(
         active: &active,
         prev_plan: &prev,
         spec,
+        health: None,
     });
     let churned = churn_active_jobs(&active, seed ^ 0x5eed);
     sched
@@ -109,6 +110,7 @@ pub fn measure_decision(
             active: &churned,
             prev_plan: &warm.plan,
             spec,
+            health: None,
         })
         .timings
 }

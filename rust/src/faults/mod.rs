@@ -1,0 +1,466 @@
+//! Deterministic fault injection: seeded failure/recovery/preemption/
+//! straggler event plans consumed by the simulator between rounds, plus
+//! the per-GPU health state the schedulers consume during rounds.
+//!
+//! Two pieces:
+//!
+//! - [`FaultPlan`]: an ordered script of [`FaultEvent`]s, either written
+//!   explicitly (tests, targeted scenarios) or generated from
+//!   [`FaultConfig`] rates with a seeded [`Pcg64`] — the same config +
+//!   seed always produces the same plan, so every faulted run replays
+//!   exactly.
+//! - [`ClusterHealth`]: a per-GPU *down-counter* (not a bool): node
+//!   failures and single-GPU failures compose — a GPU inside a failed
+//!   node that also failed individually stays dead until **both**
+//!   recoveries land. `RoundInput.health` carries `Some(&ClusterHealth)`
+//!   only when at least one GPU is down; `None` keeps every scheduler on
+//!   its pre-fault code path, which is what makes the rate-0 bit-parity
+//!   contract trivial to uphold and test.
+//!
+//! Eviction/re-placement semantics live in the simulator (jobs on dead
+//! GPUs leave the committed plan and re-enter the job window); degraded-
+//! mode fallback lives in `pipeline::run_round`.
+
+use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::jobs::JobId;
+use crate::util::rng::Pcg64;
+
+/// Job ids from this value down are reserved for the migration matcher's
+/// dead-GPU blocker pseudo-jobs (`BLOCKER_BASE - gpu`); real workloads
+/// never reach them.
+pub const BLOCKER_BASE: JobId = u64::MAX;
+
+/// One kind of injected fault. `Preempt`/`Straggle` carry a raw `pick`
+/// draw instead of a job id so plans generated before the simulation
+/// starts stay meaningful: the simulator resolves `pick % candidates`
+/// against the deterministic, id-sorted candidate set of that round.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// One GPU dies (its down-counter increments).
+    GpuFail(usize),
+    /// One GPU's failure is repaired (down-counter decrements).
+    GpuRecover(usize),
+    /// Every GPU on the node dies.
+    NodeFail(usize),
+    /// The node repair lands.
+    NodeRecover(usize),
+    /// Evict one running job from the committed plan; it re-enters the
+    /// job window and is re-placed by the scheduler next round.
+    Preempt { pick: u64 },
+    /// Slow one active job's progress rate by `factor` for `rounds`
+    /// rounds.
+    Straggle { pick: u64, factor: f64, rounds: u64 },
+}
+
+/// One scheduled fault: `kind` fires just before round `round` decides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub round: u64,
+    pub kind: FaultKind,
+}
+
+/// Rates for [`FaultPlan::generate`]. All rates default to 0 (no
+/// events); `mtbf` fields are in rounds (mean time between failures per
+/// GPU / per node), `preempts_per_round`/`stragglers_per_round` are
+/// expected event counts per round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Mean rounds between failures of each individual GPU (0 = never).
+    pub gpu_mtbf_rounds: f64,
+    /// Mean rounds between whole-node failures of each node (0 = never).
+    pub node_mtbf_rounds: f64,
+    /// Rounds a failed GPU/node stays down before its recovery fires.
+    pub repair_rounds: u64,
+    /// Expected job preemptions per round.
+    pub preempts_per_round: f64,
+    /// Expected new stragglers per round.
+    pub stragglers_per_round: f64,
+    /// Progress-rate multiplier applied to a straggling job (0 < f ≤ 1).
+    pub straggler_factor: f64,
+    /// Rounds a straggler stays slowed.
+    pub straggler_rounds: u64,
+    /// Seed for the event draws.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            gpu_mtbf_rounds: 0.0,
+            node_mtbf_rounds: 0.0,
+            repair_rounds: 10,
+            preempts_per_round: 0.0,
+            stragglers_per_round: 0.0,
+            straggler_factor: 0.5,
+            straggler_rounds: 5,
+            seed: 1,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether this config can ever emit an event.
+    pub fn is_zero(&self) -> bool {
+        self.gpu_mtbf_rounds <= 0.0
+            && self.node_mtbf_rounds <= 0.0
+            && self.preempts_per_round <= 0.0
+            && self.stragglers_per_round <= 0.0
+    }
+}
+
+/// A deterministic, round-ordered script of fault events.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: a faultless run, bit-identical to pre-fault code.
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// An explicit script. Events are stably sorted by round, so
+    /// within-round order is the order given.
+    pub fn from_events(mut events: Vec<FaultEvent>) -> FaultPlan {
+        events.sort_by_key(|e| e.round);
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Every event scheduled in `[from, to)`, in firing order. The
+    /// half-open range lets the simulator's idle-gap skip apply the
+    /// health effects of events inside the skipped window.
+    pub fn events_in(&self, from: u64, to: u64) -> &[FaultEvent] {
+        let lo = self.events.partition_point(|e| e.round < from);
+        let hi = self.events.partition_point(|e| e.round < to);
+        &self.events[lo..hi]
+    }
+
+    /// Generate a plan from rates: per-GPU and per-node renewal failure
+    /// processes (exponential inter-failure gaps, fixed repair time) plus
+    /// per-round Poisson-ish preemption/straggler draws. Deterministic in
+    /// (`cfg`, `spec`, `horizon_rounds`).
+    pub fn generate(cfg: &FaultConfig, spec: &ClusterSpec, horizon_rounds: u64) -> FaultPlan {
+        if cfg.is_zero() {
+            return FaultPlan::none();
+        }
+        let mut rng = Pcg64::new(cfg.seed ^ 0xfa_017);
+        let mut events = Vec::new();
+        let repair = cfg.repair_rounds.max(1);
+        let renewal = |mtbf: f64, rng: &mut Pcg64, emit: &mut dyn FnMut(u64, u64)| {
+            if mtbf <= 0.0 {
+                return;
+            }
+            let mut t = 0u64;
+            loop {
+                // Exponential gap, at least one round so fail/recover
+                // never collide on the same unit in the same round.
+                let gap = (-mtbf * (1.0 - rng.f64()).ln()).ceil().max(1.0);
+                if gap >= horizon_rounds as f64 {
+                    return; // avoid u64 overflow on tiny rates
+                }
+                t = t.saturating_add(gap as u64);
+                if t >= horizon_rounds {
+                    return;
+                }
+                emit(t, t + repair);
+                t += repair;
+            }
+        };
+        for g in 0..spec.total_gpus() {
+            renewal(cfg.gpu_mtbf_rounds, &mut rng, &mut |fail, recover| {
+                events.push(FaultEvent { round: fail, kind: FaultKind::GpuFail(g) });
+                events.push(FaultEvent { round: recover, kind: FaultKind::GpuRecover(g) });
+            });
+        }
+        for n in 0..spec.num_nodes {
+            renewal(cfg.node_mtbf_rounds, &mut rng, &mut |fail, recover| {
+                events.push(FaultEvent { round: fail, kind: FaultKind::NodeFail(n) });
+                events.push(FaultEvent { round: recover, kind: FaultKind::NodeRecover(n) });
+            });
+        }
+        // Per-round expected-count draws: floor(λ) guaranteed events plus
+        // one Bernoulli(frac(λ)) extra.
+        let per_round = |rate: f64, rng: &mut Pcg64, emit: &mut dyn FnMut(u64, &mut Pcg64)| {
+            if rate <= 0.0 {
+                return;
+            }
+            for r in 1..horizon_rounds {
+                let mut count = rate.floor() as u64;
+                if rng.f64() < rate.fract() {
+                    count += 1;
+                }
+                for _ in 0..count {
+                    emit(r, rng);
+                }
+            }
+        };
+        per_round(cfg.preempts_per_round, &mut rng, &mut |r, rng| {
+            events.push(FaultEvent {
+                round: r,
+                kind: FaultKind::Preempt { pick: rng.next_u64() },
+            });
+        });
+        per_round(cfg.stragglers_per_round, &mut rng, &mut |r, rng| {
+            events.push(FaultEvent {
+                round: r,
+                kind: FaultKind::Straggle {
+                    pick: rng.next_u64(),
+                    factor: cfg.straggler_factor.clamp(0.05, 1.0),
+                    rounds: cfg.straggler_rounds.max(1),
+                },
+            });
+        });
+        FaultPlan::from_events(events)
+    }
+}
+
+/// Per-GPU health: a down-counter per GPU so overlapping failure domains
+/// (node + individual GPU) compose; a GPU is healthy iff its counter is
+/// zero.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterHealth {
+    down: Vec<u32>,
+    num_down: usize,
+}
+
+impl ClusterHealth {
+    /// All GPUs healthy.
+    pub fn new(total_gpus: usize) -> ClusterHealth {
+        ClusterHealth { down: vec![0; total_gpus], num_down: 0 }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.down.len()
+    }
+
+    #[inline]
+    pub fn is_healthy(&self, gpu: usize) -> bool {
+        self.down[gpu] == 0
+    }
+
+    pub fn all_healthy(&self) -> bool {
+        self.num_down == 0
+    }
+
+    pub fn num_healthy(&self) -> usize {
+        self.down.len() - self.num_down
+    }
+
+    /// GPUs currently down, ascending.
+    pub fn dead_gpus(&self) -> Vec<usize> {
+        (0..self.down.len()).filter(|&g| self.down[g] > 0).collect()
+    }
+
+    /// Increment one GPU's down-counter; returns true if it just died.
+    pub fn fail_gpu(&mut self, gpu: usize) -> bool {
+        self.down[gpu] += 1;
+        if self.down[gpu] == 1 {
+            self.num_down += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Decrement one GPU's down-counter (saturating: a recovery without
+    /// a matching failure is ignored); returns true if it just revived.
+    pub fn recover_gpu(&mut self, gpu: usize) -> bool {
+        if self.down[gpu] == 0 {
+            return false;
+        }
+        self.down[gpu] -= 1;
+        if self.down[gpu] == 0 {
+            self.num_down -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fail every GPU of `node`; returns the GPUs that just died.
+    pub fn fail_node(&mut self, spec: &ClusterSpec, node: usize) -> Vec<usize> {
+        spec.gpus_of_node(node).filter(|&g| self.fail_gpu(g)).collect()
+    }
+
+    /// Recover every GPU of `node`; returns the GPUs that just revived.
+    pub fn recover_node(&mut self, spec: &ClusterSpec, node: usize) -> Vec<usize> {
+        spec.gpus_of_node(node).filter(|&g| self.recover_gpu(g)).collect()
+    }
+
+    /// Apply one event's health effect (preemptions/stragglers are not
+    /// health events and are ignored here); returns the GPUs whose state
+    /// flipped dead↔alive.
+    pub fn apply(&mut self, spec: &ClusterSpec, kind: &FaultKind) -> Vec<usize> {
+        match kind {
+            FaultKind::GpuFail(g) => {
+                if self.fail_gpu(*g) {
+                    vec![*g]
+                } else {
+                    Vec::new()
+                }
+            }
+            FaultKind::GpuRecover(g) => {
+                if self.recover_gpu(*g) {
+                    vec![*g]
+                } else {
+                    Vec::new()
+                }
+            }
+            FaultKind::NodeFail(n) => self.fail_node(spec, *n),
+            FaultKind::NodeRecover(n) => self.recover_node(spec, *n),
+            FaultKind::Preempt { .. } | FaultKind::Straggle { .. } => Vec::new(),
+        }
+    }
+
+    /// Cross-check a plan against health: no real job may occupy a dead
+    /// GPU (blocker pseudo-jobs are the one sanctioned tenant).
+    pub fn validate_plan(&self, plan: &PlacementPlan) -> Result<(), String> {
+        assert_eq!(plan.num_gpus(), self.down.len(), "health/plan width mismatch");
+        for g in 0..plan.num_gpus() {
+            if self.down[g] == 0 {
+                continue;
+            }
+            for &j in plan.jobs_on(g) {
+                if j < BLOCKER_BASE - plan.num_gpus() as u64 {
+                    return Err(format!("job {j} placed on dead GPU {g}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuType;
+
+    fn spec() -> ClusterSpec {
+        ClusterSpec::new(3, 4, GpuType::A100)
+    }
+
+    #[test]
+    fn zero_rates_generate_no_events() {
+        let plan = FaultPlan::generate(&FaultConfig::default(), &spec(), 1000);
+        assert!(plan.is_empty());
+        assert_eq!(plan, FaultPlan::none());
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let cfg = FaultConfig {
+            gpu_mtbf_rounds: 40.0,
+            node_mtbf_rounds: 120.0,
+            preempts_per_round: 0.3,
+            stragglers_per_round: 0.2,
+            seed: 9,
+            ..Default::default()
+        };
+        let a = FaultPlan::generate(&cfg, &spec(), 500);
+        let b = FaultPlan::generate(&cfg, &spec(), 500);
+        assert!(!a.is_empty(), "rates should produce events over 500 rounds");
+        assert_eq!(a, b, "same seed must replay the same plan");
+        let c = FaultPlan::generate(&FaultConfig { seed: 10, ..cfg }, &spec(), 500);
+        assert_ne!(a, c, "different seed should draw a different plan");
+    }
+
+    #[test]
+    fn generated_events_are_sorted_and_in_horizon() {
+        let cfg = FaultConfig {
+            gpu_mtbf_rounds: 25.0,
+            preempts_per_round: 0.5,
+            seed: 4,
+            ..Default::default()
+        };
+        let plan = FaultPlan::generate(&cfg, &spec(), 200);
+        let rounds: Vec<u64> = plan.events().iter().map(|e| e.round).collect();
+        assert!(rounds.windows(2).all(|w| w[0] <= w[1]), "not sorted: {rounds:?}");
+        // Failures land inside the horizon; trailing recoveries may spill
+        // past it (the repair of a failure near the horizon edge).
+        for e in plan.events() {
+            match e.kind {
+                FaultKind::GpuRecover(_) | FaultKind::NodeRecover(_) => {}
+                _ => assert!(e.round < 200, "event past horizon: {e:?}"),
+            }
+        }
+        // Every failure has its recovery exactly repair_rounds later.
+        for e in plan.events() {
+            if let FaultKind::GpuFail(g) = e.kind {
+                assert!(
+                    plan.events().iter().any(|r| r.round == e.round + cfg.repair_rounds
+                        && r.kind == FaultKind::GpuRecover(g)),
+                    "failure at {} of GPU {g} has no matching recovery",
+                    e.round
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn events_in_returns_half_open_window() {
+        let plan = FaultPlan::from_events(vec![
+            FaultEvent { round: 2, kind: FaultKind::GpuFail(0) },
+            FaultEvent { round: 5, kind: FaultKind::GpuFail(1) },
+            FaultEvent { round: 5, kind: FaultKind::Preempt { pick: 3 } },
+            FaultEvent { round: 9, kind: FaultKind::GpuRecover(0) },
+        ]);
+        assert_eq!(plan.events_in(0, 2).len(), 0);
+        assert_eq!(plan.events_in(2, 3).len(), 1);
+        assert_eq!(plan.events_in(3, 6).len(), 2);
+        assert_eq!(plan.events_in(0, 100).len(), 4);
+    }
+
+    #[test]
+    fn overlapping_failure_domains_compose() {
+        let spec = spec();
+        let mut h = ClusterHealth::new(spec.total_gpus());
+        assert!(h.all_healthy());
+        // GPU 5 fails individually, then its whole node (node 1: GPUs
+        // 4..8) fails too.
+        assert!(h.fail_gpu(5));
+        let died = h.fail_node(&spec, 1);
+        assert_eq!(died, vec![4, 6, 7], "GPU 5 was already down");
+        assert_eq!(h.num_healthy(), spec.total_gpus() - 4);
+        // Node recovery alone must NOT revive GPU 5.
+        let revived = h.recover_node(&spec, 1);
+        assert_eq!(revived, vec![4, 6, 7]);
+        assert!(!h.is_healthy(5));
+        assert!(h.recover_gpu(5));
+        assert!(h.all_healthy());
+    }
+
+    #[test]
+    fn recover_without_failure_is_ignored() {
+        let mut h = ClusterHealth::new(4);
+        assert!(!h.recover_gpu(2));
+        assert!(h.all_healthy());
+    }
+
+    #[test]
+    fn validate_plan_rejects_job_on_dead_gpu() {
+        let mut h = ClusterHealth::new(4);
+        let mut plan = PlacementPlan::new(4);
+        plan.place(7, &[1, 2]);
+        assert!(h.validate_plan(&plan).is_ok());
+        h.fail_gpu(2);
+        let err = h.validate_plan(&plan).unwrap_err();
+        assert!(err.contains("job 7") && err.contains("GPU 2"), "{err}");
+        // Blocker pseudo-jobs are allowed on dead GPUs.
+        let mut blocked = PlacementPlan::new(4);
+        blocked.place(BLOCKER_BASE - 2, &[2]);
+        assert!(h.validate_plan(&blocked).is_ok());
+    }
+}

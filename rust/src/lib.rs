@@ -24,6 +24,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod estimator;
 pub mod experiments;
+pub mod faults;
 pub mod jobs;
 pub mod linalg;
 pub mod matching;

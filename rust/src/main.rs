@@ -13,6 +13,7 @@ use std::process::ExitCode;
 use tesserae::cluster::GpuType;
 use tesserae::coordinator::{run_cluster, ExecConfig, ExecJob};
 use tesserae::experiments::{self, ablations, end_to_end, scalability, Scale, SchedKind};
+use tesserae::faults::{FaultConfig, FaultPlan};
 use tesserae::trace::{Trace, TraceParams};
 use tesserae::util::checkpoint::Checkpoint;
 use tesserae::util::cli::Args;
@@ -26,8 +27,11 @@ commands:
               [--gpus-per-node G] [--gpu a100|v100] [--seed S] [--noise F]
               scheduler names: tesserae-t tesserae-ftf tiresias tiresias-single
                                gavel gavel-ftf pop
+              fault injection (deterministic per --fault-seed):
+              [--gpu-mtbf-rounds F] [--node-mtbf-rounds F] [--repair-rounds N]
+              [--preempt-rate F] [--straggler-rate F] [--fault-seed S]
   figure      <fig1|fig2|fig3|fig7|fig8|fig9|fig11|fig12|fig13|fig14|fig15|
-               fig16|fig17|fig18|table2> [--scale quick|standard|paper]
+               fig16|fig17|fig18|table2|faults> [--scale quick|standard|paper]
               fig2/fig14 also take [--budget-secs N] [--checkpoint PATH]
               (per-cell resume-safe JSON; re-runs skip completed cells)
   serve       [--jobs N] [--nodes N] [--gpus-per-node G] [--round-secs F]
@@ -149,7 +153,26 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let kind =
         parse_kind(&name).ok_or_else(|| anyhow::anyhow!("unknown scheduler '{name}'"))?;
     let noise = args.get_f64("noise", 0.0);
-    let r = experiments::run_sim(kind, &trace, scale.spec(gpu), scale.seed, noise);
+    let fault_cfg = FaultConfig {
+        gpu_mtbf_rounds: args.get_f64("gpu-mtbf-rounds", 0.0),
+        node_mtbf_rounds: args.get_f64("node-mtbf-rounds", 0.0),
+        repair_rounds: args.get_u64("repair-rounds", 10),
+        preempts_per_round: args.get_f64("preempt-rate", 0.0),
+        stragglers_per_round: args.get_f64("straggler-rate", 0.0),
+        seed: args.get_u64("fault-seed", 1),
+        ..Default::default()
+    };
+    let spec = scale.spec(gpu);
+    let r = if fault_cfg.is_zero() {
+        experiments::run_sim(kind, &trace, spec, scale.seed, noise)
+    } else {
+        if noise > 0.0 {
+            anyhow::bail!("--noise is not supported together with fault injection");
+        }
+        let plan = FaultPlan::generate(&fault_cfg, &spec, 1_000_000);
+        eprintln!("fault plan: {} events", plan.len());
+        experiments::faults::run_sim_faulted(kind, &trace, spec, scale.seed, &plan)
+    };
     println!(
         "{}: jobs={} avg JCT={:.0}s makespan={:.0}s migrations={} worst FTF={:.2} avg decision={:.4}s",
         r.scheduler,
@@ -160,6 +183,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         r.worst_ftf(),
         r.avg_decision_time()
     );
+    if !fault_cfg.is_zero() || r.degraded_rounds > 0 || r.infeasible_pairs > 0 {
+        println!(
+            "faults: evictions={} preemptions={} replacements={} stragglers={} \
+             degraded rounds={} infeasible pairs={} unfinished={}",
+            r.evictions,
+            r.preemptions,
+            r.replacements,
+            r.stragglers,
+            r.degraded_rounds,
+            r.infeasible_pairs,
+            r.unfinished
+        );
+    }
     Ok(())
 }
 
@@ -208,6 +244,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
         "fig16" => ablations::fig16_noise_sensitivity(&scale, &[0.0, 0.2, 0.4, 0.6, 0.8, 1.0]),
         "fig17" => end_to_end::fig17_gavel_trace(&scale),
         "fig18" => ablations::fig18_estimators(&scale),
+        "faults" => experiments::faults::fault_matrix(&scale),
         "table2" => end_to_end::table2_fidelity(
             args.get_usize("reps", 3),
             args.get_f64("round-secs", 0.5),

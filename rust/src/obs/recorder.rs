@@ -125,9 +125,24 @@ pub fn dump_on_failure(context: &str) -> Option<PathBuf> {
 }
 
 /// As [`dump_on_failure`] but to an explicit path (tests, embedders).
+/// Missing parent directories are created — `TESSERAE_FLIGHT_OUT` often
+/// points into a per-run artifact directory that doesn't exist yet when
+/// the failure fires.
 pub fn dump_to(path: PathBuf, context: &str) -> Option<PathBuf> {
     if lock(ring()).is_empty() {
         return None;
+    }
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            if let Err(e) = std::fs::create_dir_all(parent) {
+                crate::obs_log!(
+                    error,
+                    "flight-record dump: could not create {}: {e}",
+                    parent.display()
+                );
+                return None;
+            }
+        }
     }
     let doc = to_json(context);
     match std::fs::write(&path, doc.to_string_pretty()) {
@@ -209,6 +224,30 @@ mod tests {
         );
         assert!(doc.get("rounds").and_then(Json::as_arr).unwrap().len() == 1);
         let _ = std::fs::remove_file(&written);
+        clear();
+    }
+
+    #[test]
+    fn dump_to_creates_missing_parent_directories() {
+        let _g = crate::obs::enabled_guard(false);
+        let dir = std::env::temp_dir().join(format!(
+            "tesserae_flight_nested_{}/deep/run-7",
+            std::process::id()
+        ));
+        let path = dir.join("flight.json");
+        // Start from a clean slate so create_dir_all really has to work.
+        let _ = std::fs::remove_dir_all(
+            std::env::temp_dir().join(format!("tesserae_flight_nested_{}", std::process::id())),
+        );
+        clear();
+        record_round(record(1));
+        let written = dump_to(path.clone(), "nested-dir dump").expect("dump path");
+        assert_eq!(written, path);
+        let text = std::fs::read_to_string(&written).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(
+            std::env::temp_dir().join(format!("tesserae_flight_nested_{}", std::process::id())),
+        );
         clear();
     }
 

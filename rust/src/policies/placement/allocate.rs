@@ -4,6 +4,7 @@
 //! candidates).
 
 use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::faults::ClusterHealth;
 use crate::jobs::JobId;
 use crate::policies::JobInfo;
 
@@ -27,11 +28,31 @@ pub fn allocate_without_packing(
     spec: &ClusterSpec,
     ordered: &[&JobInfo],
 ) -> Allocation {
+    allocate_masked(spec, ordered, None)
+}
+
+/// [`allocate_without_packing`] over the healthy subset of the cluster:
+/// dead GPUs are excluded from every node's free list (a node with a dead
+/// GPU can never satisfy a whole-node placement), so no job is ever
+/// allocated onto a failed GPU. `health: None` is byte-for-byte the
+/// unmasked walk.
+pub fn allocate_masked(
+    spec: &ClusterSpec,
+    ordered: &[&JobInfo],
+    health: Option<&ClusterHealth>,
+) -> Allocation {
     let mut plan = PlacementPlan::new(spec.total_gpus());
     let mut free_per_node: Vec<Vec<usize>> = (0..spec.num_nodes)
-        .map(|n| spec.gpus_of_node(n).collect())
+        .map(|n| {
+            spec.gpus_of_node(n)
+                .filter(|&g| match health {
+                    Some(h) => h.is_healthy(g),
+                    None => true,
+                })
+                .collect()
+        })
         .collect();
-    let mut remaining = spec.total_gpus();
+    let mut remaining: usize = free_per_node.iter().map(Vec::len).sum();
     let mut placed = Vec::new();
     let mut pending = Vec::new();
 
@@ -185,5 +206,45 @@ mod tests {
         let a = allocate_without_packing(&s, &refs);
         assert_eq!(a.placed, vec![1]);
         assert_eq!(a.pending, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn masked_allocation_avoids_dead_gpus() {
+        let s = spec();
+        let mut health = ClusterHealth::new(s.total_gpus());
+        health.fail_gpu(1); // node 0 loses a GPU
+        let jobs = vec![job(1, 4), job(2, 2), job(3, 1), job(4, 1), job(5, 1)];
+        let refs: Vec<&JobInfo> = jobs.iter().collect();
+        let a = allocate_masked(&s, &refs, Some(&health));
+        // 7 healthy GPUs: the 4-GPU job must take the intact node 1.
+        assert_eq!(a.plan.gpus_of(1), vec![4, 5, 6, 7]);
+        health.validate_plan(&a.plan).unwrap();
+        // All 7 healthy GPUs are used; nothing lands on GPU 1.
+        assert_eq!(a.placed.len(), 5);
+        assert!(a.plan.jobs_on(1).is_empty());
+    }
+
+    #[test]
+    fn masked_whole_node_jobs_skip_degraded_nodes() {
+        let s = spec();
+        let mut health = ClusterHealth::new(s.total_gpus());
+        health.fail_gpu(6); // node 1 degraded: no full node pair remains
+        let jobs = vec![job(1, 8), job(2, 1)];
+        let refs: Vec<&JobInfo> = jobs.iter().collect();
+        let a = allocate_masked(&s, &refs, Some(&health));
+        assert_eq!(a.pending, vec![1], "8-GPU job needs two intact nodes");
+        assert_eq!(a.placed, vec![2]);
+    }
+
+    #[test]
+    fn none_health_is_identical_to_unmasked() {
+        let s = spec();
+        let jobs = vec![job(1, 4), job(2, 2), job(3, 1), job(4, 8)];
+        let refs: Vec<&JobInfo> = jobs.iter().collect();
+        let a = allocate_without_packing(&s, &refs);
+        let b = allocate_masked(&s, &refs, None);
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.placed, b.placed);
+        assert_eq!(a.pending, b.pending);
     }
 }

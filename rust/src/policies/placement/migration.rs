@@ -17,6 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::faults::{ClusterHealth, BLOCKER_BASE};
 use crate::jobs::JobId;
 use crate::matching::{
     node_sig, MatchingEngine, MatchingService, MatchingServiceStats, NodeSig,
@@ -74,9 +75,31 @@ pub fn migrate_with(
     engine: &dyn MatchingEngine,
     service: &mut MatchingService,
 ) -> MigrationOutcome {
+    migrate_masked(spec, prev, next, mode, engine, service, None)
+}
+
+/// [`migrate_with`] on a cluster with failed GPUs. Plans stay full-width
+/// (a dead GPU is a GPU that must host nothing, not a missing column):
+/// each dead GPU is pinned in both filtered rounds by a blocker
+/// pseudo-job (`BLOCKER_BASE - gpu`), so the matcher aligns dead GPUs
+/// with each other at zero cost, and any logical slot the permutation
+/// still lands on a dead GPU is swapped onto an empty healthy GPU in
+/// deterministic index order before migrations are counted. `health:
+/// None` (or an all-healthy state) is exactly [`migrate_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn migrate_masked(
+    spec: &ClusterSpec,
+    prev: &PlacementPlan,
+    next: &PlacementPlan,
+    mode: MigrationMode,
+    engine: &dyn MatchingEngine,
+    service: &mut MatchingService,
+    health: Option<&ClusterHealth>,
+) -> MigrationOutcome {
     let t0 = Instant::now();
     assert_eq!(prev.num_gpus(), spec.total_gpus());
     assert_eq!(next.num_gpus(), spec.total_gpus());
+    let health = health.filter(|h| !h.all_healthy());
 
     let outcome = match mode {
         MigrationMode::None | MigrationMode::GavelBaseline => MigrationOutcome {
@@ -86,13 +109,74 @@ pub fn migrate_with(
             decide_time_s: 0.0,
             service: service.take_round_stats(),
         },
-        MigrationMode::Flat => flat_migrate(prev, next, engine, service),
-        MigrationMode::Tesserae => tesserae_migrate(spec, prev, next, engine, service),
+        MigrationMode::Flat => flat_migrate(prev, next, engine, service, health),
+        MigrationMode::Tesserae => {
+            tesserae_migrate(spec, prev, next, engine, service, health)
+        }
     };
+    if let Some(h) = health {
+        debug_assert!(
+            matches!(mode, MigrationMode::None | MigrationMode::GavelBaseline)
+                || h.validate_plan(&outcome.plan).is_ok(),
+            "migration realized a job on a dead GPU: {:?}",
+            h.validate_plan(&outcome.plan)
+        );
+    }
     MigrationOutcome {
         decide_time_s: t0.elapsed().as_secs_f64(),
         ..outcome
     }
+}
+
+/// Pin every dead GPU in both filtered rounds: evict real jobs touching a
+/// dead GPU (from both plans, keeping the job sets common), then place
+/// the GPU's blocker pseudo-job in both — present on the same GPU in both
+/// rounds, it matches itself at zero cost and keeps the dead GPU out of
+/// the real jobs' alignment.
+fn inject_blockers(
+    prev_f: &mut PlacementPlan,
+    next_f: &mut PlacementPlan,
+    health: &ClusterHealth,
+) {
+    let dead = health.dead_gpus();
+    let mut evicted: BTreeSet<JobId> = BTreeSet::new();
+    for &g in &dead {
+        evicted.extend(prev_f.jobs_on(g).iter().copied());
+        evicted.extend(next_f.jobs_on(g).iter().copied());
+    }
+    if !evicted.is_empty() {
+        prev_f.remove_jobs(&evicted);
+        next_f.remove_jobs(&evicted);
+    }
+    for &g in &dead {
+        let blocker = BLOCKER_BASE - g as JobId;
+        prev_f.place(blocker, &[g]);
+        next_f.place(blocker, &[g]);
+    }
+}
+
+/// After relabeling, displace any occupied dead GPU onto an empty healthy
+/// GPU (both scanned in ascending index order — deterministic). Healthy
+/// capacity always suffices: `next` placed every job on healthy GPUs, so
+/// occupied GPUs number at most the healthy count.
+fn repair_onto_healthy(plan: PlacementPlan, health: &ClusterHealth) -> PlacementPlan {
+    let n = plan.num_gpus();
+    let occupied_dead: Vec<usize> = (0..n)
+        .filter(|&g| !health.is_healthy(g) && !plan.jobs_on(g).is_empty())
+        .collect();
+    if occupied_dead.is_empty() {
+        return plan;
+    }
+    let mut perm: Vec<usize> = (0..n).collect();
+    let mut free_healthy =
+        (0..n).filter(|&g| health.is_healthy(g) && plan.jobs_on(g).is_empty());
+    for g in occupied_dead {
+        let h = free_healthy
+            .next()
+            .expect("healthy GPUs must cover every occupied slot");
+        perm.swap(g, h);
+    }
+    plan.relabeled(&perm)
 }
 
 /// Restrict both plans to the jobs present in both rounds (Algorithm 2
@@ -120,8 +204,12 @@ fn tesserae_migrate(
     next: &PlacementPlan,
     engine: &dyn MatchingEngine,
     service: &mut MatchingService,
+    health: Option<&ClusterHealth>,
 ) -> MigrationOutcome {
-    let (prev_f, next_f) = filter_to_common(prev, next);
+    let (mut prev_f, mut next_f) = filter_to_common(prev, next);
+    if let Some(h) = health {
+        inject_blockers(&mut prev_f, &mut next_f, h);
+    }
 
     let nodes = spec.num_nodes;
     // Each node's GPU list, collected once — the compose loop below indexes
@@ -168,7 +256,10 @@ fn tesserae_migrate(
             new_gpu_of[next_g[b]] = prev_g[a];
         }
     }
-    let plan = next.relabeled(&new_gpu_of);
+    let mut plan = next.relabeled(&new_gpu_of);
+    if let Some(h) = health {
+        plan = repair_onto_healthy(plan, h);
+    }
     MigrationOutcome {
         migrations: plan.migrations_from(prev),
         cost: node_sol.cost,
@@ -186,8 +277,12 @@ fn flat_migrate(
     next: &PlacementPlan,
     engine: &dyn MatchingEngine,
     service: &mut MatchingService,
+    health: Option<&ClusterHealth>,
 ) -> MigrationOutcome {
-    let (prev_f, next_f) = filter_to_common(prev, next);
+    let (mut prev_f, mut next_f) = filter_to_common(prev, next);
+    if let Some(h) = health {
+        inject_blockers(&mut prev_f, &mut next_f, h);
+    }
 
     let n = prev.num_gpus();
     let all_gpus: Vec<usize> = (0..n).collect();
@@ -199,7 +294,10 @@ fn flat_migrate(
     for (u, &v) in sol.row_to_col.iter().enumerate() {
         new_gpu_of[v] = u;
     }
-    let plan = next.relabeled(&new_gpu_of);
+    let mut plan = next.relabeled(&new_gpu_of);
+    if let Some(h) = health {
+        plan = repair_onto_healthy(plan, h);
+    }
     MigrationOutcome {
         migrations: plan.migrations_from(prev),
         cost: sol.cost,
@@ -403,6 +501,94 @@ mod tests {
             "every instance resolved somehow: {s:?}"
         );
         assert!(s.solve_wall_s >= 0.0);
+    }
+
+    #[test]
+    fn masked_migration_keeps_jobs_off_dead_gpus() {
+        use crate::matching::MatchingService;
+        // Node 1 entirely dead: the next plan packs everything onto node 0,
+        // and the realized plan must too — dead GPUs host nothing.
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let mut health = ClusterHealth::new(4);
+        health.fail_node(&spec, 1);
+        let prev = plan(4, &[(1, &[0]), (2, &[1]), (3, &[2])]); // job 3 evicted
+        let next = plan(4, &[(2, &[0]), (1, &[1])]);
+        for mode in [MigrationMode::Tesserae, MigrationMode::Flat] {
+            let mut svc = MatchingService::with_defaults();
+            let out = migrate_masked(
+                &spec,
+                &prev,
+                &next,
+                mode,
+                &HungarianEngine,
+                &mut svc,
+                Some(&health),
+            );
+            out.plan.validate().unwrap();
+            health.validate_plan(&out.plan).unwrap();
+            assert_eq!(out.plan.jobs(), next.jobs(), "{mode:?}");
+            // Blockers never leak into the realized plan.
+            assert!(out.plan.jobs().iter().all(|&j| j < 1_000_000), "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn masked_migration_is_deterministic_and_minimizes() {
+        use crate::matching::MatchingService;
+        // GPU 1 dies; jobs keep their healthy slots, so a fault round with
+        // an unchanged remainder must realize zero migrations — twice,
+        // identically.
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let mut health = ClusterHealth::new(4);
+        health.fail_gpu(1);
+        let prev = plan(4, &[(1, &[0]), (3, &[2]), (4, &[3])]);
+        let next = plan(4, &[(1, &[0]), (3, &[2]), (4, &[3])]);
+        let run = || {
+            let mut svc = MatchingService::with_defaults();
+            migrate_masked(
+                &spec,
+                &prev,
+                &next,
+                MigrationMode::Tesserae,
+                &HungarianEngine,
+                &mut svc,
+                Some(&health),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.plan, b.plan, "masked migration must replay identically");
+        assert_eq!(a.migrations, 0, "stable jobs must not migrate: {:?}", a.plan);
+    }
+
+    #[test]
+    fn masked_none_health_matches_unmasked_bitwise() {
+        use crate::matching::MatchingService;
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let prev = plan(4, &[(1, &[0]), (4, &[1]), (2, &[2]), (3, &[3])]);
+        let next = plan(4, &[(6, &[0]), (2, &[1]), (1, &[2]), (5, &[3])]);
+        let all_healthy = ClusterHealth::new(4);
+        for mode in [MigrationMode::Tesserae, MigrationMode::Flat] {
+            let mut s1 = MatchingService::with_defaults();
+            let mut s2 = MatchingService::with_defaults();
+            let mut s3 = MatchingService::with_defaults();
+            let plain = migrate_with(&spec, &prev, &next, mode, &HungarianEngine, &mut s1);
+            let none =
+                migrate_masked(&spec, &prev, &next, mode, &HungarianEngine, &mut s2, None);
+            let healthy = migrate_masked(
+                &spec,
+                &prev,
+                &next,
+                mode,
+                &HungarianEngine,
+                &mut s3,
+                Some(&all_healthy),
+            );
+            assert_eq!(plain.plan, none.plan, "{mode:?}");
+            assert_eq!(plain.plan, healthy.plan, "{mode:?}");
+            assert_eq!(plain.migrations, none.migrations, "{mode:?}");
+            assert_eq!(plain.cost.to_bits(), healthy.cost.to_bits(), "{mode:?}");
+        }
     }
 
     #[test]

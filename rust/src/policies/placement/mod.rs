@@ -6,6 +6,8 @@ pub mod allocate;
 pub mod migration;
 pub mod packing;
 
-pub use allocate::{allocate_without_packing, Allocation};
-pub use migration::{migrate, migrate_with, MigrationMode, MigrationOutcome};
+pub use allocate::{allocate_masked, allocate_without_packing, Allocation};
+pub use migration::{
+    migrate, migrate_masked, migrate_with, MigrationMode, MigrationOutcome,
+};
 pub use packing::{pack, pack_with, PackedPair, PackingConfig, StrategyMode};

@@ -33,7 +33,7 @@ use crate::jobs::ParallelismStrategy;
 use crate::linalg::{repair_warm_start, solve_sparse_lp, CscMatrix, SparseLp, WarmStart};
 use crate::matching::{MatchingEngine, MatchingService};
 use crate::obs::metrics;
-use crate::policies::placement::{allocate_without_packing, migrate_with, MigrationMode};
+use crate::policies::placement::{allocate_masked, migrate_masked, MigrationMode};
 use crate::policies::JobInfo;
 use crate::util::pool::WorkerPool;
 
@@ -331,7 +331,13 @@ impl GavelScheduler {
             return;
         }
         crate::obs_span!("lp.prepare", { jobs: jobs.len() });
-        let total_gpus = input.spec.total_gpus();
+        // Capacity row over *healthy* GPUs: a failure shrinks `total_gpus`,
+        // which is part of the cache config, so the GPU set shrinking (or
+        // recovering) forces a cold rebuild — a stale basis sized for the
+        // old capacity is never repaired into the new instance.
+        let total_gpus = input
+            .health
+            .map_or_else(|| input.spec.total_gpus(), |h| h.num_healthy());
         let structure: Vec<(u64, u32)> = jobs.iter().map(|j| (j.id, j.num_gpus)).collect();
         let config_ok = self.lp_cache.as_ref().is_some_and(|c| {
             c.total_gpus == total_gpus
@@ -480,7 +486,7 @@ impl StageProvider for GavelScheduler {
         });
         cx.order = order;
         let ordered: Vec<&JobInfo> = cx.order.iter().map(|&i| &jobs[i]).collect();
-        let alloc = allocate_without_packing(cx.input.spec, &ordered);
+        let alloc = allocate_masked(cx.input.spec, &ordered, cx.input.health);
         cx.plan = alloc.plan;
         cx.placed = alloc.placed;
         cx.pending = alloc.pending;
@@ -519,13 +525,14 @@ impl StageProvider for GavelScheduler {
     }
 
     fn migrate(&mut self, cx: &mut RoundContext) {
-        cx.outcome = Some(migrate_with(
+        cx.outcome = Some(migrate_masked(
             cx.input.spec,
             cx.input.prev_plan,
             &cx.plan,
             self.migration,
             self.engine.as_ref(),
             &mut self.service,
+            cx.input.health,
         ));
     }
 
@@ -536,6 +543,7 @@ impl StageProvider for GavelScheduler {
             strategies: std::mem::take(&mut cx.strategies),
             packed_pairs: std::mem::take(&mut cx.packed_pairs),
             migrations: outcome.migrations,
+            degraded: false,
             timings: DecisionTimings {
                 stage_s: cx.stage_s,
                 scheduling_s: cx.stage_s[Stage::Estimate.index()]
@@ -546,6 +554,15 @@ impl StageProvider for GavelScheduler {
                 matching: outcome.service,
             },
         }
+    }
+
+    /// A panicked round may have left the cached LP half-rebuilt (the
+    /// in-place repair mutates the instance before swapping structure in);
+    /// drop it and the round scratch — the next round cold-rebuilds.
+    fn reset_after_failure(&mut self) {
+        self.lp_cache = None;
+        self.round_scores.clear();
+        self.round_pairs.clear();
     }
 }
 
@@ -608,6 +625,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         d.plan.validate().unwrap();
         let used: usize = (0..4).filter(|&g| !d.plan.jobs_on(g).is_empty()).count();
@@ -629,6 +647,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         assert!(d.plan.jobs().contains(&2));
     }
@@ -648,6 +667,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         // One GPU, two beneficial-to-pack jobs: LP should share.
         assert_eq!(d.plan.jobs().len(), 2, "{:?}", d.plan);
@@ -669,6 +689,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         assert_eq!(d.plan.jobs().len(), 1);
     }
@@ -691,6 +712,7 @@ mod tests {
                 active: &active,
                 prev_plan: &prev,
                 spec: &spec,
+                health: None,
             });
             d.timings.scheduling_s
         };
@@ -716,6 +738,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         assert_eq!(s.lp_stats(), (1, 0));
         // Same window, drifted service: the cached instance is re-patched,
@@ -731,6 +754,7 @@ mod tests {
             active: &drifted,
             prev_plan: &d1.plan,
             spec: &spec,
+            health: None,
         });
         assert_eq!(s.lp_stats(), (1, 1));
         d2.plan.validate().unwrap();
@@ -743,6 +767,7 @@ mod tests {
             active: &shrunk,
             prev_plan: &d2.plan,
             spec: &spec,
+            health: None,
         });
         assert_eq!(s.lp_stats(), (1, 1));
         assert_eq!(s.lp_repairs(), 1);
@@ -756,10 +781,92 @@ mod tests {
             active: &shrunk,
             prev_plan: &prev2,
             spec: &spec2,
+            health: None,
         });
         assert_eq!(s.lp_stats(), (2, 1));
         assert_eq!(s.lp_repairs(), 1);
         d4.plan.validate().unwrap();
+    }
+
+    #[test]
+    fn gpu_failure_shrinks_lp_capacity_and_cold_rebuilds() {
+        use crate::faults::ClusterHealth;
+        let spec = ClusterSpec::new(1, 4, GpuType::A100);
+        let active: Vec<JobInfo> = (0..6)
+            .map(|i| info(i, ModelKind::ResNet50, 1, i as f64 * 50.0))
+            .collect();
+        let prev = PlacementPlan::new(4);
+        let mut s = gavel(GavelObjective::Las, true);
+        let d1 = s.decide(&RoundInput {
+            now: 0.0,
+            round: 0,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+            health: None,
+        });
+        assert_eq!(s.lp_stats(), (1, 0));
+        // One GPU dies: the capacity row shrinks 4 → 3, which is a config
+        // change to the LP cache — cold rebuild, never a basis repair.
+        let mut health = ClusterHealth::new(4);
+        health.fail_gpu(2);
+        let d2 = s.decide(&RoundInput {
+            now: 360.0,
+            round: 1,
+            active: &active,
+            prev_plan: &d1.plan,
+            spec: &spec,
+            health: Some(&health),
+        });
+        assert_eq!(s.lp_stats(), (2, 0));
+        assert_eq!(s.lp_repairs(), 0);
+        d2.plan.validate().unwrap();
+        health.validate_plan(&d2.plan).unwrap();
+        assert!(d2.plan.jobs_on(2).is_empty());
+        // Recovery restores full capacity: rebuild again.
+        health.recover_gpu(2);
+        let d3 = s.decide(&RoundInput {
+            now: 720.0,
+            round: 2,
+            active: &active,
+            prev_plan: &d2.plan,
+            spec: &spec,
+            health: Some(&health),
+        });
+        assert_eq!(s.lp_stats(), (3, 0));
+        d3.plan.validate().unwrap();
+    }
+
+    #[test]
+    fn reset_after_failure_discards_lp_cache() {
+        let spec = ClusterSpec::new(1, 4, GpuType::A100);
+        let active: Vec<JobInfo> = (0..4)
+            .map(|i| info(i, ModelKind::ResNet50, 1, i as f64 * 50.0))
+            .collect();
+        let prev = PlacementPlan::new(4);
+        let mut s = gavel(GavelObjective::Las, true);
+        let d1 = s.decide(&RoundInput {
+            now: 0.0,
+            round: 0,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+            health: None,
+        });
+        assert_eq!(s.lp_stats(), (1, 0));
+        s.reset_after_failure();
+        // Same window again: a retained cache would be a patch; the reset
+        // forces a cold rebuild instead.
+        let d2 = s.decide(&RoundInput {
+            now: 360.0,
+            round: 1,
+            active: &active,
+            prev_plan: &d1.plan,
+            spec: &spec,
+            health: None,
+        });
+        assert_eq!(s.lp_stats(), (2, 0));
+        d2.plan.validate().unwrap();
     }
 
     #[test]
@@ -780,6 +887,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         let gen0 = s.lp_cache.as_ref().unwrap().generation;
         let shrunk: Vec<JobInfo> = active.iter().filter(|j| j.id != 3).cloned().collect();
@@ -789,6 +897,7 @@ mod tests {
             active: &shrunk,
             prev_plan: &d1.plan,
             spec: &spec,
+            health: None,
         });
         assert_eq!(s.lp_repairs(), 1);
         let cache = s.lp_cache.as_ref().unwrap();
@@ -911,6 +1020,7 @@ mod tests {
                 active: &active,
                 prev_plan: &prev,
                 spec: &spec,
+                health: None,
             });
             d.plan.validate().unwrap();
             prev = d.plan;

@@ -27,6 +27,10 @@ pub struct RoundInput<'a> {
     /// Previous round's *physical* plan (for migration minimization).
     pub prev_plan: &'a PlacementPlan,
     pub spec: &'a ClusterSpec,
+    /// Per-GPU health when at least one GPU is down; `None` on a fully
+    /// healthy cluster keeps every scheduler on the pre-fault code path
+    /// (the fault-rate-0 bit-parity contract).
+    pub health: Option<&'a crate::faults::ClusterHealth>,
 }
 
 /// Decision-time breakdown (Fig. 14(b)).
@@ -68,6 +72,10 @@ pub struct RoundDecision {
     pub packed_pairs: Vec<(JobId, JobId)>,
     /// Jobs migrated relative to the previous round (Definition 1).
     pub migrations: usize,
+    /// True when a pipeline stage failed and the driver substituted the
+    /// degraded-mode fallback (previous plan minus finished jobs and dead
+    /// GPUs) instead of a freshly computed decision.
+    pub degraded: bool,
     pub timings: DecisionTimings,
 }
 

@@ -35,7 +35,7 @@
 //! work happens, never *what* is computed. This staging is also the seam
 //! for overlapping round `r+1`'s Estimate with round `r`'s Migrate tail.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
@@ -46,7 +46,12 @@ use crate::obs::{metrics, recorder, span};
 use crate::policies::placement::MigrationOutcome;
 use crate::policies::JobInfo;
 
-use super::{RoundDecision, RoundInput};
+use super::{DecisionTimings, RoundDecision, RoundInput};
+
+/// Env var for deterministic stage-failure injection: `"<stage>@<round>"`
+/// (e.g. `pack@3`) panics that stage of that round, exercising the
+/// degraded-mode fallback end to end without patching any provider.
+pub const FAULT_INJECT_ENV: &str = "TESSERAE_FAULT_INJECT_STAGE";
 
 /// The pipeline's typed stages, in execution order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -152,6 +157,11 @@ pub trait StageProvider {
     /// `total_s` on the returned timings; the provider is responsible for
     /// the legacy breakdown fields and the matching-service stats.
     fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision;
+    /// Called by the driver after a stage panicked, before the
+    /// degraded-mode fallback is returned: discard any scratch the aborted
+    /// round may have left half-updated (e.g. a warm LP cache) so the next
+    /// round starts from a consistent state. Default: nothing to discard.
+    fn reset_after_failure(&mut self) {}
 }
 
 /// Rounds currently in flight, process-wide. POP's sub-schedulers drive
@@ -195,41 +205,60 @@ fn publish_round_metrics(decision: &RoundDecision) {
     metrics::counter_add("round.migrations", decision.migrations as u64);
 }
 
-/// Drive one round through the staged pipeline, timing each stage.
-pub fn run_round<P: StageProvider + ?Sized>(
+/// RAII balance for [`ROUND_DEPTH`]: the decrement must run even when a
+/// stage panics and the round unwinds into the degraded fallback —
+/// otherwise every later round on this process would look nested and the
+/// flight recorder would go silent.
+struct DepthGuard {
+    outermost: bool,
+}
+
+impl DepthGuard {
+    fn acquire() -> DepthGuard {
+        let depth = ROUND_DEPTH.fetch_add(1, Ordering::AcqRel);
+        DepthGuard { outermost: depth == 0 }
+    }
+}
+
+impl Drop for DepthGuard {
+    fn drop(&mut self) {
+        ROUND_DEPTH.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// True when [`FAULT_INJECT_ENV`] names this `(stage, round)`. Read per
+/// call (not cached): the var costs ~100ns against stage bodies measured
+/// in microseconds, and tests flip it at runtime.
+fn injected_failure(stage: Stage, round: u64) -> bool {
+    match std::env::var(FAULT_INJECT_ENV) {
+        Ok(v) => match v.split_once('@') {
+            Some((s, r)) => s == stage.name() && r.parse() == Ok(round),
+            None => false,
+        },
+        Err(_) => false,
+    }
+}
+
+/// Run every stage plus commit, timing each against one clock. Split out
+/// of [`run_round`] so the driver can `catch_unwind` the whole computed
+/// path as a unit.
+fn drive_stages<P: StageProvider + ?Sized>(
     provider: &mut P,
     input: &RoundInput,
+    t_total: Instant,
 ) -> RoundDecision {
-    // Telemetry state is sampled once per round: the enabled flag cannot
-    // flip mid-round for this call, and when off the only cost below is
-    // this one relaxed load per gate.
-    let telemetry = obs::enabled();
-    let base = if telemetry {
-        let depth = ROUND_DEPTH.fetch_add(1, Ordering::AcqRel);
-        // Metric deltas are only meaningful for the outermost round.
-        (depth == 0).then(metrics::snapshot)
-    } else {
-        None
-    };
-    let round_span = telemetry.then(|| {
-        span::SpanGuard::begin(
-            "round",
-            vec![
-                ("round", span::ArgValue::from(input.round)),
-                ("jobs", span::ArgValue::from(input.active.len())),
-            ],
-        )
-    });
     // Stage times are differences of boundary timestamps on one clock, so
     // they sum to the measured total by construction — OS preemption
     // anywhere lands inside some stage instead of an unattributed gap
     // (the context setup before the first boundary is attributed to
     // Estimate).
-    let t_total = Instant::now();
     let mut cx = RoundContext::new(input);
     let mut last_s = 0.0f64;
     for stage in [Stage::Estimate, Stage::Schedule, Stage::Pack, Stage::Migrate] {
         crate::obs_span!(stage.name(), { round: input.round });
+        if injected_failure(stage, input.round) {
+            panic!("injected failure: stage {} round {}", stage.name(), input.round);
+        }
         match stage {
             Stage::Estimate => provider.estimate(&mut cx),
             Stage::Schedule => provider.schedule(&mut cx),
@@ -243,6 +272,9 @@ pub fn run_round<P: StageProvider + ?Sized>(
     }
     let mut decision = {
         crate::obs_span!(Stage::Commit.name(), { round: input.round });
+        if injected_failure(Stage::Commit, input.round) {
+            panic!("injected failure: stage commit round {}", input.round);
+        }
         provider.commit(&mut cx)
     };
     cx.stage_s[Stage::Commit.index()] = t_total.elapsed().as_secs_f64() - last_s;
@@ -257,23 +289,125 @@ pub fn run_round<P: StageProvider + ?Sized>(
         "stage times must sum to the round total: {staged}s of {}s",
         decision.timings.total_s
     );
+    decision
+}
+
+/// Degraded mode (the fault-tolerance contract): when a stage fails, the
+/// round still returns a *valid* decision — the previous committed plan
+/// minus jobs that left the window and minus anything touching a dead
+/// GPU. Surviving jobs keep their GPUs (zero migrations by construction),
+/// strategies fall back to the simulator's data-parallel default, and the
+/// decision is flagged `degraded` so callers can count and re-plan next
+/// round.
+fn degraded_decision(
+    input: &RoundInput,
+    payload: &(dyn std::any::Any + Send),
+    t_total: Instant,
+) -> RoundDecision {
+    let msg = payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "non-string panic payload".to_string());
+    metrics::counter_add("round.degraded", 1);
+    crate::obs_log!(
+        warn,
+        "round {}: stage failure, falling back to previous plan: {msg}",
+        input.round
+    );
+    recorder::dump_on_failure(&format!("degraded round {}: {msg}", input.round));
+
+    let mut plan = input.prev_plan.clone();
+    let active: BTreeSet<JobId> = input.active.iter().map(|j| j.id).collect();
+    let stale: BTreeSet<JobId> = plan
+        .jobs()
+        .into_iter()
+        .filter(|j| !active.contains(j))
+        .collect();
+    if !stale.is_empty() {
+        plan.remove_jobs(&stale);
+    }
+    if let Some(h) = input.health {
+        let mut on_dead = BTreeSet::new();
+        for g in h.dead_gpus() {
+            on_dead.extend(plan.jobs_on(g).iter().copied());
+        }
+        if !on_dead.is_empty() {
+            plan.remove_jobs(&on_dead);
+        }
+    }
+    debug_assert!(plan.validate().is_ok());
+    // Survivors sit exactly where they were, so this is zero — computed
+    // (not hardcoded) to keep the simulator's plan-diff cross-check honest.
+    let migrations = plan.migrations_from(input.prev_plan);
+    RoundDecision {
+        plan,
+        strategies: BTreeMap::new(),
+        packed_pairs: Vec::new(),
+        migrations,
+        degraded: true,
+        timings: DecisionTimings {
+            total_s: t_total.elapsed().as_secs_f64(),
+            ..DecisionTimings::default()
+        },
+    }
+}
+
+/// Drive one round through the staged pipeline, timing each stage. A
+/// panic in any stage (or commit) is caught and answered with the
+/// degraded-mode fallback from [`degraded_decision`] — a round never
+/// takes the process down with it.
+pub fn run_round<P: StageProvider + ?Sized>(
+    provider: &mut P,
+    input: &RoundInput,
+) -> RoundDecision {
+    // Telemetry state is sampled once per round: the enabled flag cannot
+    // flip mid-round for this call, and when off the only cost below is
+    // this one relaxed load per gate.
+    let telemetry = obs::enabled();
+    // Metric deltas are only meaningful for the outermost round.
+    let depth = telemetry.then(DepthGuard::acquire);
+    let base = match &depth {
+        Some(g) if g.outermost => Some(metrics::snapshot()),
+        _ => None,
+    };
+    let round_span = telemetry.then(|| {
+        span::SpanGuard::begin(
+            "round",
+            vec![
+                ("round", span::ArgValue::from(input.round)),
+                ("jobs", span::ArgValue::from(input.active.len())),
+            ],
+        )
+    });
+    let t_total = Instant::now();
+    // `AssertUnwindSafe`: on the Err path the provider is only touched
+    // through `reset_after_failure`, whose contract is exactly "make any
+    // broken invariants whole"; everything else borrowed here is read-only.
+    let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        drive_stages(provider, input, t_total)
+    }));
+    let decision = match attempt {
+        Ok(decision) => decision,
+        Err(payload) => {
+            provider.reset_after_failure();
+            degraded_decision(input, payload.as_ref(), t_total)
+        }
+    };
     // Close the round span *before* draining so it lands in this round's
     // capture, then record the round into the flight recorder.
     drop(round_span);
-    if telemetry {
-        let outermost = ROUND_DEPTH.fetch_sub(1, Ordering::AcqRel) == 1;
-        if let (true, Some(base)) = (outermost, base) {
-            publish_round_metrics(&decision);
-            let metrics_delta = metrics::snapshot().delta_since(&base);
-            let spans = span::drain_events();
-            recorder::record_round(recorder::RoundRecord {
-                round: input.round,
-                label: short_type_name::<P>().to_string(),
-                total_s: decision.timings.total_s,
-                spans,
-                metrics_delta,
-            });
-        }
+    if let Some(base) = base {
+        publish_round_metrics(&decision);
+        let metrics_delta = metrics::snapshot().delta_since(&base);
+        let spans = span::drain_events();
+        recorder::record_round(recorder::RoundRecord {
+            round: input.round,
+            label: short_type_name::<P>().to_string(),
+            total_s: decision.timings.total_s,
+            spans,
+            metrics_delta,
+        });
     }
     decision
 }
@@ -307,6 +441,7 @@ mod tests {
                 strategies: cx.strategies.clone(),
                 packed_pairs: cx.packed_pairs.clone(),
                 migrations: cx.migrations,
+                degraded: false,
                 timings: DecisionTimings::default(),
             }
         }
@@ -322,6 +457,7 @@ mod tests {
             active: &[],
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         };
         let d = run_round(&mut Noop, &input);
         assert!(d.timings.total_s > 0.0);
@@ -344,6 +480,7 @@ mod tests {
             active: &[],
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         };
         let _ = run_round(&mut Noop, &input);
         // Other tests' rounds may interleave while telemetry is on; find
@@ -362,6 +499,104 @@ mod tests {
         assert!(rec.metrics_delta.counters.get("rounds").copied().unwrap_or(0) >= 1);
         assert!(rec.metrics_delta.histograms.contains_key("round.total_s"));
         crate::obs::recorder::clear();
+    }
+
+    /// Panics in `pack`; records whether the driver asked for a reset.
+    struct Exploding {
+        resets: usize,
+    }
+
+    impl StageProvider for Exploding {
+        fn estimate(&mut self, _cx: &mut RoundContext) {}
+        fn schedule(&mut self, _cx: &mut RoundContext) {}
+        fn pack(&mut self, _cx: &mut RoundContext) {
+            panic!("pack stage exploded");
+        }
+        fn migrate(&mut self, _cx: &mut RoundContext) {}
+        fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+            RoundDecision {
+                plan: cx.plan.clone(),
+                strategies: cx.strategies.clone(),
+                packed_pairs: cx.packed_pairs.clone(),
+                migrations: cx.migrations,
+                degraded: false,
+                timings: DecisionTimings::default(),
+            }
+        }
+        fn reset_after_failure(&mut self) {
+            self.resets += 1;
+        }
+    }
+
+    fn job_info(id: u64) -> crate::policies::JobInfo {
+        crate::policies::JobInfo {
+            id,
+            model: crate::jobs::ModelKind::ResNet50,
+            num_gpus: 1,
+            arrival_time: 0.0,
+            attained_service: 0.0,
+            total_iters: 100.0,
+            completed_iters: 0.0,
+            rounds_received: 0,
+            now: 0.0,
+            iso_tput: 10.0,
+        }
+    }
+
+    #[test]
+    fn stage_panic_falls_back_to_previous_plan() {
+        let spec = ClusterSpec::new(1, 4, GpuType::A100);
+        let mut prev = crate::cluster::PlacementPlan::new(4);
+        prev.place(1, &[0]);
+        prev.place(2, &[1]); // finished: not in the active window
+        prev.place(3, &[2]); // on the GPU that just died
+        let mut health = crate::faults::ClusterHealth::new(4);
+        health.fail_gpu(2);
+        let active = vec![job_info(1), job_info(3)];
+        let input = RoundInput {
+            now: 0.0,
+            round: 5,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+            health: Some(&health),
+        };
+        let mut provider = Exploding { resets: 0 };
+        let d = run_round(&mut provider, &input);
+        assert!(d.degraded, "stage panic must yield the degraded fallback");
+        assert_eq!(provider.resets, 1, "driver must reset the provider");
+        d.plan.validate().unwrap();
+        health.validate_plan(&d.plan).unwrap();
+        // Job 1 holds its slot; the finished job and the dead GPU's job
+        // are gone; nothing migrated.
+        assert_eq!(d.plan.gpus_of(1), vec![0]);
+        assert!(!d.plan.jobs().contains(&2));
+        assert!(!d.plan.jobs().contains(&3));
+        assert_eq!(d.migrations, 0);
+        assert!(d.timings.total_s > 0.0);
+    }
+
+    #[test]
+    fn injected_failure_env_hits_only_the_named_round() {
+        // Unique round number so parallel tests can't collide with the
+        // brief window this env var is set.
+        std::env::set_var(FAULT_INJECT_ENV, "schedule@424242");
+        let spec = ClusterSpec::new(1, 2, GpuType::A100);
+        let prev = crate::cluster::PlacementPlan::new(2);
+        let mut input = RoundInput {
+            now: 0.0,
+            round: 424242,
+            active: &[],
+            prev_plan: &prev,
+            spec: &spec,
+            health: None,
+        };
+        let hit = run_round(&mut Noop, &input);
+        input.round = 424243;
+        let miss = run_round(&mut Noop, &input);
+        std::env::remove_var(FAULT_INJECT_ENV);
+        assert!(hit.degraded, "named round must take the injected failure");
+        assert!(!miss.degraded, "other rounds must run clean");
     }
 
     #[test]

@@ -20,6 +20,7 @@ use std::sync::Arc;
 
 use crate::cluster::{ClusterSpec, PlacementPlan};
 use crate::estimator::ThroughputSource;
+use crate::faults::ClusterHealth;
 use crate::matching::MatchingEngine;
 use crate::policies::placement::MigrationMode;
 use crate::policies::JobInfo;
@@ -36,6 +37,10 @@ struct PopRound {
     sub_specs: Vec<ClusterSpec>,
     sub_prev: Vec<PlacementPlan>,
     node_base: Vec<usize>,
+    /// Per-partition slice of the global GPU health; `None` for partitions
+    /// whose slice is fully healthy (keeping those sub-schedulers on the
+    /// pre-fault code path, same as the global `health: None` contract).
+    sub_health: Vec<Option<ClusterHealth>>,
 }
 
 /// POP: k-way partitioned Gavel.
@@ -177,7 +182,8 @@ impl StageProvider for PopScheduler {
                 let base_gpu = node_base[p] * input.spec.gpus_per_node;
                 for g in 0..spec.total_gpus() {
                     let src = base_gpu + g;
-                    if src < input.prev_plan.num_gpus() {
+                    let src_dead = input.health.is_some_and(|h| !h.is_healthy(src));
+                    if src < input.prev_plan.num_gpus() && !src_dead {
                         for &j in input.prev_plan.jobs_on(src) {
                             if plan.jobs_on(g).contains(&j) {
                                 continue;
@@ -189,12 +195,30 @@ impl StageProvider for PopScheduler {
                 plan
             })
             .collect();
+        // Slice the global health into per-partition views so each sub-LP
+        // sees only its own dead GPUs (and fully healthy partitions stay
+        // on the unmasked path).
+        let sub_health: Vec<Option<ClusterHealth>> = (0..k)
+            .map(|p| {
+                let h = input.health?;
+                let spec = &sub_specs[p];
+                let base_gpu = node_base[p] * input.spec.gpus_per_node;
+                let mut sub = ClusterHealth::new(spec.total_gpus());
+                for g in 0..spec.total_gpus() {
+                    if !h.is_healthy(base_gpu + g) {
+                        sub.fail_gpu(g);
+                    }
+                }
+                (!sub.all_healthy()).then_some(sub)
+            })
+            .collect();
         self.round = Some(PopRound {
             k,
             groups,
             sub_specs,
             sub_prev,
             node_base,
+            sub_health,
         });
     }
 
@@ -210,6 +234,7 @@ impl StageProvider for PopScheduler {
                 active: &round.groups[p],
                 prev_plan: &round.sub_prev[p],
                 spec: &round.sub_specs[p],
+                health: round.sub_health[p].as_ref(),
             })
             .collect();
         let results = decide_partitions(&mut self.subs, &inputs, self.parallel);
@@ -253,8 +278,18 @@ impl StageProvider for PopScheduler {
             strategies: std::mem::take(&mut cx.strategies),
             packed_pairs: std::mem::take(&mut cx.packed_pairs),
             migrations: cx.migrations,
+            degraded: false,
             timings,
         }
+    }
+
+    /// Drop the retained sub-schedulers (each owns an LP cache that a
+    /// panicked partition solve may have left inconsistent) plus the round
+    /// scratch; `ensure_subs` recreates them next round.
+    fn reset_after_failure(&mut self) {
+        self.subs.clear();
+        self.round = None;
+        self.sub_timings = DecisionTimings::default();
     }
 }
 
@@ -310,6 +345,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         d.plan.validate().unwrap();
         assert!(!d.plan.jobs().is_empty());
@@ -337,6 +373,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         let mut p = pop(8);
         let dp = p.decide(&RoundInput {
@@ -345,6 +382,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         assert!(
             dp.timings.scheduling_s < dg.timings.scheduling_s,
@@ -366,6 +404,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         d.plan.validate().unwrap();
         assert_eq!(d.plan.jobs().len(), 4);
@@ -403,6 +442,7 @@ mod tests {
                 active: &drifted,
                 prev_plan: &prev_par,
                 spec: &spec,
+                health: None,
             });
             let ds = seq.decide(&RoundInput {
                 now: round as f64 * 360.0,
@@ -410,6 +450,7 @@ mod tests {
                 active: &drifted,
                 prev_plan: &prev_seq,
                 spec: &spec,
+                health: None,
             });
             assert_eq!(dp.plan, ds.plan, "round {round} plans diverge");
             assert_eq!(dp.migrations, ds.migrations, "round {round} migrations");
@@ -417,6 +458,36 @@ mod tests {
             assert_eq!(dp.strategies, ds.strategies, "round {round} strategies");
             prev_par = dp.plan;
             prev_seq = ds.plan;
+        }
+    }
+
+    #[test]
+    fn faulted_partitions_keep_jobs_off_dead_gpus() {
+        let spec = ClusterSpec::new(4, 2, GpuType::A100);
+        let active: Vec<JobInfo> = (0..10).map(|i| info(i, 1)).collect();
+        // Dead GPUs land in two different partitions; one partition stays
+        // fully healthy and must take the unmasked path.
+        let mut health = ClusterHealth::new(8);
+        health.fail_gpu(1);
+        health.fail_gpu(6);
+        let mut s = pop(4);
+        let mut prev = PlacementPlan::new(8);
+        for round in 0..3u64 {
+            let d = s.decide(&RoundInput {
+                now: round as f64 * 360.0,
+                round,
+                active: &active,
+                prev_plan: &prev,
+                spec: &spec,
+                health: Some(&health),
+            });
+            assert!(!d.degraded);
+            d.plan.validate().unwrap();
+            health.validate_plan(&d.plan).unwrap();
+            assert!(d.plan.jobs_on(1).is_empty(), "round {round} used dead GPU 1");
+            assert!(d.plan.jobs_on(6).is_empty(), "round {round} used dead GPU 6");
+            assert!(!d.plan.jobs().is_empty());
+            prev = d.plan;
         }
     }
 
@@ -433,6 +504,7 @@ mod tests {
                 active: &active,
                 prev_plan: &prev,
                 spec: &spec,
+                health: None,
             });
             d.plan.validate().unwrap();
             prev = d.plan;

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use crate::estimator::ThroughputSource;
 use crate::matching::{MatchingEngine, MatchingService, ServiceConfig};
 use crate::policies::placement::{
-    allocate_without_packing, migrate_with, pack_with, MigrationMode, PackingConfig,
+    allocate_masked, migrate_masked, pack_with, MigrationMode, PackingConfig,
 };
 use crate::policies::scheduling::SchedulingPolicy;
 use crate::policies::JobInfo;
@@ -134,7 +134,9 @@ impl StageProvider for TesseraeScheduler {
     /// across the worker pool; packing overrides individual entries).
     fn schedule(&mut self, cx: &mut RoundContext) {
         let ordered: Vec<&JobInfo> = cx.order.iter().map(|&i| &cx.input.active[i]).collect();
-        let alloc = allocate_without_packing(cx.input.spec, &ordered);
+        // Health-masked: dead GPUs never enter a node's free list, so the
+        // logical plan (and everything packed onto it) is healthy-only.
+        let alloc = allocate_masked(cx.input.spec, &ordered, cx.input.health);
         cx.plan = alloc.plan;
         cx.placed = alloc.placed;
         cx.pending = alloc.pending;
@@ -170,13 +172,14 @@ impl StageProvider for TesseraeScheduler {
     /// Migration minimization (line 16). Drains the round's service stats
     /// (packing included) into the outcome.
     fn migrate(&mut self, cx: &mut RoundContext) {
-        cx.outcome = Some(migrate_with(
+        cx.outcome = Some(migrate_masked(
             cx.input.spec,
             cx.input.prev_plan,
             &cx.plan,
             self.migration,
             self.engine.as_ref(),
             &mut self.service,
+            cx.input.health,
         ));
     }
 
@@ -187,6 +190,7 @@ impl StageProvider for TesseraeScheduler {
             strategies: std::mem::take(&mut cx.strategies),
             packed_pairs: std::mem::take(&mut cx.packed_pairs),
             migrations: outcome.migrations,
+            degraded: false,
             timings: DecisionTimings {
                 stage_s: cx.stage_s,
                 scheduling_s: cx.stage_s[Stage::Estimate.index()]
@@ -259,6 +263,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         d.plan.validate().unwrap();
         // 2 GPUs, 4 single-GPU jobs: two placed + up to two packed.
@@ -283,6 +288,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         assert!(d.packed_pairs.is_empty());
         assert_eq!(d.plan.jobs().len(), 2);
@@ -304,6 +310,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         assert!(d.plan.jobs().contains(&2));
     }
@@ -327,6 +334,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         let d2 = s.decide(&RoundInput {
             now: 360.0,
@@ -334,6 +342,7 @@ mod tests {
             active: &active,
             prev_plan: &d1.plan,
             spec: &spec,
+            health: None,
         });
         assert_eq!(d2.migrations, 0, "plan1 {:?} plan2 {:?}", d1.plan, d2.plan);
     }
@@ -350,6 +359,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         assert!(d.timings.total_s > 0.0);
         assert!(d.timings.total_s >= d.timings.migration_s);
@@ -394,6 +404,7 @@ mod tests {
                 active: &active,
                 prev_plan: &prev_fast,
                 spec: &spec,
+                health: None,
             });
             let ds = slow.decide(&RoundInput {
                 now: round as f64 * 360.0,
@@ -401,6 +412,7 @@ mod tests {
                 active: &active,
                 prev_plan: &prev_slow,
                 spec: &spec,
+                health: None,
             });
             assert_eq!(df.plan, ds.plan, "round {round} plans diverged");
             assert_eq!(df.migrations, ds.migrations);
@@ -408,6 +420,45 @@ mod tests {
             prev_fast = df.plan;
             prev_slow = ds.plan;
         }
+    }
+
+    #[test]
+    fn faulted_cluster_schedules_around_dead_gpus() {
+        let spec = ClusterSpec::new(2, 2, GpuType::A100);
+        let mut health = crate::faults::ClusterHealth::new(4);
+        health.fail_gpu(0);
+        let active = vec![
+            info(1, ModelKind::ResNet50, 2, 50.0),
+            info(2, ModelKind::Dcgan, 1, 30.0),
+            info(3, ModelKind::PointNet, 1, 20.0),
+        ];
+        let mut s = make(TesseraeScheduler::tesserae_t);
+        let mut prev = PlacementPlan::new(4);
+        for round in 0..3u64 {
+            let d = s.decide(&RoundInput {
+                now: round as f64 * 360.0,
+                round,
+                active: &active,
+                prev_plan: &prev,
+                spec: &spec,
+                health: Some(&health),
+            });
+            assert!(!d.degraded);
+            d.plan.validate().unwrap();
+            health.validate_plan(&d.plan).unwrap();
+            assert!(d.plan.jobs_on(0).is_empty(), "round {round} used a dead GPU");
+            prev = d.plan;
+        }
+        // Steady state on a faulted cluster is still migration-free.
+        let d = s.decide(&RoundInput {
+            now: 3.0 * 360.0,
+            round: 3,
+            active: &active,
+            prev_plan: &prev,
+            spec: &spec,
+            health: Some(&health),
+        });
+        assert_eq!(d.migrations, 0, "{:?} vs {prev:?}", d.plan);
     }
 
     #[test]
@@ -422,6 +473,7 @@ mod tests {
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         let strat = d.strategies.get(&1).unwrap();
         assert!(

@@ -21,9 +21,10 @@
 //! single source of truth; the scheduler's self-reported count is
 //! cross-checked against it in debug builds.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::faults::{ClusterHealth, FaultKind, FaultPlan};
 use crate::jobs::{Job, JobId, ParallelismStrategy};
 use crate::obs::{metrics, recorder, MetricsSnapshot};
 use crate::policies::JobInfo;
@@ -50,6 +51,11 @@ pub struct SimConfig {
     /// spinning one empty round per loop iteration. Metrics are identical
     /// with the flag on or off; `false` exists so tests can prove that.
     pub skip_idle_gaps: bool,
+    /// Deterministic fault script applied between rounds: GPU/node
+    /// failures evict the affected jobs back into the window, preemptions
+    /// kick one placed job, stragglers slow one job's progress rate. The
+    /// empty plan is bit-identical to pre-fault behaviour.
+    pub faults: FaultPlan,
 }
 
 impl SimConfig {
@@ -61,6 +67,7 @@ impl SimConfig {
             startup_overhead_s: 10.0,
             max_rounds: 200_000,
             skip_idle_gaps: true,
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -88,6 +95,19 @@ pub struct SimResult {
     pub timings: Vec<DecisionTimings>,
     /// Jobs that never completed within `max_rounds` (should be 0).
     pub unfinished: usize,
+    /// Jobs evicted by GPU/node failures (a job hit twice counts twice).
+    pub evictions: u64,
+    /// Jobs kicked off the cluster by injected preemption events.
+    pub preemptions: u64,
+    /// Evicted/preempted jobs the scheduler placed again afterwards.
+    pub replacements: u64,
+    /// Straggler events that latched onto a running job.
+    pub stragglers: u64,
+    /// Rounds answered by the pipeline's degraded-mode fallback.
+    pub degraded_rounds: u64,
+    /// Rounds×jobs where a realized packed pair was infeasible on true
+    /// throughputs (the job thrashes instead of crashing the run).
+    pub infeasible_pairs: u64,
     /// What the telemetry registry accumulated over this run; `None`
     /// unless telemetry was enabled for the whole simulation.
     pub metrics: Option<MetricsSnapshot>,
@@ -159,8 +179,83 @@ pub fn simulate(
     // Registry baseline so the result reports only this run's telemetry.
     let metrics_base = crate::obs::enabled().then(metrics::snapshot);
 
+    // Fault state. With an empty plan none of this is ever touched and
+    // `health` stays all-healthy, so `RoundInput.health` is `None` every
+    // round — the rate-0 bit-parity contract.
+    let mut health = ClusterHealth::new(total_gpus);
+    let fault_events = cfg.faults.events();
+    let mut next_fault = 0usize;
+    // job → (progress factor, first round no longer affected).
+    let mut stragglers: BTreeMap<JobId, (f64, u64)> = BTreeMap::new();
+    let mut last_strategies: BTreeMap<JobId, ParallelismStrategy> = BTreeMap::new();
+    let mut pending_replacement: BTreeSet<JobId> = BTreeSet::new();
+    let mut evictions = 0u64;
+    let mut preemptions = 0u64;
+    let mut replacements = 0u64;
+    let mut straggle_events = 0u64;
+    let mut degraded_rounds = 0u64;
+    let mut infeasible_pairs = 0u64;
+
     loop {
         let now = round as f64 * cfg.round_duration;
+
+        // Apply every fault event scheduled up to this round. Events that
+        // fell inside a skipped idle gap land here in order; the gap held
+        // no placed jobs (the plan resets at gap entry), so preemption and
+        // straggler draws resolve identically to the spin path.
+        while next_fault < fault_events.len() && fault_events[next_fault].round <= round {
+            let ev = &fault_events[next_fault];
+            next_fault += 1;
+            match &ev.kind {
+                FaultKind::Preempt { pick } => {
+                    let candidates: Vec<JobId> = prev_plan.jobs().into_iter().collect();
+                    if candidates.is_empty() {
+                        continue;
+                    }
+                    let victim = candidates[(pick % candidates.len() as u64) as usize];
+                    let one: BTreeSet<JobId> = [victim].into_iter().collect();
+                    prev_plan.remove_jobs(&one);
+                    pending_replacement.insert(victim);
+                    preemptions += 1;
+                    metrics::counter_add("sim.preemptions", 1);
+                }
+                FaultKind::Straggle { pick, factor, rounds } => {
+                    let candidates: Vec<JobId> = prev_plan.jobs().into_iter().collect();
+                    if candidates.is_empty() {
+                        continue;
+                    }
+                    let victim = candidates[(pick % candidates.len() as u64) as usize];
+                    stragglers.insert(victim, (*factor, round + rounds));
+                    straggle_events += 1;
+                    metrics::counter_add("sim.stragglers", 1);
+                }
+                kind => {
+                    let flipped = health.apply(&cfg.spec, kind);
+                    let failing =
+                        matches!(kind, FaultKind::GpuFail(_) | FaultKind::NodeFail(_));
+                    if !failing || flipped.is_empty() {
+                        continue;
+                    }
+                    // Evict everything on the GPUs that just died: the
+                    // jobs leave the committed plan and re-enter the
+                    // window unplaced (re-placement charges the startup
+                    // overhead, like any cold start).
+                    let mut dead_jobs: BTreeSet<JobId> = BTreeSet::new();
+                    for &g in &flipped {
+                        dead_jobs.extend(prev_plan.jobs_on(g).iter().copied());
+                    }
+                    if !dead_jobs.is_empty() {
+                        evictions += dead_jobs.len() as u64;
+                        metrics::counter_add("sim.evictions", dead_jobs.len() as u64);
+                        pending_replacement.extend(dead_jobs.iter().copied());
+                        prev_plan.remove_jobs(&dead_jobs);
+                    }
+                }
+            }
+        }
+        if !stragglers.is_empty() {
+            stragglers.retain(|_, &mut (_, until)| until > round);
+        }
         // Admit arrivals up to `now`.
         while arrived < trace.jobs.len() && trace.jobs[arrived].arrival_time <= now {
             let job = trace.jobs[arrived].clone();
@@ -225,8 +320,18 @@ pub fn simulate(
             active: &active,
             prev_plan: &prev_plan,
             spec: &cfg.spec,
+            health: (!health.all_healthy()).then_some(&health),
         });
         timings.push(decision.timings);
+        if decision.degraded {
+            degraded_rounds += 1;
+        }
+        if cfg!(debug_assertions) && !health.all_healthy() {
+            if let Err(e) = health.validate_plan(&decision.plan) {
+                recorder::dump_on_failure("simulator: decision placed a job on a dead GPU");
+                panic!("scheduler '{}' round {round}: {e}", scheduler.name());
+            }
+        }
 
         // Advance placed jobs, counting migrations from the plan diff.
         // Each job's throughput and overhead derivation is pure reads over
@@ -236,11 +341,21 @@ pub fn simulate(
         // bit-identical to the inline loop for any thread budget.
         let plan = &decision.plan;
         let dp = ParallelismStrategy::DataParallel;
+        // A degraded round carries no strategies (the fallback never ran
+        // the estimator); jobs keep last round's strategies rather than
+        // all collapsing to data-parallel for one round.
+        let strategies = if decision.degraded {
+            &last_strategies
+        } else {
+            &decision.strategies
+        };
         struct Advance {
             job: JobId,
             tput: f64,
             overhead: f64,
             moved: bool,
+            started: bool,
+            infeasible: bool,
         }
         let placed: Vec<(JobId, &Vec<usize>)> = plan
             .job_gpu_map()
@@ -260,29 +375,39 @@ pub fn simulate(
 
                 let s = &states[&job_id];
                 let (model, n) = (s.job.model, s.job.num_gpus);
-                let strategy = decision
-                    .strategies
+                let strategy = strategies
                     .get(&job_id)
                     .cloned()
                     .unwrap_or_else(|| dp.clone());
 
-                let tput = match partner {
+                let (tput, infeasible) = match partner {
                     Some(p) => {
                         let ps = &states[&p];
-                        let pstrat = decision
-                            .strategies
+                        let pstrat = strategies
                             .get(&p)
                             .cloned()
                             .unwrap_or_else(|| dp.clone());
-                        truth
-                            .true_packed_tput((model, &strategy), (ps.job.model, &pstrat), n)
-                            .map(|(ta, _)| ta)
+                        match truth.true_packed_tput(
+                            (model, &strategy),
+                            (ps.job.model, &pstrat),
+                            n,
+                        ) {
+                            Some((ta, _)) => (ta, false),
                             // The scheduler packed an infeasible pair
                             // (possible only with bad estimates): the job
                             // thrashes and makes no progress this round.
-                            .unwrap_or(0.0)
+                            // Counted and flight-dumped below, never a
+                            // crash.
+                            None => (0.0, true),
+                        }
                     }
-                    None => truth.true_isolated_tput(model, &strategy, n),
+                    None => (truth.true_isolated_tput(model, &strategy, n), false),
+                };
+                // Straggling jobs progress at a reduced rate (GPU time is
+                // still consumed at full rate).
+                let tput = match stragglers.get(&job_id) {
+                    Some(&(factor, _)) => tput * factor,
+                    None => tput,
                 };
 
                 // Overheads: migration (present in both rounds, moved
@@ -302,11 +427,32 @@ pub fn simulate(
                     tput,
                     overhead,
                     moved,
+                    started: !was_placed,
+                    infeasible,
                 }
             });
 
         let mut round_migrations = 0usize;
         for adv in advances {
+            if adv.infeasible {
+                if infeasible_pairs == 0 {
+                    // First occurrence ships its own evidence (no-op when
+                    // telemetry is off and the ring is empty).
+                    recorder::dump_on_failure("simulator: realized packed pair is infeasible");
+                }
+                infeasible_pairs += 1;
+                metrics::counter_add("sim.infeasible_pack", 1);
+                crate::obs_log!(
+                    warn,
+                    "round {round}: packed pair for job {} infeasible on true \
+                     throughputs; job thrashes this round",
+                    adv.job
+                );
+            }
+            if adv.started && pending_replacement.remove(&adv.job) {
+                replacements += 1;
+                metrics::counter_add("sim.replacements", 1);
+            }
             let effective = (cfg.round_duration - adv.overhead).max(0.0);
             let s = states.get_mut(&adv.job).unwrap();
             if adv.moved {
@@ -356,6 +502,9 @@ pub fn simulate(
         }
         total_migrations += round_migrations;
 
+        if !decision.degraded {
+            last_strategies = decision.strategies;
+        }
         prev_plan = decision.plan;
         round += 1;
         if round >= cfg.max_rounds {
@@ -393,6 +542,12 @@ pub fn simulate(
         rounds: round,
         timings,
         unfinished,
+        evictions,
+        preemptions,
+        replacements,
+        stragglers: straggle_events,
+        degraded_rounds,
+        infeasible_pairs,
         outcomes,
         metrics: metrics_base.map(|base| metrics::snapshot().delta_since(&base)),
     }
@@ -576,5 +731,288 @@ mod tests {
         let r = simulate(&trace, &mut tesserae_t(), &truth, &quick_cfg());
         assert!(!r.timings.is_empty());
         assert!(r.avg_decision_time() >= 0.0);
+    }
+
+    // ---- fault injection ------------------------------------------------
+
+    use crate::faults::FaultEvent;
+    use crate::jobs::ModelKind;
+    use crate::schedulers::{run_round, RoundContext, RoundDecision, StageProvider};
+
+    fn script(events: Vec<(u64, FaultKind)>) -> FaultPlan {
+        FaultPlan::from_events(
+            events
+                .into_iter()
+                .map(|(round, kind)| FaultEvent { round, kind })
+                .collect(),
+        )
+    }
+
+    fn assert_same_result(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.avg_jct.to_bits(), b.avg_jct.to_bits());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.total_migrations, b.total_migrations);
+        assert_eq!(a.rounds, b.rounds);
+        assert_eq!(a.evictions, b.evictions);
+        assert_eq!(a.preemptions, b.preemptions);
+        assert_eq!(a.replacements, b.replacements);
+        assert_eq!(a.stragglers, b.stragglers);
+        assert_eq!(a.degraded_rounds, b.degraded_rounds);
+        assert_eq!(a.infeasible_pairs, b.infeasible_pairs);
+        assert_eq!(a.outcomes.len(), b.outcomes.len());
+        for (id, oa) in &a.outcomes {
+            assert_eq!(oa.jct.to_bits(), b.outcomes[id].jct.to_bits());
+            assert_eq!(oa.migrations, b.outcomes[id].migrations);
+        }
+    }
+
+    #[test]
+    fn empty_fault_plan_matches_plain_run() {
+        // `SimConfig::new` already carries `FaultPlan::none()`, so this is
+        // the rate-0 identity at the config level: spelling the empty plan
+        // explicitly changes nothing, bit for bit.
+        let trace = small_trace(12, 19);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let plain = quick_cfg();
+        let mut explicit = quick_cfg();
+        explicit.faults = FaultPlan::from_events(Vec::new());
+        let a = simulate(&trace, &mut tesserae_t(), &truth, &plain);
+        let b = simulate(&trace, &mut tesserae_t(), &truth, &explicit);
+        assert_same_result(&a, &b);
+        assert_eq!(a.evictions + a.preemptions + a.stragglers, 0);
+        assert_eq!(a.degraded_rounds, 0);
+    }
+
+    #[test]
+    fn gpu_and_node_failures_evict_and_replace_jobs() {
+        // A contended cluster (16 jobs, 8 GPUs) guarantees every GPU is
+        // busy when the failures land, so the evictions must fire; the
+        // scheduler then re-places the victims (replacements) and every
+        // job still completes despite half the cluster dying mid-run.
+        let trace = small_trace(16, 3);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let mut cfg = quick_cfg();
+        cfg.faults = script(vec![
+            (2, FaultKind::GpuFail(0)),
+            (4, FaultKind::NodeFail(1)),
+            (10, FaultKind::GpuRecover(0)),
+            (12, FaultKind::NodeRecover(1)),
+        ]);
+        let r = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        assert_eq!(r.unfinished, 0, "faulted run must still drain");
+        assert!(r.evictions >= 1, "busy GPUs died but nothing was evicted");
+        assert!(
+            r.replacements >= 1,
+            "evicted jobs were never placed again"
+        );
+        assert_eq!(r.degraded_rounds, 0, "no stage failed in this script");
+        // Same script, same seed: bit-identical.
+        let r2 = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        assert_same_result(&r, &r2);
+    }
+
+    #[test]
+    fn preempt_and_straggle_events_are_counted() {
+        let trace = small_trace(12, 29);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let mut cfg = quick_cfg();
+        cfg.faults = script(vec![
+            (
+                2,
+                FaultKind::Straggle {
+                    pick: 1,
+                    factor: 0.25,
+                    rounds: 4,
+                },
+            ),
+            (3, FaultKind::Preempt { pick: 3 }),
+            (5, FaultKind::Preempt { pick: 7 }),
+        ]);
+        let r = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        assert_eq!(r.unfinished, 0);
+        assert_eq!(r.preemptions, 2);
+        assert_eq!(r.stragglers, 1);
+        assert!(r.replacements >= 1, "preempted jobs must come back");
+        let r2 = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        assert_same_result(&r, &r2);
+    }
+
+    #[test]
+    fn generated_plan_runs_deterministically() {
+        // Rate-driven plans (the fault-matrix path) through the full
+        // simulator: per-seed determinism and a drained trace.
+        let trace = small_trace(14, 31);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let mut cfg = quick_cfg();
+        cfg.faults = FaultPlan::generate(
+            &crate::faults::FaultConfig {
+                gpu_mtbf_rounds: 40.0,
+                preempts_per_round: 0.05,
+                stragglers_per_round: 0.05,
+                ..Default::default()
+            },
+            &cfg.spec,
+            400,
+        );
+        assert!(!cfg.faults.is_empty());
+        let r = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        assert_eq!(r.unfinished, 0);
+        let r2 = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        assert_same_result(&r, &r2);
+    }
+
+    /// Deliberately packs every job onto GPU 0 with memory-hungry models so
+    /// the realized pair OOMs (`true_packed_tput` = `None`) — the
+    /// regression case for the old `.unwrap_or(0.0)` silent-zero branch.
+    struct MaliciousPacker;
+
+    impl Scheduler for MaliciousPacker {
+        fn name(&self) -> String {
+            "malicious-packer".into()
+        }
+
+        fn decide(&mut self, input: &RoundInput) -> RoundDecision {
+            let mut plan = PlacementPlan::new(input.spec.total_gpus());
+            for info in input.active.iter().take(2) {
+                plan.place(info.id, &[0]);
+            }
+            let migrations = plan.migrations_from(input.prev_plan);
+            RoundDecision {
+                plan,
+                strategies: BTreeMap::new(),
+                packed_pairs: Vec::new(),
+                migrations,
+                degraded: false,
+                timings: DecisionTimings::default(),
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_packed_pair_is_counted_not_fatal() {
+        // Two 3B-parameter jobs need 38 GB each; packed on one 40 GB A100
+        // the pair cannot exist, so the ground truth refuses it. The run
+        // must keep going (jobs thrash, never finish) and count every
+        // occurrence instead of silently zeroing throughput.
+        let job = |id: u64| Job {
+            id,
+            model: ModelKind::Gpt3_3B,
+            num_gpus: 1,
+            arrival_time: 0.0,
+            total_iters: 1_000.0,
+            batch_size: 8,
+        };
+        let trace = Trace {
+            jobs: vec![job(0), job(1)],
+        };
+        let truth = Profiler::new(GpuType::A100, 42);
+        let mut cfg = quick_cfg();
+        cfg.max_rounds = 40;
+        let r = simulate(&trace, &mut MaliciousPacker, &truth, &cfg);
+        assert_eq!(r.unfinished, 2, "an OOM pack must not make progress");
+        // Both tenants of the impossible pair are flagged every round.
+        assert_eq!(r.infeasible_pairs, 2 * r.rounds);
+        assert_eq!(r.rounds, 40);
+        let r2 = simulate(&trace, &mut MaliciousPacker, &truth, &cfg);
+        assert_eq!(r.infeasible_pairs, r2.infeasible_pairs);
+    }
+
+    /// Tesserae-T with a pack stage that panics at one chosen round:
+    /// exercises the degraded-mode fallback end-to-end inside the
+    /// simulator (no env vars, so parallel tests can't collide).
+    struct FlakyTesserae {
+        inner: TesseraeScheduler,
+        fail_round: u64,
+    }
+
+    impl StageProvider for FlakyTesserae {
+        fn estimate(&mut self, cx: &mut RoundContext) {
+            self.inner.estimate(cx);
+        }
+        fn schedule(&mut self, cx: &mut RoundContext) {
+            self.inner.schedule(cx);
+        }
+        fn pack(&mut self, cx: &mut RoundContext) {
+            if cx.input.round == self.fail_round {
+                panic!("injected pack failure at round {}", self.fail_round);
+            }
+            self.inner.pack(cx);
+        }
+        fn migrate(&mut self, cx: &mut RoundContext) {
+            self.inner.migrate(cx);
+        }
+        fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+            self.inner.commit(cx)
+        }
+        fn reset_after_failure(&mut self) {
+            self.inner.reset_after_failure();
+        }
+    }
+
+    impl Scheduler for FlakyTesserae {
+        fn name(&self) -> String {
+            "flaky-tesserae".into()
+        }
+        fn decide(&mut self, input: &RoundInput) -> RoundDecision {
+            run_round(self, input)
+        }
+    }
+
+    #[test]
+    fn stage_failure_mid_run_degrades_one_round_and_recovers() {
+        let trace = small_trace(12, 37);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let cfg = quick_cfg();
+        let mut flaky = FlakyTesserae {
+            inner: tesserae_t(),
+            fail_round: 3,
+        };
+        let r = simulate(&trace, &mut flaky, &truth, &cfg);
+        assert_eq!(r.degraded_rounds, 1, "exactly one round fell back");
+        assert_eq!(r.unfinished, 0, "the run must recover and drain");
+        let mut flaky2 = FlakyTesserae {
+            inner: tesserae_t(),
+            fail_round: 3,
+        };
+        let r2 = simulate(&trace, &mut flaky2, &truth, &cfg);
+        assert_same_result(&r, &r2);
+    }
+
+    #[test]
+    fn faults_during_idle_gaps_resolve_like_spinning() {
+        // Events landing inside a skipped idle gap must leave the run
+        // bit-identical to spinning through the gap one round at a time:
+        // the gap holds no placed jobs, so preempt/straggle draws are
+        // no-ops either way and health flips apply in the same order.
+        let trace = Trace::shockwave(&TraceParams {
+            num_jobs: 10,
+            jobs_per_hour: 1.0,
+            seed: 23,
+        });
+        let truth = Profiler::new(GpuType::A100, 42);
+        let faults = script(vec![
+            (1, FaultKind::GpuFail(2)),
+            (5, FaultKind::Preempt { pick: 2 }),
+            (9, FaultKind::GpuRecover(2)),
+            (
+                20,
+                FaultKind::Straggle {
+                    pick: 0,
+                    factor: 0.5,
+                    rounds: 3,
+                },
+            ),
+            (40, FaultKind::NodeFail(0)),
+            (60, FaultKind::NodeRecover(0)),
+        ]);
+        let mut skip_cfg = quick_cfg();
+        skip_cfg.faults = faults.clone();
+        let mut spin_cfg = quick_cfg();
+        spin_cfg.skip_idle_gaps = false;
+        spin_cfg.faults = faults;
+        let a = simulate(&trace, &mut tesserae_t(), &truth, &skip_cfg);
+        let b = simulate(&trace, &mut tesserae_t(), &truth, &spin_cfg);
+        assert_same_result(&a, &b);
+        assert_eq!(a.unfinished, 0);
     }
 }

@@ -117,22 +117,29 @@ impl Trace {
         )
     }
 
+    /// Errors name the offending job index and key, so a 900-job trace
+    /// with one bad field points straight at it.
     pub fn from_json(v: &Json) -> Result<Trace, JsonError> {
         let arr = v
             .as_arr()
             .ok_or_else(|| JsonError("trace must be an array".into()))?;
         let mut jobs = Vec::with_capacity(arr.len());
-        for item in arr {
+        for (idx, item) in arr.iter().enumerate() {
             let model_name = item
-                .require("model")?
+                .require("model")
+                .map_err(|e| JsonError(format!("job #{idx}, key 'model': {}", e.0)))?
                 .as_str()
-                .ok_or_else(|| JsonError("model must be a string".into()))?;
-            let model = ModelKind::from_name(model_name)
-                .ok_or_else(|| JsonError(format!("unknown model '{model_name}'")))?;
+                .ok_or_else(|| {
+                    JsonError(format!("job #{idx}, key 'model': must be a string"))
+                })?;
+            let model = ModelKind::from_name(model_name).ok_or_else(|| {
+                JsonError(format!("job #{idx}, key 'model': unknown model '{model_name}'"))
+            })?;
             let f = |k: &str| -> Result<f64, JsonError> {
-                item.require(k)?
+                item.require(k)
+                    .map_err(|e| JsonError(format!("job #{idx}, key '{k}': {}", e.0)))?
                     .as_f64()
-                    .ok_or_else(|| JsonError(format!("{k} must be a number")))
+                    .ok_or_else(|| JsonError(format!("job #{idx}, key '{k}': must be a number")))
             };
             jobs.push(Job {
                 id: f("id")? as JobId,
@@ -150,9 +157,15 @@ impl Trace {
         std::fs::write(path, self.to_json().to_string_pretty())
     }
 
+    /// Errors carry the file path (and, through [`Trace::from_json`], the
+    /// offending job and key) so a bad `--trace` argument is diagnosable
+    /// from the message alone.
     pub fn load(path: &str) -> anyhow::Result<Trace> {
-        let text = std::fs::read_to_string(path)?;
-        Ok(Trace::from_json(&Json::parse(&text)?)?)
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("trace file '{path}': {e}"))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("trace file '{path}': {e}"))?;
+        Trace::from_json(&doc).map_err(|e| anyhow::anyhow!("trace file '{path}': {e}"))
     }
 }
 
@@ -281,6 +294,53 @@ mod tests {
         let back = Trace::load(path).unwrap();
         assert_eq!(back, t);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn malformed_trace_errors_name_job_and_key() {
+        let t = Trace::shockwave(&TraceParams {
+            num_jobs: 3,
+            jobs_per_hour: 80.0,
+            seed: 29,
+        });
+        // Corrupt job #1's arrival_time into a string.
+        let mut doc = t.to_json();
+        if let Json::Arr(items) = &mut doc {
+            if let Json::Obj(fields) = &mut items[1] {
+                fields.insert("arrival_time".to_string(), Json::str("soon"));
+            }
+        }
+        let msg = Trace::from_json(&doc).unwrap_err().to_string();
+        assert!(msg.contains("job #1"), "missing job index: {msg}");
+        assert!(msg.contains("arrival_time"), "missing key: {msg}");
+
+        // Drop a key entirely: same shape of message.
+        let mut doc = t.to_json();
+        if let Json::Arr(items) = &mut doc {
+            if let Json::Obj(fields) = &mut items[2] {
+                fields.remove("num_gpus");
+            }
+        }
+        let msg = Trace::from_json(&doc).unwrap_err().to_string();
+        assert!(msg.contains("job #2"), "missing job index: {msg}");
+        assert!(msg.contains("num_gpus"), "missing key: {msg}");
+    }
+
+    #[test]
+    fn load_errors_name_the_file() {
+        let missing = "/definitely/not/a/real/tesserae-trace.json";
+        let msg = format!("{:#}", Trace::load(missing).unwrap_err());
+        assert!(msg.contains(missing), "missing path: {msg}");
+
+        let path = std::env::temp_dir().join(format!(
+            "tesserae_trace_malformed_{}.json",
+            std::process::id()
+        ));
+        std::fs::write(&path, "{\"not\": \"an array\"}").unwrap();
+        let msg = format!("{:#}", Trace::load(path.to_str().unwrap()).unwrap_err());
+        assert!(msg.contains(path.to_str().unwrap()), "missing path: {msg}");
+        assert!(msg.contains("array"), "missing cause: {msg}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -22,15 +22,38 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Open `path`, loading any previously completed cells. A missing or
-    /// unparsable file starts empty (the sweep just re-measures).
+    /// Open `path`, loading any previously completed cells. A missing
+    /// file starts empty silently (fresh sweep); a file that exists but is
+    /// truncated or otherwise unparsable — a kill mid-write outside the
+    /// rename window, disk-full tails, manual edits — is *discarded with a
+    /// warning* and the sweep re-measures, rather than aborting the run or
+    /// silently trusting partial data.
     pub fn load_or_new(path: impl AsRef<Path>) -> Checkpoint {
         let path = path.as_ref().to_path_buf();
-        let cells = fs::read_to_string(&path)
-            .ok()
-            .and_then(|text| Json::parse(&text).ok())
-            .and_then(|doc| doc.get("cells").and_then(Json::as_obj).cloned())
-            .unwrap_or_default();
+        let cells = match fs::read_to_string(&path) {
+            Err(_) => BTreeMap::new(),
+            Ok(text) => match Json::parse(&text) {
+                Ok(doc) => match doc.get("cells").and_then(Json::as_obj) {
+                    Some(cells) => cells.clone(),
+                    None => {
+                        crate::obs_log!(
+                            warn,
+                            "checkpoint {}: no 'cells' object; discarding and re-measuring",
+                            path.display()
+                        );
+                        BTreeMap::new()
+                    }
+                },
+                Err(e) => {
+                    crate::obs_log!(
+                        warn,
+                        "checkpoint {}: corrupt ({e}); discarding and re-measuring",
+                        path.display()
+                    );
+                    BTreeMap::new()
+                }
+            },
+        };
         Checkpoint { path, cells }
     }
 
@@ -109,6 +132,42 @@ mod tests {
         let _ = fs::remove_file(&path);
         assert!(Checkpoint::load_or_new(&path).is_empty());
         fs::write(&path, "{not json").unwrap();
+        assert!(Checkpoint::load_or_new(&path).is_empty());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_checkpoint_discards_and_recovers() {
+        // Simulate a kill mid-write (or a disk-full tail): a previously
+        // valid file cut off halfway. Resume must start empty instead of
+        // crashing or trusting partial data, and the next put must produce
+        // a well-formed file again.
+        let path = tmp_path("truncated");
+        let _ = fs::remove_file(&path);
+        let mut c = Checkpoint::load_or_new(&path);
+        c.put("fig2/tesserae/512", Json::num(3.25)).unwrap();
+        c.put("fig2/tesserae/1024", Json::num(9.5)).unwrap();
+        drop(c);
+        let full = fs::read_to_string(&path).unwrap();
+        fs::write(&path, &full[..full.len() / 2]).unwrap();
+
+        let mut re = Checkpoint::load_or_new(&path);
+        assert!(re.is_empty(), "truncated cells must be discarded");
+        re.put("fig2/tesserae/512", Json::num(3.25)).unwrap();
+        drop(re);
+        let healed = Checkpoint::load_or_new(&path);
+        assert_eq!(healed.len(), 1);
+        assert_eq!(
+            healed.get("fig2/tesserae/512").and_then(Json::as_f64),
+            Some(3.25)
+        );
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn valid_json_without_cells_object_starts_empty() {
+        let path = tmp_path("nocells");
+        fs::write(&path, "{\"version\": 2}").unwrap();
         assert!(Checkpoint::load_or_new(&path).is_empty());
         let _ = fs::remove_file(&path);
     }

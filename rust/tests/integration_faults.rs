@@ -1,0 +1,90 @@
+//! End-to-end fault-injection scenario in its own test binary: the
+//! `TESSERAE_FAULT_INJECT_STAGE` env knob is process-global, so this file
+//! holds exactly one test — no concurrent test in this process can race
+//! the env window. (The script-driven fault tests live in the simulator's
+//! unit tests and `tests/properties.rs`; this binary covers the env-var
+//! injection path plus the flight-recorder dump it must produce.)
+
+use std::sync::Arc;
+
+use tesserae::cluster::{ClusterSpec, GpuType};
+use tesserae::estimator::OracleEstimator;
+use tesserae::matching::HungarianEngine;
+use tesserae::obs::recorder;
+use tesserae::profiler::Profiler;
+use tesserae::schedulers::{pipeline, TesseraeScheduler};
+use tesserae::simulator::{simulate, SimConfig};
+use tesserae::trace::{Trace, TraceParams};
+use tesserae::util::json::Json;
+
+/// A full simulation with a stage failure injected by env var mid-run:
+/// the pipeline must fall back (not panic), the run must recover and
+/// drain, and — with telemetry on — the failure must ship a flight-record
+/// dump whose JSON has the documented shape, into a directory that does
+/// not exist yet.
+#[test]
+fn injected_stage_failure_degrades_dumps_and_recovers() {
+    let trace = Trace::shockwave(&TraceParams {
+        num_jobs: 12,
+        jobs_per_hour: 240.0,
+        seed: 41,
+    });
+    let truth = Profiler::new(GpuType::A100, 42);
+    let cfg = SimConfig::new(ClusterSpec::new(2, 4, GpuType::A100));
+    let build = || {
+        TesseraeScheduler::tesserae_t(
+            Arc::new(OracleEstimator::new(Profiler::new(GpuType::A100, 42))),
+            Arc::new(HungarianEngine),
+        )
+    };
+
+    // Telemetry on so rounds are recorded and the degraded fallback has
+    // something to dump; the guard also restores the previous state.
+    let _g = tesserae::obs::enabled_guard(true);
+    recorder::clear();
+
+    let out_dir = std::env::temp_dir().join(format!(
+        "tesserae_fault_it_{}/artifacts",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(out_dir.parent().unwrap());
+    let dump_path = out_dir.join("flight.json");
+    std::env::set_var(recorder::FLIGHT_OUT_ENV, &dump_path);
+    std::env::set_var(pipeline::FAULT_INJECT_ENV, "pack@3");
+
+    let r = simulate(&trace, &mut build(), &truth, &cfg);
+
+    std::env::remove_var(pipeline::FAULT_INJECT_ENV);
+    std::env::remove_var(recorder::FLIGHT_OUT_ENV);
+
+    assert_eq!(r.degraded_rounds, 1, "pack@3 must degrade exactly round 3");
+    assert_eq!(r.unfinished, 0, "the run must recover and drain");
+
+    // The dump landed in a directory that didn't exist, and it has the
+    // documented shape: context + rounds_held + rounds[{round, label,
+    // total_s, metrics_delta, spans}].
+    let text = std::fs::read_to_string(&dump_path)
+        .expect("degraded fallback must write a flight dump");
+    let doc = Json::parse(&text).expect("flight dump must be valid JSON");
+    let context = doc.get("context").and_then(Json::as_str).unwrap();
+    assert!(context.contains("degraded"), "context: {context}");
+    assert!(doc.get("rounds_held").and_then(Json::as_f64).unwrap() >= 1.0);
+    let rounds = doc.get("rounds").and_then(Json::as_arr).unwrap();
+    assert!(!rounds.is_empty());
+    for rec in rounds {
+        for key in ["round", "label", "total_s", "metrics_delta", "spans"] {
+            assert!(rec.get(key).is_some(), "round record missing '{key}'");
+        }
+    }
+
+    // Determinism: the same injection replays bit-identically.
+    std::env::set_var(pipeline::FAULT_INJECT_ENV, "pack@3");
+    let r2 = simulate(&trace, &mut build(), &truth, &cfg);
+    std::env::remove_var(pipeline::FAULT_INJECT_ENV);
+    assert_eq!(r.avg_jct.to_bits(), r2.avg_jct.to_bits());
+    assert_eq!(r.total_migrations, r2.total_migrations);
+    assert_eq!(r2.degraded_rounds, 1);
+
+    let _ = std::fs::remove_dir_all(out_dir.parent().unwrap());
+    recorder::clear();
+}

@@ -37,6 +37,7 @@ fn drive(kind: SchedKind, spec: ClusterSpec, n_jobs: usize, rounds: usize) -> Ve
             active: &active,
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         d.plan.validate().expect("invalid plan");
         // Every placed job occupies exactly its requested GPU count.
@@ -99,6 +100,7 @@ fn pop_shrinks_partitions_for_large_jobs() {
         active: &active,
         prev_plan: &prev,
         spec: &spec,
+        health: None,
     });
     assert_eq!(d.plan.gpus_of(active[0].id).len(), 8, "large job starved");
 }
@@ -129,6 +131,7 @@ fn empty_active_set_yields_empty_plan() {
             active: &[],
             prev_plan: &prev,
             spec: &spec,
+            health: None,
         });
         assert!(d.plan.jobs().is_empty());
         assert_eq!(d.migrations, 0);
@@ -155,6 +158,7 @@ fn exempt_jobs_never_packed_end_to_end() {
         active: &active,
         prev_plan: &prev,
         spec: &spec,
+        health: None,
     });
     for (a, b) in &d.packed_pairs {
         assert_ne!(*a, exempt_id);

@@ -551,6 +551,7 @@ fn lp_allocation_never_exceeds_capacity() {
                 active: jobs,
                 prev_plan: &prev,
                 spec,
+                health: None,
             });
             d.plan.validate().map_err(|e| e.to_string())
         },
@@ -773,6 +774,7 @@ fn staged_pipeline_is_bit_identical_across_pool_budgets() {
                         active: &active,
                         prev_plan: &prev,
                         spec: &spec,
+                        health: None,
                     });
                     prev = d.plan.clone();
                     decisions.push((d.plan, d.strategies, d.packed_pairs, d.migrations));
@@ -826,6 +828,7 @@ fn staged_tesserae_matches_monolithic_replay() {
                 active: &active,
                 prev_plan: &prev_staged,
                 spec: &spec,
+                health: None,
             });
 
             let order = policy.order(&active);
@@ -906,6 +909,7 @@ fn decisions_bit_identical_with_telemetry_on_and_off() {
                         active: &active,
                         prev_plan: &prev,
                         spec: &spec,
+                        health: None,
                     });
                     prev = d.plan.clone();
                     decisions.push((d.plan, d.strategies, d.packed_pairs, d.migrations));
@@ -920,5 +924,122 @@ fn decisions_bit_identical_with_telemetry_on_and_off() {
                 "{kind:?} seed {seed}: enabling telemetry changed the decisions"
             );
         }
+    }
+}
+
+// ============================================================== faults
+
+/// Fault-rate-0 bit-parity (ISSUE 8): a fully healthy mask must be
+/// indistinguishable from no mask at all. `RoundInput.health = None` is
+/// the pre-fault code path; `Some(all-healthy)` walks the masked
+/// allocator, blocker-aware matcher and health-sized LP — every family's
+/// decisions must come out bit-identical either way.
+#[test]
+fn all_healthy_mask_is_bit_identical_to_no_mask() {
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+    use tesserae::experiments::scalability::{churn_active_jobs, synthetic_active_jobs};
+    use tesserae::experiments::{build_scheduler, SchedKind};
+    use tesserae::faults::ClusterHealth;
+    use tesserae::profiler::Profiler;
+    use tesserae::schedulers::RoundInput;
+
+    let spec = ClusterSpec::new(6, 4, GpuType::A100);
+    let healthy = ClusterHealth::new(spec.total_gpus());
+    for seed in [11u64, 43] {
+        for kind in [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(3)] {
+            let run = |mask: Option<&ClusterHealth>| {
+                let truth = Profiler::new(spec.gpu_type, seed);
+                let source: Arc<dyn ThroughputSource> =
+                    Arc::new(CachedSource::new(OracleEstimator::new(truth)));
+                let mut sched = build_scheduler(kind, source, Arc::new(HungarianEngine));
+                let mut active = synthetic_active_jobs(40, seed);
+                let mut prev = PlacementPlan::new(spec.total_gpus());
+                let mut decisions = Vec::new();
+                for round in 0..3u64 {
+                    let d = sched.decide(&RoundInput {
+                        now: round as f64 * 360.0,
+                        round,
+                        active: &active,
+                        prev_plan: &prev,
+                        spec: &spec,
+                        health: mask,
+                    });
+                    prev = d.plan.clone();
+                    decisions.push((d.plan, d.strategies, d.packed_pairs, d.migrations));
+                    active = churn_active_jobs(&active, seed ^ (round + 17));
+                }
+                decisions
+            };
+            let unmasked = run(None);
+            let masked = run(Some(&healthy));
+            assert_eq!(
+                unmasked, masked,
+                "{kind:?} seed {seed}: an all-healthy mask changed the decisions"
+            );
+        }
+    }
+}
+
+/// When faults *do* fire — evictions, preemptions, stragglers, a dead
+/// node's worth of masked GPUs — the whole simulation must stay
+/// bit-identical across worker-pool thread budgets: per-job JCTs and
+/// migration counts, plan-diff totals, and every fault counter.
+#[test]
+fn faulted_simulation_is_bit_identical_across_pool_budgets() {
+    use tesserae::experiments::faults::run_sim_faulted;
+    use tesserae::experiments::{Scale, SchedKind};
+    use tesserae::faults::{FaultEvent, FaultKind, FaultPlan};
+    use tesserae::util::pool::WorkerPool;
+
+    let scale = Scale {
+        jobs: 14,
+        nodes: 2,
+        gpus_per_node: 4,
+        jobs_per_hour: 240.0,
+        seed: 5,
+    };
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let faults = FaultPlan::from_events(vec![
+        FaultEvent { round: 1, kind: FaultKind::GpuFail(2) },
+        FaultEvent { round: 2, kind: FaultKind::Preempt { pick: 4 } },
+        FaultEvent {
+            round: 3,
+            kind: FaultKind::Straggle { pick: 1, factor: 0.25, rounds: 3 },
+        },
+        FaultEvent { round: 4, kind: FaultKind::NodeFail(1) },
+        FaultEvent { round: 8, kind: FaultKind::GpuRecover(2) },
+        FaultEvent { round: 10, kind: FaultKind::NodeRecover(1) },
+    ]);
+    for kind in [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(2)] {
+        let run = |budget: usize| {
+            let _budget = WorkerPool::global().budget_override(budget);
+            run_sim_faulted(kind, &trace, spec, scale.seed, &faults)
+        };
+        let a = run(1);
+        let b = run(6);
+        assert_eq!(a.unfinished, 0, "{kind:?}: faulted run must drain");
+        assert_eq!(a.avg_jct.to_bits(), b.avg_jct.to_bits(), "{kind:?}");
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{kind:?}");
+        assert_eq!(a.total_migrations, b.total_migrations, "{kind:?}");
+        assert_eq!(a.rounds, b.rounds, "{kind:?}");
+        assert_eq!(a.evictions, b.evictions, "{kind:?}");
+        assert_eq!(a.preemptions, b.preemptions, "{kind:?}");
+        assert_eq!(a.replacements, b.replacements, "{kind:?}");
+        assert_eq!(a.stragglers, b.stragglers, "{kind:?}");
+        assert_eq!(a.degraded_rounds, b.degraded_rounds, "{kind:?}");
+        assert_eq!(a.outcomes.len(), b.outcomes.len(), "{kind:?}");
+        for (id, oa) in &a.outcomes {
+            assert_eq!(
+                oa.jct.to_bits(),
+                b.outcomes[id].jct.to_bits(),
+                "{kind:?} job {id}: per-job progress diverged across budgets"
+            );
+            assert_eq!(oa.migrations, b.outcomes[id].migrations, "{kind:?} job {id}");
+        }
+        // The script must actually have bitten for the parity to mean
+        // anything: GPU 2 and node 1 were busy when they died.
+        assert!(a.evictions >= 1, "{kind:?}: no eviction fired");
     }
 }
