@@ -1,0 +1,173 @@
+//! Sharded-coordinator benchmark (ISSUE 9 acceptance artifact).
+//!
+//! Three arms:
+//!  1. **Parity** — `Sharded(1)` vs plain Tesserae-T over churned
+//!     consecutive rounds: plans, strategies, packed pairs and migration
+//!     counts asserted bit-identical (shards=1 must be a pure wrapper).
+//!     Runs in smoke mode too.
+//!  2. **Round speedup** — one churned decision at 2048 nodes x 4 GPUs
+//!     (4096 active jobs): Sharded-16 vs the unsharded full-cluster
+//!     scheduler. Acceptance: speedup >= 4x.
+//!  3. **Quality** — simulated avg JCT at the same 2048-node scale on a
+//!     lightly-loaded trace: Sharded-16 vs full-cluster. Acceptance:
+//!     |avg JCT delta| <= 5%.
+//!
+//! Emits `BENCH_sharded.json`. Smoke mode (`--smoke` or
+//! TESSERAE_BENCH_SMOKE=1) runs the parity arm at tiny scale only and
+//! writes no JSON.
+
+use std::sync::Arc;
+
+use tesserae::cluster::{ClusterSpec, GpuType, PlacementPlan};
+use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+use tesserae::experiments::scalability::{
+    churn_active_jobs, measure_decision, measure_sharded_decision, synthetic_active_jobs,
+};
+use tesserae::experiments::{self, build_scheduler, Scale, SchedKind};
+use tesserae::matching::HungarianEngine;
+use tesserae::profiler::Profiler;
+use tesserae::schedulers::{RoundDecision, RoundInput};
+use tesserae::util::benchutil::{bench_meta, smoke_mode};
+use tesserae::util::json::Json;
+
+/// Drive `rounds` consecutive churned decisions with a fresh scheduler
+/// stack and return every round's decision.
+fn run_rounds(kind: SchedKind, n_jobs: usize, spec: &ClusterSpec, seed: u64) -> Vec<RoundDecision> {
+    const ROUNDS: u64 = 4;
+    let truth = Profiler::new(spec.gpu_type, seed);
+    let source: Arc<dyn ThroughputSource> =
+        Arc::new(CachedSource::new(OracleEstimator::new(truth)));
+    let mut sched = build_scheduler(kind, source, Arc::new(HungarianEngine));
+    let mut active = synthetic_active_jobs(n_jobs, seed);
+    let mut prev = PlacementPlan::new(spec.total_gpus());
+    let mut decisions = Vec::with_capacity(ROUNDS as usize);
+    for round in 0..ROUNDS {
+        let d = sched.decide(&RoundInput {
+            now: 1e6 + round as f64 * 360.0,
+            round,
+            active: &active,
+            prev_plan: &prev,
+            spec,
+            health: None,
+        });
+        prev = d.plan.clone();
+        active = churn_active_jobs(&active, seed ^ (round + 1));
+        decisions.push(d);
+    }
+    decisions
+}
+
+fn main() {
+    let smoke = smoke_mode();
+
+    // Arm 1: shards=1 parity. A one-shard coordinator routes every job to
+    // the single sub-scheduler with the whole cluster, so its decisions
+    // must be bit-identical to running that scheduler directly.
+    let (nodes, gpn) = if smoke { (4, 2) } else { (16, 4) };
+    let spec = ClusterSpec::new(nodes, gpn, GpuType::A100);
+    let n_jobs = spec.total_gpus();
+    println!("== Parity: sharded(1) vs tesserae-t, {nodes}x{gpn}, {n_jobs} jobs ==");
+    let base = run_rounds(SchedKind::TesseraeT, n_jobs, &spec, 42);
+    let wrapped = run_rounds(SchedKind::Sharded(1), n_jobs, &spec, 42);
+    for (round, (b, w)) in base.iter().zip(&wrapped).enumerate() {
+        assert_eq!(b.plan, w.plan, "round {round}: plans diverged");
+        assert_eq!(b.strategies, w.strategies, "round {round}: strategies diverged");
+        assert_eq!(b.packed_pairs, w.packed_pairs, "round {round}: packed pairs diverged");
+        assert_eq!(b.migrations, w.migrations, "round {round}: migration counts diverged");
+    }
+    println!("   {} rounds bit-identical", base.len());
+
+    if smoke {
+        println!("smoke mode: speedup/quality arms and JSON output skipped");
+        return;
+    }
+
+    // Arm 2: round-time speedup at scale. One warm + one measured churned
+    // decision per arm (the scale sweep's protocol).
+    const SPEEDUP_NODES: usize = 2048;
+    const SHARDS: usize = 16;
+    let big = ClusterSpec::new(SPEEDUP_NODES, 4, GpuType::A100);
+    let big_jobs = 4096;
+    println!(
+        "== Round speedup: sharded({SHARDS}) vs unsharded, {SPEEDUP_NODES}x4, {big_jobs} jobs =="
+    );
+    let unsharded_s = measure_decision(SchedKind::TesseraeT, big_jobs, &big, 17).total_s;
+    let (sharded_d, shard_s) = measure_sharded_decision(SHARDS, big_jobs, &big, 17);
+    let sharded_total = sharded_d.total_s;
+    let shard_max = shard_s.iter().cloned().fold(0.0, f64::max);
+    let speedup = unsharded_s / sharded_total.max(1e-12);
+    println!(
+        "   unsharded {unsharded_s:.3}s vs sharded {sharded_total:.3}s \
+         (max shard {shard_max:.3}s) = {speedup:.2}x"
+    );
+
+    // Arm 3: quality at the same cluster scale. A lightly-loaded trace
+    // keeps full-cluster simulation tractable at 8192 GPUs; sharding
+    // trades global placement optimality for round time, and the bound is
+    // the issue's 5% avg-JCT envelope.
+    let scale = Scale {
+        jobs: 300,
+        nodes: SPEEDUP_NODES,
+        gpus_per_node: 4,
+        jobs_per_hour: 160.0,
+        seed: 7,
+    };
+    let trace = scale.shockwave_trace();
+    let qspec = scale.spec(GpuType::A100);
+    println!("== Quality: simulated avg JCT at {SPEEDUP_NODES}x4, {} jobs ==", scale.jobs);
+    let full = experiments::run_sim(SchedKind::TesseraeT, &trace, qspec, scale.seed, 0.0);
+    let shard = experiments::run_sim(SchedKind::Sharded(SHARDS), &trace, qspec, scale.seed, 0.0);
+    let jct_delta = 100.0 * (shard.avg_jct - full.avg_jct) / full.avg_jct.max(1e-12);
+    println!(
+        "   full-cluster {:.0}s vs sharded {:.0}s avg JCT = {jct_delta:+.2}%",
+        full.avg_jct, shard.avg_jct
+    );
+
+    assert!(
+        speedup >= 4.0,
+        "acceptance: sharded round speedup {speedup:.2}x < 4x at {SPEEDUP_NODES} nodes"
+    );
+    assert!(
+        jct_delta.abs() <= 5.0,
+        "acceptance: sharded avg-JCT delta {jct_delta:+.2}% outside the 5% envelope"
+    );
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("sharded")),
+        ("meta", bench_meta()),
+        (
+            "entries",
+            Json::arr(vec![
+                Json::obj(vec![
+                    ("arm", Json::str("parity")),
+                    ("nodes", Json::num(nodes as f64)),
+                    ("jobs", Json::num(n_jobs as f64)),
+                    ("rounds", Json::num(base.len() as f64)),
+                ]),
+                Json::obj(vec![
+                    ("arm", Json::str("round_speedup")),
+                    ("nodes", Json::num(SPEEDUP_NODES as f64)),
+                    ("jobs", Json::num(big_jobs as f64)),
+                    ("shards", Json::num(SHARDS as f64)),
+                    ("unsharded_s", Json::num(unsharded_s)),
+                    ("sharded_s", Json::num(sharded_total)),
+                    ("shard_max_s", Json::num(shard_max)),
+                    ("speedup", Json::num(speedup)),
+                ]),
+                Json::obj(vec![
+                    ("arm", Json::str("quality")),
+                    ("nodes", Json::num(SPEEDUP_NODES as f64)),
+                    ("trace_jobs", Json::num(scale.jobs as f64)),
+                    ("shards", Json::num(SHARDS as f64)),
+                    ("full_avg_jct", Json::num(full.avg_jct)),
+                    ("sharded_avg_jct", Json::num(shard.avg_jct)),
+                    ("jct_delta_pct", Json::num(jct_delta)),
+                ]),
+            ]),
+        ),
+    ]);
+    match std::fs::write("BENCH_sharded.json", json.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_sharded.json"),
+        Err(e) => println!("could not write BENCH_sharded.json: {e}"),
+    }
+}

@@ -35,6 +35,9 @@ pub enum SchedKind {
     Gavel,
     GavelFtf,
     Pop(usize),
+    /// Sharded coordinator: k shards each running Tesserae-T, cross-shard
+    /// rebalancing at the default interval.
+    Sharded(usize),
     /// Fig. 15 arms: packed-LLM strategy restricted to DP / default PP.
     TesseraeTDp,
     TesseraeTDefaultPp,
@@ -56,6 +59,7 @@ impl SchedKind {
             SchedKind::Gavel => "Gavel".into(),
             SchedKind::GavelFtf => "Gavel-FTF".into(),
             SchedKind::Pop(k) => format!("POP-{k}"),
+            SchedKind::Sharded(k) => format!("Sharded-{k}"),
             SchedKind::TesseraeTDp => "Tesserae-T (DP)".into(),
             SchedKind::TesseraeTDefaultPp => "Tesserae-T (Def PP)".into(),
             SchedKind::TesseraeFifo => "Tesserae-FIFO".into(),
@@ -105,6 +109,9 @@ pub fn build_scheduler(
             true,
             source,
             engine,
+        )),
+        SchedKind::Sharded(k) => Box::new(crate::sharding::ShardedCoordinator::tesserae_t(
+            k, source, engine,
         )),
         SchedKind::TesseraeTDp => {
             let mut s = TesseraeScheduler::tesserae_t(source, engine);
@@ -357,6 +364,7 @@ mod tests {
             SchedKind::Gavel,
             SchedKind::GavelFtf,
             SchedKind::Pop(2),
+            SchedKind::Sharded(2),
             SchedKind::TesseraeTDp,
             SchedKind::TesseraeTDefaultPp,
             SchedKind::TesseraeFifo,

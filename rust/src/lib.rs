@@ -42,6 +42,7 @@ pub mod runtime;
 #[path = "runtime_stub.rs"]
 pub mod runtime;
 pub mod schedulers;
+pub mod sharding;
 pub mod simulator;
 pub mod trace;
 pub mod util;

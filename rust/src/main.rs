@@ -26,14 +26,17 @@ commands:
   simulate    --trace <path> | [--jobs N] ; [--scheduler NAME] [--nodes N]
               [--gpus-per-node G] [--gpu a100|v100] [--seed S] [--noise F]
               scheduler names: tesserae-t tesserae-ftf tiresias tiresias-single
-                               gavel gavel-ftf pop
+                               gavel gavel-ftf pop sharded
               fault injection (deterministic per --fault-seed):
               [--gpu-mtbf-rounds F] [--node-mtbf-rounds F] [--repair-rounds N]
               [--preempt-rate F] [--straggler-rate F] [--fault-seed S]
   figure      <fig1|fig2|fig3|fig7|fig8|fig9|fig11|fig12|fig13|fig14|fig15|
-               fig16|fig17|fig18|table2|faults> [--scale quick|standard|paper]
-              fig2/fig14 also take [--budget-secs N] [--checkpoint PATH]
+               fig16|fig17|fig18|table2|faults|scale>
+              [--scale quick|standard|paper]
+              fig2/fig14/scale also take [--budget-secs N] [--checkpoint PATH]
               (per-cell resume-safe JSON; re-runs skip completed cells)
+              scale: sharded-coordinator sweep; [--quick] shrinks the grid,
+              [--no-quality] skips the JCT-delta comparison
   serve       [--jobs N] [--nodes N] [--gpus-per-node G] [--round-secs F]
   engines     [--sizes 8,32,64] [--no-aot]
 
@@ -65,6 +68,7 @@ fn parse_kind(name: &str) -> Option<SchedKind> {
         "gavel" => SchedKind::Gavel,
         "gavel-ftf" => SchedKind::GavelFtf,
         "pop" => SchedKind::Pop(8),
+        "sharded" => SchedKind::Sharded(8),
         _ => return None,
     })
 }
@@ -238,6 +242,25 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
                     scalability::fig14b_breakdown_checkpointed(&counts, Some(&mut ckpt))
                 }
                 None => scalability::fig14b_breakdown(&counts),
+            }
+        }
+        "scale" => {
+            let mut opts = if args.flag("quick") {
+                scalability::ScaleSweepOpts::quick()
+            } else {
+                scalability::ScaleSweepOpts::paper()
+            };
+            opts.budget =
+                std::time::Duration::from_secs(args.get_u64("budget-secs", opts.budget.as_secs()));
+            if args.flag("no-quality") {
+                opts.quality = false;
+            }
+            match args.get("checkpoint") {
+                Some(path) => {
+                    let mut ckpt = Checkpoint::load_or_new(path);
+                    scalability::scale_sweep(&opts, Some(&mut ckpt))
+                }
+                None => scalability::scale_sweep(&opts, None),
             }
         }
         "fig15" => ablations::fig15_strategy_impact(&scale),

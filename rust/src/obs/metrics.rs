@@ -7,8 +7,22 @@
 //! kind is plenty and keeps the code std-only. Every write is gated on
 //! [`crate::obs::enabled`]; when telemetry is off the registry is never
 //! touched and scheduling behavior cannot depend on it.
+//!
+//! # Scoped namespaces
+//!
+//! The registry is process-global, so two sweep cells (or a sweep cell and
+//! a concurrent test) writing the same series names would bleed into each
+//! other's snapshots. [`scope`] pushes a thread-local prefix — every write
+//! from that thread lands under `<prefix>.<name>` until the guard drops —
+//! and [`MetricsSnapshot::scoped`] / [`reset_scope`] read back or clear
+//! exactly one prefix's series. The prefix is per *thread*: work handed to
+//! the shared worker pool does not inherit it, so code that publishes from
+//! pool workers (the sharded coordinator's `shard.<id>.*` series) writes
+//! explicit prefixed names instead.
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::marker::PhantomData;
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
 use crate::obs;
@@ -16,9 +30,9 @@ use crate::util::json::Json;
 use crate::util::stats::Histogram;
 
 struct Registry {
-    counters: Mutex<BTreeMap<&'static str, u64>>,
-    gauges: Mutex<BTreeMap<&'static str, f64>>,
-    histograms: Mutex<BTreeMap<&'static str, Histogram>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
 }
 
 fn registry() -> &'static Registry {
@@ -34,32 +48,114 @@ fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
+thread_local! {
+    /// Accumulated scope prefix for this thread, including trailing dots
+    /// (`"cell3."`, or `"a.b."` when scopes nest). Empty = unscoped.
+    static SCOPE: RefCell<String> = const { RefCell::new(String::new()) };
+}
+
+/// Run `f` with the thread's scoped key for `name` — allocation-free on
+/// the (overwhelmingly common) unscoped path.
+fn with_key<R>(name: &str, f: impl FnOnce(&str) -> R) -> R {
+    SCOPE.with(|s| {
+        let s = s.borrow();
+        if s.is_empty() {
+            f(name)
+        } else {
+            f(&format!("{}{name}", *s))
+        }
+    })
+}
+
+/// Prefix every metric written by *this thread* with `<prefix>.` until the
+/// returned guard drops. Scopes nest (`a` then `b` yields `a.b.<name>`).
+/// The guard is `!Send`: a scope belongs to the thread that opened it.
+pub fn scope(prefix: &str) -> ScopeGuard {
+    assert!(!prefix.is_empty(), "metric scope prefix must be non-empty");
+    SCOPE.with(|s| {
+        let mut s = s.borrow_mut();
+        let prev_len = s.len();
+        s.push_str(prefix);
+        s.push('.');
+        ScopeGuard {
+            prev_len,
+            _not_send: PhantomData,
+        }
+    })
+}
+
+/// RAII for [`scope`]: restores the thread's previous prefix on drop.
+pub struct ScopeGuard {
+    prev_len: usize,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        SCOPE.with(|s| s.borrow_mut().truncate(self.prev_len));
+    }
+}
+
+/// Remove every series under `<prefix>.` from the registry, leaving all
+/// other series untouched — the per-cell isolation primitive for sweeps
+/// that reuse a scope name.
+pub fn reset_scope(prefix: &str) {
+    let pat = format!("{prefix}.");
+    let reg = registry();
+    lock(&reg.counters).retain(|k, _| !k.starts_with(&pat));
+    lock(&reg.gauges).retain(|k, _| !k.starts_with(&pat));
+    lock(&reg.histograms).retain(|k, _| !k.starts_with(&pat));
+}
+
 /// Add `delta` to the named monotonic counter. No-op when telemetry is
 /// disabled.
-pub fn counter_add(name: &'static str, delta: u64) {
+pub fn counter_add(name: &str, delta: u64) {
     if !obs::enabled() || delta == 0 {
         return;
     }
-    *lock(&registry().counters).entry(name).or_insert(0) += delta;
+    with_key(name, |key| {
+        let mut m = lock(&registry().counters);
+        match m.get_mut(key) {
+            Some(v) => *v += delta,
+            None => {
+                m.insert(key.to_string(), delta);
+            }
+        }
+    });
 }
 
 /// Set the named gauge to its latest value. No-op when disabled.
-pub fn gauge_set(name: &'static str, value: f64) {
+pub fn gauge_set(name: &str, value: f64) {
     if !obs::enabled() {
         return;
     }
-    lock(&registry().gauges).insert(name, value);
+    with_key(name, |key| {
+        let mut m = lock(&registry().gauges);
+        match m.get_mut(key) {
+            Some(v) => *v = value,
+            None => {
+                m.insert(key.to_string(), value);
+            }
+        }
+    });
 }
 
 /// Record one observation into the named histogram. No-op when disabled.
-pub fn observe(name: &'static str, value: f64) {
+pub fn observe(name: &str, value: f64) {
     if !obs::enabled() {
         return;
     }
-    lock(&registry().histograms)
-        .entry(name)
-        .or_insert_with(Histogram::new)
-        .record(value);
+    with_key(name, |key| {
+        let mut m = lock(&registry().histograms);
+        match m.get_mut(key) {
+            Some(h) => h.record(value),
+            None => {
+                let mut h = Histogram::new();
+                h.record(value);
+                m.insert(key.to_string(), h);
+            }
+        }
+    });
 }
 
 /// Copy the registry's current state. Works regardless of the enabled
@@ -67,18 +163,9 @@ pub fn observe(name: &'static str, value: f64) {
 pub fn snapshot() -> MetricsSnapshot {
     let reg = registry();
     MetricsSnapshot {
-        counters: lock(&reg.counters)
-            .iter()
-            .map(|(k, v)| (k.to_string(), *v))
-            .collect(),
-        gauges: lock(&reg.gauges)
-            .iter()
-            .map(|(k, v)| (k.to_string(), *v))
-            .collect(),
-        histograms: lock(&reg.histograms)
-            .iter()
-            .map(|(k, v)| (k.to_string(), v.clone()))
-            .collect(),
+        counters: lock(&reg.counters).clone(),
+        gauges: lock(&reg.gauges).clone(),
+        histograms: lock(&reg.histograms).clone(),
     }
 }
 
@@ -108,6 +195,30 @@ impl MetricsSnapshot {
     /// count").
     pub fn series_count(&self) -> usize {
         self.counters.len() + self.gauges.len() + self.histograms.len()
+    }
+
+    /// The series written under `scope(prefix)`, with the prefix stripped:
+    /// one cell's isolated view of a shared registry.
+    pub fn scoped(&self, prefix: &str) -> MetricsSnapshot {
+        let pat = format!("{prefix}.");
+        let strip = |m: &BTreeMap<String, u64>| {
+            m.iter()
+                .filter_map(|(k, v)| Some((k.strip_prefix(&pat)?.to_string(), *v)))
+                .collect()
+        };
+        MetricsSnapshot {
+            counters: strip(&self.counters),
+            gauges: self
+                .gauges
+                .iter()
+                .filter_map(|(k, v)| Some((k.strip_prefix(&pat)?.to_string(), *v)))
+                .collect(),
+            histograms: self
+                .histograms
+                .iter()
+                .filter_map(|(k, v)| Some((k.strip_prefix(&pat)?.to_string(), v.clone())))
+                .collect(),
+        }
     }
 
     /// What happened since `earlier`: counters subtract (saturating, so a
@@ -250,5 +361,96 @@ mod tests {
         let z = now.delta_since(&now);
         assert_eq!(z.counters["test.metrics.delta"], 0);
         assert!(z.histograms["test.metrics.delta.h"].is_empty());
+    }
+
+    #[test]
+    fn scoped_writes_prefix_and_extract() {
+        let _guard = obs::enabled_guard(true);
+        {
+            let _s = scope("test.mscope.outer");
+            counter_add("c", 3);
+            gauge_set("g", 7.5);
+            observe("h", 0.25);
+            {
+                let _inner = scope("nested");
+                counter_add("c", 1);
+            }
+        }
+        // Scope closed: unprefixed again.
+        counter_add("test.mscope.plain", 1);
+        let snap = snapshot();
+        assert_eq!(snap.counters["test.mscope.outer.c"], 3);
+        assert_eq!(snap.gauges["test.mscope.outer.g"], 7.5);
+        assert_eq!(snap.counters["test.mscope.outer.nested.c"], 1);
+        assert!(snap.counters.contains_key("test.mscope.plain"));
+        assert!(!snap.counters.contains_key("c"), "scope leaked a bare key");
+
+        let cell = snap.scoped("test.mscope.outer");
+        assert_eq!(cell.counters["c"], 3);
+        assert_eq!(cell.gauges["g"], 7.5);
+        assert_eq!(cell.histograms["h"].count(), 1);
+        assert_eq!(cell.counters["nested.c"], 1);
+        assert!(!cell.counters.contains_key("test.mscope.plain"));
+        reset_scope("test.mscope.outer");
+    }
+
+    #[test]
+    fn concurrent_scopes_do_not_bleed() {
+        // The delta test the satellite asks for: two concurrent "sweep
+        // cells" on separate threads write the *same* series names under
+        // different scopes; each cell's scoped snapshot sees only its own
+        // values.
+        let _guard = obs::enabled_guard(true);
+        let cells = ["test.mscope.cell_a", "test.mscope.cell_b"];
+        let handles: Vec<_> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, &name)| {
+                std::thread::spawn(move || {
+                    let _s = scope(name);
+                    for _ in 0..50 {
+                        counter_add("rounds", 1 + i as u64);
+                        observe("round.total_s", 0.001 * (i + 1) as f64);
+                    }
+                    gauge_set("jobs", 10.0 * (i + 1) as f64);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = snapshot();
+        let a = snap.scoped("test.mscope.cell_a");
+        let b = snap.scoped("test.mscope.cell_b");
+        assert_eq!(a.counters["rounds"], 50);
+        assert_eq!(b.counters["rounds"], 100);
+        assert_eq!(a.gauges["jobs"], 10.0);
+        assert_eq!(b.gauges["jobs"], 20.0);
+        assert_eq!(a.histograms["round.total_s"].count(), 50);
+        assert_eq!(b.histograms["round.total_s"].count(), 50);
+        for c in cells {
+            reset_scope(c);
+        }
+        let after = snapshot();
+        assert!(after.scoped("test.mscope.cell_a").is_empty());
+        assert!(after.scoped("test.mscope.cell_b").is_empty());
+    }
+
+    #[test]
+    fn reset_scope_leaves_other_series_alone() {
+        let _guard = obs::enabled_guard(true);
+        {
+            let _s = scope("test.mscope.reset_me");
+            counter_add("c", 1);
+        }
+        {
+            let _s = scope("test.mscope.keep_me");
+            counter_add("c", 2);
+        }
+        reset_scope("test.mscope.reset_me");
+        let snap = snapshot();
+        assert!(!snap.counters.contains_key("test.mscope.reset_me.c"));
+        assert_eq!(snap.counters["test.mscope.keep_me.c"], 2);
+        reset_scope("test.mscope.keep_me");
     }
 }

@@ -1,0 +1,934 @@
+//! Sharded multi-cluster coordinator: the 10k-node / 100k-job scale-out.
+//!
+//! POP proved the placement decisions decompose — k partition LPs stitched
+//! back together lose little quality. [`ShardedCoordinator`] promotes that
+//! from a POP-internal trick to a first-class subsystem over *any* inner
+//! scheduler:
+//!
+//! * **Deterministic routing** — every job is owned by exactly one shard.
+//!   [`Routing::Hashed`] routes by a seeded splitmix64 over the job id;
+//!   [`Routing::Locality`] keeps a job on the shard that already holds its
+//!   GPUs (falling back to the hash for new arrivals). Routes are sticky:
+//!   once assigned, a job stays on its shard until a rebalance round moves
+//!   it, so per-shard warm state (LP bases, matching caches) survives.
+//! * **Parallel per-shard rounds** — each shard runs its *full*
+//!   `Estimate → Schedule → Pack → Migrate → Commit` round via the inner
+//!   scheduler's own `pipeline::run_round`, all shards concurrently on the
+//!   process-wide shared [`WorkerPool`] (deterministic chunked map, bit-
+//!   identical to the sequential loop for any thread budget).
+//! * **Cross-shard rebalancing** — every `rebalance_interval` rounds the
+//!   coordinator solves a coarse max-weight matching (through the existing
+//!   [`MatchingService`]) between overloaded shards' candidate jobs and
+//!   underloaded shards' capacity slots, weighted by the utilization gap a
+//!   move closes minus a migration penalty for jobs that already hold
+//!   GPUs. Whole jobs move only at rebalance rounds, so per-shard plans
+//!   stay independently valid in between.
+//! * **Fault isolation** — each shard's round inherits `run_round`'s
+//!   catch-unwind: a panicking shard degrades *alone* (previous sub-plan
+//!   minus departed/dead jobs) while healthy shards commit fresh plans.
+//!   The merged decision is flagged degraded so callers can count it.
+//!   Global [`ClusterHealth`] is sliced per shard exactly like POP —
+//!   fully-healthy shards see `None` and stay on the pre-fault code path.
+//! * **Validated merge** — per-shard plans own disjoint GPU ranges by
+//!   construction; the stitch asserts no job is produced by two shards and
+//!   `validate()`s the merged [`PlacementPlan`] so a double-owned GPU can
+//!   never escape the coordinator.
+//!
+//! Telemetry: each shard publishes `shard.round_s` (all-shard histogram),
+//! per-shard `shard.<id>.round_s` / `shard.<id>.jobs` / `shard.<id>.degraded`
+//! series, and rebalance rounds publish `shard.rebalance_moves`. The
+//! per-shard names are explicit (not metric scopes): worker threads don't
+//! inherit the caller's thread-local scope prefix.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::{ClusterSpec, PlacementPlan};
+use crate::estimator::ThroughputSource;
+use crate::faults::ClusterHealth;
+use crate::jobs::JobId;
+use crate::matching::{Edge, MatchingEngine, MatchingService, ServiceConfig};
+use crate::obs::metrics;
+use crate::policies::JobInfo;
+use crate::schedulers::pipeline::{self, RoundContext, StageProvider};
+use crate::schedulers::{
+    DecisionTimings, RoundDecision, RoundInput, Scheduler, TesseraeScheduler,
+};
+use crate::util::pool::WorkerPool;
+
+/// How jobs are assigned to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Seeded splitmix64 over the job id: uniform, stateless, stable.
+    Hashed,
+    /// Keep a job on the shard whose GPU range holds its previous
+    /// placement; hash new arrivals. Minimizes cross-shard churn when the
+    /// coordinator takes over an already-placed cluster.
+    Locality,
+}
+
+/// Coordinator knobs. `ShardedConfig::new(k)` gives the defaults used by
+/// the `Sharded-k` experiment arm.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardedConfig {
+    /// Requested shard count; clamped per round so every shard can host
+    /// the largest active job (the POP shrink rule).
+    pub shards: usize,
+    pub routing: Routing,
+    /// Seed for hashed routing.
+    pub seed: u64,
+    /// Solve the cross-shard rebalance matching every this many rounds
+    /// (`0` = never). Round 0 never rebalances — there is no load yet.
+    pub rebalance_interval: u64,
+    /// Cap on jobs a single shard can *receive* in one rebalance round:
+    /// bounds migration pressure per shard per round.
+    pub max_moves_per_shard: usize,
+    /// Run shard rounds on the shared worker pool (bit-identical to the
+    /// sequential path; the toggle exists for parity tests).
+    pub parallel: bool,
+}
+
+impl ShardedConfig {
+    pub fn new(shards: usize) -> ShardedConfig {
+        assert!(shards >= 1);
+        ShardedConfig {
+            shards,
+            routing: Routing::Hashed,
+            seed: 0x7e55_e4ae,
+            rebalance_interval: 10,
+            max_moves_per_shard: 8,
+            parallel: true,
+        }
+    }
+}
+
+/// Builds the inner scheduler for one shard (called once per shard, again
+/// after `reset_after_failure`). The index is provided so factories can
+/// vary per-shard configuration deterministically.
+pub type ShardFactory = Arc<dyn Fn(usize) -> Box<dyn Scheduler> + Send + Sync>;
+
+/// Estimate-stage output carried to Schedule: the shard split of one round.
+struct ShardRound {
+    k: usize,
+    groups: Vec<Vec<JobInfo>>,
+    sub_specs: Vec<ClusterSpec>,
+    sub_prev: Vec<PlacementPlan>,
+    node_base: Vec<usize>,
+    /// Per-shard slice of the global GPU health; `None` for shards whose
+    /// slice is fully healthy (the rate-0 parity contract).
+    sub_health: Vec<Option<ClusterHealth>>,
+}
+
+/// The sharded coordinator. Implements [`StageProvider`], so a coordinator
+/// round is itself a staged pipeline: Estimate routes + rebalances + builds
+/// the shard slices, Schedule runs the per-shard rounds and stitches,
+/// Migrate counts the Definition-1 diff, Commit assembles the decision.
+pub struct ShardedCoordinator {
+    pub cfg: ShardedConfig,
+    factory: ShardFactory,
+    inner_label: String,
+    /// Retained per-shard schedulers (index p owns shard p's warm state);
+    /// rebuilt only when the effective shard count changes.
+    subs: Vec<Box<dyn Scheduler>>,
+    /// Sticky job→shard routes. Pruned to the active window each round;
+    /// entries ≥ the effective k are re-routed.
+    assignment: BTreeMap<JobId, usize>,
+    /// Solves the rebalance matching (and counts it in round stats).
+    service: MatchingService,
+    engine: Arc<dyn MatchingEngine>,
+    round: Option<ShardRound>,
+    /// Timing buckets absorbed from this round's shard decisions (max
+    /// across shards — they ran concurrently).
+    sub_timings: DecisionTimings,
+    degraded_shards: usize,
+    /// Per-shard wall clock of the most recent round, indexed by shard.
+    last_shard_s: Vec<f64>,
+    last_rebalance_moves: usize,
+}
+
+impl ShardedCoordinator {
+    pub fn new(
+        cfg: ShardedConfig,
+        inner_label: &str,
+        factory: ShardFactory,
+        engine: Arc<dyn MatchingEngine>,
+    ) -> ShardedCoordinator {
+        ShardedCoordinator {
+            cfg,
+            factory,
+            inner_label: inner_label.to_string(),
+            subs: Vec::new(),
+            assignment: BTreeMap::new(),
+            service: MatchingService::new(ServiceConfig::default()),
+            engine,
+            round: None,
+            sub_timings: DecisionTimings::default(),
+            degraded_shards: 0,
+            last_shard_s: Vec::new(),
+            last_rebalance_moves: 0,
+        }
+    }
+
+    /// The standard arm: `k` shards each running Tesserae-T.
+    pub fn tesserae_t(
+        shards: usize,
+        source: Arc<dyn ThroughputSource>,
+        engine: Arc<dyn MatchingEngine>,
+    ) -> ShardedCoordinator {
+        let factory_engine = Arc::clone(&engine);
+        let factory: ShardFactory = Arc::new(move |_shard| {
+            Box::new(TesseraeScheduler::tesserae_t(
+                Arc::clone(&source),
+                Arc::clone(&factory_engine),
+            ))
+        });
+        ShardedCoordinator::new(ShardedConfig::new(shards), "tesserae-t", factory, engine)
+    }
+
+    /// Per-shard wall clock of the most recent decided round (empty before
+    /// the first round). The scale sweep reports max/mean over this.
+    pub fn shard_round_times(&self) -> &[f64] {
+        &self.last_shard_s
+    }
+
+    /// Jobs moved by the most recent rebalance round.
+    pub fn last_rebalance_moves(&self) -> usize {
+        self.last_rebalance_moves
+    }
+
+    fn ensure_subs(&mut self, k: usize) {
+        if self.subs.len() != k {
+            self.subs = (0..k).map(|p| (self.factory)(p)).collect();
+        }
+    }
+
+    /// The route for one job this round, before rebalancing: the sticky
+    /// assignment if present, otherwise the configured routing policy.
+    fn route_job(
+        &self,
+        job: &JobInfo,
+        prev_plan: &PlacementPlan,
+        spec: &ClusterSpec,
+        k: usize,
+        nodes_per: usize,
+    ) -> usize {
+        if let Some(&p) = self.assignment.get(&job.id) {
+            if p < k {
+                return p;
+            }
+        }
+        if self.cfg.routing == Routing::Locality {
+            if let Some(&g) = prev_plan.gpus_of(job.id).first() {
+                return (spec.node_of(g) / nodes_per).min(k - 1);
+            }
+        }
+        (splitmix64(job.id ^ self.cfg.seed) % k as u64) as usize
+    }
+
+    /// Cross-shard rebalance: a coarse max-weight matching between donor
+    /// shards' candidate jobs and receiver shards' capacity slots.
+    ///
+    /// Per-shard load is `Σ num_gpus / capacity`. Shards above the mean
+    /// utilization donate, shards below receive — each receiver exposes at
+    /// most `max_moves_per_shard` single-job slots, and an edge's weight is
+    /// the utilization gap it closes (scaled by the job's GPU demand)
+    /// minus a penalty for moving a job that already holds GPUs (a real
+    /// migration). Non-positive edges are never matched, so a balanced
+    /// cluster is a no-op. Whole jobs move; plans stay per-shard valid.
+    fn rebalance(
+        &mut self,
+        active: &[JobInfo],
+        prev_plan: &PlacementPlan,
+        routes: &mut [usize],
+        caps: &[usize],
+        k: usize,
+    ) -> usize {
+        let mut demand = vec![0.0f64; k];
+        for (j, &p) in active.iter().zip(routes.iter()) {
+            demand[p] += j.num_gpus as f64;
+        }
+        let total_cap: f64 = caps.iter().map(|&c| c as f64).sum();
+        let total_demand: f64 = demand.iter().sum();
+        if total_cap <= 0.0 || total_demand <= 0.0 {
+            return 0;
+        }
+        let util: Vec<f64> = (0..k).map(|p| demand[p] / caps[p] as f64).collect();
+        let mean = total_demand / total_cap;
+
+        // Receiver slots: one entry per job a below-mean shard can absorb.
+        let mut slots: Vec<usize> = Vec::new();
+        for p in 0..k {
+            let deficit = mean * caps[p] as f64 - demand[p];
+            if deficit < 1.0 {
+                continue;
+            }
+            let want = (deficit.floor() as usize).min(self.cfg.max_moves_per_shard);
+            slots.extend(std::iter::repeat(p).take(want));
+        }
+        if slots.is_empty() {
+            return 0;
+        }
+
+        // Donor candidates: jobs on above-mean shards, cheapest moves
+        // first (unplaced jobs migrate for free, then larger jobs shift
+        // more load per move), bounded to keep the matching coarse.
+        let mut cands: Vec<usize> = (0..active.len())
+            .filter(|&i| util[routes[i]] > mean + 1e-9)
+            .collect();
+        cands.sort_by_key(|&i| {
+            let placed = !prev_plan.gpus_of(active[i].id).is_empty();
+            (placed as u8, u32::MAX - active[i].num_gpus, active[i].id)
+        });
+        cands.truncate(2 * slots.len());
+        if cands.is_empty() {
+            return 0;
+        }
+
+        let mut edges: Vec<Edge> = Vec::new();
+        for (ci, &i) in cands.iter().enumerate() {
+            let from = routes[i];
+            let gpus = active[i].num_gpus as f64;
+            let placed = !prev_plan.gpus_of(active[i].id).is_empty();
+            for (si, &to) in slots.iter().enumerate() {
+                if to == from {
+                    continue;
+                }
+                let gain = (util[from] - util[to]) * gpus;
+                let penalty = if placed { 0.25 * gpus } else { 0.0 };
+                let w = gain - penalty;
+                if w > 1e-9 {
+                    edges.push((ci, si, w));
+                }
+            }
+        }
+        let pairs =
+            self.service
+                .max_weight(self.engine.as_ref(), cands.len(), slots.len(), &edges);
+        for pair in &pairs {
+            let i = cands[pair.left];
+            let to = slots[pair.right];
+            routes[i] = to;
+            self.assignment.insert(active[i].id, to);
+        }
+        pairs.len()
+    }
+}
+
+impl StageProvider for ShardedCoordinator {
+    /// Route jobs to shards (rebalancing when due) and build the per-shard
+    /// slices: contiguous node ranges, previous-plan slices restricted to
+    /// each shard's own jobs, and per-shard health views.
+    fn estimate(&mut self, cx: &mut RoundContext) {
+        let input = cx.input;
+        let max_job_nodes = input
+            .active
+            .iter()
+            .map(|j| (j.num_gpus as usize).div_ceil(input.spec.gpus_per_node))
+            .max()
+            .unwrap_or(1);
+        let mut k = self.cfg.shards.min(input.spec.num_nodes.max(1));
+        while k > 1 && input.spec.num_nodes / k < max_job_nodes {
+            k -= 1;
+        }
+        self.ensure_subs(k);
+        let nodes_per = input.spec.num_nodes / k;
+
+        // Prune routes for departed jobs and stale shard indices.
+        let active_ids: BTreeSet<JobId> = input.active.iter().map(|j| j.id).collect();
+        self.assignment
+            .retain(|id, p| active_ids.contains(id) && *p < k);
+
+        let mut routes: Vec<usize> = input
+            .active
+            .iter()
+            .map(|j| self.route_job(j, input.prev_plan, input.spec, k, nodes_per))
+            .collect();
+        for (j, &p) in input.active.iter().zip(routes.iter()) {
+            self.assignment.insert(j.id, p);
+        }
+
+        let caps: Vec<usize> = (0..k)
+            .map(|p| {
+                let extra = if p == k - 1 {
+                    input.spec.num_nodes - nodes_per * k
+                } else {
+                    0
+                };
+                (nodes_per + extra).max(1) * input.spec.gpus_per_node
+            })
+            .collect();
+        let due = self.cfg.rebalance_interval > 0
+            && input.round > 0
+            && input.round % self.cfg.rebalance_interval == 0;
+        self.last_rebalance_moves = if due && k > 1 {
+            let moves =
+                self.rebalance(input.active, input.prev_plan, &mut routes, &caps, k);
+            metrics::counter_add("shard.rebalance_moves", moves as u64);
+            moves
+        } else {
+            0
+        };
+
+        let mut groups: Vec<Vec<JobInfo>> = vec![Vec::new(); k];
+        for (j, &p) in input.active.iter().zip(routes.iter()) {
+            groups[p].push(j.clone());
+        }
+        let sub_specs: Vec<ClusterSpec> = (0..k)
+            .map(|p| {
+                let extra = if p == k - 1 {
+                    input.spec.num_nodes - nodes_per * k
+                } else {
+                    0
+                };
+                ClusterSpec::new(
+                    (nodes_per + extra).max(1),
+                    input.spec.gpus_per_node,
+                    input.spec.gpu_type,
+                )
+            })
+            .collect();
+        let node_base: Vec<usize> = (0..k).map(|p| p * nodes_per).collect();
+
+        // k == 1 hands the inner scheduler the round verbatim — the
+        // bit-parity contract with the unsharded pipeline rests on taking
+        // no slicing detour at all.
+        let (sub_prev, sub_health) = if k == 1 {
+            (
+                vec![input.prev_plan.clone()],
+                vec![input.health.cloned()],
+            )
+        } else {
+            let sub_prev: Vec<PlacementPlan> = (0..k)
+                .map(|p| {
+                    let spec = &sub_specs[p];
+                    let members: BTreeSet<JobId> =
+                        groups[p].iter().map(|j| j.id).collect();
+                    let mut plan = PlacementPlan::new(spec.total_gpus());
+                    let base_gpu = node_base[p] * input.spec.gpus_per_node;
+                    for g in 0..spec.total_gpus() {
+                        let src = base_gpu + g;
+                        let src_dead = input.health.is_some_and(|h| !h.is_healthy(src));
+                        if src < input.prev_plan.num_gpus() && !src_dead {
+                            for &j in input.prev_plan.jobs_on(src) {
+                                // A job routed (or rebalanced) elsewhere
+                                // must not linger in this shard's slice —
+                                // its new shard owns it now.
+                                if !members.contains(&j) || plan.jobs_on(g).contains(&j)
+                                {
+                                    continue;
+                                }
+                                plan.place(j, &[g]);
+                            }
+                        }
+                    }
+                    plan
+                })
+                .collect();
+            let sub_health: Vec<Option<ClusterHealth>> = (0..k)
+                .map(|p| {
+                    let h = input.health?;
+                    let spec = &sub_specs[p];
+                    let base_gpu = node_base[p] * input.spec.gpus_per_node;
+                    let mut sub = ClusterHealth::new(spec.total_gpus());
+                    for g in 0..spec.total_gpus() {
+                        if !h.is_healthy(base_gpu + g) {
+                            sub.fail_gpu(g);
+                        }
+                    }
+                    (!sub.all_healthy()).then_some(sub)
+                })
+                .collect();
+            (sub_prev, sub_health)
+        };
+        self.round = Some(ShardRound {
+            k,
+            groups,
+            sub_specs,
+            sub_prev,
+            node_base,
+            sub_health,
+        });
+    }
+
+    /// Run every shard's full round (concurrently on the shared pool) and
+    /// stitch the sub-plans into the global plan, asserting single
+    /// ownership and validating the merge.
+    fn schedule(&mut self, cx: &mut RoundContext) {
+        let input = cx.input;
+        let round = self.round.take().expect("estimate stage ran");
+        let inputs: Vec<RoundInput> = (0..round.k)
+            .map(|p| RoundInput {
+                now: input.now,
+                round: input.round,
+                active: &round.groups[p],
+                prev_plan: &round.sub_prev[p],
+                spec: &round.sub_specs[p],
+                health: round.sub_health[p].as_ref(),
+            })
+            .collect();
+        let results = decide_shards(&mut self.subs, &inputs, self.cfg.parallel);
+
+        let mut timings = DecisionTimings::default();
+        self.degraded_shards = 0;
+        self.last_shard_s = vec![0.0; round.k];
+        for (p, (d, wall)) in results.into_iter().enumerate() {
+            self.last_shard_s[p] = wall;
+            if d.degraded {
+                self.degraded_shards += 1;
+            }
+            let base_gpu = round.node_base[p] * input.spec.gpus_per_node;
+            for j in d.plan.jobs() {
+                assert!(
+                    cx.plan.gpus_of(j).is_empty(),
+                    "job {j} produced by two shards"
+                );
+                let gpus: Vec<usize> =
+                    d.plan.gpus_of(j).iter().map(|g| g + base_gpu).collect();
+                cx.plan.place(j, &gpus);
+            }
+            cx.strategies.extend(d.strategies);
+            cx.packed_pairs.extend(d.packed_pairs);
+            // Shards ran concurrently: wall buckets take the max, the
+            // matching-service counts add (solve wall takes the max).
+            timings.scheduling_s = timings.scheduling_s.max(d.timings.scheduling_s);
+            timings.packing_s = timings.packing_s.max(d.timings.packing_s);
+            timings.migration_s = timings.migration_s.max(d.timings.migration_s);
+            timings.matching.absorb_parallel(&d.timings.matching);
+        }
+        timings
+            .matching
+            .absorb_parallel(&self.service.take_round_stats());
+        self.sub_timings = timings;
+        cx.plan
+            .validate()
+            .expect("merged shard plans double-own a GPU");
+    }
+
+    /// Packing happened inside the shard rounds.
+    fn pack(&mut self, _cx: &mut RoundContext) {}
+
+    /// Shards realized their slices physically already; the global count
+    /// is the Definition-1 diff against the previous plan.
+    fn migrate(&mut self, cx: &mut RoundContext) {
+        cx.migrations = cx.plan.migrations_from(cx.input.prev_plan);
+    }
+
+    fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+        let timings = std::mem::take(&mut self.sub_timings);
+        RoundDecision {
+            plan: std::mem::replace(
+                &mut cx.plan,
+                PlacementPlan::new(cx.input.spec.total_gpus()),
+            ),
+            strategies: std::mem::take(&mut cx.strategies),
+            packed_pairs: std::mem::take(&mut cx.packed_pairs),
+            migrations: cx.migrations,
+            // One degraded shard degrades the merged decision — callers
+            // count it, but the healthy shards' fresh plans still land.
+            degraded: self.degraded_shards > 0,
+            timings,
+        }
+    }
+
+    /// Drop the retained shard schedulers (the factory recreates them next
+    /// round) and the sticky routes: a panic in the coordinator's own
+    /// stages may have left the split half-applied.
+    fn reset_after_failure(&mut self) {
+        self.subs.clear();
+        self.assignment.clear();
+        self.round = None;
+        self.sub_timings = DecisionTimings::default();
+        self.degraded_shards = 0;
+    }
+}
+
+impl Scheduler for ShardedCoordinator {
+    fn name(&self) -> String {
+        format!("sharded-{}x{}", self.cfg.shards, self.inner_label)
+    }
+
+    fn decide(&mut self, input: &RoundInput) -> RoundDecision {
+        pipeline::run_round(self, input)
+    }
+}
+
+/// Run each shard's round, sequentially or across the shared worker pool.
+/// Shards share no state, so the pooled map is bit-identical to the
+/// sequential loop (asserted by `sharded_parallel_matches_sequential`).
+fn decide_shards(
+    subs: &mut [Box<dyn Scheduler>],
+    inputs: &[RoundInput],
+    parallel: bool,
+) -> Vec<(RoundDecision, f64)> {
+    let k = inputs.len();
+    assert_eq!(subs.len(), k);
+    if !parallel || k <= 1 {
+        return subs
+            .iter_mut()
+            .zip(inputs)
+            .enumerate()
+            .map(|(p, (sub, input))| decide_shard(p, sub.as_mut(), input))
+            .collect();
+    }
+    let mut slots: Vec<(usize, &mut Box<dyn Scheduler>, &RoundInput)> = subs
+        .iter_mut()
+        .zip(inputs)
+        .enumerate()
+        .map(|(p, (sub, input))| (p, sub, input))
+        .collect();
+    WorkerPool::global().map_mut(&mut slots, 0, 1, |_, slot| {
+        decide_shard(slot.0, slot.1.as_mut(), slot.2)
+    })
+}
+
+/// One shard's round: the inner scheduler's own staged pipeline (with its
+/// catch-unwind degraded fallback), wrapped in a span and the per-shard
+/// metric series.
+fn decide_shard(p: usize, sub: &mut dyn Scheduler, input: &RoundInput) -> (RoundDecision, f64) {
+    let t0 = Instant::now();
+    let decision = {
+        crate::obs_span!("shard.round", { shard: p, jobs: input.active.len() });
+        sub.decide(input)
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    if crate::obs::enabled() {
+        metrics::observe("shard.round_s", wall);
+        metrics::observe(&format!("shard.{p}.round_s"), wall);
+        metrics::gauge_set(&format!("shard.{p}.jobs"), input.active.len() as f64);
+        if decision.degraded {
+            metrics::counter_add(&format!("shard.{p}.degraded"), 1);
+        }
+    }
+    (decision, wall)
+}
+
+/// SplitMix64: the routing hash. Pure and seed-stable, so routes are
+/// reproducible across processes and thread budgets.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::GpuType;
+    use crate::estimator::OracleEstimator;
+    use crate::jobs::ModelKind;
+    use crate::matching::HungarianEngine;
+    use crate::profiler::Profiler;
+
+    fn info(id: u64, gpus: u32) -> JobInfo {
+        JobInfo {
+            id,
+            model: ModelKind::ResNet50,
+            num_gpus: gpus,
+            arrival_time: id as f64,
+            attained_service: id as f64 * 10.0,
+            total_iters: 10_000.0,
+            completed_iters: 0.0,
+            rounds_received: 0,
+            now: 100.0,
+            iso_tput: 10.0,
+        }
+    }
+
+    fn sharded(k: usize) -> ShardedCoordinator {
+        let source: Arc<dyn ThroughputSource> =
+            Arc::new(OracleEstimator::new(Profiler::new(GpuType::A100, 42)));
+        ShardedCoordinator::tesserae_t(k, source, Arc::new(HungarianEngine))
+    }
+
+    fn input<'a>(
+        round: u64,
+        active: &'a [JobInfo],
+        prev: &'a PlacementPlan,
+        spec: &'a ClusterSpec,
+        health: Option<&'a ClusterHealth>,
+    ) -> RoundInput<'a> {
+        RoundInput {
+            now: round as f64 * 360.0,
+            round,
+            active,
+            prev_plan: prev,
+            spec,
+            health,
+        }
+    }
+
+    #[test]
+    fn stitched_plan_is_valid_and_places_jobs() {
+        let spec = ClusterSpec::new(8, 2, GpuType::A100);
+        let active: Vec<JobInfo> = (0..20).map(|i| info(i, 1 + (i % 2) as u32)).collect();
+        let prev = PlacementPlan::new(16);
+        let mut s = sharded(4);
+        let d = s.decide(&input(0, &active, &prev, &spec, None));
+        assert!(!d.degraded);
+        d.plan.validate().unwrap();
+        assert!(!d.plan.jobs().is_empty());
+        assert_eq!(s.shard_round_times().len(), 4);
+    }
+
+    #[test]
+    fn shard_count_clamps_to_nodes_and_job_size() {
+        // 64 requested shards on 4 nodes clamp to 4; an 8-GPU job on
+        // 2-GPU nodes needs 4 nodes, collapsing the split to one shard.
+        let spec = ClusterSpec::new(4, 2, GpuType::A100);
+        let small: Vec<JobInfo> = (0..8).map(|i| info(i, 1)).collect();
+        let prev = PlacementPlan::new(8);
+        let mut s = sharded(64);
+        let d = s.decide(&input(0, &small, &prev, &spec, None));
+        d.plan.validate().unwrap();
+        assert_eq!(s.shard_round_times().len(), 4);
+
+        let big = vec![info(0, 8)];
+        let d = s.decide(&input(1, &big, &prev, &spec, None));
+        d.plan.validate().unwrap();
+        assert_eq!(s.shard_round_times().len(), 1);
+    }
+
+    #[test]
+    fn sharded_parallel_matches_sequential() {
+        let spec = ClusterSpec::new(8, 2, GpuType::A100);
+        let active: Vec<JobInfo> = (0..32).map(|i| info(i, 1 + (i % 2) as u32)).collect();
+        let mut par = sharded(4);
+        let mut seq = sharded(4);
+        seq.cfg.parallel = false;
+        let mut prev_par = PlacementPlan::new(16);
+        let mut prev_seq = PlacementPlan::new(16);
+        for round in 0..4 {
+            let drifted: Vec<JobInfo> = active
+                .iter()
+                .map(|j| {
+                    let mut j = j.clone();
+                    j.attained_service += round as f64 * 360.0;
+                    if round >= 2 && j.id == 5 {
+                        j.id = 500 + round;
+                    }
+                    j
+                })
+                .collect();
+            let dp = par.decide(&input(round, &drifted, &prev_par, &spec, None));
+            let ds = seq.decide(&input(round, &drifted, &prev_seq, &spec, None));
+            assert_eq!(dp.plan, ds.plan, "round {round} plans diverge");
+            assert_eq!(dp.migrations, ds.migrations, "round {round} migrations");
+            assert_eq!(dp.strategies, ds.strategies, "round {round} strategies");
+            prev_par = dp.plan;
+            prev_seq = ds.plan;
+        }
+    }
+
+    #[test]
+    fn faulted_shards_keep_jobs_off_dead_gpus() {
+        let spec = ClusterSpec::new(4, 2, GpuType::A100);
+        let active: Vec<JobInfo> = (0..8).map(|i| info(i, 1)).collect();
+        // Dead GPUs land in two different shards; the others stay fully
+        // healthy and must take the unmasked path.
+        let mut health = ClusterHealth::new(8);
+        health.fail_gpu(1);
+        health.fail_gpu(6);
+        let mut s = sharded(4);
+        let mut prev = PlacementPlan::new(8);
+        for round in 0..3u64 {
+            let d = s.decide(&input(round, &active, &prev, &spec, Some(&health)));
+            assert!(!d.degraded);
+            d.plan.validate().unwrap();
+            health.validate_plan(&d.plan).unwrap();
+            assert!(d.plan.jobs_on(1).is_empty(), "round {round} used dead GPU 1");
+            assert!(d.plan.jobs_on(6).is_empty(), "round {round} used dead GPU 6");
+            prev = d.plan;
+        }
+    }
+
+    #[test]
+    fn rebalance_moves_jobs_off_an_overloaded_shard() {
+        // Locality routing + a previous plan that crams every job into
+        // shard 0's GPU range: the first rebalance round must move load
+        // toward the idle shard.
+        let spec = ClusterSpec::new(4, 2, GpuType::A100);
+        let active: Vec<JobInfo> = (0..4).map(|i| info(i, 1)).collect();
+        let mut prev = PlacementPlan::new(8);
+        for i in 0..4u64 {
+            prev.place(i, &[i as usize]); // GPUs 0..4 = shard 0 of 2
+        }
+        let mut s = sharded(2);
+        s.cfg.routing = Routing::Locality;
+        s.cfg.rebalance_interval = 1;
+        let d0 = s.decide(&input(0, &active, &prev, &spec, None));
+        assert_eq!(s.last_rebalance_moves(), 0, "round 0 never rebalances");
+        let d1 = s.decide(&input(1, &active, &d0.plan, &spec, None));
+        assert!(
+            s.last_rebalance_moves() > 0,
+            "overloaded shard 0 donated nothing"
+        );
+        d1.plan.validate().unwrap();
+        // At least one job now lives in shard 1's GPU range (4..8).
+        let moved = d1
+            .plan
+            .jobs()
+            .iter()
+            .any(|&j| d1.plan.gpus_of(j).iter().any(|&g| g >= 4));
+        assert!(moved, "no job landed on shard 1's GPUs: {:?}", d1.plan.job_gpu_map());
+    }
+
+    #[test]
+    fn balanced_shards_rebalance_to_a_noop() {
+        // Hashed routing spreads these jobs evenly; the rebalance matching
+        // must find no positive-weight move.
+        let spec = ClusterSpec::new(8, 2, GpuType::A100);
+        let active: Vec<JobInfo> = (0..32).map(|i| info(i, 1)).collect();
+        let prev = PlacementPlan::new(16);
+        let mut s = sharded(4);
+        s.cfg.rebalance_interval = 1;
+        let d0 = s.decide(&input(0, &active, &prev, &spec, None));
+        let _d1 = s.decide(&input(1, &active, &d0.plan, &spec, None));
+        // Not asserting exactly zero (hash spread is only approximately
+        // even) — but a near-balanced cluster must not churn wholesale.
+        assert!(
+            s.last_rebalance_moves() <= 4,
+            "balanced cluster moved {} jobs",
+            s.last_rebalance_moves()
+        );
+    }
+
+    /// Inner scheduler for the isolation test: a trivial greedy placer
+    /// that panics in its Schedule stage on demand.
+    struct Bomb {
+        explode_after: u64,
+    }
+
+    impl StageProvider for Bomb {
+        fn estimate(&mut self, _cx: &mut RoundContext) {}
+        fn schedule(&mut self, cx: &mut RoundContext) {
+            if cx.input.round >= self.explode_after {
+                panic!("bomb shard exploded");
+            }
+            let mut next = 0usize;
+            for j in cx.input.active {
+                let need = j.num_gpus as usize;
+                if next + need <= cx.input.spec.total_gpus() {
+                    let gpus: Vec<usize> = (next..next + need).collect();
+                    cx.plan.place(j.id, &gpus);
+                    next += need;
+                }
+            }
+        }
+        fn pack(&mut self, _cx: &mut RoundContext) {}
+        fn migrate(&mut self, cx: &mut RoundContext) {
+            cx.migrations = cx.plan.migrations_from(cx.input.prev_plan);
+        }
+        fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+            RoundDecision {
+                plan: std::mem::replace(
+                    &mut cx.plan,
+                    PlacementPlan::new(cx.input.spec.total_gpus()),
+                ),
+                strategies: std::mem::take(&mut cx.strategies),
+                packed_pairs: std::mem::take(&mut cx.packed_pairs),
+                migrations: cx.migrations,
+                degraded: false,
+                timings: DecisionTimings::default(),
+            }
+        }
+    }
+
+    struct BombScheduler {
+        inner: Bomb,
+    }
+
+    impl Scheduler for BombScheduler {
+        fn name(&self) -> String {
+            "bomb".into()
+        }
+        fn decide(&mut self, input: &RoundInput) -> RoundDecision {
+            pipeline::run_round(&mut self.inner, input)
+        }
+    }
+
+    #[test]
+    fn panicking_shard_degrades_alone() {
+        // Shard 1 explodes from round 1 on; shard 0 stays healthy. The
+        // merged decision is flagged degraded, shard 1's jobs keep their
+        // round-0 placements, and shard 0's jobs are still freshly placed.
+        let spec = ClusterSpec::new(4, 2, GpuType::A100);
+        let factory: ShardFactory = Arc::new(|shard| {
+            Box::new(BombScheduler {
+                inner: Bomb {
+                    explode_after: if shard == 1 { 1 } else { u64::MAX },
+                },
+            })
+        });
+        let mut cfg = ShardedConfig::new(2);
+        cfg.rebalance_interval = 0;
+        let mut s =
+            ShardedCoordinator::new(cfg, "bomb", factory, Arc::new(HungarianEngine));
+        let active: Vec<JobInfo> = (0..6).map(|i| info(i, 1)).collect();
+        let prev = PlacementPlan::new(8);
+        let d0 = s.decide(&input(0, &active, &prev, &spec, None));
+        assert!(!d0.degraded);
+        let shard1_jobs: Vec<JobId> = d0
+            .plan
+            .jobs()
+            .into_iter()
+            .filter(|&j| d0.plan.gpus_of(j).iter().all(|&g| g >= 4))
+            .collect();
+        assert!(!shard1_jobs.is_empty(), "hash routed nothing to shard 1");
+
+        let d1 = s.decide(&input(1, &active, &d0.plan, &spec, None));
+        assert!(d1.degraded, "a degraded shard must flag the merged decision");
+        d1.plan.validate().unwrap();
+        // Shard 1's jobs survived at their previous placements.
+        for &j in &shard1_jobs {
+            assert_eq!(
+                d1.plan.gpus_of(j),
+                d0.plan.gpus_of(j),
+                "degraded shard moved job {j}"
+            );
+        }
+        // Shard 0 committed a fresh plan: its jobs are still placed.
+        let shard0_placed = d1
+            .plan
+            .jobs()
+            .iter()
+            .any(|&j| d1.plan.gpus_of(j).iter().all(|&g| g < 4));
+        assert!(shard0_placed, "healthy shard lost its placements");
+    }
+
+    #[test]
+    fn per_shard_metric_series_are_published() {
+        let _guard = crate::obs::enabled_guard(true);
+        let spec = ClusterSpec::new(4, 2, GpuType::A100);
+        let active: Vec<JobInfo> = (0..8).map(|i| info(i, 1)).collect();
+        let prev = PlacementPlan::new(8);
+        let mut s = sharded(2);
+        let _ = s.decide(&input(0, &active, &prev, &spec, None));
+        let snap = metrics::snapshot();
+        for p in 0..2 {
+            assert!(
+                snap.histograms.contains_key(&format!("shard.{p}.round_s")),
+                "missing shard.{p}.round_s"
+            );
+            assert!(
+                snap.gauges.contains_key(&format!("shard.{p}.jobs")),
+                "missing shard.{p}.jobs"
+            );
+        }
+        assert!(snap.histograms.contains_key("shard.round_s"));
+    }
+
+    #[test]
+    fn routes_are_sticky_across_rounds() {
+        let spec = ClusterSpec::new(8, 2, GpuType::A100);
+        let active: Vec<JobInfo> = (0..16).map(|i| info(i, 1)).collect();
+        let prev = PlacementPlan::new(16);
+        let mut s = sharded(4);
+        s.cfg.rebalance_interval = 0;
+        let d0 = s.decide(&input(0, &active, &prev, &spec, None));
+        let before = s.assignment.clone();
+        let _d1 = s.decide(&input(1, &active, &d0.plan, &spec, None));
+        assert_eq!(before, s.assignment, "routes churned without a rebalance");
+    }
+}

@@ -61,26 +61,53 @@ pub fn smoke_mode() -> bool {
 /// checkout or on an unreadable repository — benchmark artifacts must
 /// never fail over provenance.
 pub fn git_rev() -> Option<String> {
-    let mut dir = std::env::current_dir().ok()?;
+    git_rev_in(&std::env::current_dir().ok()?)
+}
+
+/// [`git_rev`] from an explicit start directory (the testable core).
+/// When HEAD points at a ref with no loose file (`git pack-refs`, fresh
+/// clones), fall back to scanning `.git/packed-refs` instead of silently
+/// dropping provenance to `None`.
+fn git_rev_in(start: &std::path::Path) -> Option<String> {
+    let mut dir = start.to_path_buf();
     loop {
-        let head = dir.join(".git").join("HEAD");
-        if let Ok(text) = std::fs::read_to_string(&head) {
+        let git = dir.join(".git");
+        if let Ok(text) = std::fs::read_to_string(git.join("HEAD")) {
             let text = text.trim();
             return match text.strip_prefix("ref: ") {
                 Some(r) => {
-                    let target = dir.join(".git").join(r.trim());
-                    std::fs::read_to_string(target)
+                    let refname = r.trim();
+                    std::fs::read_to_string(git.join(refname))
                         .ok()
                         .map(|h| h.trim().to_string())
+                        .filter(|h| !h.is_empty())
+                        .or_else(|| packed_ref(&git.join("packed-refs"), refname))
                 }
-                None => Some(text.to_string()), // detached HEAD
-            }
-            .filter(|h| !h.is_empty());
+                None => Some(text.to_string()).filter(|h| !h.is_empty()), // detached
+            };
         }
         if !dir.pop() {
             return None;
         }
     }
+}
+
+/// Look `refname` up in a `packed-refs` file: `<hash> <refname>` lines,
+/// with `#` header lines and `^` peeled-tag lines skipped.
+fn packed_ref(packed: &std::path::Path, refname: &str) -> Option<String> {
+    let text = std::fs::read_to_string(packed).ok()?;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('^') {
+            continue;
+        }
+        if let Some((hash, name)) = line.split_once(' ') {
+            if name.trim() == refname && !hash.is_empty() {
+                return Some(hash.to_string());
+            }
+        }
+    }
+    None
 }
 
 /// Provenance block embedded in every `BENCH_*.json` artifact: which code
@@ -334,6 +361,75 @@ mod tests {
             .get("features")
             .and_then(|f| f.get("alloc_audit"))
             .is_some());
+    }
+
+    /// Build a synthetic `.git` under a unique temp dir; returns the repo
+    /// root. `loose`/`packed` control where `refs/heads/main` lives.
+    fn fake_repo(tag: &str, head: &str, loose: Option<&str>, packed: Option<&str>) -> std::path::PathBuf {
+        let root = std::env::temp_dir().join(format!(
+            "tesserae_gitrev_{}_{tag}",
+            std::process::id()
+        ));
+        let git = root.join(".git");
+        let _ = std::fs::remove_dir_all(&root);
+        std::fs::create_dir_all(git.join("refs/heads")).unwrap();
+        std::fs::write(git.join("HEAD"), head).unwrap();
+        if let Some(hash) = loose {
+            std::fs::write(git.join("refs/heads/main"), hash).unwrap();
+        }
+        if let Some(contents) = packed {
+            std::fs::write(git.join("packed-refs"), contents).unwrap();
+        }
+        root
+    }
+
+    #[test]
+    fn git_rev_follows_loose_ref() {
+        let root = fake_repo("loose", "ref: refs/heads/main\n", Some("abc123\n"), None);
+        assert_eq!(git_rev_in(&root).as_deref(), Some("abc123"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn git_rev_falls_back_to_packed_refs() {
+        let packed = "# pack-refs with: peeled fully-peeled sorted\n\
+                      deadbeef01 refs/heads/other\n\
+                      cafebabe02 refs/heads/main\n\
+                      ^feedface03\n";
+        let root = fake_repo("packed", "ref: refs/heads/main\n", None, Some(packed));
+        assert_eq!(git_rev_in(&root).as_deref(), Some("cafebabe02"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn git_rev_prefers_loose_over_packed() {
+        // git itself treats the loose file as authoritative when both exist.
+        let packed = "stale00 refs/heads/main\n";
+        let root = fake_repo(
+            "both",
+            "ref: refs/heads/main\n",
+            Some("fresh11\n"),
+            Some(packed),
+        );
+        assert_eq!(git_rev_in(&root).as_deref(), Some("fresh11"));
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn git_rev_detached_head_and_missing_ref() {
+        let root = fake_repo("detached", "1234abcd\n", None, None);
+        assert_eq!(git_rev_in(&root).as_deref(), Some("1234abcd"));
+        let _ = std::fs::remove_dir_all(&root);
+
+        // Ref named nowhere — loose missing, packed-refs lacks the branch.
+        let root = fake_repo(
+            "missing",
+            "ref: refs/heads/main\n",
+            None,
+            Some("aa11 refs/heads/other\n"),
+        );
+        assert_eq!(git_rev_in(&root), None);
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

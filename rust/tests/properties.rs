@@ -1043,3 +1043,126 @@ fn faulted_simulation_is_bit_identical_across_pool_budgets() {
         assert!(a.evictions >= 1, "{kind:?}: no eviction fired");
     }
 }
+
+// ============================================================ sharding
+
+/// ISSUE 9's wrapper contract: a one-shard coordinator routes every job
+/// to a single sub-scheduler handed the whole cluster, the verbatim
+/// previous plan and the verbatim health mask — so for every scheduler
+/// family its decisions across churned rounds must be bit-identical to
+/// running that scheduler directly (plans, strategies, packed pairs,
+/// migration counts).
+#[test]
+fn one_shard_coordinator_is_bit_identical_to_unsharded() {
+    use std::sync::Arc;
+    use tesserae::estimator::{CachedSource, OracleEstimator, ThroughputSource};
+    use tesserae::experiments::scalability::{churn_active_jobs, synthetic_active_jobs};
+    use tesserae::experiments::{build_scheduler, SchedKind};
+    use tesserae::profiler::Profiler;
+    use tesserae::schedulers::{RoundInput, Scheduler};
+    use tesserae::sharding::{ShardFactory, ShardedConfig, ShardedCoordinator};
+
+    let spec = ClusterSpec::new(6, 4, GpuType::A100);
+    for seed in [9u64, 31] {
+        for kind in [SchedKind::TesseraeT, SchedKind::Gavel, SchedKind::Pop(2)] {
+            let run = |wrapped: bool| {
+                let truth = Profiler::new(spec.gpu_type, seed);
+                let source: Arc<dyn ThroughputSource> =
+                    Arc::new(CachedSource::new(OracleEstimator::new(truth)));
+                let mut sched: Box<dyn Scheduler> = if wrapped {
+                    let factory: ShardFactory = Arc::new(move |_shard| {
+                        build_scheduler(kind, Arc::clone(&source), Arc::new(HungarianEngine))
+                    });
+                    Box::new(ShardedCoordinator::new(
+                        ShardedConfig::new(1),
+                        kind.label().as_str(),
+                        factory,
+                        Arc::new(HungarianEngine),
+                    ))
+                } else {
+                    build_scheduler(kind, source, Arc::new(HungarianEngine))
+                };
+                let mut active = synthetic_active_jobs(40, seed);
+                let mut prev = PlacementPlan::new(spec.total_gpus());
+                let mut decisions = Vec::new();
+                for round in 0..4u64 {
+                    let d = sched.decide(&RoundInput {
+                        now: round as f64 * 360.0,
+                        round,
+                        active: &active,
+                        prev_plan: &prev,
+                        spec: &spec,
+                        health: None,
+                    });
+                    prev = d.plan.clone();
+                    decisions.push((d.plan, d.strategies, d.packed_pairs, d.migrations));
+                    active = churn_active_jobs(&active, seed ^ (round + 19));
+                }
+                decisions
+            };
+            let direct = run(false);
+            let wrapped = run(true);
+            assert_eq!(
+                direct, wrapped,
+                "{kind:?} seed {seed}: the one-shard wrapper changed the decisions"
+            );
+        }
+    }
+}
+
+/// The sharded coordinator's faulted runs must be bit-identical across
+/// worker-pool budgets: with budget 1 every shard decides inline in shard
+/// order; with a real budget the shards decide concurrently on pool
+/// workers. Per-job JCTs, migration totals, fault counters and round
+/// counts must all agree — including through GPU/node failures that push
+/// individual shards into eviction and recovery.
+#[test]
+fn sharded_faulted_simulation_is_bit_identical_across_pool_budgets() {
+    use tesserae::experiments::faults::run_sim_faulted;
+    use tesserae::experiments::{Scale, SchedKind};
+    use tesserae::faults::{FaultEvent, FaultKind, FaultPlan};
+    use tesserae::util::pool::WorkerPool;
+
+    let scale = Scale {
+        jobs: 14,
+        nodes: 4,
+        gpus_per_node: 4,
+        jobs_per_hour: 240.0,
+        seed: 5,
+    };
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let faults = FaultPlan::from_events(vec![
+        FaultEvent { round: 1, kind: FaultKind::GpuFail(2) },
+        FaultEvent { round: 2, kind: FaultKind::Preempt { pick: 4 } },
+        FaultEvent { round: 4, kind: FaultKind::NodeFail(1) },
+        FaultEvent { round: 8, kind: FaultKind::GpuRecover(2) },
+        FaultEvent { round: 10, kind: FaultKind::NodeRecover(1) },
+    ]);
+    let run = |budget: usize| {
+        let _budget = WorkerPool::global().budget_override(budget);
+        run_sim_faulted(SchedKind::Sharded(4), &trace, spec, scale.seed, &faults)
+    };
+    let a = run(1);
+    let b = run(6);
+    assert_eq!(a.unfinished, 0, "sharded faulted run must drain");
+    assert_eq!(a.avg_jct.to_bits(), b.avg_jct.to_bits());
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    assert_eq!(a.total_migrations, b.total_migrations);
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.evictions, b.evictions);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.replacements, b.replacements);
+    assert_eq!(a.stragglers, b.stragglers);
+    assert_eq!(a.degraded_rounds, b.degraded_rounds);
+    assert_eq!(a.outcomes.len(), b.outcomes.len());
+    for (id, oa) in &a.outcomes {
+        assert_eq!(
+            oa.jct.to_bits(),
+            b.outcomes[id].jct.to_bits(),
+            "job {id}: per-job progress diverged across budgets"
+        );
+        assert_eq!(oa.migrations, b.outcomes[id].migrations, "job {id}");
+    }
+    assert!(a.evictions >= 1, "no eviction fired");
+}
