@@ -1,0 +1,325 @@
+//! Crash-recovery benchmarks: the cost and the correctness of the ISSUE 10
+//! robustness layers, asserted inline.
+//!
+//! Emits `BENCH_recovery.json` with three arms:
+//!
+//!  * `snapshot_overhead` — the same run with and without every-round
+//!    snapshots; asserts the decisions stay bit-identical and the wall
+//!    overhead stays under 5% of round time (best-of-3 per arm to shed
+//!    scheduler-noise outliers);
+//!  * `restore_parity` — kill at a mid-run round, restore from the latest
+//!    snapshot, assert the finished run is bit-identical to the
+//!    uninterrupted one (per-job JCTs and migration counts included);
+//!  * `deadline_recovery` — a stage that overruns its watchdog budget for
+//!    two consecutive rounds trips the circuit breaker; asserts the run
+//!    recovers within the breaker cooldown (fallback rounds + one clean
+//!    probe) and drains every job.
+//!
+//! Scale override: TESSERAE_BENCH_SCALE=quick|standard|paper
+//! Smoke mode: `--smoke` (or TESSERAE_BENCH_SMOKE=1) runs one quick-scale
+//! kill-and-restore parity check, writing no JSON.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tesserae::cluster::GpuType;
+use tesserae::estimator::OracleEstimator;
+use tesserae::experiments::{run_sim_recoverable, Scale, SchedKind};
+use tesserae::matching::HungarianEngine;
+use tesserae::profiler::Profiler;
+use tesserae::recovery::{watchdog, BreakerConfig, BreakerScheduler, BreakerState};
+use tesserae::schedulers::{
+    run_round, RoundContext, RoundDecision, RoundInput, Scheduler, StageProvider,
+    TesseraeScheduler,
+};
+use tesserae::simulator::{simulate, RecoveryOptions, SimConfig, SimResult};
+use tesserae::util::json::Json;
+
+fn scale() -> Scale {
+    match std::env::var("TESSERAE_BENCH_SCALE").as_deref() {
+        Ok("quick") => Scale::quick(),
+        Ok("paper") => Scale::paper(),
+        _ => Scale::standard(),
+    }
+}
+
+fn state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "tesserae-bench-recovery-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_bit_parity(a: &SimResult, b: &SimResult, label: &str) {
+    assert_eq!(a.avg_jct.to_bits(), b.avg_jct.to_bits(), "{label}: avg JCT");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{label}: makespan");
+    assert_eq!(a.total_migrations, b.total_migrations, "{label}: migrations");
+    assert_eq!(a.rounds, b.rounds, "{label}: rounds");
+    assert_eq!(a.unfinished, b.unfinished, "{label}: unfinished");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: outcomes");
+    for (id, oa) in &a.outcomes {
+        assert_eq!(
+            oa.jct.to_bits(),
+            b.outcomes[id].jct.to_bits(),
+            "{label}: job {id} JCT"
+        );
+        assert_eq!(oa.migrations, b.outcomes[id].migrations, "{label}: job {id}");
+    }
+}
+
+/// Best-of-3 wall time for one recoverable run (the minimum is the least
+/// noise-contaminated sample on a shared machine).
+fn timed_run(
+    kind: SchedKind,
+    trace: &tesserae::trace::Trace,
+    spec: tesserae::cluster::ClusterSpec,
+    seed: u64,
+    recovery: &RecoveryOptions,
+) -> (SimResult, f64) {
+    let mut best = f64::INFINITY;
+    let mut result = None;
+    for _ in 0..3 {
+        if let Some(dir) = &recovery.state_dir {
+            let _ = std::fs::remove_dir_all(dir);
+        }
+        let t0 = Instant::now();
+        let r = run_sim_recoverable(kind, trace, spec, seed, 0.0, recovery);
+        best = best.min(t0.elapsed().as_secs_f64());
+        result = Some(r);
+    }
+    (result.unwrap(), best)
+}
+
+fn snapshot_overhead_arm(scale: &Scale, cells: &mut Vec<Json>) {
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let kind = SchedKind::TesseraeT;
+    let (base, base_s) = timed_run(kind, &trace, spec, scale.seed, &RecoveryOptions::default());
+    let dir = state_dir("overhead");
+    let (snap, snap_s) = timed_run(
+        kind,
+        &trace,
+        spec,
+        scale.seed,
+        &RecoveryOptions {
+            state_dir: Some(dir.clone()),
+            snapshot_every: 1,
+            restore: false,
+            stop_after_round: None,
+        },
+    );
+    // Snapshots are write-only: every-round snapshotting must not perturb
+    // a single decision.
+    assert_bit_parity(&base, &snap, "snapshot-overhead");
+    let per_round_base = base_s / base.rounds as f64;
+    let per_round_snap = snap_s / snap.rounds as f64;
+    let overhead = (per_round_snap - per_round_base).max(0.0) / per_round_base;
+    assert!(
+        overhead < 0.05,
+        "every-round snapshots cost {:.1}% of round time (>= 5%): \
+         {per_round_base:.6}s -> {per_round_snap:.6}s per round",
+        overhead * 100.0
+    );
+    println!(
+        "snapshot overhead: {:.2}% of round time ({} rounds, {:.4}s -> {:.4}s)",
+        overhead * 100.0,
+        base.rounds,
+        base_s,
+        snap_s
+    );
+    cells.push(Json::obj(vec![
+        ("arm", Json::str("snapshot_overhead")),
+        ("scheduler", Json::str(&kind.label())),
+        ("rounds", Json::num(base.rounds as f64)),
+        ("base_s", Json::num(base_s)),
+        ("snapshot_every_round_s", Json::num(snap_s)),
+        ("overhead_frac", Json::num(overhead)),
+    ]));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn restore_parity_arm(scale: &Scale, kind: SchedKind, kill_round: u64, cells: &mut Vec<Json>) {
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let reference =
+        run_sim_recoverable(kind, &trace, spec, scale.seed, 0.0, &RecoveryOptions::default());
+    assert_eq!(reference.unfinished, 0, "{kind:?}: reference must drain");
+    let dir = state_dir(&format!("parity-{}", kind.label().replace('/', "-")));
+    let killed = run_sim_recoverable(
+        kind,
+        &trace,
+        spec,
+        scale.seed,
+        0.0,
+        &RecoveryOptions {
+            state_dir: Some(dir.clone()),
+            snapshot_every: 1,
+            restore: false,
+            stop_after_round: Some(kill_round),
+        },
+    );
+    assert!(
+        killed.rounds < reference.rounds,
+        "{kind:?}: kill at round {kill_round} must interrupt"
+    );
+    let t0 = Instant::now();
+    let resumed = run_sim_recoverable(
+        kind,
+        &trace,
+        spec,
+        scale.seed,
+        0.0,
+        &RecoveryOptions {
+            state_dir: Some(dir.clone()),
+            snapshot_every: 1,
+            restore: true,
+            stop_after_round: None,
+        },
+    );
+    let resume_s = t0.elapsed().as_secs_f64();
+    assert_bit_parity(&reference, &resumed, &format!("restore {kind:?}"));
+    println!(
+        "restore parity ok: {} killed@{kill_round}, resumed {} rounds in {resume_s:.3}s",
+        resumed.scheduler,
+        resumed.rounds - killed.rounds
+    );
+    cells.push(Json::obj(vec![
+        ("arm", Json::str("restore_parity")),
+        ("scheduler", Json::str(&kind.label())),
+        ("kill_round", Json::num(kill_round as f64)),
+        ("rounds", Json::num(reference.rounds as f64)),
+        ("resume_s", Json::num(resume_s)),
+        ("bit_identical", Json::Bool(true)),
+    ]));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Tesserae-T whose `pack` stage sleeps past the armed watchdog budget
+/// during `slow_rounds` — a deterministic stand-in for a hung kernel.
+struct SlowPack {
+    inner: TesseraeScheduler,
+    slow_rounds: std::ops::Range<u64>,
+}
+
+impl StageProvider for SlowPack {
+    fn estimate(&mut self, cx: &mut RoundContext) {
+        self.inner.estimate(cx);
+    }
+    fn schedule(&mut self, cx: &mut RoundContext) {
+        self.inner.schedule(cx);
+    }
+    fn pack(&mut self, cx: &mut RoundContext) {
+        if self.slow_rounds.contains(&cx.input.round) {
+            std::thread::sleep(Duration::from_millis(400));
+        }
+        self.inner.pack(cx);
+    }
+    fn migrate(&mut self, cx: &mut RoundContext) {
+        self.inner.migrate(cx);
+    }
+    fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+        self.inner.commit(cx)
+    }
+    fn reset_after_failure(&mut self) {
+        self.inner.reset_after_failure();
+    }
+}
+
+impl Scheduler for SlowPack {
+    fn name(&self) -> String {
+        "slow-pack".into()
+    }
+    fn decide(&mut self, input: &RoundInput) -> RoundDecision {
+        run_round(self, input)
+    }
+}
+
+fn deadline_recovery_arm(cells: &mut Vec<Json>) {
+    // Small fixed scenario: the arm measures the state machine, not
+    // throughput, and the injected sleeps dominate its wall time anyway.
+    let scale = Scale::quick();
+    let trace = scale.shockwave_trace();
+    let cfg = SimConfig::new(scale.spec(GpuType::A100));
+    let truth = Profiler::new(GpuType::A100, scale.seed);
+    let breaker_cfg = BreakerConfig {
+        trip_after: 2,
+        cooldown_rounds: 3,
+    };
+    watchdog::set_stage_deadline_ms(Some(100));
+    let mut sched = BreakerScheduler::new(
+        Box::new(SlowPack {
+            inner: TesseraeScheduler::tesserae_t(
+                Arc::new(OracleEstimator::new(Profiler::new(GpuType::A100, scale.seed))),
+                Arc::new(HungarianEngine),
+            ),
+            slow_rounds: 2..4,
+        }),
+        breaker_cfg,
+    );
+    let r = simulate(&trace, &mut sched, &truth, &cfg);
+    watchdog::set_stage_deadline_ms(None);
+
+    assert_eq!(r.unfinished, 0, "deadline-tripped run must drain");
+    assert_eq!(r.degraded_rounds, 2, "both overrun rounds must degrade");
+    assert_eq!(sched.breaker().trips(), 1, "a streak of 2 must trip once");
+    // Recovery within the cooldown window: after the trip at round 3 the
+    // fallback serves rounds 4..7 and the round-7 probe closes the
+    // breaker — so by trip + cooldown + 1 the real provider is back.
+    assert_eq!(
+        sched.breaker().state(),
+        BreakerState::Closed,
+        "the clean probe must close the breaker within the cooldown window"
+    );
+    println!(
+        "deadline recovery ok: {} degraded rounds, {} trip(s), closed after \
+         {}-round cooldown + probe",
+        r.degraded_rounds,
+        sched.breaker().trips(),
+        breaker_cfg.cooldown_rounds
+    );
+    cells.push(Json::obj(vec![
+        ("arm", Json::str("deadline_recovery")),
+        ("stage_deadline_ms", Json::num(100.0)),
+        ("trip_after", Json::num(breaker_cfg.trip_after as f64)),
+        ("cooldown_rounds", Json::num(breaker_cfg.cooldown_rounds as f64)),
+        ("degraded_rounds", Json::num(r.degraded_rounds as f64)),
+        ("breaker_trips", Json::num(sched.breaker().trips() as f64)),
+        ("recovered_within_cooldown", Json::Bool(true)),
+    ]));
+}
+
+fn main() {
+    if tesserae::util::benchutil::smoke_mode() {
+        let scale = Scale::quick();
+        let mut cells = Vec::new();
+        restore_parity_arm(&scale, SchedKind::TesseraeT, 4, &mut cells);
+        println!("smoke: kill-and-restore parity ok — no JSON written");
+        return;
+    }
+
+    let scale = scale();
+    println!(
+        "bench scale: {} jobs on {} GPUs\n",
+        scale.jobs,
+        scale.nodes * scale.gpus_per_node
+    );
+
+    let mut cells = Vec::new();
+    snapshot_overhead_arm(&scale, &mut cells);
+    restore_parity_arm(&scale, SchedKind::TesseraeT, 5, &mut cells);
+    restore_parity_arm(&scale, SchedKind::Sharded(4), 5, &mut cells);
+    deadline_recovery_arm(&mut cells);
+
+    let json = Json::obj(vec![
+        ("bench", Json::str("recovery")),
+        ("meta", tesserae::util::benchutil::bench_meta()),
+        ("cells", Json::arr(cells)),
+    ]);
+    match std::fs::write("BENCH_recovery.json", json.to_string_pretty()) {
+        Ok(()) => println!("wrote BENCH_recovery.json"),
+        Err(e) => println!("could not write BENCH_recovery.json: {e}"),
+    }
+}

@@ -15,7 +15,7 @@ use crate::estimator::{CachedSource, OracleEstimator, ThroughputSource};
 use crate::faults::{FaultConfig, FaultPlan};
 use crate::matching::{HungarianEngine, MatchingEngine};
 use crate::profiler::Profiler;
-use crate::simulator::{simulate, SimConfig, SimResult};
+use crate::simulator::{simulate_recoverable, RecoveryOptions, SimConfig, SimResult};
 use crate::trace::Trace;
 use crate::util::benchutil::Table;
 
@@ -29,6 +29,20 @@ pub fn run_sim_faulted(
     seed: u64,
     faults: &FaultPlan,
 ) -> SimResult {
+    run_sim_faulted_recoverable(kind, trace, spec, seed, faults, &RecoveryOptions::default())
+}
+
+/// [`run_sim_faulted`] with crash-recovery options: the arm used by the
+/// kill-and-restore CI step and `bench_recovery`, where faults, snapshots
+/// and the restore path all have to compose.
+pub fn run_sim_faulted_recoverable(
+    kind: SchedKind,
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+    faults: &FaultPlan,
+    recovery: &RecoveryOptions,
+) -> SimResult {
     let truth = Profiler::new(spec.gpu_type, seed);
     let source: Arc<dyn ThroughputSource> =
         Arc::new(CachedSource::new(OracleEstimator::new(truth.clone())));
@@ -36,7 +50,7 @@ pub fn run_sim_faulted(
     let mut sched = build_scheduler(kind, source, engine);
     let mut cfg = SimConfig::new(spec);
     cfg.faults = faults.clone();
-    simulate(trace, sched.as_mut(), &truth, &cfg)
+    simulate_recoverable(trace, sched.as_mut(), &truth, &cfg, recovery)
 }
 
 /// The MTBF sweep rows. MTBFs are per-unit rounds: on an `n`-GPU cluster

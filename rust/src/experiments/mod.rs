@@ -15,10 +15,11 @@ use crate::estimator::{CachedSource, OracleEstimator, ThroughputSource};
 use crate::matching::{HungarianEngine, MatchingEngine};
 use crate::policies::placement::{MigrationMode, PackingConfig, StrategyMode};
 use crate::profiler::Profiler;
+use crate::recovery::{BreakerConfig, BreakerScheduler};
 use crate::schedulers::{
     GavelObjective, GavelScheduler, PopScheduler, Scheduler, TesseraeScheduler,
 };
-use crate::simulator::{simulate, SimConfig, SimResult};
+use crate::simulator::{simulate, simulate_recoverable, RecoveryOptions, SimConfig, SimResult};
 use crate::trace::{Trace, TraceParams};
 
 /// Scheduler configurations evaluated across the figures.
@@ -69,12 +70,21 @@ impl SchedKind {
 }
 
 /// Build a scheduler over a shared throughput source + matching engine.
+///
+/// Every arm is wrapped in a degraded-round [`BreakerScheduler`] — a
+/// transparent pass-through while closed (bit-identical to the bare
+/// scheduler, which is what every parity test exercises) that switches to
+/// the greedy fallback after `trip_after` consecutive degraded rounds.
+/// The sharded coordinator is the exception: it embeds one breaker *per
+/// shard*, and an outer breaker would trip in lockstep and override that
+/// finer-grained isolation.
 pub fn build_scheduler(
     kind: SchedKind,
     source: Arc<dyn ThroughputSource>,
     engine: Arc<dyn MatchingEngine>,
 ) -> Box<dyn Scheduler> {
-    match kind {
+    let sharded = matches!(kind, SchedKind::Sharded(_));
+    let inner: Box<dyn Scheduler> = match kind {
         SchedKind::TesseraeT => Box::new(TesseraeScheduler::tesserae_t(source, engine)),
         SchedKind::TesseraeTBasicMigration => {
             let mut s = TesseraeScheduler::tesserae_t(source, engine);
@@ -145,6 +155,11 @@ pub fn build_scheduler(
             Some(PackingConfig::default()),
             MigrationMode::Tesserae,
         )),
+    };
+    if sharded {
+        inner
+    } else {
+        Box::new(BreakerScheduler::new(inner, BreakerConfig::default()))
     }
 }
 
@@ -323,6 +338,32 @@ pub fn run_sim_engine(
     let mut sched = build_scheduler(kind, source, engine);
     let cfg = SimConfig::new(spec);
     simulate(trace, sched.as_mut(), &truth, &cfg)
+}
+
+/// [`run_sim`] with crash-recovery options threaded into the simulator
+/// loop: `state_dir` writes generation-numbered snapshots, `restore`
+/// resumes from the newest readable one, `stop_after_round` emulates a
+/// mid-flight kill. A restored run is bit-identical to the uninterrupted
+/// one (asserted by the restore-parity tests and `bench_recovery`).
+pub fn run_sim_recoverable(
+    kind: SchedKind,
+    trace: &Trace,
+    spec: ClusterSpec,
+    seed: u64,
+    decision_noise: f64,
+    recovery: &RecoveryOptions,
+) -> SimResult {
+    let truth = Profiler::new(spec.gpu_type, seed);
+    let visible = if decision_noise > 0.0 {
+        truth.with_decision_noise(decision_noise, seed ^ 0xbeef)
+    } else {
+        truth.clone()
+    };
+    let source: Arc<dyn ThroughputSource> =
+        Arc::new(CachedSource::new(OracleEstimator::new(visible)));
+    let mut sched = build_scheduler(kind, source, Arc::new(HungarianEngine));
+    let cfg = SimConfig::new(spec);
+    simulate_recoverable(trace, sched.as_mut(), &truth, &cfg, recovery)
 }
 
 /// Run with a caller-supplied throughput source (Fig. 18's estimators).

@@ -31,6 +31,7 @@ pub mod matching;
 pub mod obs;
 pub mod policies;
 pub mod profiler;
+pub mod recovery;
 /// The PJRT-backed runtime needs the `xla` crate, which only exists in the
 /// rust_pallas build image. The `pjrt` feature gates it; the default build
 /// substitutes a std-only stub with the same API surface whose entry points

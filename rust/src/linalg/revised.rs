@@ -615,6 +615,9 @@ pub fn repair_warm_start(lp: &SparseLp, warm: &WarmStart) -> Option<WarmStart> {
     let mut c_b = vec![0.0; m];
     let mut e_r = vec![0.0; m];
     for _ in 0..max_iters {
+        // Watchdog iteration checkpoint (no-op unless a stage deadline is
+        // armed on this thread).
+        crate::recovery::watchdog::checkpoint();
         // Leaving row: the most-violated basic value (Dantzig-style dual
         // pricing; deterministic — strict `>` keeps the lowest position on
         // ties).
@@ -823,6 +826,9 @@ pub fn solve_sparse_lp(
     let mut iters = 0usize;
 
     loop {
+        // Watchdog iteration checkpoint (no-op unless a stage deadline is
+        // armed on this thread).
+        crate::recovery::watchdog::checkpoint();
         // Duals for the current basis.
         let c_b: Vec<f64> = basis.iter().map(|&v| cost_of(lp, v)).collect();
         let y = factors.btran(&c_b);

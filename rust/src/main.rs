@@ -30,6 +30,11 @@ commands:
               fault injection (deterministic per --fault-seed):
               [--gpu-mtbf-rounds F] [--node-mtbf-rounds F] [--repair-rounds N]
               [--preempt-rate F] [--straggler-rate F] [--fault-seed S]
+              crash recovery (snapshots are generation-numbered JSON,
+              written atomically; the last two generations are retained):
+              [--state-dir DIR] [--snapshot-every N] [--restore]
+              [--stop-after-round R] (stop right after the round-R snapshot
+              to emulate a mid-flight kill; restore resumes bit-identically)
   figure      <fig1|fig2|fig3|fig7|fig8|fig9|fig11|fig12|fig13|fig14|fig15|
                fig16|fig17|fig18|table2|faults|scale>
               [--scale quick|standard|paper]
@@ -49,6 +54,12 @@ global options:
                (open in Perfetto or chrome://tracing) covering every round:
                estimate/schedule/pack/migrate/commit stages, LP solves,
                matching batches, worker-pool leases and chunks
+  --stage-deadline-ms N
+               soft per-stage watchdog budget, checked cooperatively at
+               worker-pool chunk boundaries and LP iteration checkpoints;
+               an overrunning stage aborts and the round degrades with
+               reason \"deadline\" (0 disables; default: the
+               TESSERAE_STAGE_DEADLINE_MS env var, else off)
 ";
 
 fn parse_scale(args: &Args) -> Scale {
@@ -80,6 +91,11 @@ fn main() -> ExitCode {
     let threads = args.get_usize("threads", 0);
     if threads > 0 {
         tesserae::util::pool::WorkerPool::global().install_budget(threads);
+    }
+    // --stage-deadline-ms: arm the cooperative stage watchdog for the
+    // whole process (overrides the TESSERAE_STAGE_DEADLINE_MS env var).
+    if let Some(ms) = args.get("stage-deadline-ms").and_then(|s| s.parse().ok()) {
+        tesserae::recovery::watchdog::set_stage_deadline_ms(Some(ms));
     }
     // --trace-out: turn telemetry on for the whole run and retain every
     // drained span for Chrome trace export at exit.
@@ -167,15 +183,36 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         ..Default::default()
     };
     let spec = scale.spec(gpu);
+    let recovery = tesserae::simulator::RecoveryOptions {
+        state_dir: args.get("state-dir").map(std::path::PathBuf::from),
+        snapshot_every: args.get_u64("snapshot-every", 5),
+        restore: args.flag("restore"),
+        stop_after_round: args.get("stop-after-round").and_then(|s| s.parse().ok()),
+    };
+    if let Some(dir) = &recovery.state_dir {
+        eprintln!(
+            "recovery: state-dir={} snapshot-every={} restore={}",
+            dir.display(),
+            recovery.snapshot_every.max(1),
+            recovery.restore
+        );
+    }
     let r = if fault_cfg.is_zero() {
-        experiments::run_sim(kind, &trace, spec, scale.seed, noise)
+        experiments::run_sim_recoverable(kind, &trace, spec, scale.seed, noise, &recovery)
     } else {
         if noise > 0.0 {
             anyhow::bail!("--noise is not supported together with fault injection");
         }
         let plan = FaultPlan::generate(&fault_cfg, &spec, 1_000_000);
         eprintln!("fault plan: {} events", plan.len());
-        experiments::faults::run_sim_faulted(kind, &trace, spec, scale.seed, &plan)
+        experiments::faults::run_sim_faulted_recoverable(
+            kind,
+            &trace,
+            spec,
+            scale.seed,
+            &plan,
+            &recovery,
+        )
     };
     println!(
         "{}: jobs={} avg JCT={:.0}s makespan={:.0}s migrations={} worst FTF={:.2} avg decision={:.4}s",

@@ -1,0 +1,406 @@
+//! Degraded-round circuit breaker.
+//!
+//! A provider that fails every round would otherwise degrade silently
+//! forever (the catch-unwind fallback keeps replaying the previous plan).
+//! The breaker counts *consecutive* degraded rounds; at `trip_after` it
+//! opens and a fallback greedy placer serves the next `cooldown_rounds`
+//! rounds, after which one half-open probe round goes back to the real
+//! provider — a clean probe closes the breaker, a degraded probe re-opens
+//! it for another cooldown.
+//!
+//! [`BreakerScheduler`] wraps any [`Scheduler`] with this state machine;
+//! `sharding::ShardedCoordinator` embeds one [`CircuitBreaker`] per shard
+//! so a single flaky shard cannot thrash the whole cluster.
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use crate::cluster::PlacementPlan;
+use crate::obs::metrics;
+use crate::schedulers::{DecisionTimings, RoundDecision, RoundInput, Scheduler};
+use crate::util::json::Json;
+
+/// Breaker tuning. The defaults trip after 3 consecutive degraded rounds
+/// and serve 5 fallback rounds before the half-open probe.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Consecutive degraded rounds that open the breaker.
+    pub trip_after: u32,
+    /// Rounds served by the fallback policy while open.
+    pub cooldown_rounds: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            trip_after: 3,
+            cooldown_rounds: 5,
+        }
+    }
+}
+
+/// Closed → Open(cooldown) → HalfOpen probe → Closed / re-Open.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    /// Fallback rounds while `round < until_round`.
+    Open { until_round: u64 },
+    /// The next real-provider round decides: clean closes, degraded
+    /// re-opens.
+    HalfOpen,
+}
+
+/// The trip/cooldown/probe state machine. Deterministic: transitions
+/// depend only on round numbers and degraded flags, never on wall time.
+#[derive(Debug, Clone)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    /// Consecutive degraded rounds while closed.
+    streak: u32,
+    /// Lifetime trip count (for metrics / snapshots).
+    trips: u64,
+    /// Lifetime rounds served by the fallback.
+    fallback_rounds: u64,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            state: BreakerState::Closed,
+            streak: 0,
+            trips: 0,
+            fallback_rounds: 0,
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    pub fn streak(&self) -> u32 {
+        self.streak
+    }
+
+    /// Called *before* deciding round `round`: `true` means serve the
+    /// fallback policy this round. An expired cooldown transitions to
+    /// half-open and lets the real provider probe.
+    pub fn use_fallback(&mut self, round: u64) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => false,
+            BreakerState::Open { until_round } => {
+                if round >= until_round {
+                    self.state = BreakerState::HalfOpen;
+                    false
+                } else {
+                    self.fallback_rounds += 1;
+                    true
+                }
+            }
+        }
+    }
+
+    /// Called *after* a real-provider round with its degraded flag.
+    /// Must not be called for fallback rounds (`use_fallback` returned
+    /// true).
+    pub fn record(&mut self, round: u64, degraded: bool) {
+        match self.state {
+            BreakerState::Closed => {
+                if degraded {
+                    self.streak += 1;
+                    if self.streak >= self.cfg.trip_after {
+                        self.trip(round);
+                    }
+                } else {
+                    self.streak = 0;
+                }
+            }
+            BreakerState::HalfOpen => {
+                if degraded {
+                    self.trip(round);
+                } else {
+                    self.state = BreakerState::Closed;
+                    self.streak = 0;
+                }
+            }
+            // Fallback rounds bypass record(); nothing to count.
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    fn trip(&mut self, round: u64) {
+        // Cooldown covers the next `cooldown_rounds` rounds; the round
+        // after that is the half-open probe.
+        self.state = BreakerState::Open {
+            until_round: round + 1 + self.cfg.cooldown_rounds,
+        };
+        self.streak = 0;
+        self.trips += 1;
+        metrics::counter_add("breaker.trips", 1);
+        crate::obs_log!(
+            warn,
+            "breaker tripped at round {round}: serving fallback for {} rounds",
+            self.cfg.cooldown_rounds
+        );
+    }
+
+    pub fn to_json(&self) -> Json {
+        let (state, until) = match self.state {
+            BreakerState::Closed => ("closed", 0),
+            BreakerState::Open { until_round } => ("open", until_round),
+            BreakerState::HalfOpen => ("half_open", 0),
+        };
+        Json::obj(vec![
+            ("state", Json::str(state)),
+            ("until_round", Json::num(until as f64)),
+            ("streak", Json::num(self.streak as f64)),
+            ("trips", Json::num(self.trips as f64)),
+            ("fallback_rounds", Json::num(self.fallback_rounds as f64)),
+        ])
+    }
+
+    /// Rebuild from [`to_json`] output; `cfg` is supplied by the caller
+    /// (tuning is configuration, not state).
+    pub fn from_json(cfg: BreakerConfig, doc: &Json) -> CircuitBreaker {
+        let num = |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let state = match doc.get("state").and_then(Json::as_str) {
+            Some("open") => BreakerState::Open {
+                until_round: num("until_round") as u64,
+            },
+            Some("half_open") => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        };
+        CircuitBreaker {
+            cfg,
+            state,
+            streak: num("streak") as u32,
+            trips: num("trips") as u64,
+            fallback_rounds: num("fallback_rounds") as u64,
+        }
+    }
+}
+
+/// The fallback policy served while a breaker is open: keep every
+/// surviving placement whose GPUs are all healthy, first-fit the rest on
+/// empty healthy GPUs, no packing, no strategy search. Deliberately
+/// simple — it cannot touch the code paths that tripped the breaker
+/// (matching, LP, packing).
+pub fn greedy_fallback_decision(input: &RoundInput) -> RoundDecision {
+    let t0 = Instant::now();
+    let mut plan = PlacementPlan::new(input.prev_plan.num_gpus());
+    let healthy = |g: usize| input.health.is_none_or(|h| h.is_healthy(g));
+    let active_ids: BTreeSet<_> = input.active.iter().map(|j| j.id).collect();
+
+    // Survivors keep their GPUs (packed pairs included — both tenants
+    // stay co-resident, which the slot capacity already permits).
+    for (&job, gpus) in input.prev_plan.job_gpu_map() {
+        if active_ids.contains(&job) && gpus.iter().all(|&g| healthy(g)) {
+            plan.place(job, gpus);
+        }
+    }
+
+    // First-fit the remaining active jobs on empty healthy GPUs, in
+    // arrival order (the slice order the simulator hands us).
+    let mut free: Vec<usize> = (0..plan.num_gpus())
+        .filter(|&g| healthy(g) && plan.jobs_on(g).is_empty())
+        .collect();
+    for job in input.active {
+        if !plan.gpus_of(job.id).is_empty() {
+            continue;
+        }
+        let want = job.num_gpus as usize;
+        if want == 0 || want > free.len() {
+            continue;
+        }
+        let gpus: Vec<usize> = free.drain(..want).collect();
+        plan.place(job.id, &gpus);
+    }
+
+    let migrations = plan.migrations_from(input.prev_plan);
+    let timings = DecisionTimings {
+        total_s: t0.elapsed().as_secs_f64(),
+        ..Default::default()
+    };
+    RoundDecision {
+        plan,
+        // Empty: the simulator falls back to DataParallel for placed
+        // jobs without an explicit strategy.
+        strategies: Default::default(),
+        packed_pairs: Vec::new(),
+        migrations,
+        degraded: false,
+        timings,
+    }
+}
+
+/// Wraps any scheduler with a [`CircuitBreaker`]: transparent
+/// pass-through while closed (bit-identical to the bare scheduler), the
+/// greedy fallback while open.
+pub struct BreakerScheduler {
+    inner: Box<dyn Scheduler>,
+    breaker: CircuitBreaker,
+}
+
+impl BreakerScheduler {
+    pub fn new(inner: Box<dyn Scheduler>, cfg: BreakerConfig) -> BreakerScheduler {
+        BreakerScheduler {
+            inner,
+            breaker: CircuitBreaker::new(cfg),
+        }
+    }
+
+    pub fn breaker(&self) -> &CircuitBreaker {
+        &self.breaker
+    }
+}
+
+impl Scheduler for BreakerScheduler {
+    /// Delegates: wrapping must not change `SimResult.scheduler` labels.
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn decide(&mut self, input: &RoundInput) -> RoundDecision {
+        if self.breaker.use_fallback(input.round) {
+            metrics::counter_add("breaker.fallback_rounds", 1);
+            return greedy_fallback_decision(input);
+        }
+        let decision = self.inner.decide(input);
+        self.breaker.record(input.round, decision.degraded);
+        decision
+    }
+
+    fn snapshot_state(&self) -> Option<Json> {
+        Some(Json::obj(vec![
+            ("breaker", self.breaker.to_json()),
+            ("inner", self.inner.snapshot_state().unwrap_or(Json::Null)),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json) {
+        if let Some(b) = state.get("breaker") {
+            self.breaker = CircuitBreaker::from_json(self.breaker.cfg, b);
+        }
+        match state.get("inner") {
+            Some(Json::Null) | None => {}
+            Some(inner) => self.inner.restore_state(inner),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn breaker() -> CircuitBreaker {
+        CircuitBreaker::new(BreakerConfig {
+            trip_after: 3,
+            cooldown_rounds: 5,
+        })
+    }
+
+    #[test]
+    fn trips_only_on_consecutive_degradation() {
+        let mut b = breaker();
+        for r in 0..2 {
+            b.record(r, true);
+        }
+        b.record(2, false); // streak reset
+        for r in 3..5 {
+            b.record(r, true);
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record(5, true); // third consecutive
+        assert_eq!(b.state(), BreakerState::Open { until_round: 11 });
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn cooldown_then_half_open_probe_closes_on_success() {
+        let mut b = breaker();
+        for r in 0..3 {
+            b.record(r, true);
+        }
+        // Rounds 3..=7 are fallback; round 8 probes.
+        for r in 3..8 {
+            assert!(b.use_fallback(r), "round {r} should be fallback");
+        }
+        assert!(!b.use_fallback(8), "cooldown expired: probe the provider");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record(8, false);
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn degraded_probe_reopens_immediately() {
+        let mut b = breaker();
+        for r in 0..3 {
+            b.record(r, true);
+        }
+        while b.use_fallback(b.cfg.cooldown_rounds + 10) {} // expire
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record(9, true);
+        assert_eq!(b.state(), BreakerState::Open { until_round: 15 });
+        assert_eq!(b.trips(), 2);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_state() {
+        let mut b = breaker();
+        for r in 0..3 {
+            b.record(r, true);
+        }
+        let doc = b.to_json();
+        let restored = CircuitBreaker::from_json(b.cfg, &doc);
+        assert_eq!(restored.state(), b.state());
+        assert_eq!(restored.trips(), b.trips());
+        assert_eq!(restored.streak(), b.streak());
+        assert_eq!(restored.fallback_rounds, b.fallback_rounds);
+    }
+
+    #[test]
+    fn greedy_fallback_keeps_survivors_and_first_fits_new_jobs() {
+        use crate::cluster::{ClusterSpec, GpuType};
+        use crate::jobs::ModelKind;
+        use crate::policies::JobInfo;
+
+        let spec = ClusterSpec::new(2, 4, GpuType::A100);
+        let mut prev = PlacementPlan::new(8);
+        prev.place(1, &[0, 1]);
+        prev.place(2, &[2]);
+        let job = |id: u64, n: u32| JobInfo {
+            id,
+            model: ModelKind::ResNet50,
+            num_gpus: n,
+            arrival_time: 0.0,
+            attained_service: 0.0,
+            total_iters: 1000.0,
+            completed_iters: 0.0,
+            rounds_received: 0,
+            now: 0.0,
+            iso_tput: 1.0,
+        };
+        // Job 2 departed; job 3 arrives wanting 2 GPUs.
+        let active = vec![job(1, 2), job(3, 2)];
+        let prev_ref = prev.clone();
+        let input = RoundInput {
+            now: 0.0,
+            round: 4,
+            active: &active,
+            prev_plan: &prev_ref,
+            spec: &spec,
+            health: None,
+        };
+        let d = greedy_fallback_decision(&input);
+        assert_eq!(d.plan.gpus_of(1), &[0, 1], "survivor keeps its GPUs");
+        assert!(d.plan.gpus_of(2).is_empty(), "departed job dropped");
+        assert_eq!(d.plan.gpus_of(3).len(), 2, "new job first-fit placed");
+        assert!(!d.degraded);
+        assert_eq!(d.migrations, d.plan.migrations_from(&prev_ref));
+    }
+}

@@ -1,0 +1,25 @@
+//! Crash recovery for the always-on scheduler service (ISSUE 10): three
+//! coordinated layers that keep a long-lived scheduler process useful
+//! across crashes, hangs and persistently failing providers.
+//!
+//! - [`snapshot`]: crash-consistent, generation-numbered JSON snapshots
+//!   of the simulator's hard state (committed plan, cursors, counters,
+//!   scheduler stickiness). Soft state — `LpCache`, matching caches —
+//!   is deliberately excluded and rebuilt cold on restore; cold-vs-warm
+//!   bit-parity is already property-tested, which is what makes
+//!   kill-and-restore bit-identical.
+//! - [`watchdog`]: a cooperative per-stage deadline. A hung (as opposed
+//!   to panicking) stage trips a typed [`watchdog::DeadlineExceeded`]
+//!   panic at the next checkpoint, which the pipeline's catch-unwind
+//!   converts into a degraded round with reason `deadline`.
+//! - [`breaker`]: a circuit breaker over consecutive degraded rounds —
+//!   trip, serve a greedy fallback for a cooldown window, half-open
+//!   probe, close. Embedded per shard by `sharding::ShardedCoordinator`.
+
+pub mod breaker;
+pub mod snapshot;
+pub mod watchdog;
+
+pub use breaker::{BreakerConfig, BreakerScheduler, BreakerState, CircuitBreaker};
+pub use snapshot::{SnapshotStore, RETAIN_GENERATIONS, SNAPSHOT_VERSION};
+pub use watchdog::{DeadlineExceeded, StageGuard};

@@ -1,0 +1,187 @@
+//! Crash-consistent scheduler-state snapshots.
+//!
+//! [`SnapshotStore`] persists one generation-numbered JSON document per
+//! snapshotted round (`snapshot-<round>.json`, zero-padded so plain
+//! directory order is generation order), written with the
+//! write-temp / fsync / rename discipline from `util::checkpoint` so a
+//! crash or power loss can never surface a zero-length or torn file. The
+//! last two generations are retained: if the newest is corrupt (torn
+//! rename is impossible, but disks lie), [`SnapshotStore::latest`] falls
+//! back to its predecessor.
+//!
+//! The document *contents* are produced and consumed by the simulator's
+//! snapshot codec — the store only guarantees durability, generation
+//! ordering and corruption fallback.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::obs::metrics;
+use crate::util::checkpoint::durable_write;
+use crate::util::json::Json;
+
+/// Bumped whenever the snapshot document shape changes incompatibly;
+/// restore refuses mismatched versions rather than misreading them.
+pub const SNAPSHOT_VERSION: u64 = 1;
+
+/// Generations kept on disk (newest first); older ones are pruned after
+/// each successful write.
+pub const RETAIN_GENERATIONS: usize = 2;
+
+/// A directory of generation-numbered snapshot documents.
+pub struct SnapshotStore {
+    dir: PathBuf,
+}
+
+impl SnapshotStore {
+    /// Opens (creating if needed) the snapshot directory.
+    pub fn new(dir: &Path) -> io::Result<SnapshotStore> {
+        fs::create_dir_all(dir)?;
+        Ok(SnapshotStore {
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, round: u64) -> PathBuf {
+        self.dir.join(format!("snapshot-{round:08}.json"))
+    }
+
+    /// Durably write the snapshot for `round`, then prune generations
+    /// beyond [`RETAIN_GENERATIONS`].
+    pub fn write(&self, round: u64, doc: &Json) -> io::Result<PathBuf> {
+        let path = self.path_for(round);
+        durable_write(&path, &doc.to_string_pretty())?;
+        metrics::counter_add("snapshot.writes", 1);
+        self.prune();
+        Ok(path)
+    }
+
+    /// Snapshot rounds present on disk, ascending.
+    pub fn generations(&self) -> Vec<u64> {
+        let mut rounds: Vec<u64> = match fs::read_dir(&self.dir) {
+            Ok(entries) => entries
+                .filter_map(|e| e.ok())
+                .filter_map(|e| parse_round(&e.file_name().to_string_lossy()))
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        rounds.sort_unstable();
+        rounds
+    }
+
+    /// The newest parseable snapshot, as `(round, document)`. Skips
+    /// corrupt generations (unparseable JSON, wrong version) with a
+    /// warning rather than failing the restore outright.
+    pub fn latest(&self) -> Option<(u64, Json)> {
+        for round in self.generations().into_iter().rev() {
+            let path = self.path_for(round);
+            match fs::read_to_string(&path).ok().and_then(|text| {
+                let doc = Json::parse(&text).ok()?;
+                let version = doc.get("version").and_then(Json::as_f64)? as u64;
+                (version == SNAPSHOT_VERSION).then_some(doc)
+            }) {
+                Some(doc) => return Some((round, doc)),
+                None => {
+                    crate::obs_log!(
+                        warn,
+                        "skipping corrupt or incompatible snapshot {}",
+                        path.display()
+                    );
+                }
+            }
+        }
+        None
+    }
+
+    /// Best-effort removal of generations beyond the retention window.
+    fn prune(&self) {
+        let rounds = self.generations();
+        if rounds.len() > RETAIN_GENERATIONS {
+            for &round in &rounds[..rounds.len() - RETAIN_GENERATIONS] {
+                let _ = fs::remove_file(self.path_for(round));
+            }
+        }
+    }
+}
+
+fn parse_round(name: &str) -> Option<u64> {
+    name.strip_prefix("snapshot-")?
+        .strip_suffix(".json")?
+        .parse()
+        .ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tesserae-snap-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn doc(round: u64) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(SNAPSHOT_VERSION as f64)),
+            ("round", Json::num(round as f64)),
+        ])
+    }
+
+    #[test]
+    fn retains_last_two_generations_and_reads_newest() {
+        let dir = tmp_dir("retain");
+        let store = SnapshotStore::new(&dir).unwrap();
+        for round in [2, 4, 6, 8] {
+            store.write(round, &doc(round)).unwrap();
+        }
+        assert_eq!(store.generations(), vec![6, 8], "older generations pruned");
+        let (round, loaded) = store.latest().expect("latest parses");
+        assert_eq!(round, 8);
+        assert_eq!(loaded.get("round").and_then(Json::as_f64), Some(8.0));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_predecessor() {
+        let dir = tmp_dir("corrupt");
+        let store = SnapshotStore::new(&dir).unwrap();
+        store.write(3, &doc(3)).unwrap();
+        store.write(5, &doc(5)).unwrap();
+        fs::write(dir.join("snapshot-00000005.json"), "{ torn").unwrap();
+        let (round, _) = store.latest().expect("falls back");
+        assert_eq!(round, 3);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_mismatch_is_skipped() {
+        let dir = tmp_dir("version");
+        let store = SnapshotStore::new(&dir).unwrap();
+        store.write(1, &doc(1)).unwrap();
+        let stale = Json::obj(vec![
+            ("version", Json::num(999.0)),
+            ("round", Json::num(7.0)),
+        ]);
+        store.write(7, &stale).unwrap();
+        let (round, _) = store.latest().expect("falls back past bad version");
+        assert_eq!(round, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_store_has_no_latest() {
+        let dir = tmp_dir("empty");
+        let store = SnapshotStore::new(&dir).unwrap();
+        assert!(store.latest().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

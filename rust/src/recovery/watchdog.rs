@@ -1,0 +1,196 @@
+//! Stage deadline watchdog: a per-stage soft time budget checked
+//! cooperatively at worker-pool chunk boundaries and LP iteration
+//! checkpoints.
+//!
+//! std-only means there is no way to kill a hung thread, so the budget is
+//! enforced by the arming thread panicking from one of its own
+//! checkpoints with a typed [`DeadlineExceeded`] payload; the existing
+//! `pipeline::run_round` catch-unwind converts that into a degraded round
+//! with reason `deadline` (distinct from `panic`, see
+//! `pipeline::degraded_decision`).
+//!
+//! The armed deadline is **thread-local** on purpose:
+//! - `WorkerPool` discards worker panic payloads (`join().expect`), so a
+//!   deadline panic from a worker thread could never be classified.
+//!   Workers never arm the TLS slot, which makes the pool-internal
+//!   checkpoints no-ops on workers; only caller-thread checkpoints trip.
+//! - Whole simulations run concurrently on pool workers
+//!   (`run_sim_scenarios`), and POP runs nested `run_round`s on workers;
+//!   a process-global deadline slot would cross-contaminate them. With
+//!   TLS each top-level round arms its own slot and [`StageGuard`]
+//!   save/restores the previous value for nesting.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Environment knob mirrored by `simulate --stage-deadline-ms` (read once
+/// per process; the CLI setter takes precedence).
+pub const DEADLINE_ENV: &str = "TESSERAE_STAGE_DEADLINE_MS";
+
+/// Typed panic payload thrown by [`checkpoint`] when the armed stage
+/// budget has elapsed. `degraded_decision` downcasts the caught payload
+/// to this type to record the degraded round as `deadline` rather than
+/// `panic`.
+#[derive(Debug, Clone, Copy)]
+pub struct DeadlineExceeded {
+    pub stage: &'static str,
+    pub budget_ms: u64,
+}
+
+#[derive(Clone, Copy)]
+struct Armed {
+    deadline: Instant,
+    stage: &'static str,
+    budget_ms: u64,
+}
+
+thread_local! {
+    static ARMED: Cell<Option<Armed>> = const { Cell::new(None) };
+}
+
+const UNSET: u64 = u64::MAX;
+const OFF: u64 = 0;
+
+/// Process-global configured budget in milliseconds; `UNSET` falls back
+/// to the environment variable, `OFF` disables the watchdog.
+static DEADLINE_MS: AtomicU64 = AtomicU64::new(UNSET);
+
+/// Configure the per-stage budget (CLI path). `None` disables the
+/// watchdog even if [`DEADLINE_ENV`] is set.
+pub fn set_stage_deadline_ms(ms: Option<u64>) {
+    DEADLINE_MS.store(ms.unwrap_or(OFF), Ordering::Relaxed);
+}
+
+/// The effective per-stage budget: the CLI setter if called, else the
+/// environment variable (cached on first read), else disabled.
+pub fn stage_deadline_ms() -> Option<u64> {
+    match DEADLINE_MS.load(Ordering::Relaxed) {
+        UNSET => env_deadline_ms(),
+        OFF => None,
+        ms => Some(ms),
+    }
+}
+
+fn env_deadline_ms() -> Option<u64> {
+    static ENV: OnceLock<Option<u64>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var(DEADLINE_ENV)
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .filter(|&ms| ms > 0)
+    })
+}
+
+/// RAII guard for one armed stage; restores the previously armed deadline
+/// (if any) on drop so nested rounds compose.
+pub struct StageGuard {
+    prev: Option<Armed>,
+}
+
+impl Drop for StageGuard {
+    fn drop(&mut self) {
+        ARMED.with(|a| a.set(self.prev));
+    }
+}
+
+/// Arm the calling thread's deadline for `stage` using the configured
+/// budget; `None` (and no guard) when the watchdog is disabled.
+pub fn arm_stage(stage: &'static str) -> Option<StageGuard> {
+    stage_deadline_ms().map(|ms| arm_stage_with(stage, Duration::from_millis(ms)))
+}
+
+/// Arm the calling thread's deadline for `stage` with an explicit budget
+/// (test seam; bypasses the process-global configuration).
+pub fn arm_stage_with(stage: &'static str, budget: Duration) -> StageGuard {
+    let armed = Armed {
+        deadline: Instant::now() + budget,
+        stage,
+        budget_ms: budget.as_millis() as u64,
+    };
+    StageGuard {
+        prev: ARMED.with(|a| a.replace(Some(armed))),
+    }
+}
+
+/// Cooperative check: panics with [`DeadlineExceeded`] when the calling
+/// thread's armed stage budget has elapsed. A no-op on threads that never
+/// armed (worker-pool workers, unconfigured runs) — safe to sprinkle in
+/// hot loops; the disarmed path is one TLS read.
+pub fn checkpoint() {
+    ARMED.with(|a| {
+        if let Some(armed) = a.get() {
+            if Instant::now() >= armed.deadline {
+                // Disarm before unwinding so cleanup code running during
+                // the unwind cannot re-trip the same deadline.
+                a.set(None);
+                crate::obs::metrics::counter_add("watchdog.deadline_trips", 1);
+                std::panic::panic_any(DeadlineExceeded {
+                    stage: armed.stage,
+                    budget_ms: armed.budget_ms,
+                });
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn checkpoint_is_noop_when_disarmed() {
+        checkpoint(); // must not panic on an unarmed thread
+    }
+
+    #[test]
+    fn elapsed_budget_trips_with_typed_payload() {
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _g = arm_stage_with("pack", Duration::from_millis(0));
+            checkpoint();
+        }))
+        .expect_err("zero budget must trip");
+        let d = err
+            .downcast_ref::<DeadlineExceeded>()
+            .expect("payload must be DeadlineExceeded");
+        assert_eq!(d.stage, "pack");
+        assert_eq!(d.budget_ms, 0);
+        // The guard's unwind drop restored the disarmed state.
+        checkpoint();
+    }
+
+    #[test]
+    fn generous_budget_does_not_trip() {
+        let _g = arm_stage_with("schedule", Duration::from_secs(3600));
+        for _ in 0..100 {
+            checkpoint();
+        }
+    }
+
+    #[test]
+    fn nested_guards_restore_outer_deadline() {
+        let _outer = arm_stage_with("estimate", Duration::from_secs(3600));
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _inner = arm_stage_with("migrate", Duration::from_millis(0));
+            checkpoint();
+        }))
+        .expect_err("inner zero budget must trip");
+        assert_eq!(
+            err.downcast_ref::<DeadlineExceeded>().unwrap().stage,
+            "migrate"
+        );
+        // Outer guard is armed again (restored by the inner drop during
+        // unwind) and far from expiring.
+        checkpoint();
+    }
+
+    #[test]
+    fn worker_threads_do_not_inherit_the_deadline() {
+        let _g = arm_stage_with("pack", Duration::from_millis(0));
+        std::thread::scope(|s| {
+            s.spawn(|| checkpoint()).join().expect("worker must not trip");
+        });
+    }
+}

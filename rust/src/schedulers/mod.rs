@@ -83,6 +83,20 @@ pub struct RoundDecision {
 pub trait Scheduler: Send {
     fn name(&self) -> String;
     fn decide(&mut self, input: &RoundInput) -> RoundDecision;
+
+    /// Hard cross-round state worth persisting in a crash snapshot
+    /// (shard routing stickiness, breaker state, …). `None` — the
+    /// default — means the scheduler is decision-equivalent from a cold
+    /// start: soft caches (`LpCache`, matching caches) are deliberately
+    /// *not* snapshotted and rebuild cold on restore, which the
+    /// warm-vs-cold parity property tests keep bit-identical.
+    fn snapshot_state(&self) -> Option<crate::util::json::Json> {
+        None
+    }
+
+    /// Restore state produced by [`Scheduler::snapshot_state`]. The
+    /// default ignores it (nothing was snapshotted).
+    fn restore_state(&mut self, _state: &crate::util::json::Json) {}
 }
 
 /// Shared helper: assign each job its best isolated strategy according to

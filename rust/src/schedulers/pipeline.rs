@@ -45,11 +45,16 @@ use crate::obs;
 use crate::obs::{metrics, recorder, span};
 use crate::policies::placement::MigrationOutcome;
 use crate::policies::JobInfo;
+use crate::recovery::watchdog;
 
 use super::{DecisionTimings, RoundDecision, RoundInput};
 
-/// Env var for deterministic stage-failure injection: `"<stage>@<round>"`
-/// (e.g. `pack@3`) panics that stage of that round, exercising the
+/// Env var for deterministic stage-failure injection: a comma-separated
+/// list of `"<stage>@<round>"` entries (e.g. `pack@3` or
+/// `pack@3,migrate@5`) panics those stages of those rounds, and the
+/// every-round form `"<stage>@*"` (e.g. `pack@*`) panics the stage of
+/// *every* round — the knob that drives circuit-breaker
+/// trip/cooldown/half-open tests deterministically. Exercises the
 /// degraded-mode fallback end to end without patching any provider.
 pub const FAULT_INJECT_ENV: &str = "TESSERAE_FAULT_INJECT_STAGE";
 
@@ -226,17 +231,27 @@ impl Drop for DepthGuard {
     }
 }
 
-/// True when [`FAULT_INJECT_ENV`] names this `(stage, round)`. Read per
-/// call (not cached): the var costs ~100ns against stage bodies measured
-/// in microseconds, and tests flip it at runtime.
+/// True when any [`FAULT_INJECT_ENV`] entry names this `(stage, round)` —
+/// or the stage with the every-round wildcard `@*`. Read per call (not
+/// cached): the var costs ~100ns against stage bodies measured in
+/// microseconds, and tests flip it at runtime.
 fn injected_failure(stage: Stage, round: u64) -> bool {
     match std::env::var(FAULT_INJECT_ENV) {
-        Ok(v) => match v.split_once('@') {
-            Some((s, r)) => s == stage.name() && r.parse() == Ok(round),
-            None => false,
-        },
+        Ok(v) => injection_spec_hits(&v, stage, round),
         Err(_) => false,
     }
+}
+
+/// One env value against one `(stage, round)` — split out so the
+/// list/wildcard grammar is testable without mutating the process
+/// environment (a wildcard entry would degrade every concurrent test's
+/// rounds for as long as it was set).
+fn injection_spec_hits(spec: &str, stage: Stage, round: u64) -> bool {
+    spec.split(',').any(|entry| match entry.trim().split_once('@') {
+        Some((s, "*")) => s == stage.name(),
+        Some((s, r)) => s == stage.name() && r.parse() == Ok(round),
+        None => false,
+    })
 }
 
 /// Run every stage plus commit, timing each against one clock. Split out
@@ -256,6 +271,11 @@ fn drive_stages<P: StageProvider + ?Sized>(
     let mut last_s = 0.0f64;
     for stage in [Stage::Estimate, Stage::Schedule, Stage::Pack, Stage::Migrate] {
         crate::obs_span!(stage.name(), { round: input.round });
+        // Arm this thread's watchdog deadline for the stage (a no-op when
+        // no budget is configured); overruns trip a `DeadlineExceeded`
+        // panic at the next cooperative checkpoint, which the caller's
+        // catch-unwind turns into a `deadline` degraded round.
+        let _deadline = watchdog::arm_stage(stage.name());
         if injected_failure(stage, input.round) {
             panic!("injected failure: stage {} round {}", stage.name(), input.round);
         }
@@ -266,16 +286,22 @@ fn drive_stages<P: StageProvider + ?Sized>(
             Stage::Migrate => provider.migrate(&mut cx),
             Stage::Commit => unreachable!("commit is driven separately"),
         }
+        // Guaranteed per-stage check even when the stage body never
+        // reached a pool or LP checkpoint.
+        watchdog::checkpoint();
         let boundary_s = t_total.elapsed().as_secs_f64();
         cx.stage_s[stage.index()] = boundary_s - last_s;
         last_s = boundary_s;
     }
     let mut decision = {
         crate::obs_span!(Stage::Commit.name(), { round: input.round });
+        let _deadline = watchdog::arm_stage(Stage::Commit.name());
         if injected_failure(Stage::Commit, input.round) {
             panic!("injected failure: stage commit round {}", input.round);
         }
-        provider.commit(&mut cx)
+        let decision = provider.commit(&mut cx);
+        watchdog::checkpoint();
+        decision
     };
     cx.stage_s[Stage::Commit.index()] = t_total.elapsed().as_secs_f64() - last_s;
     decision.timings.stage_s = cx.stage_s;
@@ -304,18 +330,34 @@ fn degraded_decision(
     payload: &(dyn std::any::Any + Send),
     t_total: Instant,
 ) -> RoundDecision {
-    let msg = payload
-        .downcast_ref::<&str>()
-        .map(|s| s.to_string())
-        .or_else(|| payload.downcast_ref::<String>().cloned())
-        .unwrap_or_else(|| "non-string panic payload".to_string());
+    // A watchdog trip carries a typed payload; everything else is an
+    // ordinary stage panic. The distinction is observable (counter +
+    // flight-dump context) because a hung stage and a crashing stage call
+    // for different operator responses.
+    let (reason, msg) = match payload.downcast_ref::<watchdog::DeadlineExceeded>() {
+        Some(d) => (
+            "deadline",
+            format!("stage {} exceeded its {}ms budget", d.stage, d.budget_ms),
+        ),
+        None => (
+            "panic",
+            payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string()),
+        ),
+    };
     metrics::counter_add("round.degraded", 1);
+    if reason == "deadline" {
+        metrics::counter_add("round.degraded_deadline", 1);
+    }
     crate::obs_log!(
         warn,
-        "round {}: stage failure, falling back to previous plan: {msg}",
+        "round {}: stage failure ({reason}), falling back to previous plan: {msg}",
         input.round
     );
-    recorder::dump_on_failure(&format!("degraded round {}: {msg}", input.round));
+    recorder::dump_on_failure(&format!("degraded round {} ({reason}): {msg}", input.round));
 
     let mut plan = input.prev_plan.clone();
     let active: BTreeSet<JobId> = input.active.iter().map(|j| j.id).collect();
@@ -597,6 +639,78 @@ mod tests {
         std::env::remove_var(FAULT_INJECT_ENV);
         assert!(hit.degraded, "named round must take the injected failure");
         assert!(!miss.degraded, "other rounds must run clean");
+    }
+
+    #[test]
+    fn injection_spec_grammar_accepts_lists_and_wildcards() {
+        // List form: either named (stage, round) hits, nothing else.
+        let list = "pack@3,migrate@5";
+        assert!(injection_spec_hits(list, Stage::Pack, 3));
+        assert!(injection_spec_hits(list, Stage::Migrate, 5));
+        assert!(!injection_spec_hits(list, Stage::Pack, 5));
+        assert!(!injection_spec_hits(list, Stage::Migrate, 3));
+        assert!(!injection_spec_hits(list, Stage::Schedule, 3));
+        // Wildcard form: the stage fails every round; other stages don't.
+        assert!(injection_spec_hits("pack@*", Stage::Pack, 0));
+        assert!(injection_spec_hits("pack@*", Stage::Pack, 999_999));
+        assert!(!injection_spec_hits("pack@*", Stage::Migrate, 0));
+        // Mixed list with a wildcard entry, spaces tolerated.
+        let mixed = "estimate@7, pack@*";
+        assert!(injection_spec_hits(mixed, Stage::Estimate, 7));
+        assert!(injection_spec_hits(mixed, Stage::Pack, 12));
+        assert!(!injection_spec_hits(mixed, Stage::Estimate, 8));
+        // Malformed entries are inert.
+        assert!(!injection_spec_hits("pack", Stage::Pack, 3));
+        assert!(!injection_spec_hits("", Stage::Pack, 3));
+    }
+
+    /// Panics in `pack` with the watchdog's typed payload, as a tripped
+    /// deadline checkpoint would.
+    struct HungPack;
+
+    impl StageProvider for HungPack {
+        fn estimate(&mut self, _cx: &mut RoundContext) {}
+        fn schedule(&mut self, _cx: &mut RoundContext) {}
+        fn pack(&mut self, _cx: &mut RoundContext) {
+            std::panic::panic_any(crate::recovery::watchdog::DeadlineExceeded {
+                stage: "pack",
+                budget_ms: 7,
+            });
+        }
+        fn migrate(&mut self, _cx: &mut RoundContext) {}
+        fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+            RoundDecision {
+                plan: cx.plan.clone(),
+                strategies: cx.strategies.clone(),
+                packed_pairs: cx.packed_pairs.clone(),
+                migrations: cx.migrations,
+                degraded: false,
+                timings: DecisionTimings::default(),
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_payload_degrades_with_deadline_reason() {
+        let _guard = crate::obs::enabled_guard(true);
+        let spec = ClusterSpec::new(1, 2, GpuType::A100);
+        let prev = crate::cluster::PlacementPlan::new(2);
+        let input = RoundInput {
+            now: 0.0,
+            round: 3,
+            active: &[],
+            prev_plan: &prev,
+            spec: &spec,
+            health: None,
+        };
+        let base = metrics::snapshot();
+        let d = run_round(&mut HungPack, &input);
+        assert!(d.degraded, "deadline trip must yield the degraded fallback");
+        let delta = metrics::snapshot().delta_since(&base);
+        assert!(
+            delta.counters.get("round.degraded_deadline").copied().unwrap_or(0) >= 1,
+            "deadline-degraded rounds must be counted separately"
+        );
     }
 
     #[test]

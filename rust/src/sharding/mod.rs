@@ -29,6 +29,15 @@
 //!   The merged decision is flagged degraded so callers can count it.
 //!   Global [`ClusterHealth`] is sliced per shard exactly like POP —
 //!   fully-healthy shards see `None` and stay on the pre-fault code path.
+//! * **Per-shard circuit breakers** — every shard carries its own
+//!   [`CircuitBreaker`]: `trip_after` consecutive degraded rounds switch
+//!   *that shard alone* to the greedy fallback placer for the cooldown,
+//!   then a half-open probe hands the round back to the real inner
+//!   scheduler. One flaky shard cannot thrash the whole cluster, and the
+//!   healthy shards never notice. Fallback eligibility is decided on the
+//!   caller thread before the parallel dispatch (the breaker mutates on
+//!   `use_fallback`), keeping shard rounds bit-identical for any thread
+//!   budget.
 //! * **Validated merge** — per-shard plans own disjoint GPU ranges by
 //!   construction; the stitch asserts no job is produced by two shards and
 //!   `validate()`s the merged [`PlacementPlan`] so a double-owned GPU can
@@ -36,9 +45,11 @@
 //!
 //! Telemetry: each shard publishes `shard.round_s` (all-shard histogram),
 //! per-shard `shard.<id>.round_s` / `shard.<id>.jobs` / `shard.<id>.degraded`
-//! series, and rebalance rounds publish `shard.rebalance_moves`. The
-//! per-shard names are explicit (not metric scopes): worker threads don't
-//! inherit the caller's thread-local scope prefix.
+//! series plus a `shard.<id>.degraded_streak` gauge (with a one-shot warn
+//! when a shard degrades a second consecutive round), and rebalance rounds
+//! publish `shard.rebalance_moves`. The per-shard names are explicit (not
+//! metric scopes): worker threads don't inherit the caller's thread-local
+//! scope prefix.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -51,10 +62,13 @@ use crate::jobs::JobId;
 use crate::matching::{Edge, MatchingEngine, MatchingService, ServiceConfig};
 use crate::obs::metrics;
 use crate::policies::JobInfo;
+use crate::recovery::breaker::greedy_fallback_decision;
+use crate::recovery::{BreakerConfig, CircuitBreaker};
 use crate::schedulers::pipeline::{self, RoundContext, StageProvider};
 use crate::schedulers::{
     DecisionTimings, RoundDecision, RoundInput, Scheduler, TesseraeScheduler,
 };
+use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 
 /// How jobs are assigned to shards.
@@ -126,11 +140,21 @@ struct ShardRound {
 /// Migrate counts the Definition-1 diff, Commit assembles the decision.
 pub struct ShardedCoordinator {
     pub cfg: ShardedConfig,
+    /// Tuning for the per-shard circuit breakers (configuration, not
+    /// state — snapshots persist breaker *state* only).
+    pub breaker_cfg: BreakerConfig,
     factory: ShardFactory,
     inner_label: String,
     /// Retained per-shard schedulers (index p owns shard p's warm state);
     /// rebuilt only when the effective shard count changes.
     subs: Vec<Box<dyn Scheduler>>,
+    /// One breaker per shard: a shard that degrades `trip_after` rounds in
+    /// a row serves the greedy fallback alone while its neighbours keep
+    /// running the real inner scheduler.
+    breakers: Vec<CircuitBreaker>,
+    /// Consecutive degraded rounds per shard (the `shard.<p>.degraded_streak`
+    /// gauge; reset on any clean round).
+    degraded_streaks: Vec<u32>,
     /// Sticky job→shard routes. Pruned to the active window each round;
     /// entries ≥ the effective k are re-routed.
     assignment: BTreeMap<JobId, usize>,
@@ -156,9 +180,12 @@ impl ShardedCoordinator {
     ) -> ShardedCoordinator {
         ShardedCoordinator {
             cfg,
+            breaker_cfg: BreakerConfig::default(),
             factory,
             inner_label: inner_label.to_string(),
             subs: Vec::new(),
+            breakers: Vec::new(),
+            degraded_streaks: Vec::new(),
             assignment: BTreeMap::new(),
             service: MatchingService::new(ServiceConfig::default()),
             engine,
@@ -200,6 +227,17 @@ impl ShardedCoordinator {
     fn ensure_subs(&mut self, k: usize) {
         if self.subs.len() != k {
             self.subs = (0..k).map(|p| (self.factory)(p)).collect();
+        }
+        // Sized independently of `subs` so a snapshot restore (which sets
+        // breakers/streaks before the first round builds the subs) is not
+        // clobbered here.
+        if self.breakers.len() != k {
+            self.breakers = (0..k)
+                .map(|_| CircuitBreaker::new(self.breaker_cfg))
+                .collect();
+        }
+        if self.degraded_streaks.len() != k {
+            self.degraded_streaks = vec![0; k];
         }
     }
 
@@ -467,15 +505,40 @@ impl StageProvider for ShardedCoordinator {
                 health: round.sub_health[p].as_ref(),
             })
             .collect();
-        let results = decide_shards(&mut self.subs, &inputs, self.cfg.parallel);
+        // Breaker transitions mutate, so fallback eligibility is decided
+        // here on the caller thread, in shard order, before the parallel
+        // dispatch — deterministic for any pool thread budget.
+        let fallback: Vec<bool> = (0..round.k)
+            .map(|p| self.breakers[p].use_fallback(input.round))
+            .collect();
+        let results = decide_shards(&mut self.subs, &inputs, &fallback, self.cfg.parallel);
 
         let mut timings = DecisionTimings::default();
         self.degraded_shards = 0;
         self.last_shard_s = vec![0.0; round.k];
         for (p, (d, wall)) in results.into_iter().enumerate() {
             self.last_shard_s[p] = wall;
+            if !fallback[p] {
+                self.breakers[p].record(input.round, d.degraded);
+            }
             if d.degraded {
                 self.degraded_shards += 1;
+                self.degraded_streaks[p] += 1;
+                if self.degraded_streaks[p] == 2 {
+                    crate::obs_log!(
+                        warn,
+                        "shard {p} degraded a second consecutive round (round {})",
+                        input.round
+                    );
+                }
+            } else {
+                self.degraded_streaks[p] = 0;
+            }
+            if crate::obs::enabled() {
+                metrics::gauge_set(
+                    &format!("shard.{p}.degraded_streak"),
+                    self.degraded_streaks[p] as f64,
+                );
             }
             let base_gpu = round.node_base[p] * input.spec.gpus_per_node;
             for j in d.plan.jobs() {
@@ -536,6 +599,8 @@ impl StageProvider for ShardedCoordinator {
     /// stages may have left the split half-applied.
     fn reset_after_failure(&mut self) {
         self.subs.clear();
+        self.breakers.clear();
+        self.degraded_streaks.clear();
         self.assignment.clear();
         self.round = None;
         self.sub_timings = DecisionTimings::default();
@@ -551,24 +616,94 @@ impl Scheduler for ShardedCoordinator {
     fn decide(&mut self, input: &RoundInput) -> RoundDecision {
         pipeline::run_round(self, input)
     }
+
+    /// Hard coordinator state: sticky routes, per-shard breaker state and
+    /// degraded streaks, plus whatever the shard schedulers persist.
+    fn snapshot_state(&self) -> Option<Json> {
+        Some(Json::obj(vec![
+            (
+                "assignment",
+                Json::Obj(
+                    self.assignment
+                        .iter()
+                        .map(|(id, p)| (id.to_string(), Json::num(*p as f64)))
+                        .collect(),
+                ),
+            ),
+            (
+                "degraded_streaks",
+                Json::arr(
+                    self.degraded_streaks
+                        .iter()
+                        .map(|&s| Json::num(s as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "breakers",
+                Json::arr(self.breakers.iter().map(CircuitBreaker::to_json).collect()),
+            ),
+            (
+                "subs",
+                Json::arr(
+                    self.subs
+                        .iter()
+                        .map(|s| s.snapshot_state().unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            ),
+        ]))
+    }
+
+    fn restore_state(&mut self, state: &Json) {
+        if let Some(map) = state.get("assignment").and_then(Json::as_obj) {
+            self.assignment = map
+                .iter()
+                .filter_map(|(id, p)| Some((id.parse().ok()?, p.as_usize()?)))
+                .collect();
+        }
+        if let Some(arr) = state.get("degraded_streaks").and_then(Json::as_arr) {
+            self.degraded_streaks = arr
+                .iter()
+                .filter_map(|v| v.as_f64().map(|f| f as u32))
+                .collect();
+        }
+        if let Some(arr) = state.get("breakers").and_then(Json::as_arr) {
+            self.breakers = arr
+                .iter()
+                .map(|b| CircuitBreaker::from_json(self.breaker_cfg, b))
+                .collect();
+        }
+        if let Some(arr) = state.get("subs").and_then(Json::as_arr) {
+            self.ensure_subs(arr.len());
+            for (sub, st) in self.subs.iter_mut().zip(arr) {
+                if !matches!(st, Json::Null) {
+                    sub.restore_state(st);
+                }
+            }
+        }
+    }
 }
 
 /// Run each shard's round, sequentially or across the shared worker pool.
-/// Shards share no state, so the pooled map is bit-identical to the
-/// sequential loop (asserted by `sharded_parallel_matches_sequential`).
+/// Shards share no state (fallback flags were precomputed by the caller),
+/// so the pooled map is bit-identical to the sequential loop (asserted by
+/// `sharded_parallel_matches_sequential`).
 fn decide_shards(
     subs: &mut [Box<dyn Scheduler>],
     inputs: &[RoundInput],
+    fallback: &[bool],
     parallel: bool,
 ) -> Vec<(RoundDecision, f64)> {
     let k = inputs.len();
     assert_eq!(subs.len(), k);
+    assert_eq!(fallback.len(), k);
     if !parallel || k <= 1 {
         return subs
             .iter_mut()
             .zip(inputs)
             .enumerate()
-            .map(|(p, (sub, input))| decide_shard(p, sub.as_mut(), input))
+            .map(|(p, (sub, input))| decide_shard(p, sub.as_mut(), input, fallback[p]))
             .collect();
     }
     let mut slots: Vec<(usize, &mut Box<dyn Scheduler>, &RoundInput)> = subs
@@ -578,16 +713,25 @@ fn decide_shards(
         .map(|(p, (sub, input))| (p, sub, input))
         .collect();
     WorkerPool::global().map_mut(&mut slots, 0, 1, |_, slot| {
-        decide_shard(slot.0, slot.1.as_mut(), slot.2)
+        decide_shard(slot.0, slot.1.as_mut(), slot.2, fallback[slot.0])
     })
 }
 
 /// One shard's round: the inner scheduler's own staged pipeline (with its
-/// catch-unwind degraded fallback), wrapped in a span and the per-shard
-/// metric series.
-fn decide_shard(p: usize, sub: &mut dyn Scheduler, input: &RoundInput) -> (RoundDecision, f64) {
+/// catch-unwind degraded fallback) — or, when this shard's breaker is
+/// open, the greedy fallback placer over the shard slice — wrapped in a
+/// span and the per-shard metric series.
+fn decide_shard(
+    p: usize,
+    sub: &mut dyn Scheduler,
+    input: &RoundInput,
+    fallback: bool,
+) -> (RoundDecision, f64) {
     let t0 = Instant::now();
-    let decision = {
+    let decision = if fallback {
+        metrics::counter_add("breaker.fallback_rounds", 1);
+        greedy_fallback_decision(input)
+    } else {
         crate::obs_span!("shard.round", { shard: p, jobs: input.active.len() });
         sub.decide(input)
     };
@@ -794,16 +938,18 @@ mod tests {
         );
     }
 
-    /// Inner scheduler for the isolation test: a trivial greedy placer
-    /// that panics in its Schedule stage on demand.
+    /// Inner scheduler for the isolation tests: a trivial greedy placer
+    /// that panics in its Schedule stage for rounds in
+    /// `explode_after..explode_until`.
     struct Bomb {
         explode_after: u64,
+        explode_until: u64,
     }
 
     impl StageProvider for Bomb {
         fn estimate(&mut self, _cx: &mut RoundContext) {}
         fn schedule(&mut self, cx: &mut RoundContext) {
-            if cx.input.round >= self.explode_after {
+            if cx.input.round >= self.explode_after && cx.input.round < self.explode_until {
                 panic!("bomb shard exploded");
             }
             let mut next = 0usize;
@@ -858,6 +1004,7 @@ mod tests {
             Box::new(BombScheduler {
                 inner: Bomb {
                     explode_after: if shard == 1 { 1 } else { u64::MAX },
+                    explode_until: u64::MAX,
                 },
             })
         });
@@ -915,6 +1062,10 @@ mod tests {
                 snap.gauges.contains_key(&format!("shard.{p}.jobs")),
                 "missing shard.{p}.jobs"
             );
+            assert!(
+                snap.gauges.contains_key(&format!("shard.{p}.degraded_streak")),
+                "missing shard.{p}.degraded_streak"
+            );
         }
         assert!(snap.histograms.contains_key("shard.round_s"));
     }
@@ -930,5 +1081,71 @@ mod tests {
         let before = s.assignment.clone();
         let _d1 = s.decide(&input(1, &active, &d0.plan, &spec, None));
         assert_eq!(before, s.assignment, "routes churned without a rebalance");
+    }
+
+    #[test]
+    fn tripped_shard_serves_fallback_then_recovers() {
+        // Shard 1's bomb explodes rounds 1..4: three consecutive degraded
+        // rounds trip its breaker at round 3 (Open until round 9). Rounds
+        // 4..9 are served by the greedy fallback — *not* degraded — and
+        // the round-9 half-open probe finds the bomb defused and closes.
+        let spec = ClusterSpec::new(4, 2, GpuType::A100);
+        let factory: ShardFactory = Arc::new(|shard| {
+            Box::new(BombScheduler {
+                inner: Bomb {
+                    explode_after: if shard == 1 { 1 } else { u64::MAX },
+                    explode_until: 4,
+                },
+            })
+        });
+        let mut cfg = ShardedConfig::new(2);
+        cfg.rebalance_interval = 0;
+        let mut s =
+            ShardedCoordinator::new(cfg, "bomb", factory, Arc::new(HungarianEngine));
+        let active: Vec<JobInfo> = (0..6).map(|i| info(i, 1)).collect();
+        let mut prev = PlacementPlan::new(8);
+        let mut degraded_rounds = Vec::new();
+        for round in 0..10u64 {
+            let d = s.decide(&input(round, &active, &prev, &spec, None));
+            if d.degraded {
+                degraded_rounds.push(round);
+            }
+            d.plan.validate().unwrap();
+            prev = d.plan;
+        }
+        assert_eq!(degraded_rounds, vec![1, 2, 3], "fallback rounds must not degrade");
+        assert_eq!(s.breakers[1].trips(), 1);
+        assert_eq!(
+            s.breakers[1].state(),
+            crate::recovery::BreakerState::Closed,
+            "clean probe closes the breaker"
+        );
+        assert_eq!(s.breakers[0].trips(), 0, "healthy shard's breaker untouched");
+    }
+
+    #[test]
+    fn coordinator_snapshot_state_round_trips_routes_and_breakers() {
+        let spec = ClusterSpec::new(8, 2, GpuType::A100);
+        let active: Vec<JobInfo> = (0..16).map(|i| info(i, 1)).collect();
+        let prev = PlacementPlan::new(16);
+        let mut s = sharded(4);
+        s.cfg.rebalance_interval = 0;
+        let d0 = s.decide(&input(0, &active, &prev, &spec, None));
+        let state = s.snapshot_state().expect("coordinator persists state");
+
+        let mut fresh = sharded(4);
+        fresh.cfg.rebalance_interval = 0;
+        fresh.restore_state(&state);
+        assert_eq!(s.assignment, fresh.assignment, "routes round-trip");
+        assert_eq!(fresh.breakers.len(), 4);
+        assert_eq!(fresh.degraded_streaks, vec![0; 4]);
+
+        // Restored routes + cold inner caches are decision-equivalent to
+        // the warm original (the warm-vs-cold parity contract).
+        let d1a = s.decide(&input(1, &active, &d0.plan, &spec, None));
+        let d1b = fresh.decide(&input(1, &active, &d0.plan, &spec, None));
+        assert_eq!(d1a.plan, d1b.plan);
+        assert_eq!(d1a.strategies, d1b.strategies);
+        assert_eq!(d1a.migrations, d1b.migrations);
     }
 }

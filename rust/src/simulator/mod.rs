@@ -22,6 +22,7 @@
 //! cross-checked against it in debug builds.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
 
 use crate::cluster::{ClusterSpec, PlacementPlan};
 use crate::faults::{ClusterHealth, FaultKind, FaultPlan};
@@ -29,8 +30,10 @@ use crate::jobs::{Job, JobId, ParallelismStrategy};
 use crate::obs::{metrics, recorder, MetricsSnapshot};
 use crate::policies::JobInfo;
 use crate::profiler::Profiler;
+use crate::recovery::{SnapshotStore, SNAPSHOT_VERSION};
 use crate::schedulers::{DecisionTimings, RoundInput, Scheduler};
 use crate::trace::Trace;
+use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 use crate::util::stats;
 
@@ -142,6 +145,282 @@ struct JobState {
     best_iso: f64,
 }
 
+/// Crash-recovery knobs threaded through [`simulate_recoverable`]. The
+/// `Default` (no state dir) is exactly the plain [`simulate`] loop.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryOptions {
+    /// Directory for generation-numbered snapshots; `None` disables them.
+    pub state_dir: Option<PathBuf>,
+    /// Snapshot cadence in rounds (0 is treated as 1).
+    pub snapshot_every: u64,
+    /// Resume from the newest parseable snapshot in `state_dir` instead
+    /// of starting cold.
+    pub restore: bool,
+    /// Stop right after executing this round — the in-process crash
+    /// emulation restore-parity tests kill with (CI uses a real SIGKILL).
+    pub stop_after_round: Option<u64>,
+}
+
+// ---- snapshot codec -----------------------------------------------------
+//
+// The snapshot holds the simulator's *hard* state — everything the loop
+// carries across rounds that is not a pure function of (trace, truth,
+// cfg): the committed plan, cursors into the trace and fault script,
+// per-job dynamic progress, straggler windows, counters, and the
+// scheduler's own sticky state. Deliberately *not* stored: cluster health
+// (replayed from the fault-event prefix), per-job specs and `best_iso`
+// (re-derived from the trace and ground truth), decision timings and
+// telemetry (wall-clock, excluded from the bit-parity contract), and
+// every scheduler soft cache (`LpCache`, matching caches) — those rebuild
+// cold, which the warm-vs-cold parity property tests keep bit-identical.
+
+fn strategy_to_json(s: &ParallelismStrategy) -> Json {
+    match s {
+        ParallelismStrategy::DataParallel => Json::obj(vec![("kind", Json::str("dp"))]),
+        ParallelismStrategy::TensorParallel => Json::obj(vec![("kind", Json::str("tp"))]),
+        ParallelismStrategy::Pipeline(split) => Json::obj(vec![
+            ("kind", Json::str("pp")),
+            (
+                "split",
+                Json::arr(split.iter().map(|&x| Json::num(x as f64)).collect()),
+            ),
+        ]),
+    }
+}
+
+fn strategy_from_json(doc: &Json) -> Option<ParallelismStrategy> {
+    match doc.get("kind")?.as_str()? {
+        "dp" => Some(ParallelismStrategy::DataParallel),
+        "tp" => Some(ParallelismStrategy::TensorParallel),
+        "pp" => {
+            let split: Option<Vec<u32>> = doc
+                .get("split")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64().map(|v| v as u32))
+                .collect();
+            Some(ParallelismStrategy::Pipeline(split?))
+        }
+        _ => None,
+    }
+}
+
+/// Plans are serialized slot-first (GPU -> ordered tenant list), *not* as
+/// the job -> GPU index: several consumers (`jobs_on` walks in packing,
+/// POP's locality pass, the sharded rebalancer) iterate tenants in slot
+/// order, so a restored plan must reproduce the exact within-slot order to
+/// keep post-restore decisions bit-identical to the uninterrupted run.
+fn plan_to_json(plan: &PlacementPlan) -> Json {
+    Json::obj(vec![(
+        "slots",
+        Json::arr(
+            (0..plan.num_gpus())
+                .map(|g| {
+                    Json::arr(
+                        plan.jobs_on(g)
+                            .iter()
+                            .map(|&j| Json::num(j as f64))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        ),
+    )])
+}
+
+fn plan_from_json(doc: &Json) -> Option<PlacementPlan> {
+    let slots = doc.get("slots")?.as_arr()?;
+    let mut plan = PlacementPlan::new(slots.len());
+    // Replaying `place` per (gpu, tenant) in slot order rebuilds both the
+    // slot view verbatim and the (sorted) job->GPU index.
+    for (g, slot) in slots.iter().enumerate() {
+        for job in slot.as_arr()? {
+            plan.place(job.as_usize()? as JobId, &[g]);
+        }
+    }
+    Some(plan)
+}
+
+/// Borrowing view of the loop state, encoded after a round commits (so
+/// `round` is always "the next round to execute").
+struct SnapshotView<'a> {
+    round: u64,
+    arrived: usize,
+    next_fault: usize,
+    total_migrations: usize,
+    makespan: f64,
+    evictions: u64,
+    preemptions: u64,
+    replacements: u64,
+    straggle_events: u64,
+    degraded_rounds: u64,
+    infeasible_pairs: u64,
+    prev_plan: &'a PlacementPlan,
+    states: &'a BTreeMap<JobId, JobState>,
+    stragglers: &'a BTreeMap<JobId, (f64, u64)>,
+    pending_replacement: &'a BTreeSet<JobId>,
+    last_strategies: &'a BTreeMap<JobId, ParallelismStrategy>,
+}
+
+fn snapshot_to_json(v: &SnapshotView, scheduler: &dyn Scheduler) -> Json {
+    let states = Json::Obj(
+        v.states
+            .iter()
+            .map(|(id, s)| {
+                (
+                    id.to_string(),
+                    Json::obj(vec![
+                        ("completed_iters", Json::num(s.completed_iters)),
+                        ("attained_service", Json::num(s.attained_service)),
+                        ("rounds_received", Json::num(s.rounds_received as f64)),
+                        ("migrations", Json::num(s.migrations as f64)),
+                        (
+                            "finish_time",
+                            s.finish_time.map(Json::num).unwrap_or(Json::Null),
+                        ),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let stragglers = Json::Obj(
+        v.stragglers
+            .iter()
+            .map(|(id, &(factor, until))| {
+                (
+                    id.to_string(),
+                    Json::arr(vec![Json::num(factor), Json::num(until as f64)]),
+                )
+            })
+            .collect(),
+    );
+    let strategies = Json::Obj(
+        v.last_strategies
+            .iter()
+            .map(|(id, s)| (id.to_string(), strategy_to_json(s)))
+            .collect(),
+    );
+    let mut pairs = vec![
+        ("version", Json::num(SNAPSHOT_VERSION as f64)),
+        ("scheduler", Json::str(&scheduler.name())),
+        ("round", Json::num(v.round as f64)),
+        ("arrived", Json::num(v.arrived as f64)),
+        ("fault_cursor", Json::num(v.next_fault as f64)),
+        ("total_migrations", Json::num(v.total_migrations as f64)),
+        ("makespan", Json::num(v.makespan)),
+        ("evictions", Json::num(v.evictions as f64)),
+        ("preemptions", Json::num(v.preemptions as f64)),
+        ("replacements", Json::num(v.replacements as f64)),
+        ("stragglers_seen", Json::num(v.straggle_events as f64)),
+        ("degraded_rounds", Json::num(v.degraded_rounds as f64)),
+        ("infeasible_pairs", Json::num(v.infeasible_pairs as f64)),
+        ("plan", plan_to_json(v.prev_plan)),
+        ("states", states),
+        ("straggler_windows", stragglers),
+        (
+            "pending_replacement",
+            Json::arr(
+                v.pending_replacement
+                    .iter()
+                    .map(|&id| Json::num(id as f64))
+                    .collect(),
+            ),
+        ),
+        ("last_strategies", strategies),
+    ];
+    if let Some(state) = scheduler.snapshot_state() {
+        pairs.push(("scheduler_state", state));
+    }
+    Json::obj(pairs)
+}
+
+/// Owned decode of a snapshot document; `None` on any shape mismatch
+/// (the caller falls back to a cold start with a warning).
+struct RestoredSim {
+    scheduler: String,
+    round: u64,
+    arrived: usize,
+    next_fault: usize,
+    total_migrations: usize,
+    makespan: f64,
+    evictions: u64,
+    preemptions: u64,
+    replacements: u64,
+    straggle_events: u64,
+    degraded_rounds: u64,
+    infeasible_pairs: u64,
+    prev_plan: PlacementPlan,
+    /// id → (completed_iters, attained_service, rounds_received,
+    /// migrations, finish_time).
+    states: BTreeMap<JobId, (f64, f64, u64, u64, Option<f64>)>,
+    stragglers: BTreeMap<JobId, (f64, u64)>,
+    pending_replacement: BTreeSet<JobId>,
+    last_strategies: BTreeMap<JobId, ParallelismStrategy>,
+    scheduler_state: Option<Json>,
+}
+
+fn snapshot_from_json(doc: &Json) -> Option<RestoredSim> {
+    let num = |k: &str| doc.get(k).and_then(Json::as_f64);
+    if num("version")? as u64 != SNAPSHOT_VERSION {
+        return None;
+    }
+    let mut states = BTreeMap::new();
+    for (id, s) in doc.get("states")?.as_obj()? {
+        let id: JobId = id.parse().ok()?;
+        let field = |k: &str| s.get(k).and_then(Json::as_f64);
+        let finish = match s.get("finish_time")? {
+            Json::Null => None,
+            t => Some(t.as_f64()?),
+        };
+        states.insert(
+            id,
+            (
+                field("completed_iters")?,
+                field("attained_service")?,
+                field("rounds_received")? as u64,
+                field("migrations")? as u64,
+                finish,
+            ),
+        );
+    }
+    let mut stragglers = BTreeMap::new();
+    for (id, w) in doc.get("straggler_windows")?.as_obj()? {
+        let id: JobId = id.parse().ok()?;
+        let w = w.as_arr()?;
+        stragglers.insert(id, (w.first()?.as_f64()?, w.get(1)?.as_f64()? as u64));
+    }
+    let pending_replacement: BTreeSet<JobId> = doc
+        .get("pending_replacement")?
+        .as_arr()?
+        .iter()
+        .map(|x| x.as_f64().map(|v| v as JobId))
+        .collect::<Option<_>>()?;
+    let mut last_strategies = BTreeMap::new();
+    for (id, s) in doc.get("last_strategies")?.as_obj()? {
+        last_strategies.insert(id.parse::<JobId>().ok()?, strategy_from_json(s)?);
+    }
+    Some(RestoredSim {
+        scheduler: doc.get("scheduler")?.as_str()?.to_string(),
+        round: num("round")? as u64,
+        arrived: num("arrived")? as usize,
+        next_fault: num("fault_cursor")? as usize,
+        total_migrations: num("total_migrations")? as usize,
+        makespan: num("makespan")?,
+        evictions: num("evictions")? as u64,
+        preemptions: num("preemptions")? as u64,
+        replacements: num("replacements")? as u64,
+        straggle_events: num("stragglers_seen")? as u64,
+        degraded_rounds: num("degraded_rounds")? as u64,
+        infeasible_pairs: num("infeasible_pairs")? as u64,
+        prev_plan: plan_from_json(doc.get("plan")?)?,
+        states,
+        stragglers,
+        pending_replacement,
+        last_strategies,
+        scheduler_state: doc.get("scheduler_state").cloned(),
+    })
+}
+
 /// Smallest round index `k > round` whose start time admits an arrival at
 /// `next_arrival` (i.e. `k * round_duration >= next_arrival`). Computed by
 /// division, then corrected so the result is bit-identical to spinning one
@@ -165,6 +444,22 @@ pub fn simulate(
     scheduler: &mut dyn Scheduler,
     truth: &Profiler,
     cfg: &SimConfig,
+) -> SimResult {
+    simulate_recoverable(trace, scheduler, truth, cfg, &RecoveryOptions::default())
+}
+
+/// [`simulate`] with crash recovery: optional generation-numbered state
+/// snapshots every N rounds, restore-from-snapshot, and an in-process
+/// kill point for restore-parity tests. A restored run finishes
+/// bit-identical (per-job JCTs, migration counts, fault counters) to the
+/// uninterrupted run — snapshots capture the loop's hard state and
+/// everything else is a deterministic function of (trace, truth, cfg).
+pub fn simulate_recoverable(
+    trace: &Trace,
+    scheduler: &mut dyn Scheduler,
+    truth: &Profiler,
+    cfg: &SimConfig,
+    recovery: &RecoveryOptions,
 ) -> SimResult {
     let total_gpus = cfg.spec.total_gpus();
     let mut states: BTreeMap<JobId, JobState> = BTreeMap::new();
@@ -195,6 +490,107 @@ pub fn simulate(
     let mut straggle_events = 0u64;
     let mut degraded_rounds = 0u64;
     let mut infeasible_pairs = 0u64;
+
+    let store = recovery
+        .state_dir
+        .as_ref()
+        .map(|dir| SnapshotStore::new(dir).expect("snapshot state dir must be creatable"));
+
+    if recovery.restore {
+        let latest = store.as_ref().and_then(SnapshotStore::latest);
+        match latest.as_ref().and_then(|(_, doc)| snapshot_from_json(doc)) {
+            Some(rs) if rs.scheduler != scheduler.name() => {
+                crate::obs_log!(
+                    warn,
+                    "snapshot was taken under scheduler '{}', this run uses '{}'; starting cold",
+                    rs.scheduler,
+                    scheduler.name()
+                );
+            }
+            Some(rs) if rs.arrived <= trace.jobs.len() => {
+                // Rebuild per-job state: the static spec and `best_iso`
+                // come from the trace prefix and ground truth, the
+                // dynamic progress from the snapshot.
+                let mut restored_states = BTreeMap::new();
+                let mut complete = true;
+                for job in &trace.jobs[..rs.arrived] {
+                    let Some(&(completed, attained, rounds_received, migrations, finish)) =
+                        rs.states.get(&job.id)
+                    else {
+                        complete = false;
+                        break;
+                    };
+                    let (_, best_iso) = truth.best_isolated(job.model, job.num_gpus);
+                    restored_states.insert(
+                        job.id,
+                        JobState {
+                            job: job.clone(),
+                            completed_iters: completed,
+                            attained_service: attained,
+                            rounds_received,
+                            migrations,
+                            finish_time: finish,
+                            best_iso,
+                        },
+                    );
+                }
+                if complete {
+                    states = restored_states;
+                    arrived = rs.arrived;
+                    round = rs.round;
+                    next_fault = rs.next_fault.min(fault_events.len());
+                    total_migrations = rs.total_migrations;
+                    makespan = rs.makespan;
+                    evictions = rs.evictions;
+                    preemptions = rs.preemptions;
+                    replacements = rs.replacements;
+                    straggle_events = rs.straggle_events;
+                    degraded_rounds = rs.degraded_rounds;
+                    infeasible_pairs = rs.infeasible_pairs;
+                    prev_plan = rs.prev_plan;
+                    stragglers = rs.stragglers;
+                    pending_replacement = rs.pending_replacement;
+                    last_strategies = rs.last_strategies;
+                    // Health is replayed, not stored: re-apply the
+                    // health-affecting prefix of the fault script in
+                    // order (preempt/straggle events never touch it).
+                    for ev in &fault_events[..next_fault] {
+                        match &ev.kind {
+                            FaultKind::Preempt { .. } | FaultKind::Straggle { .. } => {}
+                            kind => {
+                                let _ = health.apply(&cfg.spec, kind);
+                            }
+                        }
+                    }
+                    if let Some(state) = &rs.scheduler_state {
+                        scheduler.restore_state(state);
+                    }
+                    metrics::counter_add("snapshot.restores", 1);
+                    crate::obs_log!(
+                        info,
+                        "restored scheduler state at round {round} from {}",
+                        store.as_ref().unwrap().dir().display()
+                    );
+                } else {
+                    crate::obs_log!(
+                        warn,
+                        "snapshot job states incomplete for this trace; starting cold"
+                    );
+                }
+            }
+            Some(_) => {
+                crate::obs_log!(
+                    warn,
+                    "snapshot admits more jobs than this trace holds; starting cold"
+                );
+            }
+            None => {
+                if store.is_some() {
+                    crate::obs_log!(info, "no usable snapshot found; starting cold");
+                }
+            }
+        }
+    }
 
     loop {
         let now = round as f64 * cfg.round_duration;
@@ -507,6 +903,40 @@ pub fn simulate(
         }
         prev_plan = decision.plan;
         round += 1;
+        // Snapshot after the round commits: `round` is now exactly "the
+        // next round to execute", which is what restore resumes at.
+        if let Some(store) = &store {
+            if round % recovery.snapshot_every.max(1) == 0 {
+                crate::obs_span!("snapshot.write", { round: round });
+                let doc = snapshot_to_json(
+                    &SnapshotView {
+                        round,
+                        arrived,
+                        next_fault,
+                        total_migrations,
+                        makespan,
+                        evictions,
+                        preemptions,
+                        replacements,
+                        straggle_events,
+                        degraded_rounds,
+                        infeasible_pairs,
+                        prev_plan: &prev_plan,
+                        states: &states,
+                        stragglers: &stragglers,
+                        pending_replacement: &pending_replacement,
+                        last_strategies: &last_strategies,
+                    },
+                    scheduler,
+                );
+                if let Err(e) = store.write(round, &doc) {
+                    crate::obs_log!(warn, "snapshot write failed at round {round}: {e}");
+                }
+            }
+        }
+        if recovery.stop_after_round.is_some_and(|r| round > r) {
+            break;
+        }
         if round >= cfg.max_rounds {
             break;
         }
@@ -1014,5 +1444,185 @@ mod tests {
         let b = simulate(&trace, &mut tesserae_t(), &truth, &spin_cfg);
         assert_same_result(&a, &b);
         assert_eq!(a.unfinished, 0);
+    }
+
+    // ---- crash recovery -------------------------------------------------
+
+    fn recovery_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "tesserae-recovery-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// The faulted config the recovery tests share: failures, a recovery,
+    /// a preemption and a straggler all land before and after the kill
+    /// point, so the snapshot must carry every class of hard state.
+    fn faulted_cfg() -> SimConfig {
+        let mut cfg = quick_cfg();
+        cfg.faults = script(vec![
+            (2, FaultKind::GpuFail(1)),
+            (
+                3,
+                FaultKind::Straggle {
+                    pick: 2,
+                    factor: 0.5,
+                    rounds: 4,
+                },
+            ),
+            (4, FaultKind::Preempt { pick: 5 }),
+            (7, FaultKind::GpuRecover(1)),
+            (9, FaultKind::Preempt { pick: 3 }),
+        ]);
+        cfg
+    }
+
+    #[test]
+    fn snapshot_codec_round_trips_plan_slot_order_and_strategies() {
+        // Slot order is semantic: job 5 was placed on GPU 1 before job 2
+        // packed in, and the restored plan must reproduce exactly that.
+        let mut plan = PlacementPlan::new(4);
+        plan.place(5, &[1, 2]);
+        plan.place(2, &[1]);
+        plan.place(9, &[0]);
+        let text = plan_to_json(&plan).to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let back = plan_from_json(&parsed).unwrap();
+        assert_eq!(back, plan);
+        assert_eq!(back.jobs_on(1), &[5, 2], "within-slot order preserved");
+        back.validate().unwrap();
+
+        for s in [
+            ParallelismStrategy::DataParallel,
+            ParallelismStrategy::TensorParallel,
+            ParallelismStrategy::Pipeline(vec![3, 2, 3]),
+        ] {
+            let text = strategy_to_json(&s).to_string_pretty();
+            let parsed = Json::parse(&text).unwrap();
+            assert_eq!(strategy_from_json(&parsed).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn killed_and_restored_run_matches_uninterrupted() {
+        let trace = small_trace(16, 41);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let cfg = faulted_cfg();
+        let reference = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+        assert_eq!(reference.unfinished, 0);
+        assert!(reference.preemptions > 0, "script must actually preempt");
+
+        let dir = recovery_dir("kill");
+        let killed = simulate_recoverable(
+            &trace,
+            &mut tesserae_t(),
+            &truth,
+            &cfg,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 1,
+                restore: false,
+                stop_after_round: Some(5),
+            },
+        );
+        assert!(
+            killed.rounds < reference.rounds,
+            "kill point must interrupt the run ({} vs {})",
+            killed.rounds,
+            reference.rounds
+        );
+        let resumed = simulate_recoverable(
+            &trace,
+            &mut tesserae_t(),
+            &truth,
+            &cfg,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 1,
+                restore: true,
+                stop_after_round: None,
+            },
+        );
+        assert_same_result(&reference, &resumed);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sparse_snapshots_replay_the_tail_to_parity() {
+        // snapshot_every=3 means the kill at round 8 restores from round
+        // 6 and replays rounds 6..8 — replayed rounds must land on the
+        // same state the uninterrupted run passed through.
+        let trace = small_trace(16, 41);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let cfg = faulted_cfg();
+        let reference = simulate(&trace, &mut tesserae_t(), &truth, &cfg);
+
+        let dir = recovery_dir("sparse");
+        let _ = simulate_recoverable(
+            &trace,
+            &mut tesserae_t(),
+            &truth,
+            &cfg,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 3,
+                restore: false,
+                stop_after_round: Some(8),
+            },
+        );
+        let resumed = simulate_recoverable(
+            &trace,
+            &mut tesserae_t(),
+            &truth,
+            &cfg,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 3,
+                restore: true,
+                stop_after_round: None,
+            },
+        );
+        assert_same_result(&reference, &resumed);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_scheduler_snapshot_starts_cold() {
+        // Snapshots taken under Tesserae-T must not poison a Tiresias
+        // run: the restore detects the label mismatch and starts cold,
+        // landing on the plain Tiresias result bit for bit.
+        let trace = small_trace(12, 43);
+        let truth = Profiler::new(GpuType::A100, 42);
+        let cfg = quick_cfg();
+        let dir = recovery_dir("mismatch");
+        let _ = simulate_recoverable(
+            &trace,
+            &mut tesserae_t(),
+            &truth,
+            &cfg,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 1,
+                restore: false,
+                stop_after_round: Some(4),
+            },
+        );
+        let plain = simulate(&trace, &mut tiresias(), &truth, &cfg);
+        let restored = simulate_recoverable(
+            &trace,
+            &mut tiresias(),
+            &truth,
+            &cfg,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 1,
+                restore: true,
+                stop_after_round: None,
+            },
+        );
+        assert_same_result(&plain, &restored);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

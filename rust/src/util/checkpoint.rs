@@ -85,14 +85,38 @@ impl Checkpoint {
                 .into_iter()
                 .collect(),
         );
-        // Append (not replace-extension): distinct checkpoint paths must
-        // never collapse onto one temp file.
-        let mut tmp_name = self.path.as_os_str().to_os_string();
-        tmp_name.push(".tmp");
-        let tmp = PathBuf::from(tmp_name);
-        fs::write(&tmp, doc.to_string_pretty())?;
-        fs::rename(&tmp, &self.path)
+        durable_write(&self.path, &doc.to_string_pretty())
     }
+}
+
+/// Durable atomic file replacement: write a temp file next to `path`,
+/// `sync_all` it, rename it over `path`, then best-effort fsync the
+/// parent directory so the rename itself survives power loss. A plain
+/// write-temp-then-rename protects against a killed *process* but not a
+/// lost *machine* — an unsynced temp can legally surface as a zero-length
+/// or torn file after the rename.
+pub fn durable_write(path: &Path, contents: &str) -> io::Result<()> {
+    use std::io::Write;
+
+    // Append (not replace-extension): distinct target paths must never
+    // collapse onto one temp file.
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    // Directory fsync is what persists the rename; not all platforms
+    // allow opening a directory for sync, so this part is best-effort.
+    if let Some(parent) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        if let Ok(dir) = fs::File::open(parent) {
+            let _ = dir.sync_all();
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -169,6 +193,22 @@ mod tests {
         let path = tmp_path("nocells");
         fs::write(&path, "{\"version\": 2}").unwrap();
         assert!(Checkpoint::load_or_new(&path).is_empty());
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn durable_write_replaces_and_leaves_no_temp() {
+        let path = tmp_path("durable");
+        let _ = fs::remove_file(&path);
+        durable_write(&path, "first").unwrap();
+        durable_write(&path, "second").unwrap();
+        assert_eq!(fs::read_to_string(&path).unwrap(), "second");
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        assert!(
+            !PathBuf::from(tmp_name).exists(),
+            "temp file must not outlive the rename"
+        );
         let _ = fs::remove_file(&path);
     }
 

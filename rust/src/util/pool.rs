@@ -223,6 +223,11 @@ impl WorkerPool {
         if n == 0 {
             return Vec::new();
         }
+        // Watchdog chunk-boundary checkpoint: a no-op on pool workers
+        // (they never arm the thread-local deadline — their panic
+        // payloads would be discarded by the joins below) and on
+        // unconfigured runs.
+        crate::recovery::watchdog::checkpoint();
         let want = self.plan_workers(n, max_workers, min_per_worker);
         if want <= 1 {
             let out = f(0, items);
@@ -275,6 +280,7 @@ impl WorkerPool {
             }
         });
         drop(lease);
+        crate::recovery::watchdog::checkpoint();
         parts.into_iter().flatten().collect()
     }
 
@@ -326,6 +332,8 @@ impl WorkerPool {
                 .map(|(i, t)| f(i, t))
                 .collect()
         };
+        // Watchdog chunk-boundary checkpoint; see `run_chunks`.
+        crate::recovery::watchdog::checkpoint();
         let want = self.plan_workers(n, max_workers, min_per_worker);
         if want <= 1 {
             return inline(items);
@@ -372,6 +380,7 @@ impl WorkerPool {
             }
         });
         drop(lease);
+        crate::recovery::watchdog::checkpoint();
         parts.into_iter().flatten().collect()
     }
 }

@@ -1,0 +1,154 @@
+//! End-to-end watchdog + circuit-breaker scenario in its own test binary:
+//! the `TESSERAE_STAGE_DEADLINE_MS` env knob and the process-global CLI
+//! setter are shared state, so this file holds exactly one test — no
+//! concurrent test in this process can race the deadline configuration.
+//! (Pure state-machine tests live in `recovery::breaker`'s unit tests;
+//! explicit-budget watchdog tests in `recovery::watchdog`'s.)
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use tesserae::cluster::{ClusterSpec, GpuType};
+use tesserae::estimator::OracleEstimator;
+use tesserae::matching::HungarianEngine;
+use tesserae::obs::metrics;
+use tesserae::profiler::Profiler;
+use tesserae::recovery::watchdog::{self, DEADLINE_ENV};
+use tesserae::recovery::{BreakerConfig, BreakerScheduler, BreakerState};
+use tesserae::schedulers::{
+    run_round, RoundContext, RoundDecision, RoundInput, Scheduler, StageProvider,
+    TesseraeScheduler,
+};
+use tesserae::simulator::{simulate, SimConfig};
+use tesserae::trace::{Trace, TraceParams};
+
+/// Tesserae-T whose `pack` stage sleeps far past the armed budget during
+/// `slow_rounds`, the way a hung matching kernel would — the guaranteed
+/// per-stage checkpoint must trip the deadline.
+struct SlowPack {
+    inner: TesseraeScheduler,
+    slow_rounds: std::ops::Range<u64>,
+}
+
+impl StageProvider for SlowPack {
+    fn estimate(&mut self, cx: &mut RoundContext) {
+        self.inner.estimate(cx);
+    }
+    fn schedule(&mut self, cx: &mut RoundContext) {
+        self.inner.schedule(cx);
+    }
+    fn pack(&mut self, cx: &mut RoundContext) {
+        if self.slow_rounds.contains(&cx.input.round) {
+            std::thread::sleep(Duration::from_millis(400));
+        }
+        self.inner.pack(cx);
+    }
+    fn migrate(&mut self, cx: &mut RoundContext) {
+        self.inner.migrate(cx);
+    }
+    fn commit(&mut self, cx: &mut RoundContext) -> RoundDecision {
+        self.inner.commit(cx)
+    }
+    fn reset_after_failure(&mut self) {
+        self.inner.reset_after_failure();
+    }
+}
+
+impl Scheduler for SlowPack {
+    fn name(&self) -> String {
+        "slow-pack".into()
+    }
+    fn decide(&mut self, input: &RoundInput) -> RoundDecision {
+        run_round(self, input)
+    }
+}
+
+/// The full robustness loop, driven by the env knob end to end: two
+/// consecutive rounds overrun their stage budget → both degrade with the
+/// `deadline` reason → the breaker trips → the greedy fallback serves the
+/// cooldown → the half-open probe (stage fast again) closes the breaker —
+/// and the run still drains every job, deterministically.
+#[test]
+fn deadline_overruns_trip_breaker_then_recover() {
+    // Env fallback path: must be read before anything else in this
+    // process touches the watchdog (the value is cached on first read).
+    std::env::set_var(DEADLINE_ENV, "100");
+    assert_eq!(
+        watchdog::stage_deadline_ms(),
+        Some(100),
+        "env knob must configure the stage budget"
+    );
+
+    let trace = Trace::shockwave(&TraceParams {
+        num_jobs: 12,
+        jobs_per_hour: 240.0,
+        seed: 41,
+    });
+    let truth = Profiler::new(GpuType::A100, 42);
+    let cfg = SimConfig::new(ClusterSpec::new(2, 4, GpuType::A100));
+    let build = || {
+        BreakerScheduler::new(
+            Box::new(SlowPack {
+                inner: TesseraeScheduler::tesserae_t(
+                    Arc::new(OracleEstimator::new(Profiler::new(GpuType::A100, 42))),
+                    Arc::new(HungarianEngine),
+                ),
+                slow_rounds: 2..4,
+            }),
+            BreakerConfig {
+                trip_after: 2,
+                cooldown_rounds: 3,
+            },
+        )
+    };
+
+    // Telemetry on so the deadline/breaker counters record.
+    let _g = tesserae::obs::enabled_guard(true);
+    let base = metrics::snapshot();
+
+    let mut sched = build();
+    let r = simulate(&trace, &mut sched, &truth, &cfg);
+
+    assert_eq!(r.unfinished, 0, "the run must recover and drain");
+    assert!(r.rounds > 8, "run too short to exercise the probe: {}", r.rounds);
+    // Rounds 2 and 3 trip the deadline; the trip at round 3 opens the
+    // breaker for rounds 4..7, whose greedy fallback decisions are not
+    // degraded; the round-7 probe is fast and closes it.
+    assert_eq!(r.degraded_rounds, 2, "exactly the two overrun rounds degrade");
+    assert_eq!(sched.breaker().trips(), 1, "streak of 2 must trip once");
+    assert_eq!(
+        sched.breaker().state(),
+        BreakerState::Closed,
+        "the clean probe must close the breaker"
+    );
+
+    let delta = metrics::snapshot().delta_since(&base);
+    let counter = |k: &str| delta.counters.get(k).copied().unwrap_or(0);
+    assert_eq!(counter("watchdog.deadline_trips"), 2);
+    assert_eq!(counter("round.degraded_deadline"), 2);
+    assert_eq!(counter("breaker.trips"), 1);
+    assert_eq!(
+        counter("breaker.fallback_rounds"),
+        3,
+        "cooldown_rounds=3 must serve exactly 3 fallback rounds"
+    );
+
+    // Deadline-degraded runs replay bit-identically: the trips depend
+    // only on the injected sleeps, never on ambient timing.
+    let mut sched2 = build();
+    let r2 = simulate(&trace, &mut sched2, &truth, &cfg);
+    assert_eq!(r.avg_jct.to_bits(), r2.avg_jct.to_bits());
+    assert_eq!(r.total_migrations, r2.total_migrations);
+    assert_eq!(r2.degraded_rounds, 2);
+    assert_eq!(sched2.breaker().trips(), 1);
+
+    // Disable via the CLI setter (takes precedence over the cached env
+    // value) and prove a rerun no longer trips anything.
+    watchdog::set_stage_deadline_ms(None);
+    std::env::remove_var(DEADLINE_ENV);
+    let mut sched3 = build();
+    let r3 = simulate(&trace, &mut sched3, &truth, &cfg);
+    assert_eq!(r3.degraded_rounds, 0, "disabled watchdog must not trip");
+    assert_eq!(sched3.breaker().trips(), 0);
+    assert_eq!(r3.unfinished, 0);
+}

@@ -1166,3 +1166,173 @@ fn sharded_faulted_simulation_is_bit_identical_across_pool_budgets() {
     }
     assert!(a.evictions >= 1, "no eviction fired");
 }
+
+// ============================================================= recovery
+
+/// Bit-compare the recovery-relevant surface of two [`SimResult`]s —
+/// everything the snapshot must preserve (wall-clock timings and
+/// telemetry are deliberately out of scope).
+fn assert_result_bits(
+    a: &tesserae::simulator::SimResult,
+    b: &tesserae::simulator::SimResult,
+    label: &str,
+) {
+    assert_eq!(a.avg_jct.to_bits(), b.avg_jct.to_bits(), "{label}: avg_jct");
+    assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{label}: makespan");
+    assert_eq!(a.total_migrations, b.total_migrations, "{label}: migrations");
+    assert_eq!(a.rounds, b.rounds, "{label}: rounds");
+    assert_eq!(a.evictions, b.evictions, "{label}: evictions");
+    assert_eq!(a.preemptions, b.preemptions, "{label}: preemptions");
+    assert_eq!(a.replacements, b.replacements, "{label}: replacements");
+    assert_eq!(a.stragglers, b.stragglers, "{label}: stragglers");
+    assert_eq!(a.degraded_rounds, b.degraded_rounds, "{label}: degraded");
+    assert_eq!(a.unfinished, b.unfinished, "{label}: unfinished");
+    assert_eq!(a.outcomes.len(), b.outcomes.len(), "{label}: outcome count");
+    for (id, oa) in &a.outcomes {
+        assert_eq!(
+            oa.jct.to_bits(),
+            b.outcomes[id].jct.to_bits(),
+            "{label}: job {id} JCT diverged"
+        );
+        assert_eq!(oa.migrations, b.outcomes[id].migrations, "{label}: job {id}");
+    }
+}
+
+/// ISSUE 10's restore contract: a run killed at round r and restored from
+/// its latest snapshot must finish bit-identical to the uninterrupted run
+/// — per-job JCTs, migration counts, fault counters — for every scheduler
+/// family, including the sharded coordinator whose snapshot carries shard
+/// routes and per-shard circuit breakers.
+#[test]
+fn killed_and_restored_runs_are_bit_identical_per_family() {
+    use tesserae::experiments::{run_sim_recoverable, Scale, SchedKind};
+    use tesserae::simulator::RecoveryOptions;
+
+    let scale = Scale {
+        jobs: 14,
+        nodes: 4,
+        gpus_per_node: 2,
+        jobs_per_hour: 240.0,
+        seed: 5,
+    };
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    for kind in [
+        SchedKind::TesseraeT,
+        SchedKind::Gavel,
+        SchedKind::Pop(2),
+        SchedKind::Sharded(4),
+    ] {
+        let reference =
+            run_sim_recoverable(kind, &trace, spec, scale.seed, 0.0, &RecoveryOptions::default());
+        assert_eq!(reference.unfinished, 0, "{kind:?}: reference must drain");
+        let dir = std::env::temp_dir().join(format!(
+            "tesserae-prop-restore-{kind:?}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let killed = run_sim_recoverable(
+            kind,
+            &trace,
+            spec,
+            scale.seed,
+            0.0,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 2,
+                restore: false,
+                stop_after_round: Some(4),
+            },
+        );
+        assert!(
+            killed.rounds < reference.rounds,
+            "{kind:?}: kill at round 4 must interrupt ({} vs {})",
+            killed.rounds,
+            reference.rounds
+        );
+        let resumed = run_sim_recoverable(
+            kind,
+            &trace,
+            spec,
+            scale.seed,
+            0.0,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 2,
+                restore: true,
+                stop_after_round: None,
+            },
+        );
+        assert_result_bits(&reference, &resumed, &format!("{kind:?}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Restores must also be invariant to the execution environment: the same
+/// kill-and-restore sequence run under a single-thread worker-pool budget,
+/// a multi-thread budget, and with telemetry enabled must all land on the
+/// uninterrupted result bit for bit. The sharded coordinator is the
+/// sharpest probe — its shards decide on pool workers and its snapshot
+/// round-trips per-shard breaker state.
+#[test]
+fn restored_runs_are_invariant_to_pool_budget_and_telemetry() {
+    use tesserae::experiments::{run_sim_recoverable, Scale, SchedKind};
+    use tesserae::simulator::RecoveryOptions;
+    use tesserae::util::pool::WorkerPool;
+
+    let scale = Scale {
+        jobs: 12,
+        nodes: 3,
+        gpus_per_node: 2,
+        jobs_per_hour: 240.0,
+        seed: 7,
+    };
+    let trace = scale.shockwave_trace();
+    let spec = scale.spec(GpuType::A100);
+    let kind = SchedKind::Sharded(3);
+    let reference =
+        run_sim_recoverable(kind, &trace, spec, scale.seed, 0.0, &RecoveryOptions::default());
+    assert_eq!(reference.unfinished, 0, "reference must drain");
+
+    for (budget, telemetry) in [(1usize, false), (6, false), (6, true)] {
+        let _budget = WorkerPool::global().budget_override(budget);
+        let _obs = tesserae::obs::enabled_guard(telemetry);
+        let dir = std::env::temp_dir().join(format!(
+            "tesserae-prop-env-{budget}-{telemetry}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _killed = run_sim_recoverable(
+            kind,
+            &trace,
+            spec,
+            scale.seed,
+            0.0,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 1,
+                restore: false,
+                stop_after_round: Some(3),
+            },
+        );
+        let resumed = run_sim_recoverable(
+            kind,
+            &trace,
+            spec,
+            scale.seed,
+            0.0,
+            &RecoveryOptions {
+                state_dir: Some(dir.clone()),
+                snapshot_every: 1,
+                restore: true,
+                stop_after_round: None,
+            },
+        );
+        assert_result_bits(
+            &reference,
+            &resumed,
+            &format!("budget={budget} telemetry={telemetry}"),
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
